@@ -1,0 +1,43 @@
+"""Shared benchmark utilities: wall-clock timing of jitted callables and the
+layer-shape inventories of the paper's five networks."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+
+def time_jitted(fn: Callable, *args, warmup: int = 2, iters: int = 5,
+                inner: int = 1) -> float:
+    """Median wall-time (seconds) of fn(*args) after jit warmup."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        for _ in range(inner):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        times.append((time.perf_counter() - t0) / inner)
+    return float(np.median(times))
+
+
+def conv_layer_inventory(network: str) -> list[dict]:
+    """Every conv layer of a paper network as {name, kh, kw, c_in, c_out,
+    h, w, stride, suitable}, collected by tracing the spec interpreter."""
+    import jax.numpy as jnp
+
+    from repro.models import cnn
+
+    specs_fn, res = cnn.NETWORKS[network]
+    specs = specs_fn()
+    params = cnn.init_cnn(jax.random.key(0), specs, 3, res=res)
+    layers: dict = {}
+    x = jnp.zeros((1, res, res, 3), jnp.float32)
+    jax.eval_shape(lambda x: cnn.cnn_forward(params, x, specs,
+                                             algorithm="im2col",
+                                             layer_times=layers), x)
+    return [dict(name=k, **v) for k, v in layers.items()]

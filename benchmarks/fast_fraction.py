@@ -1,0 +1,83 @@
+"""Paper Fig. 3: runtime in Winograd-suitable ("fast") layers as a fraction
+of the whole model, under both schemes.
+
+Per-layer times come from timing each conv layer shape individually (batch 1)
+under its scheme; suitable layers run ours-vs-im2row, unsuitable layers run
+im2row in both configurations (exactly the paper's mixed policy)."""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dispatch
+
+from benchmarks.common import conv_layer_inventory, time_jitted
+from benchmarks.per_layer import _run_layer
+
+NETWORKS = ["vgg16", "vgg19", "googlenet", "inception_v3", "squeezenet"]
+
+
+def bench(net: str, iters: int, warmup: int) -> dict:
+    rng = np.random.default_rng(0)
+    t_fast_im2row = t_fast_ours = t_rest = 0.0
+    for l in conv_layer_inventory(net):
+        x = jnp.asarray(rng.standard_normal(
+            (1, l["h"], l["w"], l["c_in"])), jnp.float32)
+        w = jnp.asarray(rng.standard_normal(
+            (l["kh"], l["kw"], l["c_in"], l["c_out"]))
+            / (l["kh"] * l["kw"]), jnp.float32)
+        kw = dict(kh=l["kh"], kw=l["kw"], c_out=l["c_out"], stride=l["stride"])
+        t_i = time_jitted(functools.partial(_run_layer, algorithm="im2col",
+                                            **kw), x, w,
+                          warmup=warmup, iters=iters)
+        if l["suitable"]:
+            t_fast_im2row += t_i
+            t_fast_ours += time_jitted(
+                functools.partial(_run_layer, algorithm="winograd", **kw),
+                x, w, warmup=warmup, iters=iters)
+        else:
+            t_rest += t_i
+    total_im2row = t_fast_im2row + t_rest
+    total_ours = t_fast_ours + t_rest
+    return {
+        "network": net,
+        "fast_fraction_im2row": t_fast_im2row / total_im2row,
+        "fast_fraction_ours": t_fast_ours / total_ours,
+        "t_fast_im2row_s": t_fast_im2row, "t_fast_ours_s": t_fast_ours,
+        "t_rest_s": t_rest,
+        "norm_runtime_ours": total_ours / total_im2row,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--networks", nargs="*", default=NETWORKS)
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--warmup", type=int, default=1)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    rows = []
+    print("== Fig 3 reproduction: fast-layer fraction of model runtime ==")
+    print(f"{'Network':14s} {'fast% (im2row)':>15s} {'fast% (ours)':>13s} "
+          f"{'norm runtime':>13s}")
+    for net in args.networks:
+        r = bench(net, args.iters, args.warmup)
+        rows.append(r)
+        print(f"{r['network']:14s} {100*r['fast_fraction_im2row']:14.1f}% "
+              f"{100*r['fast_fraction_ours']:12.1f}% "
+              f"{r['norm_runtime_ours']:13.3f}", flush=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Paper Table 2: per-layer speedup of the region-wise multi-channel
+Winograd/Cook-Toom scheme over the im2row GEMM baseline.
+
+For every *unique* Winograd-suitable conv layer shape in the five paper
+networks, times both schemes (jitted, batch 1 -- the paper's mobile-inference
+setting) and reports average / peak speedup grouped by (model, layer type),
+the exact structure of Table 2.
+
+This is the same-backend CPU wall-time reproduction (DESIGN.md section 7):
+both schemes run under identical XLA jit, so the ratio isolates the
+algorithmic effect, as the paper's NEON-vs-NEON comparison does.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+from collections import defaultdict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dispatch
+
+from benchmarks.common import conv_layer_inventory, time_jitted
+
+NETWORKS = ["vgg16", "vgg19", "googlenet", "inception_v3", "squeezenet"]
+
+
+def _layer_type(kh: int, kw: int) -> str:
+    return f"{kh}x{kw}"
+
+
+@functools.partial(jax.jit, static_argnames=("kh", "kw", "c_out", "stride",
+                                             "algorithm"))
+def _run_layer(x, w, *, kh, kw, c_out, stride, algorithm):
+    return dispatch.conv2d(x, w, stride=stride, algorithm=algorithm)
+
+
+def bench_layer(layer: dict, iters: int, warmup: int) -> dict:
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(
+        (1, layer["h"], layer["w"], layer["c_in"])), jnp.float32)
+    wt = jnp.asarray(rng.standard_normal(
+        (layer["kh"], layer["kw"], layer["c_in"], layer["c_out"]))
+        / (layer["kh"] * layer["kw"]), jnp.float32)
+    kw = dict(kh=layer["kh"], kw=layer["kw"], c_out=layer["c_out"],
+              stride=layer["stride"])
+    t_im2col = time_jitted(
+        functools.partial(_run_layer, algorithm="im2col", **kw), x, wt,
+        warmup=warmup, iters=iters)
+    t_wino = time_jitted(
+        functools.partial(_run_layer, algorithm="winograd", **kw), x, wt,
+        warmup=warmup, iters=iters)
+    return {"t_im2col_s": t_im2col, "t_winograd_s": t_wino,
+            "speedup": t_im2col / t_wino}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--networks", nargs="*", default=NETWORKS)
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--warmup", type=int, default=1)
+    ap.add_argument("--max-layers-per-net", type=int, default=0,
+                    help="0 = all unique suitable layers")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    rows = []
+    seen = set()
+    for net in args.networks:
+        layers = [l for l in conv_layer_inventory(net) if l["suitable"]]
+        uniq = []
+        for l in layers:
+            key = (l["kh"], l["kw"], l["c_in"], l["c_out"], l["h"], l["w"])
+            if key not in seen:
+                seen.add(key)
+                uniq.append(l)
+        if args.max_layers_per_net:
+            uniq = uniq[:args.max_layers_per_net]
+        for l in uniq:
+            r = bench_layer(l, args.iters, args.warmup)
+            r.update(net=net, layer=l["name"],
+                     ltype=_layer_type(l["kh"], l["kw"]),
+                     shape=f"{l['h']}x{l['w']}x{l['c_in']}->{l['c_out']}")
+            rows.append(r)
+            print(f"{net:13s} {l['name']:12s} {r['ltype']:4s} {r['shape']:22s} "
+                  f"im2col={r['t_im2col_s']*1e3:8.2f}ms "
+                  f"wino={r['t_winograd_s']*1e3:8.2f}ms "
+                  f"speedup={r['speedup']:.2f}x", flush=True)
+
+    # Table 2 rollup: (model, layer-type) -> avg / peak speedup
+    groups = defaultdict(list)
+    for r in rows:
+        groups[(r["net"], r["ltype"])].append(r["speedup"])
+    print("\n== Table 2 reproduction: per-layer speedup (im2row vs ours) ==")
+    print(f"{'Model':14s} {'Layer-type':10s} {'Avg':>6s} {'Peak':>6s} {'n':>3s}")
+    summary = []
+    for (net, lt), sp in sorted(groups.items()):
+        row = {"net": net, "ltype": lt, "avg_speedup": float(np.mean(sp)),
+               "peak_speedup": float(np.max(sp)), "n_layers": len(sp)}
+        summary.append(row)
+        print(f"{net:14s} {lt:10s} {row['avg_speedup']:6.2f} "
+              f"{row['peak_speedup']:6.2f} {len(sp):3d}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"layers": rows, "summary": summary}, f, indent=1)
+    return summary
+
+
+if __name__ == "__main__":
+    main()

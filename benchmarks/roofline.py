@@ -1,0 +1,105 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md section Roofline).
+
+Reads every results/*.jsonl dry-run record and prints, per (arch x shape) on
+the single-pod mesh: the three roofline terms in seconds, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs usefulness ratio, and the roofline fraction
+(t_dominant vs the best achievable = max(t_compute over MODEL_FLOPS)).
+
+TPU v5e constants (DESIGN.md): 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from collections import OrderedDict
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+ARCHS = ["falcon_mamba_7b", "whisper_tiny", "qwen1_5_32b", "nemotron_4_340b",
+         "qwen2_5_3b", "yi_34b", "jamba_v0_1_52b",
+         "llama4_maverick_400b_a17b", "granite_moe_3b_a800m", "chameleon_34b"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(results_dir: str, mesh: str = "single",
+         phase: str = "baseline") -> "OrderedDict":
+    """phase: "baseline" (pre-hillclimb records) or "optimized" (section-Perf
+    re-measurements, marked with record["phase"])."""
+    recs = OrderedDict()
+    for f in sorted(glob.glob(os.path.join(results_dir, "*.jsonl"))):
+        with open(f) as fh:
+            for line in fh:
+                try:
+                    r = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                rec_phase = r.get("phase", "baseline")
+                if rec_phase != phase:
+                    continue
+                if r.get("mesh") == mesh and r.get("status") in ("ok", "skip"):
+                    recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def row(r: dict) -> dict:
+    if r["status"] == "skip":
+        return {"arch": r["arch"], "shape": r["shape"], "status": "skip"}
+    rf = r["roofline"]
+    model = r.get("model_flops_6nd", 0.0)
+    useful = model / rf["flops_per_dev"] / rf["n_chips"] \
+        if rf["flops_per_dev"] else 0.0
+    t_dom = max(rf["t_compute_s"], rf["t_memory_s"], rf["t_collective_s"])
+    t_ideal = model / (rf["n_chips"] * PEAK_FLOPS)
+    return {
+        "arch": r["arch"], "shape": r["shape"], "status": "ok",
+        "t_compute_s": rf["t_compute_s"], "t_memory_s": rf["t_memory_s"],
+        "t_collective_s": rf["t_collective_s"],
+        "bottleneck": rf["bottleneck"],
+        "useful_flops_ratio": useful,
+        "roofline_fraction": t_ideal / t_dom if t_dom else 0.0,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results-dir", default="results")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--phase", default="baseline",
+                    choices=["baseline", "optimized"])
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    recs = load(args.results_dir, args.mesh, args.phase)
+    rows = []
+    print(f"== Roofline table ({args.mesh}-pod mesh, v5e constants) ==")
+    print(f"{'arch':26s} {'shape':12s} {'t_comp':>9s} {'t_mem':>9s} "
+          f"{'t_coll':>9s} {'bound':>10s} {'useful':>7s} {'roofl%':>7s}")
+    for arch in ARCHS:
+        for shape in SHAPES:
+            r = recs.get((arch, shape))
+            if r is None:
+                if args.phase == "baseline":
+                    print(f"{arch:26s} {shape:12s} {'MISSING':>9s}")
+                continue
+            d = row(r)
+            rows.append(d)
+            if d["status"] == "skip":
+                print(f"{arch:26s} {shape:12s} {'skip (full attention @500k)'}")
+                continue
+            print(f"{arch:26s} {shape:12s} {d['t_compute_s']:9.3f} "
+                  f"{d['t_memory_s']:9.3f} {d['t_collective_s']:9.3f} "
+                  f"{d['bottleneck']:>10s} {d['useful_flops_ratio']:7.2f} "
+                  f"{100*d['roofline_fraction']:6.1f}%")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Benchmark driver: one harness per paper table/figure + the roofline table.
+
+  PYTHONPATH=src python -m benchmarks.run               # quick CPU pass
+  PYTHONPATH=src python -m benchmarks.run --full        # full layer sweeps
+
+Quick mode trims iteration counts and caps per-network layer counts so the
+whole suite finishes in minutes on one CPU core; --full runs every unique
+layer at paper resolution.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--skip", nargs="*", default=[],
+                    choices=["per_layer", "whole_network", "fast_fraction",
+                             "amortization", "roofline"])
+    args = ap.parse_args(argv)
+
+    from benchmarks import (amortization, fast_fraction, per_layer, roofline,
+                            whole_network)
+
+    t0 = time.time()
+    quick_nets = ["vgg16", "googlenet", "inception_v3", "squeezenet"]
+
+    if "per_layer" not in args.skip:
+        print("\n#### benchmarks.per_layer (paper Table 2) ####", flush=True)
+        pl_args = ["--iters", "3"] if args.full else \
+            ["--iters", "2", "--warmup", "1", "--max-layers-per-net", "6",
+             "--networks", *quick_nets]
+        per_layer.main(pl_args + ["--out", "results/bench_per_layer.json"])
+
+    if "whole_network" not in args.skip:
+        print("\n#### benchmarks.whole_network (paper Table 1) ####",
+              flush=True)
+        wn_args = [] if args.full else \
+            ["--iters", "2", "--networks", *quick_nets]
+        whole_network.main(wn_args + ["--out",
+                                      "results/bench_whole_network.json"])
+
+    if "fast_fraction" not in args.skip:
+        print("\n#### benchmarks.fast_fraction (paper Fig 3) ####", flush=True)
+        ff_args = [] if args.full else \
+            ["--iters", "1", "--warmup", "1", "--networks", "squeezenet",
+             "googlenet"]
+        fast_fraction.main(ff_args + ["--out",
+                                      "results/bench_fast_fraction.json"])
+
+    if "amortization" not in args.skip:
+        print("\n#### benchmarks.amortization (paper section 4) ####",
+              flush=True)
+        am_args = [] if args.full else ["--iters", "3",
+                                        "--m-sweep", "16", "64", "256"]
+        amortization.main(am_args + ["--out",
+                                     "results/bench_amortization.json"])
+
+    if "roofline" not in args.skip:
+        print("\n#### benchmarks.roofline (dry-run artifacts) ####",
+              flush=True)
+        roofline.main(["--out", "results/bench_roofline.json"])
+        print("\n#### roofline, optimized phase (EXPERIMENTS.md "
+              "section Perf hillclimb cells) ####", flush=True)
+        roofline.main(["--phase", "optimized",
+                       "--out", "results/bench_roofline_optimized.json"])
+
+    print(f"\nbenchmarks done in {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

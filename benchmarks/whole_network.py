@@ -1,0 +1,73 @@
+"""Paper Table 1 + Fig 3: whole-network latency under the two benchmark
+configurations -- (a) our scheme on suitable layers + im2row elsewhere
+(algorithm="auto"), (b) im2row everywhere -- and the fast-layer runtime
+fraction, for the five paper networks at batch size 1."""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import cnn
+
+from benchmarks.common import time_jitted
+
+NETWORKS = ["vgg16", "vgg19", "googlenet", "inception_v3", "squeezenet"]
+
+
+def bench_network(net: str, iters: int, warmup: int, res: int | None = None
+                  ) -> dict:
+    specs_fn, default_res = cnn.NETWORKS[net]
+    res = res or default_res
+    specs = specs_fn()
+    params = cnn.init_cnn(jax.random.key(0), specs, 3, res=res)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(
+        (1, res, res, 3)), jnp.float32)
+
+    fwd = {}
+    for algo in ("auto", "auto_tuned", "im2col"):
+        fn = jax.jit(functools.partial(cnn.cnn_forward, params, specs=specs,
+                                       algorithm=algo))
+        fwd[algo] = time_jitted(fn, x, warmup=warmup, iters=iters)
+    return {"network": net, "res": res,
+            "t_ours_s": fwd["auto"], "t_tuned_s": fwd["auto_tuned"],
+            "t_im2row_s": fwd["im2col"],
+            "speedup_pct": 100.0 * (1 - fwd["auto"] / fwd["im2col"]),
+            "speedup_tuned_pct":
+                100.0 * (1 - fwd["auto_tuned"] / fwd["im2col"])}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--networks", nargs="*", default=NETWORKS)
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--warmup", type=int, default=1)
+    ap.add_argument("--res", type=int, default=None,
+                    help="override input resolution (CPU-quick runs)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    rows = []
+    print("== Table 1 reproduction: whole-network latency (batch 1) ==")
+    print(f"{'Network':14s} {'im2row(ms)':>11s} {'ours(ms)':>10s} "
+          f"{'speedup':>8s} {'tuned(ms)':>10s} {'tuned-spd':>9s}")
+    for net in args.networks:
+        r = bench_network(net, args.iters, args.warmup, args.res)
+        rows.append(r)
+        print(f"{r['network']:14s} {r['t_im2row_s']*1e3:11.1f} "
+              f"{r['t_ours_s']*1e3:10.1f} {r['speedup_pct']:7.1f}% "
+              f"{r['t_tuned_s']*1e3:10.1f} {r['speedup_tuned_pct']:8.1f}%",
+              flush=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

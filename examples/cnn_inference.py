@@ -1,0 +1,62 @@
+"""Paper scenario: SqueezeNet inference on the framework's CNN zoo, flipping
+between the paper's two benchmark configurations.
+
+  PYTHONPATH=src python examples/cnn_inference.py [--network squeezenet]
+
+Reproduces the Table 1 measurement protocol for one network: batch-1 latency
+with (a) region-wise multi-channel Winograd on suitable layers + im2row on
+the rest ("auto"), vs (b) im2row everywhere.
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import cnn
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--network", default="squeezenet",
+                    choices=sorted(cnn.NETWORKS))
+    ap.add_argument("--iters", type=int, default=3)
+    args = ap.parse_args()
+
+    specs_fn, res = cnn.NETWORKS[args.network]
+    specs = specs_fn()
+    params = cnn.init_cnn(jax.random.key(0), specs, 3, res=res)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((1, res, res, 3)),
+                    jnp.float32)
+
+    # layer census: which layers does the paper's scheme accelerate?
+    layers = {}
+    jax.eval_shape(lambda x: cnn.cnn_forward(params, x, specs,
+                                             algorithm="im2col",
+                                             layer_times=layers), x)
+    fast = [k for k, v in layers.items() if v["suitable"]]
+    print(f"{args.network}: {len(layers)} conv layers, "
+          f"{len(fast)} Winograd-suitable")
+
+    outs = {}
+    for algo in ("im2col", "auto"):
+        fn = jax.jit(lambda x: cnn.cnn_forward(params, x, specs,
+                                               algorithm=algo))
+        outs[algo] = jax.block_until_ready(fn(x))    # compile+check
+        t0 = time.perf_counter()
+        for _ in range(args.iters):
+            jax.block_until_ready(fn(x))
+        dt = (time.perf_counter() - t0) / args.iters
+        print(f"algorithm={algo:7s}: {dt*1e3:8.1f} ms/inference "
+              f"({1/dt:.1f} fps)")
+
+    err = float(jnp.max(jnp.abs(outs["auto"] - outs["im2col"]))
+                / (jnp.max(jnp.abs(outs["im2col"])) + 1e-9))
+    print(f"prediction agreement between schemes: rel_err={err:.2e}")
+    assert err < 1e-3
+
+
+if __name__ == "__main__":
+    main()

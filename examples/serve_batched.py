@@ -1,0 +1,56 @@
+"""Batched serving example: continuous-batching decode over a smoke-size
+model with mixed-length requests.
+
+  PYTHONPATH=src python examples/serve_batched.py [--arch qwen2_5_3b]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs as cfglib
+from repro.distributed import context as dist
+from repro.launch.mesh import make_host_mesh
+from repro.launch.serve import Request, Server
+from repro.models import transformer as tf
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2_5_3b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-batch", type=int, default=3)
+    ap.add_argument("--max-new", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = cfglib.get_smoke_config(args.arch)
+    mesh = make_host_mesh()
+    rng = np.random.default_rng(0)
+    with dist.use_mesh(mesh):
+        params = tf.init_params(jax.random.key(0), cfg, jnp.float32)
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab,
+                                            size=(3 + i % 4,)).astype(np.int32),
+                        max_new=args.max_new)
+                for i in range(args.requests)]
+        srv = Server(cfg, params, max_batch=args.max_batch, max_len=64,
+                     mesh=mesh)
+        t0 = time.time()
+        done, ticks = srv.run(reqs)
+        dt = time.time() - t0
+
+    tok = sum(len(r.out) for r in done)
+    print(f"[serve] {len(done)} requests -> {tok} tokens in {dt:.2f}s "
+          f"({tok/dt:.1f} tok/s, {ticks} decode ticks, "
+          f"max_batch={args.max_batch})")
+    for r in sorted(done, key=lambda r: r.rid):
+        print(f"  req {r.rid}: prompt={r.prompt.tolist()} -> {r.out}")
+    assert len(done) == args.requests
+    assert all(len(r.out) == args.max_new for r in done)
+
+
+if __name__ == "__main__":
+    main()

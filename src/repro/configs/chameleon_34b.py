@@ -1,0 +1,26 @@
+"""chameleon-34b [vlm] -- early-fusion, VQ image tokens, qk-norm. [arXiv:2405.09818]
+
+48L d_model=8192 64H (kv=8) d_ff=22016 vocab=65536 (unified text + VQ image
+token vocabulary). The VQ-VAE image tokenizer is a frontend STUB per the
+brief; the backbone consumes tokens. Chameleon's qk-norm stabilizer is on.
+"""
+
+from repro.configs import shrink
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="chameleon-34b",
+    family="vlm",
+    n_layers=48,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=22016,
+    vocab=65536,
+    qk_norm=True,
+)
+
+
+def smoke() -> ArchConfig:
+    return shrink(CONFIG)

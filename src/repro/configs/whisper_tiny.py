@@ -1,0 +1,32 @@
+"""whisper-tiny [audio] -- encoder-decoder. [arXiv:2212.04356]
+
+4L enc + 4L dec, d_model=384, 6H MHA, d_ff=1536, vocab=51865, GELU,
+LayerNorm, learned positions. The conv frontend is a STUB at the dry-run
+input boundary (precomputed frame embeddings, per the brief); the stem itself
+is implemented in models/audio.py on the 1D Cook-Toom path and exercised by
+smoke tests and examples.
+"""
+
+from repro.configs import shrink
+from repro.models.config import ArchConfig, EncoderConfig
+
+CONFIG = ArchConfig(
+    name="whisper-tiny",
+    family="audio",
+    n_layers=4,
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=6,
+    head_dim=64,
+    d_ff=1536,
+    vocab=51865,
+    act="gelu",
+    pos_emb="learned",
+    encoder=EncoderConfig(n_layers=4, n_ctx=1500),
+    tie_embeddings=True,
+    max_seq=32_768,
+)
+
+
+def smoke() -> ArchConfig:
+    return shrink(CONFIG)

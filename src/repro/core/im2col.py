@@ -1,0 +1,81 @@
+"""im2row/im2col + GEMM convolution -- the paper's baseline comparator.
+
+The paper benchmarks its region-wise multi-channel Winograd scheme against
+"aggressively optimized" im2row lowering: patches are linearized into rows of
+an [OHW x khkwC] matrix and multiplied with the [khkwC x M] filter matrix.
+We implement the same lowering in JAX (NHWC / row-major => im2row); the Pallas
+counterpart is kernels/im2col_gemm.py.
+"""
+
+from __future__ import annotations
+
+from typing import Literal, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Padding = Literal["SAME", "VALID"]
+
+
+def _same_pads(size: int, k: int, stride: int) -> tuple[int, int]:
+    out = -(-size // stride)
+    total = max((out - 1) * stride + k - size, 0)
+    return total // 2, total - total // 2
+
+
+def im2row(x: jax.Array, kh: int, kw: int, stride: tuple[int, int],
+           padding: Padding) -> tuple[jax.Array, tuple[int, int]]:
+    """(N, H, W, C) -> ((N * OH * OW, kh * kw * C), (OH, OW))."""
+    n, h, w, c = x.shape
+    sh, sw = stride
+    if padding == "SAME":
+        ph, pw = _same_pads(h, kh, sh), _same_pads(w, kw, sw)
+        x = jnp.pad(x, ((0, 0), ph, pw, (0, 0)))
+        h, w = x.shape[1], x.shape[2]
+    oh = (h - kh) // sh + 1
+    ow = (w - kw) // sw + 1
+    # static gather of patch rows; under jit this lowers to slices/concats.
+    rows = []
+    for di in range(kh):
+        for dj in range(kw):
+            rows.append(
+                jax.lax.slice(x, (0, di, dj, 0),
+                              (n, di + (oh - 1) * sh + 1, dj + (ow - 1) * sw + 1, c),
+                              (1, sh, sw, 1)))
+    patches = jnp.stack(rows, axis=3)                 # (N, OH, OW, khkw, C)
+    return patches.reshape(n * oh * ow, kh * kw * c), (oh, ow)
+
+
+def im2col_conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    stride: int | tuple[int, int] = 1,
+    padding: Padding = "SAME",
+    precision=None,
+    preferred_element_type=jnp.float32,
+) -> jax.Array:
+    """Baseline convolution: im2row lowering + one big GEMM.
+
+    Args:
+      x: (N, H, W, C) NHWC.
+      w: (kh, kw, C, M) HWIO.
+    """
+    n = x.shape[0]
+    kh, kw, c, m = w.shape
+    stride = (stride, stride) if isinstance(stride, int) else stride
+    a, (oh, ow) = im2row(x, kh, kw, stride, padding)
+    b = w.reshape(kh * kw * c, m)
+    y = jnp.matmul(a, b, precision=precision,
+                   preferred_element_type=preferred_element_type)
+    return y.reshape(n, oh, ow, m).astype(x.dtype)
+
+
+def direct_conv2d(x: jax.Array, w: jax.Array, *, stride=1,
+                  padding: Padding = "SAME") -> jax.Array:
+    """lax.conv_general_dilated oracle (testing only)."""
+    stride = (stride, stride) if isinstance(stride, int) else stride
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=stride, padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))

@@ -1,0 +1,261 @@
+"""Region-wise multi-channel Winograd / Cook-Toom convolution (pure JAX).
+
+This is the paper's core contribution expressed as a composable JAX module.
+The three phases map 1:1 onto the paper's scheme (Fig. 2):
+
+  1. *Input transform*: tile the NHWC input into overlapping t x t regions,
+     apply B^T x B per region, and scatter the t^2 Winograd-domain points into
+     a (P, R, C) tensor -- P = t^2 Winograd points, R = regions, C = channels.
+     (The paper's "array of A matrices".)
+  2. *GEMM*: P batched matmuls (P, R, C) x (P, C, M) -> (P, R, M). The
+     channel-wise sum of Hadamard products becomes a matrix multiply over C --
+     on TPU this feeds the MXU; the Pallas kernel in kernels/winograd.py is the
+     hand-tiled version of exactly this einsum.
+  3. *Output transform*: gather each region's P points, apply A^T (.) A, and
+     write the m x m spatial outputs back into NHWC.
+
+Layout note (paper section 2.1): NHWC keeps C innermost, so the transform
+arithmetic -- which is a fixed pattern of adds/subs across the *tile* axes --
+vectorizes over channels. On TPU the channel axis maps onto the 128-wide lane
+dimension; all einsums below keep C/M innermost for that reason.
+
+Only stride-1 convolutions are expressible in the Winograd domain; the
+dispatcher (core/dispatch.py) falls back to im2col for anything else, exactly
+as the paper restricts the fast scheme to "suitable" layers.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.transforms import CookToom, cook_toom
+
+Padding = Literal["SAME", "VALID"]
+
+
+# ---------------------------------------------------------------------------
+# Filter transforms (done once per layer; weights are kept in the Winograd
+# domain between steps, mirroring the paper's pre-transformed 'B' matrices).
+# ---------------------------------------------------------------------------
+
+def transform_filter_2d(w: jax.Array, ct_h: CookToom, ct_w: CookToom) -> jax.Array:
+    """(kh, kw, C, M) -> (th, tw, C, M): G_h w G_w^T over the spatial axes."""
+    g_h = jnp.asarray(ct_h.G, w.dtype)
+    g_w = jnp.asarray(ct_w.G, w.dtype)
+    return jnp.einsum("ij,jkcm,lk->ilcm", g_h, w, g_w)
+
+
+def transform_filter_1d(w: jax.Array, ct: CookToom) -> jax.Array:
+    """(k, C, M) -> (t, C, M)."""
+    return jnp.einsum("ij,jcm->icm", jnp.asarray(ct.G, w.dtype), w)
+
+
+# ---------------------------------------------------------------------------
+# Tiling helpers
+# ---------------------------------------------------------------------------
+
+def _pad_amounts(size: int, k: int, m: int, padding: Padding) -> tuple[int, int, int]:
+    """Return (lo, hi, n_tiles) padding for one spatial axis.
+
+    The axis is padded so that (padded - k + 1) is a positive multiple of the
+    output tile m; surplus outputs are cropped after the inverse transform.
+    """
+    if padding == "SAME":
+        out = size
+        lo = (k - 1) // 2
+    else:
+        out = size - k + 1
+        lo = 0
+    if out <= 0:
+        raise ValueError(f"axis of size {size} too small for filter {k} ({padding})")
+    n_tiles = -(-out // m)                      # ceil
+    padded = n_tiles * m + k - 1
+    hi = padded - size - lo
+    return lo, hi, n_tiles
+
+
+def _extract_tiles_1d(x: jax.Array, axis: int, t: int, m: int, n: int) -> jax.Array:
+    """Slice axis of length n*m + t - m into n overlapping windows of length t.
+
+    Output: the axis is replaced by two axes (n, t). Uses a gather with a
+    static index map (cheap under jit; the Pallas kernel replaces this with a
+    BlockSpec index_map so no materialized gather happens on TPU).
+    """
+    idx = (np.arange(n)[:, None] * m + np.arange(t)[None, :]).reshape(-1)
+    out = jnp.take(x, jnp.asarray(idx), axis=axis)
+    new_shape = x.shape[:axis] + (n, t) + x.shape[axis + 1:]
+    return out.reshape(new_shape)
+
+
+# ---------------------------------------------------------------------------
+# 2D region-wise multi-channel convolution
+# ---------------------------------------------------------------------------
+
+def winograd_conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    output_tile: int | tuple[int, int] = 4,
+    padding: Padding = "SAME",
+    precision=None,
+    preferred_element_type=jnp.float32,
+) -> jax.Array:
+    """F(m x m, kh x kw) region-wise multi-channel convolution.
+
+    Args:
+      x: (N, H, W, C) input, NHWC.
+      w: (kh, kw, C, M) filter, HWIO. kh/kw may be 1 (degenerates to the 1D
+         row/column algorithm, the paper's 1xN / Nx1 case).
+      output_tile: m (outputs per tile per axis). Axes with k == 1 use m = 1
+         implicitly via F(m, 1) = identity-free passthrough handled by the 1D
+         path below.
+      padding: SAME or VALID; stride is always 1 (dispatcher enforces).
+
+    Returns:
+      (N, H', W', M) output in the same spatial convention as
+      jax.lax.conv_general_dilated with the given padding.
+    """
+    kh, kw, c, mout = w.shape
+    if kh == 1 or kw == 1:
+        return _winograd_conv2d_1d_kernel(
+            x, w, output_tile=output_tile, padding=padding,
+            precision=precision, preferred_element_type=preferred_element_type)
+
+    mh, mw = (output_tile, output_tile) if isinstance(output_tile, int) else output_tile
+    ct_h, ct_w = cook_toom(mh, kh), cook_toom(mw, kw)
+    u = transform_filter_2d(w, ct_h, ct_w)              # (th, tw, C, M)
+    return winograd_conv2d_pretransformed(
+        x, u, ct_h, ct_w, padding=padding, precision=precision,
+        preferred_element_type=preferred_element_type)
+
+
+def winograd_conv2d_pretransformed(
+    x: jax.Array,
+    u: jax.Array,
+    ct_h: CookToom,
+    ct_w: CookToom,
+    *,
+    padding: Padding = "SAME",
+    precision=None,
+    preferred_element_type=jnp.float32,
+) -> jax.Array:
+    """Same as winograd_conv2d but with the filter already in the Winograd
+    domain -- the deployment path (weights transformed once, reused per step).
+    """
+    n, h, wdt, c = x.shape
+    th, tw, _, mout = u.shape
+    mh, mw, kh, kw = ct_h.m, ct_w.m, ct_h.r, ct_w.r
+
+    lo_h, hi_h, nh = _pad_amounts(h, kh, mh, padding)
+    lo_w, hi_w, nw = _pad_amounts(wdt, kw, mw, padding)
+    xp = jnp.pad(x, ((0, 0), (lo_h, hi_h), (lo_w, hi_w), (0, 0)))
+
+    # --- phase 1: tile + input transform + scatter -------------------------
+    tiles = _extract_tiles_1d(xp, 1, th, mh, nh)        # (N, nh, th, Wp, C)
+    tiles = _extract_tiles_1d(tiles, 3, tw, mw, nw)     # (N, nh, th, nw, tw, C)
+    bt_h = jnp.asarray(ct_h.BT, x.dtype)
+    bt_w = jnp.asarray(ct_w.BT, x.dtype)
+    # B^T d B, vectorized over (N, nh, nw, C) -- channels innermost (NHWC).
+    v = jnp.einsum("it,nhtwuc,ju->nhwijc", bt_h, tiles, bt_w)
+    # scatter: (P, R, C) with P = th*tw Winograd points, R = N*nh*nw regions.
+    v = v.reshape(n * nh * nw, th * tw, c).transpose(1, 0, 2)
+
+    # --- phase 2: P batched GEMMs [R x C] x [C x M] ------------------------
+    uu = u.reshape(th * tw, c, mout)
+    y = jnp.einsum("prc,pcm->prm", v, uu, precision=precision,
+                   preferred_element_type=preferred_element_type)
+
+    # --- phase 3: gather + output transform --------------------------------
+    y = y.transpose(1, 0, 2).reshape(n, nh, nw, th, tw, mout)
+    at_h = jnp.asarray(ct_h.AT, y.dtype)
+    at_w = jnp.asarray(ct_w.AT, y.dtype)
+    out = jnp.einsum("it,nhwtum,ju->nhiwjm", at_h, y, at_w)
+    out = out.reshape(n, nh * mh, nw * mw, mout)
+
+    out_h = h if padding == "SAME" else h - kh + 1
+    out_w = wdt if padding == "SAME" else wdt - kw + 1
+    return out[:, :out_h, :out_w, :].astype(x.dtype)
+
+
+def _winograd_conv2d_1d_kernel(
+    x: jax.Array, w: jax.Array, *, output_tile, padding: Padding,
+    precision, preferred_element_type,
+) -> jax.Array:
+    """1xN / Nx1 layers (paper's Inception-v3 case): 1D Cook-Toom along the
+    non-unit axis, plain channel GEMM along the unit axis."""
+    kh, kw, c, mout = w.shape
+    axis = 1 if kh > 1 else 2          # spatial axis the filter runs along
+    k = max(kh, kw)
+    if k == 1:                          # 1x1: pure channel GEMM (pointwise)
+        return jnp.einsum("nhwc,cm->nhwm", x, w[0, 0],
+                          precision=precision,
+                          preferred_element_type=preferred_element_type
+                          ).astype(x.dtype)
+    m = output_tile if isinstance(output_tile, int) else output_tile[axis - 1]
+    ct = cook_toom(m, k)
+    u = transform_filter_1d(w.reshape(k, c, mout), ct)   # (t, C, M)
+
+    n, h, wdt, _ = x.shape
+    size = x.shape[axis]
+    lo, hi, nt = _pad_amounts(size, k, m, padding)
+    pad = [(0, 0)] * 4
+    pad[axis] = (lo, hi)
+    xp = jnp.pad(x, pad)
+    tiles = _extract_tiles_1d(xp, axis, ct.t, m, nt)     # axis -> (nt, t)
+    bt = jnp.asarray(ct.BT, x.dtype)
+    at = jnp.asarray(ct.AT, x.dtype)
+    if axis == 1:
+        v = jnp.einsum("it,nstwc->nsiwc", bt, tiles)     # (N, nt, t, W, C)
+        y = jnp.einsum("nsiwc,icm->nsiwm", v, u, precision=precision,
+                       preferred_element_type=preferred_element_type)
+        out = jnp.einsum("ot,nstwm->nsowm", at.astype(y.dtype), y)
+        out = out.reshape(n, nt * m, wdt, mout)
+        out_sz = h if padding == "SAME" else h - k + 1
+        return out[:, :out_sz].astype(x.dtype)
+    else:
+        v = jnp.einsum("it,nhstc->nhsic", bt, tiles)     # (N, H, nt, t, C)
+        y = jnp.einsum("nhsic,icm->nhsim", v, u, precision=precision,
+                       preferred_element_type=preferred_element_type)
+        out = jnp.einsum("ot,nhstm->nhsom", at.astype(y.dtype), y)
+        out = out.reshape(n, h, nt * m, mout)
+        out_sz = wdt if padding == "SAME" else wdt - k + 1
+        return out[:, :, :out_sz].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# 1D depthwise causal Cook-Toom convolution (Mamba's short conv). This is the
+# paper's 1D algorithm specialized to depthwise form: the per-point GEMM over
+# channels degenerates to an elementwise product, but the multiplication
+# reduction (m*r/t) still applies per channel.
+# ---------------------------------------------------------------------------
+
+def ct_depthwise_causal_conv1d(
+    x: jax.Array, w: jax.Array, *, output_tile: int = 4,
+) -> jax.Array:
+    """Causal depthwise conv: y[b, l, c] = sum_k w[k, c] * x[b, l - (r-1) + k, c].
+
+    Args:
+      x: (B, L, C).
+      w: (r, C) depthwise taps.
+    Returns:
+      (B, L, C), same length (causal left pad of r - 1).
+    """
+    r, c = w.shape
+    b, length, _ = x.shape
+    ct = cook_toom(output_tile, r)
+    nt = -(-length // ct.m)
+    # causal pad left r-1; pad right so tiles cover nt * m outputs.
+    xp = jnp.pad(x, ((0, 0), (r - 1, nt * ct.m - length), (0, 0)))
+    tiles = _extract_tiles_1d(xp, 1, ct.t, ct.m, nt)     # (B, nt, t, C)
+    bt = jnp.asarray(ct.BT, x.dtype)
+    at = jnp.asarray(ct.AT, x.dtype)
+    u = jnp.einsum("ij,jc->ic", jnp.asarray(ct.G, w.dtype), w)   # (t, C)
+    v = jnp.einsum("it,bstc->bsic", bt, tiles)
+    y = v * u[None, None]                                 # Hadamard, per channel
+    out = jnp.einsum("ot,bstc->bsoc", at, y).reshape(b, nt * ct.m, c)
+    return out[:, :length].astype(x.dtype)

@@ -1,0 +1,77 @@
+"""Global distribution context.
+
+Model code stays mesh-agnostic by calling shard_activations(x, kind); when a
+mesh is active (set by the launcher / dry-run), that applies a
+with_sharding_constraint from the active rule set, otherwise it is a no-op.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    """Mesh axes the global batch shards over (pod axis folds into data)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def default_activation_rules(mesh: Mesh) -> dict[str, P]:
+    """kind -> PartitionSpec for (B, S, D) activations."""
+    ba = batch_axes(mesh)
+    return {
+        # residual stream: batch over data axes, sequence over the model axis
+        # (sequence parallelism -- cuts checkpointed activations 16x; XLA
+        # all-gathers around attention/matmul as needed).
+        "residual": P(ba, "model", None),
+        # decode-time activations: (B, 1, D) -- batch only.
+        "decode": P(ba, None, None),
+    }
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: Optional[dict] = None):
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = (mesh, rules if rules is not None
+                  else default_activation_rules(mesh))
+    try:
+        with mesh:
+            yield
+    finally:
+        _state.ctx = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    ctx = getattr(_state, "ctx", None)
+    return ctx[0] if ctx else None
+
+
+def shard_activations(x: jax.Array, kind: str) -> jax.Array:
+    ctx = getattr(_state, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = rules.get(kind)
+    if spec is None:
+        return x
+    # guard: do not constrain axes the array cannot shard (tiny smoke shapes).
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    ok = True
+    for dim, ax in zip(x.shape, spec):
+        if ax is None:
+            continue
+        axs = ax if isinstance(ax, tuple) else (ax,)
+        need = 1
+        for a in axs:
+            need *= sizes[a]
+        if dim % need:
+            ok = False
+    if not ok:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,180 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+These mirror the pure-JAX entry points in repro.core (same signatures, same
+semantics) and handle all padding/blocking so callers never see alignment
+constraints. `interpret` defaults to True off-TPU (this container is CPU-only;
+on a real TPU pass interpret=False or set REPRO_PALLAS_COMPILE=1).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import im2col as _im2col
+from repro.core import winograd as _wg
+from repro.core.transforms import DEFAULT_OUTPUT_TILE, cook_toom
+from repro.kernels import conv1d_ct as _k_conv1d
+from repro.kernels import matmul as _k_matmul
+from repro.kernels import winograd as _k_winograd
+
+
+def _default_interpret() -> bool:
+    if os.environ.get("REPRO_PALLAS_COMPILE"):
+        return False
+    return jax.default_backend() != "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _block(dim: int, target: int, quantum: int = 8) -> int:
+    """Pick a block size <= target; tiny dims round up to the VPU quantum."""
+    return target if dim >= target else _round_up(dim, quantum)
+
+
+def _pad_axis(x: jax.Array, axis: int, to: int) -> jax.Array:
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, to - x.shape[axis])
+    return jnp.pad(x, pad) if pad[axis][1] else x
+
+
+# ---------------------------------------------------------------------------
+# Winograd conv2d
+# ---------------------------------------------------------------------------
+
+def winograd_conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    output_tile: int | None = None,
+    padding: _wg.Padding = "SAME",
+    block_r: int = 128,
+    block_c: int = 128,
+    block_m: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Pallas-backed F(m x m, k x k) convolution, NHWC x HWIO -> NHWC."""
+    if interpret is None:
+        interpret = _default_interpret()
+    n, h, wdt, c = x.shape
+    kh, kw, _, mout = w.shape
+    if kh == 1 or kw == 1:
+        # 1xN / Nx1 / 1x1 layers route through the pure-JAX 1D path (its GEMM
+        # is a single matmul XLA already maps to the MXU).
+        mt = output_tile or DEFAULT_OUTPUT_TILE.get(max(kh, kw), 2)
+        return _wg.winograd_conv2d(x, w, output_tile=mt, padding=padding)
+    mt = output_tile or DEFAULT_OUTPUT_TILE.get(max(kh, kw), 2)
+    ct_h, ct_w = cook_toom(mt, kh), cook_toom(mt, kw)
+    u = _wg.transform_filter_2d(w, ct_h, ct_w)           # (th, tw, C, M)
+    u = u.reshape(ct_h.t * ct_w.t, c, mout)
+
+    lo_h, hi_h, nh = _wg._pad_amounts(h, kh, ct_h.m, padding)
+    lo_w, hi_w, nw = _wg._pad_amounts(wdt, kw, ct_w.m, padding)
+    xp = jnp.pad(x, ((0, 0), (lo_h, hi_h), (lo_w, hi_w), (0, 0)))
+    tiles = _wg._extract_tiles_1d(xp, 1, ct_h.t, ct_h.m, nh)
+    tiles = _wg._extract_tiles_1d(tiles, 3, ct_w.t, ct_w.m, nw)
+    tiles = tiles.transpose(0, 1, 3, 2, 4, 5).reshape(
+        n * nh * nw, ct_h.t, ct_w.t, c)                  # (R, th, tw, C)
+
+    r_tot = tiles.shape[0]
+    br = _block(r_tot, block_r)
+    bc = _block(c, block_c)
+    bm = _block(mout, block_m)
+    tiles = _pad_axis(tiles, 0, _round_up(r_tot, br))
+    tiles = _pad_axis(tiles, 3, _round_up(c, bc))
+    u = _pad_axis(_pad_axis(u, 1, _round_up(c, bc)), 2, _round_up(mout, bm))
+
+    y = _k_winograd.winograd_fused(
+        tiles, u, ct_h=ct_h, ct_w=ct_w, block_r=br, block_c=bc, block_m=bm,
+        interpret=interpret)                             # (Rp, mh, mw, Mp)
+    y = y[:r_tot, :, :, :mout].reshape(n, nh, nw, ct_h.m, ct_w.m, mout)
+    y = y.transpose(0, 1, 3, 2, 4, 5).reshape(n, nh * ct_h.m, nw * ct_w.m, mout)
+    out_h = h if padding == "SAME" else h - kh + 1
+    out_w = wdt if padding == "SAME" else wdt - kw + 1
+    return y[:, :out_h, :out_w]
+
+
+# ---------------------------------------------------------------------------
+# im2col conv2d (baseline)
+# ---------------------------------------------------------------------------
+
+def im2col_conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    stride: int | tuple[int, int] = 1,
+    padding: _wg.Padding = "SAME",
+    block: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Pallas-backed im2row + GEMM baseline."""
+    if interpret is None:
+        interpret = _default_interpret()
+    n = x.shape[0]
+    kh, kw, c, mout = w.shape
+    stride = (stride, stride) if isinstance(stride, int) else stride
+    a, (oh, ow) = _im2col.im2row(x, kh, kw, stride, padding)
+    b = w.reshape(kh * kw * c, mout)
+    mm, kk = a.shape
+    bm_ = _block(mm, block)
+    bk_ = _block(kk, block)
+    bn_ = _block(mout, block)
+    a = _pad_axis(_pad_axis(a, 0, _round_up(mm, bm_)), 1, _round_up(kk, bk_))
+    b = _pad_axis(_pad_axis(b, 0, _round_up(kk, bk_)), 1, _round_up(mout, bn_))
+    y = _k_matmul.matmul(a, b, bm=bm_, bn=bn_, bk=bk_, interpret=interpret)
+    return y[:mm, :mout].reshape(n, oh, ow, mout).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal Cook-Toom conv1d (Mamba short conv)
+# ---------------------------------------------------------------------------
+
+def ct_depthwise_causal_conv1d(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    output_tile: int = 4,
+    block_s: int = 256,
+    block_c: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """(B, L, C) x (r, C) -> (B, L, C), causal."""
+    if interpret is None:
+        interpret = _default_interpret()
+    r, c = w.shape
+    b, length, _ = x.shape
+    ct = cook_toom(output_tile, r)
+    nt = -(-length // ct.m)
+    xp = jnp.pad(x, ((0, 0), (r - 1, nt * ct.m - length), (0, 0)))
+    tiles = _wg._extract_tiles_1d(xp, 1, ct.t, ct.m, nt)    # (B, nt, t, C)
+    u = jnp.einsum("ij,jc->ic", jnp.asarray(ct.G, w.dtype), w)
+
+    bs = _block(nt, block_s)
+    bc = _block(c, block_c)
+    tiles = _pad_axis(tiles, 1, _round_up(nt, bs))
+    tiles = _pad_axis(tiles, 3, _round_up(c, bc))
+    u = _pad_axis(u, 1, _round_up(c, bc))
+    y = _k_conv1d.conv1d_ct_fused(tiles, u, ct=ct, block_s=bs, block_c=bc,
+                                  interpret=interpret)
+    y = y[:, :nt, :, :c].reshape(b, nt * ct.m, c)
+    return y[:, :length]
+
+
+def matmul(a: jax.Array, b: jax.Array, *, block: int = 128,
+           interpret: bool | None = None) -> jax.Array:
+    """Padding-tolerant blocked matmul."""
+    if interpret is None:
+        interpret = _default_interpret()
+    m, k = a.shape
+    _, n = b.shape
+    bm_, bk_, bn_ = _block(m, block), _block(k, block), _block(n, block)
+    ap = _pad_axis(_pad_axis(a, 0, _round_up(m, bm_)), 1, _round_up(k, bk_))
+    bp = _pad_axis(_pad_axis(b, 0, _round_up(k, bk_)), 1, _round_up(n, bn_))
+    return _k_matmul.matmul(ap, bp, bm=bm_, bn=bn_, bk=bk_,
+                            interpret=interpret)[:m, :n]

@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Each function computes the same contract as its kernels/ counterpart using
+only jax.numpy / lax primitives -- no Pallas, no blocking, no padding tricks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import winograd as _wg
+from repro.core.transforms import CookToom
+
+
+def matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def winograd_fused(tiles: jax.Array, u: jax.Array, *, ct_h: CookToom,
+                   ct_w: CookToom) -> jax.Array:
+    """(R, th, tw, C), (P, C, M) -> (R, mh, mw, M)."""
+    bt_h = jnp.asarray(ct_h.BT, jnp.float32)
+    bt_w = jnp.asarray(ct_w.BT, jnp.float32)
+    at_h = jnp.asarray(ct_h.AT, jnp.float32)
+    at_w = jnp.asarray(ct_w.AT, jnp.float32)
+    x = tiles.astype(jnp.float32)
+    v = jnp.einsum("it,rtuc,ju->rijc", bt_h, x, bt_w)
+    v = v.reshape(v.shape[0], ct_h.t * ct_w.t, -1).transpose(1, 0, 2)
+    y = jnp.einsum("prc,pcm->prm", v, u.astype(jnp.float32))
+    y = y.transpose(1, 0, 2).reshape(-1, ct_h.t, ct_w.t, y.shape[-1])
+    out = jnp.einsum("it,rtum,ju->rijm", at_h, y, at_w)
+    return out.astype(tiles.dtype)
+
+
+def conv1d_ct_fused(tiles: jax.Array, u: jax.Array, *, ct: CookToom) -> jax.Array:
+    """(B, S, t, C), (t, C) -> (B, S, m, C)."""
+    bt = jnp.asarray(ct.BT, jnp.float32)
+    at = jnp.asarray(ct.AT, jnp.float32)
+    v = jnp.einsum("it,bstc->bsic", bt, tiles.astype(jnp.float32))
+    y = v * u.astype(jnp.float32)[None, None]
+    return jnp.einsum("ot,bstc->bsoc", at, y).astype(tiles.dtype)
+
+
+def conv2d_direct(x: jax.Array, w: jax.Array, *, stride=1,
+                  padding="SAME") -> jax.Array:
+    """End-to-end convolution oracle for the ops.py wrappers."""
+    stride = (stride, stride) if isinstance(stride, int) else stride
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=stride, padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def selective_scan(dt: jax.Array, xs: jax.Array, bmat: jax.Array,
+                   cmat: jax.Array, a_mat: jax.Array
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Sequential-oracle Mamba-1 selective scan.
+
+    dt, xs: (B, L, D); bmat, cmat: (B, L, N); a_mat: (D, N).
+    y_t = C_t h_t with h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t.
+    Returns (y (B, L, D) f32, h_last (B, D, N) f32).
+    """
+    f32 = jnp.float32
+    dt, xs = dt.astype(f32), xs.astype(f32)
+    bmat, cmat = bmat.astype(f32), cmat.astype(f32)
+    b, l, d = dt.shape
+    n = a_mat.shape[-1]
+
+    def step(h, inputs):
+        dti, xi, bi, ci = inputs                     # (B, D), (B, N)
+        a_bar = jnp.exp(dti[..., None] * a_mat[None])      # (B, D, N)
+        h = a_bar * h + (dti * xi)[..., None] * bi[:, None, :]
+        y = jnp.einsum("bds,bs->bd", h, ci)
+        return h, y
+
+    h0 = jnp.zeros((b, d, n), f32)
+    h_last, ys = jax.lax.scan(
+        step, h0, (dt.transpose(1, 0, 2), xs.transpose(1, 0, 2),
+                   bmat.transpose(1, 0, 2), cmat.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2), h_last
+
+
+def depthwise_causal_conv1d_direct(x: jax.Array, w: jax.Array) -> jax.Array:
+    """(B, L, C) x (r, C) -> (B, L, C) causal oracle."""
+    r = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (r - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for k in range(r):
+        out = out + xp[:, k:k + x.shape[1]] * w[k][None, None]
+    return out

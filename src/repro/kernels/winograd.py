@@ -1,0 +1,129 @@
+"""Fused region-wise multi-channel Winograd convolution Pallas kernel.
+
+TPU-native adaptation of the paper's three-phase scheme. The paper stages
+(input transform -> scatter to matrices in memory -> GEMMs -> gather -> output
+transform) through L1/L2; on TPU we instead *fuse* all three phases in VMEM:
+
+  grid = (R / bR,  M / bM,  C / bC)        # C innermost: accumulation axis
+
+  per step:
+    1. load a (bR, th, tw, bC) block of pre-extracted input tiles,
+       apply B^T (.) B  -- a fixed pattern of small matmuls over the tile
+       axes, vectorized over (bR, bC); channels stay on the 128-lane axis
+       (the paper's NHWC/NEON argument, 128 lanes wide instead of 4);
+    2. one *batched* dot_general over the P = th*tw Winograd points:
+       (P, bR, bC) x (P, bC, bM) -> accumulate (P, bR, bM) fp32 in VMEM.
+       This is the paper's "array of GEMMs", batched so the MXU pipeline
+       never drains between points;
+    3. on the last C step, apply A^T (.) A and write the (bR, mh, mw, bM)
+       spatial output block.
+
+The Winograd-domain tensors (the paper's scattered 'A'/'C' matrices) never
+touch HBM -- this fusion is the main beyond-paper optimization and is measured
+in EXPERIMENTS.md section Perf.
+
+Tile extraction (overlapping windows) happens outside the kernel: XLA lowers
+it to strided slices, and it is the only part of the algorithm that cannot be
+expressed as a non-overlapping BlockSpec.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.transforms import CookToom
+
+
+def _apply_pair(mat_h, mat_w, x):
+    """einsum('it,brtuc,ju->bricj'-free): y[b,i,j,c] = sum_tu H[i,t] W[j,u] x[b,t,u,c].
+
+    x: (bR, th, tw, bC). Contractions kept as dots on the small tile axes so
+    the (bR, bC) payload axes ride along untouched (lane dim = channels).
+    """
+    # contract th: (i,t) x (b,t,u,c) -> (b,i,u,c)
+    y = jnp.tensordot(mat_h, x, axes=(1, 1)).transpose(1, 0, 2, 3)
+    # contract tw: (j,u) x (b,i,u,c) -> (b,i,j,c)
+    y = jnp.tensordot(mat_w, y, axes=(1, 2)).transpose(1, 2, 0, 3)
+    return y
+
+
+def _winograd_kernel(bt_h_ref, bt_w_ref, at_h_ref, at_w_ref, x_ref, u_ref,
+                     o_ref, acc_ref, *, n_c: int):
+    c_step = pl.program_id(2)
+
+    @pl.when(c_step == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]                                   # (bR, th, tw, bC)
+    br, th, tw, bc = x.shape
+    v = _apply_pair(bt_h_ref[...], bt_w_ref[...],
+                    x.astype(jnp.float32))           # (bR, th, tw, bC)
+    v = v.transpose(1, 2, 0, 3).reshape(th * tw, br, bc)  # (P, bR, bC)
+
+    u = u_ref[...]                                   # (P, bC, bM)
+    # batched point-GEMM: the paper's x^2 GEMMs as one dot_general.
+    acc_ref[...] += jax.lax.dot_general(
+        v, u.astype(jnp.float32),
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)          # (P, bR, bM)
+
+    @pl.when(c_step == n_c - 1)
+    def _store():
+        bm_ = acc_ref.shape[-1]
+        y = acc_ref[...].reshape(th, tw, br, bm_).transpose(2, 0, 1, 3)
+        out = _apply_pair(at_h_ref[...], at_w_ref[...], y)  # (bR, mh, mw, bM)
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("ct_h", "ct_w", "block_r",
+                                             "block_c", "block_m", "interpret"))
+def winograd_fused(
+    tiles: jax.Array,        # (R, th, tw, C) pre-extracted input tiles
+    u: jax.Array,            # (P, C, M) Winograd-domain filter (P = th*tw)
+    *,
+    ct_h: CookToom,
+    ct_w: CookToom,
+    block_r: int = 128,
+    block_c: int = 128,
+    block_m: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused transform+GEMM+inverse over pre-extracted tiles.
+
+    Returns (R, mh, mw, M) spatial output tiles. R, C, M must be multiples of
+    the block sizes (ops.py pads).
+    """
+    r_, th, tw, c = tiles.shape
+    p, c2, m = u.shape
+    assert (th, tw) == (ct_h.t, ct_w.t) and p == th * tw and c == c2
+    assert r_ % block_r == 0 and c % block_c == 0 and m % block_m == 0, (
+        tiles.shape, u.shape, (block_r, block_c, block_m))
+    n_c = c // block_c
+    grid = (r_ // block_r, m // block_m, n_c)
+    bt_h = jnp.asarray(ct_h.BT, jnp.float32)
+    bt_w = jnp.asarray(ct_w.BT, jnp.float32)
+    at_h = jnp.asarray(ct_h.AT, jnp.float32)
+    at_w = jnp.asarray(ct_w.AT, jnp.float32)
+    whole = lambda arr: pl.BlockSpec(arr.shape, lambda i, j, k: (0,) * arr.ndim)
+    return pl.pallas_call(
+        functools.partial(_winograd_kernel, n_c=n_c),
+        grid=grid,
+        in_specs=[
+            whole(bt_h), whole(bt_w), whole(at_h), whole(at_w),
+            pl.BlockSpec((block_r, th, tw, block_c),
+                         lambda i, j, k: (i, 0, 0, k)),
+            pl.BlockSpec((p, block_c, block_m),
+                         lambda i, j, k: (0, k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_r, ct_h.m, ct_w.m, block_m),
+                               lambda i, j, k: (i, 0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((r_, ct_h.m, ct_w.m, m), tiles.dtype),
+        scratch_shapes=[pltpu.VMEM((p, block_r, block_m), jnp.float32)],
+        interpret=interpret,
+    )(bt_h, bt_w, at_h, at_w, tiles, u)

@@ -1,0 +1,239 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the jitted step (train / prefill / decode) with
+full production shardings, lowers it against ShapeDtypeStruct inputs (no
+allocation), compiles for the 16x16 single-pod mesh and the 2x16x16 multi-pod
+mesh, and records memory_analysis / cost_analysis / collective bytes. The
+multi-pod pass proves the "pod" axis shards; rooflines (EXPERIMENTS.md) read
+the single-pod results.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2_5_3b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun.jsonl
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as cfglib
+from repro.distributed import context as dist
+from repro.distributed import sharding as shd
+from repro.launch import hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step
+from repro.models import transformer as tf
+from repro.optim import adamw
+
+#: gradient-accumulation steps for the train_4k shape, sized so checkpointed
+#: activations + fp32 grad accumulators fit one v5e (16 GB) at 256 chips.
+ACCUM_STEPS = {
+    # 8 -> 2 (EXPERIMENTS.md section Perf, nemotron iteration 2): the FSDP
+    # weight all-gathers and grad all-reduces are per-microbatch, so the
+    # collective term scales with accum_steps; sequence-parallel activations
+    # keep the larger microbatch within HBM.
+    "nemotron_4_340b": 2,
+    "llama4_maverick_400b_a17b": 8,
+    "qwen1_5_32b": 4,
+    "yi_34b": 4,
+    "chameleon_34b": 4,
+    # 4 -> 8 (EXPERIMENTS.md section Perf, jamba iteration 3): jamba is
+    # memory-bound, so halving the microbatch halves the 8-layer remat
+    # window's activations; the collective term it costs is far below the
+    # memory term it buys.
+    "jamba_v0_1_52b": 8,
+    "falcon_mamba_7b": 2,
+}
+
+PARAM_DTYPE = jnp.bfloat16
+
+
+def input_specs(cfg, seq: int, batch: int, kind: str):
+    """ShapeDtypeStruct stand-ins for every step input (no allocation)."""
+    i32 = jnp.int32
+    sd = jax.ShapeDtypeStruct
+    if kind == "train":
+        specs = {"tokens": sd((batch, seq), i32),
+                 "labels": sd((batch, seq), i32)}
+        if cfg.encoder is not None:
+            specs["frames"] = sd((batch, cfg.encoder.n_ctx, cfg.d_model),
+                                 PARAM_DTYPE)
+        return specs
+    if kind == "prefill":
+        specs = {"tokens": sd((batch, seq), i32)}
+        if cfg.encoder is not None:
+            specs["frames"] = sd((batch, cfg.encoder.n_ctx, cfg.d_model),
+                                 PARAM_DTYPE)
+        return specs
+    if kind == "decode":
+        return {
+            "cache": tf.abstract_decode_cache(cfg, batch, seq, PARAM_DTYPE),
+            "tokens": sd((batch, 1), i32),
+            "cache_pos": sd((), i32),
+        }
+    raise ValueError(kind)
+
+
+def _mem_summary(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    if ma is None:
+        return {}
+    out = {}
+    for field in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                  "output_size_in_bytes", "temp_size_in_bytes",
+                  "alias_size_in_bytes"):
+        val = getattr(ma, field, None)
+        if val is not None:
+            out[field] = int(val)
+    return out
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool, verbose: bool = True,
+             return_compiled: bool = False):
+    """Lower+compile one cell; returns the result record."""
+    cfg = cfglib.get_config(arch)
+    seq, batch, kind = dict(
+        (s, (q, b, k)) for s, q, b, k in cfglib.cells(arch))[shape]
+    if kind == "skip":
+        return {"arch": arch, "shape": shape,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skip",
+                "reason": "full attention is quadratic at 500k; "
+                          "sub-quadratic archs only (DESIGN.md)"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    with dist.use_mesh(mesh):
+        params_shape = tf.abstract_params(cfg, PARAM_DTYPE)
+        p_shard = shd.param_shardings(params_shape, cfg, mesh)
+        specs = input_specs(cfg, seq, batch, kind)
+
+        if kind == "train":
+            opt_cfg = adamw.AdamWConfig(
+                state_dtype=jnp.bfloat16 if cfg.n_params > 50e9 else jnp.float32)
+            opt_shape = adamw.abstract_state(params_shape, opt_cfg)
+            o_shard = adamw.AdamWState(
+                step=jax.sharding.NamedSharding(mesh, shd.P()),
+                m=shd.param_shardings(params_shape, cfg, mesh),
+                v=shd.param_shardings(params_shape, cfg, mesh))
+            b_shard = shd.sharding_tree(shd.batch_specs(specs, mesh), mesh)
+            accum = ACCUM_STEPS.get(arch, 1) if shape == "train_4k" else 1
+            step = make_train_step(cfg, opt_cfg, accum_steps=accum)
+            jitted = jax.jit(step,
+                             in_shardings=(p_shard, o_shard, b_shard),
+                             out_shardings=(p_shard, o_shard, None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_shape, opt_shape, specs)
+        elif kind == "prefill":
+            b_shard = shd.sharding_tree(shd.batch_specs(specs, mesh), mesh)
+            cache_shape = tf.abstract_decode_cache(cfg, batch, seq, PARAM_DTYPE)
+            c_shard = shd.sharding_tree(
+                shd.cache_specs(cache_shape, cfg, mesh), mesh)
+            step = make_prefill_step(cfg, max_len=seq)
+            jitted = jax.jit(step, in_shardings=(p_shard, b_shard),
+                             out_shardings=(None, c_shard))
+            lowered = jitted.lower(params_shape, specs)
+        else:  # decode
+            c_shard = shd.sharding_tree(
+                shd.cache_specs(specs["cache"], cfg, mesh), mesh)
+            t_shard = shd.sharding_tree(
+                shd.batch_specs({"t": specs["tokens"]}, mesh), mesh)["t"]
+            step = make_serve_step(cfg)
+            jitted = jax.jit(step,
+                             in_shardings=(p_shard, c_shard, t_shard, None),
+                             out_shardings=(None, c_shard),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_shape, specs["cache"],
+                                   specs["tokens"], specs["cache_pos"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    rf, xla_raw = hlo.roofline_from_compiled(compiled, n_chips)
+    colls = xla_raw["coll_by_kind"]
+    record = {
+        "arch": arch, "shape": shape,
+        "mesh": "multi" if multi_pod else "single",
+        "kind": kind, "seq": seq, "batch": batch, "n_chips": n_chips,
+        "status": "ok",
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": _mem_summary(compiled),
+        "cost_xla_body_once": {
+            "flops": xla_raw["xla_flops_body_once"],
+            "bytes_accessed": xla_raw["xla_bytes_body_once"]},
+        "collectives": colls,
+        "roofline": rf.as_dict(),
+        "model_flops_6nd": 6.0 * cfg.n_active_params * seq * batch
+        if kind == "train" else
+        (2.0 * cfg.n_active_params * seq * batch if kind == "prefill"
+         else 2.0 * cfg.n_active_params * batch),
+    }
+    if verbose:
+        mem = record["memory"]
+        per_dev = (mem.get("argument_size_in_bytes", 0)
+                   + mem.get("temp_size_in_bytes", 0))
+        print(f"[{record['mesh']}] {arch} {shape}: kind={kind} "
+              f"lower={t_lower:.0f}s compile={t_compile:.0f}s "
+              f"flops={rf.flops:.3e} hbm={rf.hbm_bytes:.3e} "
+              f"coll={rf.coll_bytes:.3e} bottleneck={rf.bottleneck} "
+              f"mem/dev~{per_dev/1e9:.2f}GB", flush=True)
+        print(f"  memory_analysis: {mem}", flush=True)
+        print(f"  cost_analysis(body-once): {record['cost_xla_body_once']}",
+              flush=True)
+    if return_compiled:
+        record["_compiled"] = compiled
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    archs = cfglib.ARCH_IDS if (args.all or args.arch is None) \
+        else [cfglib.canonical(args.arch)]
+    shapes = list(cfglib.SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    records = []
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                try:
+                    rec = run_cell(arch, shape, multi_pod=multi)
+                except Exception as e:  # a failed cell is a bug: surface it
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if multi else "single",
+                           "status": "error", "error": repr(e),
+                           "trace": traceback.format_exc()[-2000:]}
+                    print(f"FAILED {arch} {shape} multi={multi}: {e!r}",
+                          flush=True)
+                records.append(rec)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(rec) + "\n")
+    ok = sum(r["status"] == "ok" for r in records)
+    skip = sum(r["status"] == "skip" for r in records)
+    err = sum(r["status"] == "error" for r in records)
+    print(f"dry-run: {ok} ok, {skip} skip, {err} error "
+          f"of {len(records)} cells", flush=True)
+    return 0 if err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,399 @@
+"""Post-compile HLO analysis: trip-count-aware roofline terms.
+
+XLA's cost_analysis() counts while-loop (lax.scan) bodies ONCE, which under-
+counts a 96-layer scanned transformer by ~100x. This module parses the
+optimized per-device HLO text instead and computes:
+
+  * flops       -- 2*M*N*K for every `dot` (+ convolution), multiplied by the
+                   enclosing while-loops' trip counts;
+  * hbm_bytes   -- per-instruction (write output + read operands) over all
+                   materialized buffers (fusion granularity: post-fusion HLO
+                   instructions correspond ~1:1 to HBM buffers), trip-aware;
+  * coll_bytes  -- result bytes of all-gather / all-reduce / reduce-scatter /
+                   all-to-all / collective-permute, trip-aware.
+
+All numbers are per-device (post-SPMD HLO is the per-device program). Trip
+counts come from the integer constant in each while condition (all our loops
+are lax.scan counting from 0).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_OPCODE = re.compile(r"^((?:\([^()]*\)|[\w\[\],{}\d.*/]+))\s+([\w\-]+)\(")
+_TRIP_CFG = re.compile(r'known_trip_count[^}]*"n"\s*:\s*"(\d+)"')
+_OPERANDS = re.compile(r"%([\w.\-]+)")
+_CALLS = re.compile(r"(?:calls|to_apply|condition|body)=%?([\w.\-]+)")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+
+def _shape_dims(shape_str: str) -> list[tuple[str, int]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out.append((dtype, n))
+    return out
+
+
+def _shape_bytes(shape_str: str) -> int:
+    return sum(n * _DTYPE_BYTES[dt] for dt, n in _shape_dims(shape_str))
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape_str: str      # result type text
+    opcode: str
+    rest: str           # full text after '='
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if (not line.startswith(" ") and line.endswith("{")
+                and ") -> " in line):
+            hdr = _COMP_HDR.match(line.strip())
+            if hdr:
+                cur = Computation(name=hdr.group(1), instrs=[])
+                comps[cur.name] = cur
+                continue
+        if line.strip() == "}":
+            continue
+        if cur is None:
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, rest = m.groups()
+        om = _OPCODE.match(rest)
+        if om:
+            shape_str, opcode = om.groups()
+        else:
+            # e.g. "%x = s32[] parameter(0)" matches; anything else: skip
+            continue
+        cur.instrs.append(Instr(name=name, shape_str=shape_str,
+                                opcode=opcode, rest=rest))
+    return comps
+
+
+def _dot_flops(instr: Instr, shapes: Dict[str, str]) -> float:
+    out_elems = sum(n for _, n in _shape_dims(instr.shape_str))
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.rest)
+    ops = _OPERANDS.findall(instr.rest.split("(", 1)[1])
+    if not ops:
+        return 0.0
+    lhs_shape = shapes.get(ops[0], "")
+    dims_m = _SHAPE_RE.search(lhs_shape)
+    if not dims_m:
+        return 0.0
+    lhs_dims = [int(d) for d in dims_m.group(2).split(",") if d]
+    contract = 1
+    if mc:
+        for idx in mc.group(1).split(","):
+            if idx:
+                contract *= lhs_dims[int(idx)]
+    return 2.0 * out_elems * contract
+
+
+def _conv_flops(instr: Instr, shapes: Dict[str, str]) -> float:
+    out_elems = sum(n for _, n in _shape_dims(instr.shape_str))
+    ops = _OPERANDS.findall(instr.rest.split("(", 1)[1])
+    if len(ops) < 2:
+        return 0.0
+    ker = shapes.get(ops[1], "")
+    dims_m = _SHAPE_RE.search(ker)
+    if not dims_m:
+        return 0.0
+    k_elems = 1
+    for d in dims_m.group(2).split(","):
+        if d:
+            k_elems *= int(d)
+    out_feat_m = _SHAPE_RE.search(instr.shape_str)
+    # flops = 2 * out_elems * (kernel_elems / out_features)
+    out_dims = [int(d) for d in out_feat_m.group(2).split(",") if d]
+    out_features = out_dims[-1] if out_dims else 1
+    return 2.0 * out_elems * (k_elems / max(out_features, 1))
+
+
+@dataclasses.dataclass
+class CostTotals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVE_OPS})
+
+
+def _trip_count(cond: Computation) -> int:
+    best = 1
+    for ins in cond.instrs:
+        for c in _CONST_INT.findall(ins.rest):
+            best = max(best, int(c))
+    return best
+
+
+class HloCost:
+    """Trip-aware cost walker.
+
+    Host-backend dtype correction: the XLA *CPU* backend has no native bf16
+    arithmetic, so every bf16 dot is rewritten as convert(bf16->f32) + f32
+    dot. The SPMD partitioner then places weight all-gathers AFTER the
+    convert, so collectives that would travel in bf16 on the TPU target are
+    counted as f32 here -- a 2x overcount. When a collective's operand is a
+    convert-from-bf16 fusion of the same element count, we count its bytes at
+    the bf16 width and record the raw value too (EXPERIMENTS.md section
+    Roofline documents the correction)."""
+
+    def __init__(self, text: str):
+        self.comps = parse_hlo(text)
+        self._memo: Dict[str, CostTotals] = {}
+        # computations reached via fusion `calls=` are represented by their
+        # callsite's bytes; mark them so we only take their dot flops.
+        self.fusion_called: set[str] = set()
+        for comp in self.comps.values():
+            for ins in comp.instrs:
+                if ins.opcode == "fusion":
+                    for callee in _CALLS.findall(ins.rest):
+                        self.fusion_called.add(callee)
+
+    def _coll_scale(self, comp: Computation, ins: Instr,
+                    shapes: Dict[str, str]) -> float:
+        """0.5 if this f32 collective's operand is an upcast from bf16."""
+        if not ins.shape_str.startswith("f32"):
+            return 1.0
+        argtext = ins.rest.split("(", 1)[1] if "(" in ins.rest else ""
+        ops = _OPERANDS.findall(argtext.split("), ")[0])
+        if not ops:
+            return 1.0
+        src = ops[0]
+        by_name = {i.name: i for i in comp.instrs}
+        producer = by_name.get(src)
+        if producer is None:
+            return 1.0
+        if "convert" not in producer.name and producer.opcode != "convert":
+            return 1.0
+        # confirm a bf16 input of matching element count feeds the fusion
+        n_out = sum(n for _, n in _shape_dims(ins.shape_str))
+        for operand in _OPERANDS.findall(
+                producer.rest.split("(", 1)[1] if "(" in producer.rest else ""):
+            osh = shapes.get(operand, "")
+            if osh.startswith("bf16") and \
+                    sum(n for _, n in _shape_dims(osh)) == n_out:
+                return 0.5
+        # fall back: fusion named convert_* with a bf16 parameter in its body
+        for callee in _CALLS.findall(producer.rest):
+            sub = self.comps.get(callee)
+            if sub and any(i.shape_str.startswith("bf16") and
+                           sum(n for _, n in _shape_dims(i.shape_str)) == n_out
+                           for i in sub.instrs):
+                return 0.5
+        return 1.0
+
+    def total(self, entry: str | None = None) -> CostTotals:
+        if entry is None:
+            entry = next((n for n in self.comps if n.startswith("main")),
+                         list(self.comps)[-1])
+        return self._comp_cost(entry, bytes_mode=True)
+
+    def _comp_cost(self, name: str, bytes_mode: bool) -> CostTotals:
+        key = f"{name}:{bytes_mode}"
+        if key in self._memo:
+            return self._memo[key]
+        comp = self.comps.get(name)
+        tot = CostTotals()
+        if comp is None:
+            return tot
+        shapes = {i.name: i.shape_str for i in comp.instrs}
+        for ins in comp.instrs:
+            op = ins.opcode
+            base = op.replace("-start", "").replace("-done", "")
+            if base in COLLECTIVE_OPS and not op.endswith("-done"):
+                b = _shape_bytes(ins.shape_str) * self._coll_scale(
+                    comp, ins, shapes)
+                tot.coll_bytes += b
+                tot.coll_by_kind[base] += b
+            if op == "dot":
+                tot.flops += _dot_flops(ins, shapes)
+            elif op == "convolution":
+                tot.flops += _conv_flops(ins, shapes)
+            if bytes_mode and op not in _SKIP_BYTES_OPS and op != "while":
+                out_b = _shape_bytes(ins.shape_str)
+                in_b = 0
+                argtext = ins.rest.split("(", 1)[1] if "(" in ins.rest else ""
+                argtext = argtext.split("), ")[0]
+                for operand in _OPERANDS.findall(argtext):
+                    in_b += _shape_bytes(shapes.get(operand, ""))
+                tot.bytes += out_b + in_b
+            # recurse
+            if op == "while":
+                m_body = re.search(r"body=%?([\w.\-]+)", ins.rest)
+                m_cond = re.search(r"condition=%?([\w.\-]+)", ins.rest)
+                m_cfg = _TRIP_CFG.search(ins.rest)
+                if m_cfg:
+                    trips = int(m_cfg.group(1))
+                elif m_cond and m_cond.group(1) in self.comps:
+                    trips = _trip_count(self.comps[m_cond.group(1)])
+                else:
+                    trips = 1
+                if m_body:
+                    sub = self._comp_cost(m_body.group(1), bytes_mode)
+                    tot.flops += sub.flops * trips
+                    tot.bytes += sub.bytes * trips
+                    tot.coll_bytes += sub.coll_bytes * trips
+                    for k, v in sub.coll_by_kind.items():
+                        tot.coll_by_kind[k] += v * trips
+            elif op in ("fusion", "call", "custom-call", "reduce", "sort",
+                        "map", "scatter", "select-and-scatter", "conditional"):
+                for callee in _CALLS.findall(ins.rest):
+                    # fusion internals: dots only (bytes live at the callsite)
+                    sub = self._comp_cost(callee, bytes_mode=False)
+                    tot.flops += sub.flops
+                    tot.coll_bytes += sub.coll_bytes
+                    for k, v in sub.coll_by_kind.items():
+                        tot.coll_by_kind[k] += v
+        self._memo[key] = tot
+        return tot
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    cost = HloCost(hlo_text).total()
+    return dict(cost.coll_by_kind)
+
+
+def profile_bytes(text: str, top: int = 25) -> list[tuple[float, str, str]]:
+    """Trip-aware per-instruction HBM bytes, descending -- the dry-run
+    'profiler' the perf loop reads instead of a wall-clock trace.
+
+    Returns [(bytes, opcode, instr text prefix)], aggregated over loop trips.
+    """
+    comps = parse_hlo(text)
+    rows: list[tuple[float, str, str]] = []
+
+    def walk(name: str, mult: float):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        shapes = {i.name: i.shape_str for i in comp.instrs}
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op == "while":
+                m_body = re.search(r"body=%?([\w.\-]+)", ins.rest)
+                m_cfg = _TRIP_CFG.search(ins.rest)
+                m_cond = re.search(r"condition=%?([\w.\-]+)", ins.rest)
+                trips = int(m_cfg.group(1)) if m_cfg else (
+                    _trip_count(comps[m_cond.group(1)])
+                    if m_cond and m_cond.group(1) in comps else 1)
+                if m_body:
+                    walk(m_body.group(1), mult * trips)
+                continue
+            if op in _SKIP_BYTES_OPS:
+                continue
+            out_b = _shape_bytes(ins.shape_str)
+            in_b = 0
+            argtext = ins.rest.split("(", 1)[1] if "(" in ins.rest else ""
+            argtext = argtext.split("), ")[0]
+            for operand in _OPERANDS.findall(argtext):
+                in_b += _shape_bytes(shapes.get(operand, ""))
+            rows.append((mult * (out_b + in_b), op,
+                         f"{name}/%{ins.name} = {ins.shape_str}"))
+
+    entry = next((n for n in comps if n.startswith("main")),
+                 list(comps)[-1] if comps else None)
+    if entry:
+        walk(entry, 1.0)
+    rows.sort(key=lambda r: -r[0])
+    return rows[:top]
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms (TPU v5e)
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                # per-device HLO flops (trip-aware)
+    hbm_bytes: float            # per-device HBM traffic (trip-aware)
+    coll_bytes: float           # per-device collective bytes (trip-aware)
+    n_chips: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_dev": self.flops, "hbm_bytes_per_dev": self.hbm_bytes,
+            "coll_bytes_per_dev": self.coll_bytes, "n_chips": self.n_chips,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+        }
+
+
+def roofline_from_compiled(compiled, n_chips: int) -> tuple[Roofline, dict]:
+    """Returns (roofline, raw xla cost_analysis dict for reference)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    cost = cost or {}
+    hc = HloCost(compiled.as_text()).total()
+    rf = Roofline(flops=hc.flops, hbm_bytes=hc.bytes,
+                  coll_bytes=hc.coll_bytes, n_chips=n_chips)
+    return rf, {"xla_flops_body_once": float(cost.get("flops", 0.0)),
+                "xla_bytes_body_once": float(cost.get("bytes accessed", 0.0)),
+                "coll_by_kind": hc.coll_by_kind}

@@ -1,0 +1,28 @@
+"""Production mesh definitions.
+
+Target: TPU v5e pods, 256 chips per pod (16 x 16). Single-pod mesh is
+("data", "model") = (16, 16); the multi-pod mesh adds a leading "pod" axis
+(pure DP across pods -- parameters replicate per pod, the global batch shards
+over ("pod", "data")).
+
+Functions, not module constants: importing this module must never touch jax
+device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Mesh over whatever devices actually exist (CPU tests / examples)."""
+    n = len(jax.devices())
+    assert n % model_parallel == 0
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"))

@@ -1,0 +1,41 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Per-instruction HBM/collective profile of one dry-run cell (the perf-loop
+'profiler': reads the compiled HLO, no hardware).
+
+  PYTHONPATH=src python -m repro.launch.profile_cell --arch falcon_mamba_7b \
+      --shape train_4k [--multi] [--top 25]
+"""
+
+import argparse
+
+from repro.launch import dryrun, hlo
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--top", type=int, default=25)
+    args = ap.parse_args()
+
+    # reuse run_cell's lowering path but keep the compiled object
+    import json
+
+    from repro import configs as cfglib
+    rec = dryrun.run_cell(args.arch, args.shape, multi_pod=args.multi,
+                          verbose=True, return_compiled=True)
+    compiled = rec.pop("_compiled")
+    text = compiled.as_text()
+    print(f"\n== top {args.top} instructions by trip-aware HBM bytes ==")
+    total = hlo.HloCost(text).total()
+    print(f"total bytes/dev: {total.bytes:.3e}  flops/dev: {total.flops:.3e} "
+          f" coll/dev: {total.coll_bytes:.3e}")
+    for b, op, txt in hlo.profile_bytes(text, args.top):
+        print(f"{b:12.3e}  {100*b/total.bytes:5.1f}%  {op:22s} {txt[:110]}")
+
+
+if __name__ == "__main__":
+    main()

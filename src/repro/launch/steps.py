@@ -1,0 +1,82 @@
+"""Jittable train / prefill / serve steps.
+
+train_step supports gradient accumulation (scan over microbatches: only one
+microbatch's activations are ever live, which is what lets the 340B config
+compile within pod HBM at global batch 256) and returns scalar metrics.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tf
+from repro.models.config import ArchConfig
+from repro.optim import adamw
+
+_F32 = jnp.float32
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
+                    accum_steps: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    batch leaves have leading dim = global_batch; with accum_steps > 1 the
+    batch splits into microbatches scanned sequentially, gradients averaged.
+    """
+
+    def loss_fn(params, microbatch):
+        return tf.forward(params, microbatch, cfg)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(accum_steps, b // accum_steps, *x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def acc_fn(carry, mb):
+                loss_acc, grads_acc = carry
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                grads_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(_F32), grads_acc, grads)
+                return (loss_acc + loss, grads_acc), None
+
+            zero_grads = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, _F32), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_fn, (jnp.zeros((), _F32), zero_grads), micro)
+            loss = loss / accum_steps
+            grads = jax.tree.map(
+                lambda g, p: (g / accum_steps).astype(p.dtype), grads, params)
+
+        grad_norm = adamw.global_norm(grads)
+        params, opt_state = adamw.apply_updates(params, grads, opt_state,
+                                                opt_cfg)
+        metrics = {"loss": loss.astype(_F32), "grad_norm": grad_norm,
+                   "lr": adamw.schedule(opt_state.step - 1, opt_cfg)}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, max_len: int):
+    def prefill_step(params, batch):
+        # bulk prefill uses capacity-bounded MoE routing (dropless buffers
+        # are O(T) per expert; see tf.prefill docstring).
+        return tf.prefill(params, batch["tokens"], cfg, max_len,
+                          batch.get("frames"), dropless=False)
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    """One-token decode: (params, cache, tokens (B,1), cache_pos) ->
+    (next_token_logits, new_cache)."""
+    def serve_step(params, cache, tokens, cache_pos):
+        return tf.decode_step(params, cache, tokens, cache_pos, cfg)
+    return serve_step

@@ -1,0 +1,69 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Resumable driver for the full dry-run sweep.
+
+Reads every results/*.jsonl, figures out which (arch x shape x mesh) cells are
+missing or errored, and runs only those, appending to --out. Safe to re-run
+after a crash or preemption -- this is the same restart-from-manifest posture
+the training driver uses (runtime/fault.py), applied to the compile farm.
+"""
+
+import argparse
+import glob
+import json
+import traceback
+
+from repro import configs as cfglib
+from repro.launch import dryrun
+
+
+def done_cells(results_dir: str) -> set:
+    done = set()
+    for f in glob.glob(os.path.join(results_dir, "*.jsonl")):
+        with open(f) as fh:
+            for line in fh:
+                try:
+                    r = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                if r.get("status") in ("ok", "skip"):
+                    done.add((r["arch"], r["shape"], r["mesh"]))
+    return done
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results-dir", default="results")
+    ap.add_argument("--out", default="results/dryrun_main.jsonl")
+    ap.add_argument("--arch", default=None, help="restrict to one arch")
+    args = ap.parse_args()
+
+    done = done_cells(args.results_dir)
+    archs = [cfglib.canonical(args.arch)] if args.arch else list(cfglib.ARCH_IDS)
+    todo = [(a, s, m)
+            for a in archs
+            for s in cfglib.SHAPES
+            for m in ("single", "multi")
+            if (a, s, m) not in done]
+    print(f"sweep: {len(done)} cells done, {len(todo)} to run", flush=True)
+
+    n_err = 0
+    for i, (arch, shape, mesh) in enumerate(todo):
+        print(f"--- [{i + 1}/{len(todo)}] {arch} {shape} {mesh}", flush=True)
+        try:
+            rec = dryrun.run_cell(arch, shape, multi_pod=(mesh == "multi"))
+        except Exception as e:
+            rec = {"arch": arch, "shape": shape, "mesh": mesh,
+                   "status": "error", "error": repr(e),
+                   "trace": traceback.format_exc()[-2000:]}
+            print(f"FAILED {arch} {shape} {mesh}: {e!r}", flush=True)
+            n_err += 1
+        with open(args.out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+    print(f"sweep finished: {n_err} errors of {len(todo)}", flush=True)
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

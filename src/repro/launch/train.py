@@ -1,0 +1,138 @@
+"""Fault-tolerant training driver.
+
+Wires together: config registry, sharded init, deterministic data pipeline
+with prefetch, jitted train step (grad accumulation + ZeRO AdamW), async
+checkpointing, preemption handling, straggler logging, and crash-retry from
+the last committed checkpoint.
+
+CPU-friendly: runs the reduced smoke config on the host mesh by default.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2_5_3b --steps 50 \
+      --batch 8 --seq 64 --smoke --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs as cfglib
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import Prefetcher, SyntheticLM
+from repro.distributed import context as dist
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.steps import make_train_step
+from repro.models import transformer as tf
+from repro.optim import adamw
+from repro.runtime.fault import PreemptionGuard, StepTimer, run_with_retries
+
+
+def train(arch: str, *, steps: int, batch: int, seq: int, smoke: bool,
+          ckpt_dir: str | None, ckpt_every: int = 50, accum: int = 1,
+          lr: float = 3e-4, param_dtype=jnp.float32, mesh=None,
+          log_every: int = 10, max_failures: int = 3):
+    cfg = (cfglib.get_smoke_config(arch) if smoke else cfglib.get_config(arch))
+    mesh = mesh or make_host_mesh()
+    opt_cfg = adamw.AdamWConfig(lr=lr, total_steps=steps,
+                                warmup_steps=max(steps // 20, 5))
+    manager = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    guard = PreemptionGuard()
+    timer = StepTimer()
+    pipeline = SyntheticLM(cfg, batch, seq)
+    history = []
+
+    def body(_start):
+        with dist.use_mesh(mesh):
+            params_shape = tf.abstract_params(cfg, param_dtype)
+            p_shard = shd.param_shardings(params_shape, cfg, mesh)
+            step_fn = jax.jit(
+                make_train_step(cfg, opt_cfg, accum_steps=accum),
+                in_shardings=(p_shard, None, None),
+                out_shardings=(p_shard, None, None),
+                donate_argnums=(0, 1))
+
+            start = 0
+            if manager and manager.latest_step() is not None:
+                start = manager.latest_step()
+                opt_like = adamw.abstract_state(params_shape, opt_cfg)
+                state_like = {"params": params_shape, "opt": opt_like}
+                # shardings tree must be leaf-aligned with state_like:
+                # moments inherit the param shardings (ZeRO), scalars replicate.
+                rep = jax.sharding.NamedSharding(
+                    mesh, jax.sharding.PartitionSpec())
+                o_shard = adamw.AdamWState(step=rep, m=p_shard, v=p_shard)
+                restored = manager.restore(start, state_like,
+                                           {"params": p_shard, "opt": o_shard})
+                params, opt_state = restored["params"], restored["opt"]
+                print(f"[train] restored step {start} from {ckpt_dir}")
+            else:
+                params = jax.jit(
+                    lambda k: tf.init_params(k, cfg, param_dtype),
+                    out_shardings=p_shard)(jax.random.key(0))
+                opt_state = adamw.init_state(params, opt_cfg)
+
+            it = Prefetcher(pipeline.iterate(start), depth=2)
+            try:
+                for step in range(start, steps):
+                    t0 = time.time()
+                    batch_np = next(it)
+                    params, opt_state, metrics = step_fn(params, opt_state,
+                                                         batch_np)
+                    loss = float(metrics["loss"])
+                    dt = time.time() - t0
+                    straggle = timer.record(dt)
+                    history.append(loss)
+                    if step % log_every == 0 or step == steps - 1:
+                        print(f"[train] step={step} loss={loss:.4f} "
+                              f"gnorm={float(metrics['grad_norm']):.3f} "
+                              f"lr={float(metrics['lr']):.2e} dt={dt*1e3:.0f}ms"
+                              + (" STRAGGLER" if straggle else ""), flush=True)
+                    if np.isnan(loss):
+                        raise FloatingPointError(f"NaN loss at step {step}")
+                    if manager and ((step + 1) % ckpt_every == 0
+                                    or step == steps - 1 or guard.requested):
+                        manager.save(step + 1,
+                                     {"params": params, "opt": opt_state})
+                    if guard.requested:
+                        print("[train] preemption requested; checkpointed, "
+                              "exiting cleanly")
+                        break
+            finally:
+                it.close()
+                if manager:
+                    manager.wait()
+            return params, opt_state
+
+    result = run_with_retries(
+        lambda s: body(s), max_failures=max_failures,
+        on_failure=lambda e: print(f"[train] step loop failed ({e!r}); "
+                                   f"restarting from last checkpoint"))
+    return result, history
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+    _, history = train(args.arch, steps=args.steps, batch=args.batch,
+                       seq=args.seq, smoke=args.smoke, ckpt_dir=args.ckpt_dir,
+                       ckpt_every=args.ckpt_every, accum=args.accum,
+                       lr=args.lr)
+    print(f"[train] done. loss {history[0]:.3f} -> {history[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

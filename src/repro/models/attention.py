@@ -1,0 +1,129 @@
+"""GQA attention with optional QKV bias, qk-norm, RoPE, KV cache decode, and
+cross-attention (enc-dec). Pure functions over parameter dicts.
+
+Shapes: activations (B, S, D); heads are split out only inside this module.
+KV cache layout: {"k": (B, L_max, Hkv, hd), "v": ..., } with a scalar
+`cache_pos` carried by the caller (serving runtime).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import apply_rope, dense, rms_norm, truncated_normal_init
+
+_F32 = jnp.float32
+_NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ArchConfig, dtype) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    ks = jax.random.split(key, 5)
+    scale = d ** -0.5
+    p = {
+        "wq": truncated_normal_init(ks[0], (d, cfg.n_heads * hd), scale, dtype),
+        "wk": truncated_normal_init(ks[1], (d, cfg.n_kv_heads * hd), scale, dtype),
+        "wv": truncated_normal_init(ks[2], (d, cfg.n_kv_heads * hd), scale, dtype),
+        "wo": truncated_normal_init(ks[3], (cfg.n_heads * hd, d),
+                                    (cfg.n_heads * hd) ** -0.5, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(*x.shape[:-1], n, hd)
+
+
+def _qkv(p, x, cfg: ArchConfig, positions, *, rope: bool):
+    hd = cfg.head_dim
+    q = _split_heads(dense(x, p["wq"], p.get("bq")), cfg.n_heads, hd)
+    k = _split_heads(dense(x, p["wk"], p.get("bk")), cfg.n_kv_heads, hd)
+    v = _split_heads(dense(x, p["wv"], p.get("bv")), cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if rope and cfg.pos_emb == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask: Optional[jax.Array], n_rep: int) -> jax.Array:
+    """q: (B,Sq,H,hd); k/v: (B,Sk,Hkv,hd); GQA via head grouping (no KV
+    materialization at H width -- keeps decode memory-bound term minimal)."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    hkv = k.shape[2]
+    q = q.reshape(b, sq, hkv, n_rep, hd)
+    scores = jnp.einsum("bqgrd,bkgd->bgrqk", q.astype(_F32), k.astype(_F32))
+    scores = scores * (hd ** -0.5)
+    if mask is not None:
+        scores = jnp.where(mask[:, None, None], scores, _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", probs, v.astype(_F32))
+    return out.reshape(b, sq, h, hd).astype(v.dtype)
+
+
+def self_attention(p, x, cfg: ArchConfig, *, causal: bool = True,
+                   positions=None) -> jax.Array:
+    """Full self-attention over (B, S, D)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)
+    q, k, v = _qkv(p, x, cfg, positions, rope=True)
+    mask = None
+    if causal:
+        mask = (jnp.arange(s)[:, None] >= jnp.arange(s)[None, :])[None]
+    out = _sdpa(q, k, v, mask, cfg.n_heads // cfg.n_kv_heads)
+    return dense(out.reshape(b, s, -1), p["wo"])
+
+
+def cross_attention(p, x, kv_cache: dict, cfg: ArchConfig) -> jax.Array:
+    """Decoder cross-attention against precomputed encoder K/V."""
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    q = _split_heads(dense(x, p["wq"], p.get("bq")), cfg.n_heads, hd)
+    out = _sdpa(q, kv_cache["k"], kv_cache["v"], None,
+                cfg.n_heads // cfg.n_kv_heads)
+    return dense(out.reshape(b, s, -1), p["wo"])
+
+
+def encode_cross_kv(p, enc_out, cfg: ArchConfig) -> dict:
+    hd = cfg.head_dim
+    return {
+        "k": _split_heads(dense(enc_out, p["wk"], p.get("bk")), cfg.n_kv_heads, hd),
+        "v": _split_heads(dense(enc_out, p["wv"], p.get("bv")), cfg.n_kv_heads, hd),
+    }
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> dict:
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_self_attention(p, x, cache: dict, cache_pos: jax.Array,
+                          cfg: ArchConfig) -> tuple[jax.Array, dict]:
+    """One-token decode step. x: (B, 1, D); cache k/v: (B, L_max, Hkv, hd);
+    cache_pos: scalar int32 -- number of tokens already in the cache."""
+    b, s, _ = x.shape
+    assert s == 1
+    positions = jnp.full((b, 1), cache_pos, dtype=jnp.int32)
+    q, k_new, v_new = _qkv(p, x, cfg, positions, rope=True)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, cache_pos, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, cache_pos, 0, 0))
+    l_max = k.shape[1]
+    mask = (jnp.arange(l_max)[None, None, :] <= cache_pos)   # (1,1,L)
+    out = _sdpa(q, k, v, mask, cfg.n_heads // cfg.n_kv_heads)
+    y = dense(out.reshape(b, 1, -1), p["wo"])
+    return y, {"k": k, "v": v}

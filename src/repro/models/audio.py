@@ -1,0 +1,39 @@
+"""Whisper conv stem (implemented, though stubbed at the dry-run boundary).
+
+The brief mandates that dry-run input_specs() provide precomputed frame
+embeddings; this module is the actual stem for smoke tests and examples, and
+it is where the paper's 1D algorithm meets the audio arch: conv1 (k=3, s=1)
+runs the Cook-Toom F(m,3) path, conv2 (k=3, s=2) runs the polyphase
+decomposition into stride-1 Cook-Toom convolutions (core.dispatch.conv1d).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dispatch import conv1d
+from repro.models.config import ArchConfig
+from repro.models.layers import truncated_normal_init
+
+
+def init_stem(key, cfg: ArchConfig, n_mels: int = 80, dtype=jnp.float32) -> dict:
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    return {
+        "conv1_w": truncated_normal_init(k1, (3, n_mels, d), (3 * n_mels) ** -0.5,
+                                         dtype),
+        "conv1_b": jnp.zeros((d,), dtype),
+        "conv2_w": truncated_normal_init(k2, (3, d, d), (3 * d) ** -0.5, dtype),
+        "conv2_b": jnp.zeros((d,), dtype),
+    }
+
+
+def stem(params: dict, mel: jax.Array, algorithm: str = "auto") -> jax.Array:
+    """mel: (B, T, n_mels) -> frame embeddings (B, T // 2, d_model)."""
+    x = conv1d(mel, params["conv1_w"], stride=1, padding="SAME",
+               algorithm=algorithm)
+    x = jax.nn.gelu(x + params["conv1_b"])
+    x = conv1d(x, params["conv2_w"], stride=2, padding="SAME",
+               algorithm=algorithm)
+    return jax.nn.gelu(x + params["conv2_b"])

@@ -1,0 +1,317 @@
+"""The paper's evaluation networks: VGG-16/19, GoogleNet (Inception-v1),
+Inception-v3 and SqueezeNet, built on the unified conv dispatcher.
+
+Every convolution goes through repro.core.dispatch.conv2d, so a whole network
+can be flipped between the paper's region-wise multi-channel Winograd scheme
+and the im2row baseline with one `algorithm=` argument -- exactly the paper's
+two benchmark configurations (Table 1 / Fig 3: fast scheme on suitable
+layers, im2row elsewhere vs im2row everywhere).
+
+Networks are expressed as layer-spec lists; `init_cnn` / `cnn_forward`
+interpret them. Inference-only (the paper measures single-batch latency).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Literal, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dispatch import Algorithm, conv2d, winograd_suitable
+
+_F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class Conv:
+    name: str
+    kh: int
+    kw: int
+    c_out: int
+    stride: int = 1
+    padding: str = "SAME"
+    relu: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class Pool:
+    kind: Literal["max", "avg"]
+    k: int
+    stride: int
+    padding: str = "VALID"
+
+
+@dataclasses.dataclass(frozen=True)
+class Concat:
+    """Parallel branches (inception); each branch is a spec list."""
+    branches: Sequence[Sequence[Any]]
+
+
+@dataclasses.dataclass(frozen=True)
+class GlobalAvgPool:
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class Dense:
+    name: str
+    n_out: int
+    relu: bool = True
+
+
+# ---------------------------------------------------------------------------
+# interpreter
+# ---------------------------------------------------------------------------
+
+def _out_size(size, k, stride, padding):
+    if padding == "SAME":
+        return -(-size // stride)
+    return (size - k) // stride + 1
+
+
+def init_cnn(key, specs, c_in: int, dtype=_F32, res: int = 224) -> dict:
+    """Eagerly initializes every layer, tracking (h, w, c) through the spec
+    walk so Dense weights get their flattened input dim up front (lazy init
+    under jit leaks tracers across compilations)."""
+    params: dict = {}
+
+    def walk(specs, h, w, c, key):
+        for spec in specs:
+            if isinstance(spec, Conv):
+                key, k1 = jax.random.split(key)
+                scale = (spec.kh * spec.kw * c) ** -0.5
+                params[spec.name] = {
+                    "w": scale * jax.random.normal(
+                        k1, (spec.kh, spec.kw, c, spec.c_out), dtype),
+                    "b": jnp.zeros((spec.c_out,), dtype)}
+                h = _out_size(h, spec.kh, spec.stride, spec.padding)
+                w = _out_size(w, spec.kw, spec.stride, spec.padding)
+                c = spec.c_out
+            elif isinstance(spec, Pool):
+                h = _out_size(h, spec.k, spec.stride, spec.padding)
+                w = _out_size(w, spec.k, spec.stride, spec.padding)
+            elif isinstance(spec, Concat):
+                outs = []
+                for br in spec.branches:
+                    key, kb = jax.random.split(key)
+                    outs.append(walk(br, h, w, c, kb))
+                h, w = outs[0][0], outs[0][1]
+                c = sum(o[2] for o in outs)
+            elif isinstance(spec, GlobalAvgPool):
+                h = w = 1
+            elif isinstance(spec, Dense):
+                key, k1 = jax.random.split(key)
+                n_in = h * w * c
+                params[spec.name] = {
+                    "w": (n_in ** -0.5) * jax.random.normal(
+                        k1, (n_in, spec.n_out), dtype)}
+                h = w = 1
+                c = spec.n_out
+        return h, w, c
+
+    walk(specs, res, res, c_in, key)
+    return params
+
+
+def _pool(x, spec: Pool):
+    init = -jnp.inf if spec.kind == "max" else 0.0
+    op = jax.lax.max if spec.kind == "max" else jax.lax.add
+    y = jax.lax.reduce_window(
+        x, init, op, (1, spec.k, spec.k, 1), (1, spec.stride, spec.stride, 1),
+        spec.padding)
+    if spec.kind == "avg":
+        y = y / (spec.k * spec.k)
+    return y
+
+
+def cnn_forward(params: dict, x: jax.Array, specs,
+                algorithm: Algorithm = "auto",
+                layer_times: dict | None = None) -> jax.Array:
+    """Run the network. `algorithm` selects the conv scheme globally ("auto"
+    = the paper's mixed policy). layer_times: optional dict to collect
+    per-layer conv descriptors for the benchmark harness."""
+    def walk(x, specs):
+        for spec in specs:
+            if isinstance(spec, Conv):
+                p = params[spec.name]
+                algo = algorithm
+                if algo in ("winograd", "pallas_winograd") and \
+                        not winograd_suitable(spec.kh, spec.kw, spec.stride):
+                    algo = "im2col"
+                if layer_times is not None:
+                    layer_times[spec.name] = dict(
+                        kh=spec.kh, kw=spec.kw, c_in=x.shape[-1],
+                        c_out=spec.c_out, h=x.shape[1], w=x.shape[2],
+                        stride=spec.stride,
+                        suitable=winograd_suitable(spec.kh, spec.kw, spec.stride))
+                x = conv2d(x, p["w"], stride=spec.stride, padding=spec.padding,
+                           algorithm=algo)
+                x = x + p["b"]
+                if spec.relu:
+                    x = jax.nn.relu(x)
+            elif isinstance(spec, Pool):
+                x = _pool(x, spec)
+            elif isinstance(spec, Concat):
+                x = jnp.concatenate([walk(x, br) for br in spec.branches],
+                                    axis=-1)
+            elif isinstance(spec, GlobalAvgPool):
+                x = jnp.mean(x, axis=(1, 2))
+            elif isinstance(spec, Dense):
+                x = x.reshape(x.shape[0], -1)
+                x = x @ params[spec.name]["w"]
+                if spec.relu:
+                    x = jax.nn.relu(x)
+        return x
+    return walk(x, specs)
+
+
+# ---------------------------------------------------------------------------
+# network definitions
+# ---------------------------------------------------------------------------
+
+def _vgg_block(name, n, c):
+    return [Conv(f"{name}_{i}", 3, 3, c) for i in range(n)] + \
+        [Pool("max", 2, 2)]
+
+
+def vgg16():
+    return (
+        _vgg_block("conv1", 2, 64) + _vgg_block("conv2", 2, 128)
+        + _vgg_block("conv3", 3, 256) + _vgg_block("conv4", 3, 512)
+        + _vgg_block("conv5", 3, 512)
+        + [Dense("fc6", 4096), Dense("fc7", 4096), Dense("fc8", 1000, relu=False)]
+    )
+
+
+def vgg19():
+    return (
+        _vgg_block("conv1", 2, 64) + _vgg_block("conv2", 2, 128)
+        + _vgg_block("conv3", 4, 256) + _vgg_block("conv4", 4, 512)
+        + _vgg_block("conv5", 4, 512)
+        + [Dense("fc6", 4096), Dense("fc7", 4096), Dense("fc8", 1000, relu=False)]
+    )
+
+
+def _fire(name, squeeze, expand):
+    return [
+        Conv(f"{name}_sq", 1, 1, squeeze),
+        Concat([[Conv(f"{name}_e1", 1, 1, expand)],
+                [Conv(f"{name}_e3", 3, 3, expand)]]),
+    ]
+
+
+def squeezenet():
+    # SqueezeNet 1.0
+    s = [Conv("conv1", 7, 7, 96, stride=2), Pool("max", 3, 2)]
+    s += _fire("fire2", 16, 64) + _fire("fire3", 16, 64) + _fire("fire4", 32, 128)
+    s += [Pool("max", 3, 2)]
+    s += _fire("fire5", 32, 128) + _fire("fire6", 48, 192) + \
+        _fire("fire7", 48, 192) + _fire("fire8", 64, 256)
+    s += [Pool("max", 3, 2)]
+    s += _fire("fire9", 64, 256)
+    s += [Conv("conv10", 1, 1, 1000), GlobalAvgPool()]
+    return s
+
+
+def _inception_v1(name, c1, c3r, c3, c5r, c5, cp):
+    return Concat([
+        [Conv(f"{name}_1x1", 1, 1, c1)],
+        [Conv(f"{name}_3r", 1, 1, c3r), Conv(f"{name}_3x3", 3, 3, c3)],
+        [Conv(f"{name}_5r", 1, 1, c5r), Conv(f"{name}_5x5", 5, 5, c5)],
+        [Pool("max", 3, 1, "SAME"), Conv(f"{name}_pp", 1, 1, cp)],
+    ])
+
+
+def googlenet():
+    return [
+        Conv("conv1", 7, 7, 64, stride=2), Pool("max", 3, 2, "SAME"),
+        Conv("conv2r", 1, 1, 64), Conv("conv2", 3, 3, 192),
+        Pool("max", 3, 2, "SAME"),
+        _inception_v1("i3a", 64, 96, 128, 16, 32, 32),
+        _inception_v1("i3b", 128, 128, 192, 32, 96, 64),
+        Pool("max", 3, 2, "SAME"),
+        _inception_v1("i4a", 192, 96, 208, 16, 48, 64),
+        _inception_v1("i4b", 160, 112, 224, 24, 64, 64),
+        _inception_v1("i4c", 128, 128, 256, 24, 64, 64),
+        _inception_v1("i4d", 112, 144, 288, 32, 64, 64),
+        _inception_v1("i4e", 256, 160, 320, 32, 128, 128),
+        Pool("max", 3, 2, "SAME"),
+        _inception_v1("i5a", 256, 160, 320, 32, 128, 128),
+        _inception_v1("i5b", 384, 192, 384, 48, 128, 128),
+        GlobalAvgPool(), Dense("fc", 1000, relu=False),
+    ]
+
+
+def _inc3_a(name, cp):
+    return Concat([
+        [Conv(f"{name}_1x1", 1, 1, 64)],
+        [Conv(f"{name}_5r", 1, 1, 48), Conv(f"{name}_5x5", 5, 5, 64)],
+        [Conv(f"{name}_3r", 1, 1, 64), Conv(f"{name}_3a", 3, 3, 96),
+         Conv(f"{name}_3b", 3, 3, 96)],
+        [Pool("avg", 3, 1, "SAME"), Conv(f"{name}_pp", 1, 1, cp)],
+    ])
+
+
+def _inc3_b(name, c7):
+    return Concat([
+        [Conv(f"{name}_1x1", 1, 1, 192)],
+        [Conv(f"{name}_7r", 1, 1, c7), Conv(f"{name}_1x7a", 1, 7, c7),
+         Conv(f"{name}_7x1a", 7, 1, 192)],
+        [Conv(f"{name}_7rr", 1, 1, c7), Conv(f"{name}_7x1b", 7, 1, c7),
+         Conv(f"{name}_1x7b", 1, 7, c7), Conv(f"{name}_7x1c", 7, 1, c7),
+         Conv(f"{name}_1x7c", 1, 7, 192)],
+        [Pool("avg", 3, 1, "SAME"), Conv(f"{name}_pp", 1, 1, 192)],
+    ])
+
+
+def _inc3_c(name):
+    return Concat([
+        [Conv(f"{name}_1x1", 1, 1, 320)],
+        [Conv(f"{name}_3r", 1, 1, 384),
+         Concat([[Conv(f"{name}_1x3a", 1, 3, 384)],
+                 [Conv(f"{name}_3x1a", 3, 1, 384)]])],
+        [Conv(f"{name}_dr", 1, 1, 448), Conv(f"{name}_d3", 3, 3, 384),
+         Concat([[Conv(f"{name}_1x3b", 1, 3, 384)],
+                 [Conv(f"{name}_3x1b", 3, 1, 384)]])],
+        [Pool("avg", 3, 1, "SAME"), Conv(f"{name}_pp", 1, 1, 192)],
+    ])
+
+
+def inception_v3():
+    return [
+        Conv("conv1", 3, 3, 32, stride=2, padding="VALID"),
+        Conv("conv2", 3, 3, 32, padding="VALID"),
+        Conv("conv3", 3, 3, 64),
+        Pool("max", 3, 2),
+        Conv("conv4", 1, 1, 80, padding="VALID"),
+        Conv("conv5", 3, 3, 192, padding="VALID"),
+        Pool("max", 3, 2),
+        _inc3_a("m1", 32), _inc3_a("m2", 64), _inc3_a("m3", 64),
+        # reduction A
+        Concat([[Conv("rA_3", 3, 3, 384, stride=2, padding="VALID")],
+                [Conv("rA_r", 1, 1, 64), Conv("rA_3a", 3, 3, 96),
+                 Conv("rA_3b", 3, 3, 96, stride=2, padding="VALID")],
+                [Pool("max", 3, 2)]]),
+        _inc3_b("m4", 128), _inc3_b("m5", 160), _inc3_b("m6", 160),
+        _inc3_b("m7", 192),
+        # reduction B
+        Concat([[Conv("rB_r1", 1, 1, 192),
+                 Conv("rB_3", 3, 3, 320, stride=2, padding="VALID")],
+                [Conv("rB_r2", 1, 1, 192), Conv("rB_1x7", 1, 7, 192),
+                 Conv("rB_7x1", 7, 1, 192),
+                 Conv("rB_3b", 3, 3, 192, stride=2, padding="VALID")],
+                [Pool("max", 3, 2)]]),
+        _inc3_c("m8"), _inc3_c("m9"),
+        GlobalAvgPool(), Dense("fc", 1000, relu=False),
+    ]
+
+
+NETWORKS = {
+    "vgg16": (vgg16, 224),
+    "vgg19": (vgg19, 224),
+    "googlenet": (googlenet, 224),
+    "inception_v3": (inception_v3, 299),
+    "squeezenet": (squeezenet, 224),
+}

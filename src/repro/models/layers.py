@@ -1,0 +1,142 @@
+"""Shared model layers: norms, MLPs, rotary embeddings, initializers.
+
+Pure functions over explicit parameter pytrees (dicts of jnp arrays). All
+matmuls keep the contracted operand layouts MXU-friendly (trailing dims are
+the model/ff axes) and accumulate in fp32 via preferred_element_type.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+_F32 = jnp.float32
+
+
+def truncated_normal_init(key, shape, scale, dtype=jnp.float32):
+    return (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape,
+                                                _F32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(_F32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * weight.astype(_F32)).astype(dtype)
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array,
+               eps: float) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(_F32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(_F32) + bias.astype(_F32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense / MLP
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def _dense_mm(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.matmul(x, w.astype(x.dtype),
+                      preferred_element_type=_F32).astype(x.dtype)
+
+
+def _dense_mm_fwd(x, w):
+    return _dense_mm(x, w), (x, w)
+
+
+def _dense_mm_bwd(res, dy):
+    """Mixed-precision backward: the cotangent is cast to the weight dtype
+    BEFORE the two grad matmuls. Without this, XLA propagates the fp32
+    accumulation dtype into the backward pass, and on FSDP-sharded weights
+    the per-layer weight all-gather and the gradient all-reduce both travel
+    in fp32 -- 2x the wire bytes (measured on the nemotron train_4k cell:
+    41.6% of collective bytes were fp32 grad all-reduces; EXPERIMENTS.md
+    section Perf). Accumulation across microbatches stays fp32 in the train
+    step, which is the standard bf16-grads / fp32-accumulate recipe."""
+    x, w = res
+    dy = dy.astype(w.dtype)
+    dx = jnp.matmul(dy, w.T.astype(dy.dtype),
+                    preferred_element_type=_F32).astype(x.dtype)
+    contract = x.ndim - 1
+    # dw output/accumulation dtype = the weight dtype: the SPMD psum of the
+    # per-shard partials (the FSDP gradient all-reduce) then travels in bf16
+    # instead of fp32 -- the cast must precede the collective, so it has to
+    # be the dot's own output dtype. (On TPU the MXU still accumulates fp32
+    # internally and rounds once on output.) fp32 accumulation ACROSS
+    # microbatches is preserved by the train step's fp32 grad buffer.
+    dw = jax.lax.dot_general(
+        x.astype(dy.dtype), dy,
+        dimension_numbers=(
+            (tuple(range(contract)), tuple(range(contract))), ((), ())),
+        preferred_element_type=w.dtype)
+    return dx, dw
+
+
+_dense_mm.defvjp(_dense_mm_fwd, _dense_mm_bwd)
+
+
+def dense(x: jax.Array, w: jax.Array, b: jax.Array | None = None) -> jax.Array:
+    y = _dense_mm(x, w)
+    if b is not None:
+        y = (y.astype(_F32) + b.astype(_F32)).astype(x.dtype)
+    return y
+
+
+def mlp(x: jax.Array, p: Params, act: str) -> jax.Array:
+    """SwiGLU ('gate'/'up'/'down') or 2-matrix ('up'/'down') MLP."""
+    if act == "swiglu":
+        g = dense(x, p["gate"])
+        u = dense(x, p["up"])
+        h = jax.nn.silu(g.astype(_F32)).astype(x.dtype) * u
+    elif act == "gelu":
+        h = jax.nn.gelu(dense(x, p["up"]).astype(_F32)).astype(x.dtype)
+    elif act == "squared_relu":
+        h = jnp.square(jax.nn.relu(dense(x, p["up"]).astype(_F32))).astype(x.dtype)
+    else:
+        raise ValueError(act)
+    return dense(h, p["down"])
+
+
+def init_mlp(key, d_model: int, d_ff: int, act: str, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    scale_in = d_model ** -0.5
+    scale_out = d_ff ** -0.5
+    p = {"up": truncated_normal_init(ks[0], (d_model, d_ff), scale_in, dtype),
+         "down": truncated_normal_init(ks[1], (d_ff, d_model), scale_out, dtype)}
+    if act == "swiglu":
+        p["gate"] = truncated_normal_init(ks[2], (d_model, d_ff), scale_in, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=_F32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) or (S,)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)
+    angles = positions.astype(_F32)[..., None] * freqs      # (..., S, hd/2)
+    if angles.ndim == 2:                                     # (S, hd/2)
+        angles = angles[None]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(_F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

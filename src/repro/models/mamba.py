@@ -1,0 +1,243 @@
+"""Mamba-1 (S6) block: gated selective state-space layer.
+
+The short depthwise causal conv (k = d_conv) is where the paper's technique
+lands in this family: it routes through the region-wise 1D Cook-Toom algorithm
+(core.winograd.ct_depthwise_causal_conv1d / kernels.conv1d_ct), cutting the
+conv multiply count by m*r/t (F(4,4): 2.29x). `SSMConfig.conv_algorithm`
+switches between cook_toom and the direct conv for the A/B benchmarks.
+
+Selective scan: h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ; y_t = C_t h_t + D x_t.
+Implemented as a *chunked* linear recurrence: sequential lax.scan over chunks
+of `scan_chunk` tokens carrying (B, d_inner, N) state, associative_scan inside
+each chunk -- bounds the materialized (chunk, d_inner, N) tensors so the 500k
+context dry-run fits, while keeping within-chunk parallelism for the VPU.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.winograd import ct_depthwise_causal_conv1d
+from repro.models.config import ArchConfig
+from repro.models.layers import dense, truncated_normal_init
+
+_F32 = jnp.float32
+
+
+def _use_pallas_scan() -> bool:
+    """Route the selective scan through the fused Pallas kernel. On by
+    default on TPU (where it is the structural fix for the SSM memory wall,
+    EXPERIMENTS.md section Perf falcon iteration 3); opt-in elsewhere via
+    REPRO_PALLAS_SCAN=1 (interpret mode -- tests use this)."""
+    if os.environ.get("REPRO_PALLAS_SCAN"):
+        return True
+    return jax.default_backend() == "tpu"
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or cfg.d_model // 16
+    return s, d_in, dt_rank
+
+
+def init_mamba(key, cfg: ArchConfig, dtype) -> dict:
+    s, d_in, dt_rank = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    p = {
+        "in_proj": truncated_normal_init(ks[0], (d, 2 * d_in), d ** -0.5, dtype),
+        "conv_w": truncated_normal_init(ks[1], (s.d_conv, d_in),
+                                        s.d_conv ** -0.5, dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": truncated_normal_init(ks[2], (d_in, dt_rank + 2 * s.d_state),
+                                        d_in ** -0.5, dtype),
+        "dt_proj": truncated_normal_init(ks[3], (dt_rank, d_in),
+                                         dt_rank ** -0.5, dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.clip(jnp.exp(jax.random.uniform(
+                ks[4], (d_in,), _F32,
+                jnp.log(1e-3), jnp.log(1e-1))), 1e-4, None))).astype(_F32),
+        # S4D-real init: A = -(1 .. N), stored as log(-A).
+        "a_log": jnp.broadcast_to(
+            jnp.log(jnp.arange(1, s.d_state + 1, dtype=_F32)),
+            (d_in, s.d_state)).copy(),
+        "d_skip": jnp.ones((d_in,), _F32),
+        "out_proj": truncated_normal_init(ks[5], (d_in, d), d_in ** -0.5, dtype),
+    }
+    return p
+
+
+def _chunked_selective_scan(dt, xs, bmat, cmat, a_mat, chunk: int):
+    """Linear recurrence h_t = exp(dt_t A) h_{t-1} + (dt_t B_t x_t),
+    contracted with C inside each chunk.
+
+    Perf-critical structure (EXPERIMENTS.md section Perf, falcon/jamba cells):
+
+      * Discretization happens INSIDE the chunk body: the (B, L, d_in, N)
+        tensors a_bar / bx never exist at full sequence length -- only
+        (B, chunk, d_in, N) transients. At falcon train_4k shapes the full-
+        length form is 2 x 17 GB/device/layer of HBM traffic (plus remat
+        copies); in-chunk it is 2 x 17/nc GB live, streamed.
+      * chunk_step is jax.checkpoint'd: the backward pass recomputes the
+        chunk's state trajectory instead of stacking (nc, B, chunk, d_in, N)
+        scan residuals (which alone exceeded a v5e's 16 GB HBM).
+      * Only the (B, d_in, N) carry crosses chunk boundaries.
+
+    dt, xs: (B, L, d_in) f32/any; bmat, cmat: (B, L, N); a_mat: (d_in, N).
+    L % chunk == 0. Returns y: (B, L, d_in) f32, final_state: (B, d_in, N) f32.
+    """
+    b, l, d_in = dt.shape
+    n = a_mat.shape[-1]
+    nc = l // chunk
+
+    def to_chunks(x):
+        return x.reshape(b, nc, chunk, *x.shape[2:]).transpose(
+            1, 0, 2, *range(3, x.ndim + 1))
+
+    dt_c, xs_c, b_c, c_c = map(to_chunks, (dt, xs, bmat, cmat))
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    @jax.checkpoint
+    def chunk_step(h, inputs):
+        dtc, xc, bc, cc = inputs              # (B, chunk, d_in) / (B, chunk, N)
+        ac = jnp.exp(dtc[..., None] * a_mat[None, None])   # (B, chunk, d_in, N)
+        bxc = (dtc * xc)[..., None] * bc[:, :, None, :]
+        # prefix products within the chunk, seeded by the carried state.
+        a_acc, b_acc = jax.lax.associative_scan(combine, (ac, bxc), axis=1)
+        h_all = a_acc * h[:, None] + b_acc    # (B, chunk, d_in, N)
+        y = jnp.einsum("blds,bls->bld", h_all, cc)
+        return h_all[:, -1], y
+
+    h0 = jnp.zeros((b, d_in, n), jnp.float32)
+    h_last, y = jax.lax.scan(chunk_step, h0, (dt_c, xs_c, b_c, c_c))
+    return y.transpose(1, 0, 2, 3).reshape(b, l, d_in), h_last
+
+
+# ---------------------------------------------------------------------------
+# Fused-kernel scan path: Pallas forward (state in VMEM, HBM traffic =
+# inputs + outputs), recompute-based backward through the XLA chunked
+# formulation (the two agree to 1e-5 -- tests/test_selective_scan.py).
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _selective_scan_fused(dt, xs, bmat, cmat, a_mat, chunk):
+    from repro.kernels.selective_scan import selective_scan
+    d = dt.shape[-1]
+    block_d = 512 if (d > 512 and d % 512 == 0) else d
+    return selective_scan(dt, xs, bmat, cmat, a_mat,
+                          chunk=min(chunk, dt.shape[1]), block_d=block_d,
+                          interpret=jax.default_backend() != "tpu")
+
+
+def _ssf_fwd(dt, xs, bmat, cmat, a_mat, chunk):
+    out = _selective_scan_fused(dt, xs, bmat, cmat, a_mat, chunk)
+    return out, (dt, xs, bmat, cmat, a_mat)
+
+
+def _ssf_bwd(chunk, res, cts):
+    dt, xs, bmat, cmat, a_mat = res
+    _, vjp = jax.vjp(
+        lambda *args: _chunked_selective_scan(*args, chunk=chunk),
+        dt, xs, bmat, cmat, a_mat)
+    return vjp(cts)
+
+
+_selective_scan_fused.defvjp(_ssf_fwd, _ssf_bwd)
+
+
+def mamba_block(p, x: jax.Array, cfg: ArchConfig,
+                return_state: bool = False):
+    """x: (B, L, D) -> (B, L, D). Training / prefill path.
+
+    With return_state, also returns the decode cache {"conv", "ssm"} at the
+    final position (prefill).
+    """
+    s, d_in, dt_rank = _dims(cfg)
+    b, l, _ = x.shape
+    xz = dense(x, p["in_proj"])                        # (B, L, 2*d_in)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs_raw = xs                                        # pre-conv (decode cache)
+
+    if s.conv_algorithm == "cook_toom":
+        xs = ct_depthwise_causal_conv1d(xs, p["conv_w"].astype(xs.dtype))
+    else:
+        pad = jnp.pad(xs, ((0, 0), (s.d_conv - 1, 0), (0, 0)))
+        xs = sum(pad[:, k:k + l] * p["conv_w"][k].astype(xs.dtype)[None, None]
+                 for k in range(s.d_conv))
+    xs = jax.nn.silu((xs + p["conv_b"].astype(xs.dtype)).astype(_F32)).astype(x.dtype)
+
+    proj = dense(xs, p["x_proj"])                      # (B, L, dt_rank + 2N)
+    dt, bmat, cmat = jnp.split(proj, [dt_rank, dt_rank + s.d_state], axis=-1)
+    dt = jax.nn.softplus(dense(dt, p["dt_proj"]).astype(_F32)
+                         + p["dt_bias"])               # (B, L, d_in)
+    a = -jnp.exp(p["a_log"])                           # (d_in, N)
+
+    chunk = min(s.scan_chunk, l)
+    if l % chunk:
+        chunk = l                                       # tiny smoke shapes
+    # discretization (a_bar = exp(dt A), b_bar x = dt B_t x_t) happens inside
+    # the chunk scan -- see _chunked_selective_scan.
+    scan_fn = (_selective_scan_fused if _use_pallas_scan()
+               else functools.partial(_chunked_selective_scan, chunk=chunk))
+    args = (dt, xs.astype(_F32), bmat.astype(_F32), cmat.astype(_F32), a)
+    y, h_last = (scan_fn(*args, chunk) if scan_fn is _selective_scan_fused
+                 else scan_fn(*args))
+    y = (y + xs.astype(_F32) * p["d_skip"]).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(_F32)).astype(x.dtype)
+    out = dense(y, p["out_proj"])
+    if not return_state:
+        return out
+    conv_cache = xs_raw[:, -(s.d_conv - 1):]            # (B, k-1, d_in)
+    if l < s.d_conv - 1:
+        conv_cache = jnp.pad(conv_cache, ((0, 0), (s.d_conv - 1 - l, 0), (0, 0)))
+    return out, {"conv": conv_cache, "ssm": h_last}
+
+
+# ---------------------------------------------------------------------------
+# Single-token decode (recurrent form) -- O(1) per token, the reason the
+# long_500k shape is runnable for the SSM/hybrid archs.
+# ---------------------------------------------------------------------------
+
+def init_mamba_cache(cfg: ArchConfig, batch: int, dtype) -> dict:
+    s, d_in, _ = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, d_in), dtype),
+        "ssm": jnp.zeros((batch, d_in, s.d_state), _F32),
+    }
+
+
+def mamba_decode_step(p, x: jax.Array, cache: dict,
+                      cfg: ArchConfig) -> tuple[jax.Array, dict]:
+    """x: (B, 1, D) -> (B, 1, D), updating {conv, ssm} cache."""
+    s, d_in, dt_rank = _dims(cfg)
+    b = x.shape[0]
+    xz = dense(x[:, 0], p["in_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)                   # (B, d_in)
+
+    window = jnp.concatenate([cache["conv"], xs[:, None]], axis=1)  # (B,k,d_in)
+    conv_out = jnp.sum(window * p["conv_w"].astype(xs.dtype)[None], axis=1)
+    new_conv = window[:, 1:]
+    xs = jax.nn.silu((conv_out + p["conv_b"].astype(xs.dtype))
+                     .astype(_F32)).astype(x.dtype)
+
+    proj = dense(xs, p["x_proj"])
+    dt, bvec, cvec = jnp.split(proj, [dt_rank, dt_rank + s.d_state], axis=-1)
+    dt = jax.nn.softplus(dense(dt, p["dt_proj"]).astype(_F32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    a_bar = jnp.exp(dt[..., None] * a[None])            # (B, d_in, N)
+    bx = (dt * xs.astype(_F32))[..., None] * bvec.astype(_F32)[:, None, :]
+    h = a_bar * cache["ssm"] + bx                       # (B, d_in, N)
+    y = jnp.einsum("bds,bs->bd", h, cvec.astype(_F32))
+    y = (y + xs.astype(_F32) * p["d_skip"]).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(_F32)).astype(x.dtype)
+    out = dense(y, p["out_proj"])[:, None]
+    return out, {"conv": new_conv, "ssm": h}

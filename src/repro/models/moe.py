@@ -1,0 +1,110 @@
+"""Token-choice top-k Mixture-of-Experts with capacity-bounded scatter dispatch.
+
+Design notes (compile-safety at 512 devices drove these choices):
+
+* Dispatch is *scatter-based*, not GShard-style one-hot-einsum: the (T, E, C)
+  one-hot dispatch tensor of the einsum formulation is O(tokens x experts x
+  capacity) and does not fit HBM at our shapes; the scatter formulation only
+  materializes the (E, C, D) expert buffer, which shards over the expert axis.
+* All shapes are static: capacity C = ceil(T / E) * top_k * capacity_factor.
+  Tokens routed past an expert's capacity are dropped (standard Switch
+  semantics); the router aux loss pushes the distribution flat.
+* Expert FFNs run as one batched einsum (E, C, D) x (E, D, F) so the expert
+  axis can shard over the `model` mesh axis (expert parallelism). When
+  n_experts does not divide the model axis (granite's 40 on 16), shard_mode
+  "tp" shards F instead and replicates the small expert axis.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig, MoEConfig
+from repro.models.layers import truncated_normal_init
+
+_F32 = jnp.float32
+
+
+def init_moe(key, cfg: ArchConfig, dtype) -> dict:
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.d_ff_expert, m.n_experts
+    ks = jax.random.split(key, 4)
+    scale_in, scale_out = d ** -0.5, f ** -0.5
+    p = {
+        "router": truncated_normal_init(ks[0], (d, e), scale_in, _F32),
+        "up": truncated_normal_init(ks[1], (e, d, f), scale_in, dtype),
+        "down": truncated_normal_init(ks[2], (e, f, d), scale_out, dtype),
+    }
+    if cfg.act == "swiglu":
+        p["gate"] = truncated_normal_init(ks[3], (e, d, f), scale_in, dtype)
+    return p
+
+
+def _expert_ffn(p, xs: jax.Array, act: str) -> jax.Array:
+    """(E, C, D) -> (E, C, D) batched over experts."""
+    up = jnp.einsum("ecd,edf->ecf", xs, p["up"].astype(xs.dtype),
+                    preferred_element_type=_F32).astype(xs.dtype)
+    if act == "swiglu":
+        gate = jnp.einsum("ecd,edf->ecf", xs, p["gate"].astype(xs.dtype),
+                          preferred_element_type=_F32)
+        h = (jax.nn.silu(gate) .astype(xs.dtype)) * up
+    elif act == "squared_relu":
+        h = jnp.square(jax.nn.relu(up.astype(_F32))).astype(xs.dtype)
+    else:
+        h = jax.nn.gelu(up.astype(_F32)).astype(xs.dtype)
+    return jnp.einsum("ecf,efd->ecd", h, p["down"].astype(xs.dtype),
+                      preferred_element_type=_F32).astype(xs.dtype)
+
+
+def moe_block(p, x: jax.Array, cfg: ArchConfig,
+              dropless: bool = False) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (y, aux_loss).
+
+    dropless=True sets capacity = T so no token can overflow (exact token-
+    choice routing). This is the *serving* semantics: capacity dropping is a
+    batch-composition-dependent approximation (a token's output changes with
+    its batch neighbours -- even acausally), acceptable under the training
+    aux-loss but not in inference, where prefill+decode must reproduce the
+    full forward pass bit-for-contract. Training keeps the capacity bound
+    (static scatter buffer (E, C, D) stays O(T * cap_factor) not O(T * E)).
+    """
+    m: MoEConfig = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    logits = jnp.matmul(xf.astype(_F32), p["router"])          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, m.top_k)      # (T, k)
+    if m.top_k > 1:                                            # renormalize
+        gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    if dropless:
+        capacity = t
+    else:
+        capacity = int(m.capacity_factor * t * 1.0 / m.n_experts) * 1 + 1
+        capacity = max(capacity, 4)
+
+    y = jnp.zeros((t, d), x.dtype)
+    for k in range(m.top_k):
+        eid = expert_ids[:, k]                                  # (T,)
+        gv = gate_vals[:, k].astype(x.dtype)                    # (T,)
+        onehot = jax.nn.one_hot(eid, m.n_experts, dtype=jnp.int32)
+        pos = jnp.cumsum(onehot, axis=0)[jnp.arange(t), eid] - 1  # (T,)
+        keep = pos < capacity
+        pos_c = jnp.where(keep, pos, capacity)                  # overflow slot
+        # scatter tokens into the (E, C+1, D) buffer (slot C is the dropout
+        # bin); buffer shards over E (ep) or D (tp).
+        buf = jnp.zeros((m.n_experts, capacity + 1, d), x.dtype)
+        buf = buf.at[eid, pos_c].set(xf)
+        out = _expert_ffn(p, buf[:, :capacity], cfg.act)        # (E, C, D)
+        out = jnp.pad(out, ((0, 0), (0, 1), (0, 0)))
+        gathered = out[eid, pos_c]                              # (T, D)
+        y = y + gathered * (gv * keep.astype(x.dtype))[:, None]
+
+    # load-balance aux loss (Switch): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)                                # (E,)
+    ce = jnp.mean(jax.nn.one_hot(expert_ids[:, 0], m.n_experts, dtype=_F32),
+                  axis=0)
+    aux = m.n_experts * jnp.sum(me * ce)
+    return y.reshape(b, s, d), aux

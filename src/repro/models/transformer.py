@@ -1,0 +1,453 @@
+"""Model assembly: decoder LMs (dense / MoE / SSM / hybrid) and enc-dec.
+
+Structure:
+  * Per-layer parameters are *stacked over scan units* (leading axis
+    cfg.n_units) and the layer stack runs under jax.lax.scan + jax.checkpoint.
+    This keeps the lowered HLO O(1 scan-unit) -- essential for compiling 96
+    layers x 512 devices in the dry-run -- and bounds activation live range to
+    one unit (remat policy saves only the residual stream).
+  * The loss head is *vocab-chunked*: logits are computed (B, chunk, V) a
+    chunk at a time under a scan and immediately reduced to per-token loss, so
+    the (B, S, V) logits tensor never materializes (319 TB for qwen1.5 at the
+    train_4k shape).
+  * Activation sharding constraints are injected through
+    repro.distributed.context (no-ops off-mesh), keeping model code
+    mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import context as dist
+from repro.models import attention as attn
+from repro.models import mamba as ssm
+from repro.models import moe as moe_lib
+from repro.models.config import ArchConfig
+from repro.models.layers import (dense, init_mlp, layer_norm, mlp, rms_norm,
+                                 truncated_normal_init)
+
+_F32 = jnp.float32
+Params = Any
+
+
+def _norm(x, p, cfg: ArchConfig):
+    if "bias" in p:
+        return layer_norm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rms_norm(x, p["scale"], cfg.norm_eps)
+
+
+def _init_norm(cfg: ArchConfig, dtype, with_bias=False):
+    p = {"scale": jnp.ones((cfg.d_model,), dtype)}
+    if with_bias:
+        p["bias"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+def _init_unit(key, cfg: ArchConfig, dtype) -> dict:
+    """One scan unit = cfg.scan_unit consecutive layers (dict keyed by idx)."""
+    unit = {}
+    for i in range(cfg.scan_unit):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        kind = cfg.layer_kind(i)
+        layer = {"ln1": _init_norm(cfg, dtype)}
+        if kind == "attn":
+            layer["attn"] = attn.init_attention(k1, cfg, dtype)
+        else:
+            layer["mamba"] = ssm.init_mamba(k1, cfg, dtype)
+        if cfg.layer_is_moe(i):
+            layer["ln2"] = _init_norm(cfg, dtype)
+            layer["moe"] = moe_lib.init_moe(k2, cfg, dtype)
+        elif cfg.d_ff > 0:
+            layer["ln2"] = _init_norm(cfg, dtype)
+            layer["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.act, dtype)
+        # d_ff == 0 (pure Mamba families): the mixer is the whole layer.
+        if cfg.encoder is not None:
+            layer["ln_x"] = _init_norm(cfg, dtype)
+            layer["xattn"] = attn.init_attention(k3, cfg, dtype)
+        unit[f"layer_{i}"] = layer
+    return unit
+
+
+def _init_encoder(key, cfg: ArchConfig, dtype) -> dict:
+    enc = cfg.encoder
+    layers = []
+    for _ in range(enc.n_layers):
+        key, k1, k2 = jax.random.split(key, 3)
+        layers.append({
+            "ln1": _init_norm(cfg, dtype, with_bias=True),
+            "attn": attn.init_attention(k1, cfg, dtype),
+            "ln2": _init_norm(cfg, dtype, with_bias=True),
+            "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, "gelu", dtype),
+        })
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    key, kp = jax.random.split(key)
+    return {
+        "layers": stacked,
+        "pos_emb": truncated_normal_init(kp, (enc.n_ctx, cfg.d_model), 0.02,
+                                         dtype),
+        "ln_f": _init_norm(cfg, dtype, with_bias=True),
+    }
+
+
+def init_params(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> Params:
+    key, k_emb, k_head, k_enc = jax.random.split(key, 4)
+    units = []
+    for _ in range(cfg.n_units):
+        key, ku = jax.random.split(key)
+        units.append(_init_unit(ku, cfg, dtype))
+    blocks = jax.tree.map(lambda *xs: jnp.stack(xs), *units)
+    params = {
+        "embed": truncated_normal_init(k_emb, (cfg.vocab, cfg.d_model),
+                                       cfg.d_model ** -0.5, dtype),
+        "blocks": blocks,
+        "ln_f": _init_norm(cfg, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = truncated_normal_init(
+            k_head, (cfg.vocab, cfg.d_model), cfg.d_model ** -0.5, dtype)
+    if cfg.encoder is not None:
+        params["encoder"] = _init_encoder(k_enc, cfg, dtype)
+    if cfg.pos_emb == "learned":
+        key, kp = jax.random.split(key)
+        params["pos_emb"] = truncated_normal_init(
+            kp, (cfg.max_seq, cfg.d_model), 0.02, dtype)
+    return params
+
+
+def abstract_params(cfg: ArchConfig, dtype=jnp.bfloat16) -> Params:
+    """ShapeDtypeStruct pytree (dry-run: no allocation)."""
+    return jax.eval_shape(
+        lambda k: init_params(k, cfg, dtype), jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# Forward: one scan unit
+# ---------------------------------------------------------------------------
+
+def _unit_forward(unit: dict, x: jax.Array, cfg: ArchConfig,
+                  cross_kv: Optional[dict] = None,
+                  dropless: bool = False) -> tuple[jax.Array, jax.Array]:
+    """(B, S, D) -> (B, S, D), plus summed MoE aux loss.
+
+    Note (EXPERIMENTS.md section Perf, jamba iteration 2 -- REFUTED): adding
+    per-layer jax.checkpoint inside the unit-level nothing_saveable remat
+    *doubled* peak temp (104.6 -> 213.6 GB/dev) -- nested remat regions made
+    XLA keep both the unit-level and layer-level recompute buffers live.
+    Layers therefore run unwrapped inside the unit.
+    """
+
+    def one_layer(x, i, layer):
+        aux = jnp.zeros((), _F32)
+        kind = cfg.layer_kind(i)
+        h = _norm(x, layer["ln1"], cfg)
+        if kind == "attn":
+            h = attn.self_attention(layer["attn"], h, cfg, causal=True)
+        else:
+            h = ssm.mamba_block(layer["mamba"], h, cfg)
+        x = dist.shard_activations(x + h, "residual")
+        if cross_kv is not None:
+            h = _norm(x, layer["ln_x"], cfg)
+            h = attn.cross_attention(layer["xattn"], h, cross_kv, cfg)
+            x = x + h
+        if cfg.layer_is_moe(i):
+            h = _norm(x, layer["ln2"], cfg)
+            h, a = moe_lib.moe_block(layer["moe"], h, cfg, dropless=dropless)
+            aux = aux + a
+            x = dist.shard_activations(x + h, "residual")
+        elif cfg.d_ff > 0:
+            h = _norm(x, layer["ln2"], cfg)
+            h = mlp(h, layer["mlp"], cfg.act)
+            x = dist.shard_activations(x + h, "residual")
+        return x, aux
+
+    aux = jnp.zeros((), _F32)
+    for i in range(cfg.scan_unit):
+        x, a = one_layer(x, i, unit[f"layer_{i}"])
+        aux = aux + a
+    return x, aux
+
+
+def _run_blocks(params: Params, x: jax.Array, cfg: ArchConfig,
+                cross_kv: Optional[dict] = None,
+                dropless: bool = False) -> tuple[jax.Array, jax.Array]:
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def body(carry, unit):
+        x, aux = carry
+        x, a = _unit_forward(unit, x, cfg, cross_kv, dropless=dropless)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), _F32)), params["blocks"])
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Encoder (whisper)
+# ---------------------------------------------------------------------------
+
+def encode(params: Params, frames: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """frames: (B, n_ctx, D) precomputed stem embeddings -> (B, n_ctx, D)."""
+    enc = params["encoder"]
+    x = frames + enc["pos_emb"][None, :frames.shape[1]].astype(frames.dtype)
+
+    def body(x, layer):
+        h = _norm(x, layer["ln1"], cfg)
+        x = x + attn.self_attention(layer["attn"], h, cfg, causal=False)
+        h = _norm(x, layer["ln2"], cfg)
+        x = x + mlp(h, layer["mlp"], "gelu")
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, enc["layers"])
+    return _norm(x, enc["ln_f"], cfg)
+
+
+# ---------------------------------------------------------------------------
+# Loss (vocab-chunked cross-entropy)
+# ---------------------------------------------------------------------------
+
+def _chunked_xent(x: jax.Array, head: jax.Array, labels: jax.Array,
+                  chunk: int) -> jax.Array:
+    """x: (B, S, D), head: (V, D), labels: (B, S) -> scalar mean loss.
+
+    Scans over sequence chunks so only (B, chunk, V) logits are live.
+    """
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    if s % chunk:
+        chunk = s
+    nc = s // chunk
+    xc = x.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(tot, inputs):
+        xi, li = inputs                                  # (B, chunk, D/int)
+        logits = jnp.einsum("bcd,vd->bcv", xi.astype(_F32),
+                            head.astype(_F32))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        valid = (li >= 0).astype(_F32)
+        return tot + jnp.sum((lse - gold) * valid), None
+
+    tot, _ = jax.lax.scan(body, jnp.zeros((), _F32), (xc, lc))
+    n_valid = jnp.maximum(jnp.sum((labels >= 0).astype(_F32)), 1.0)
+    return tot / n_valid
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params: Params, tokens: jax.Array, cfg: ArchConfig) -> jax.Array:
+    x = params["embed"][tokens]
+    if cfg.pos_emb == "learned":
+        pos = jnp.arange(tokens.shape[1])
+        x = x + params["pos_emb"][pos][None].astype(x.dtype)
+    return dist.shard_activations(x, "residual")
+
+
+def forward(params: Params, batch: dict, cfg: ArchConfig) -> jax.Array:
+    """Training loss. batch: {tokens, labels[, frames]} -> scalar."""
+    cross_kv = None
+    if cfg.encoder is not None:
+        enc_out = encode(params, batch["frames"], cfg)
+        # cross K/V computed once from the first unit's xattn params is NOT
+        # correct per-layer; each layer projects its own K/V inside the scan.
+        cross_kv = {"enc_out": enc_out}
+    x = embed_tokens(params, batch["tokens"], cfg)
+    if cross_kv is not None:
+        x, aux = _run_blocks_encdec(params, x, cross_kv["enc_out"], cfg)
+    else:
+        x, aux = _run_blocks(params, x, cfg)
+    x = _norm(x, params["ln_f"], cfg)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    loss = _chunked_xent(x, head, batch["labels"], cfg.logits_chunk)
+    return loss + 0.01 * aux
+
+
+def _run_blocks_encdec(params, x, enc_out, cfg, dropless: bool = False):
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def body(carry, unit):
+        x, aux = carry
+        kv = attn.encode_cross_kv(unit["layer_0"]["xattn"], enc_out, cfg)
+        x, a = _unit_forward(unit, x, cfg, cross_kv=kv, dropless=dropless)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), _F32)), params["blocks"])
+    return x, aux
+
+
+def forward_logits(params: Params, tokens: jax.Array, cfg: ArchConfig,
+                   frames: jax.Array | None = None) -> jax.Array:
+    """Full logits (small inputs only -- smoke tests / examples). Inference
+    semantics: MoE routing is dropless (see moe.moe_block)."""
+    if cfg.encoder is not None:
+        enc_out = encode(params, frames, cfg)
+        x = embed_tokens(params, tokens, cfg)
+        x, _ = _run_blocks_encdec(params, x, enc_out, cfg, dropless=True)
+    else:
+        x = embed_tokens(params, tokens, cfg)
+        x, _ = _run_blocks(params, x, cfg, dropless=True)
+    x = _norm(x, params["ln_f"], cfg)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("bsd,vd->bsv", x.astype(_F32), head.astype(_F32))
+
+
+# ---------------------------------------------------------------------------
+# Decode (single-token serve step with caches)
+# ---------------------------------------------------------------------------
+
+def init_decode_cache(cfg: ArchConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16) -> dict:
+    """Stacked per-unit caches. Attention layers get KV caches; Mamba layers
+    get (conv, ssm) state; enc-dec layers additionally carry read-only
+    cross-attention K/V filled at prefill. Keyed like the parameter tree."""
+    unit_cache = {}
+    for i in range(cfg.scan_unit):
+        if cfg.layer_kind(i) == "attn":
+            c = dict(attn.init_kv_cache(cfg, batch, max_len, dtype))
+        else:
+            c = dict(ssm.init_mamba_cache(cfg, batch, dtype))
+        if cfg.encoder is not None:
+            xc = attn.init_kv_cache(cfg, batch, cfg.encoder.n_ctx, dtype)
+            c["xk"], c["xv"] = xc["k"], xc["v"]
+        unit_cache[f"layer_{i}"] = c
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_units,) + x.shape).copy(),
+        unit_cache)
+
+
+def abstract_decode_cache(cfg: ArchConfig, batch: int, max_len: int,
+                          dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: init_decode_cache(cfg, batch, max_len, dtype))
+
+
+def decode_step(params: Params, cache: dict, tokens: jax.Array,
+                cache_pos: jax.Array, cfg: ArchConfig) -> tuple[jax.Array, dict]:
+    """One decode step. tokens: (B, 1) int32 -> logits (B, V), updated cache.
+
+    cache_pos: scalar int32, number of tokens already decoded/prefilled.
+    Cross-attention K/V (enc-dec) live read-only in the cache ("xk"/"xv").
+    """
+    x = params["embed"][tokens]
+    if cfg.pos_emb == "learned":
+        x = x + params["pos_emb"][cache_pos][None, None].astype(x.dtype)
+    x = x.astype(params["embed"].dtype)
+
+    def body(x, inputs):
+        unit, ucache = inputs
+        new_cache = {}
+        for i in range(cfg.scan_unit):
+            layer = unit[f"layer_{i}"]
+            lcache = dict(ucache[f"layer_{i}"])
+            xk = lcache.pop("xk", None)
+            xv = lcache.pop("xv", None)
+            h = _norm(x, layer["ln1"], cfg)
+            if cfg.layer_kind(i) == "attn":
+                h, nc = attn.decode_self_attention(layer["attn"], h, lcache,
+                                                   cache_pos, cfg)
+            else:
+                h, nc = ssm.mamba_decode_step(layer["mamba"], h, lcache, cfg)
+            x = dist.shard_activations(x + h, "decode")
+            if xk is not None:
+                nc = dict(nc)
+                nc["xk"], nc["xv"] = xk, xv
+                h = _norm(x, layer["ln_x"], cfg)
+                x = x + attn.cross_attention(layer["xattn"], h,
+                                             {"k": xk, "v": xv}, cfg)
+            new_cache[f"layer_{i}"] = nc
+            if cfg.layer_is_moe(i):
+                h = _norm(x, layer["ln2"], cfg)
+                h, _ = moe_lib.moe_block(layer["moe"], h, cfg, dropless=True)
+                x = x + h
+            elif cfg.d_ff > 0:
+                h = _norm(x, layer["ln2"], cfg)
+                h = mlp(h, layer["mlp"], cfg.act)
+                x = x + h
+            x = dist.shard_activations(x, "decode")
+        return x, new_cache
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    x = _norm(x, params["ln_f"], cfg)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,vd->bsv", x.astype(_F32), head.astype(_F32))
+    return logits[:, 0], new_cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill: run the full prompt, emit logits for the last position and a
+# populated decode cache (the inference-prefill shape of the dry-run).
+# ---------------------------------------------------------------------------
+
+def prefill(params: Params, tokens: jax.Array, cfg: ArchConfig,
+            max_len: int, frames: jax.Array | None = None,
+            dropless: bool = True) -> tuple[jax.Array, dict]:
+    """tokens: (B, S) -> (last-token logits (B, V), decode cache at pos=S).
+
+    Cache emission rides on the layer scan: each unit returns its K/V (or
+    final SSM state) as scan ys.
+
+    dropless: exact MoE routing (serving semantics). The 32k-prefill dry-run
+    cells pass dropless=False -- at 1M tokens the dropless (E, T, D) scatter
+    buffer would dwarf HBM, so bulk prefill accepts capacity-bounded routing
+    (documented approximation, EXPERIMENTS.md section Dry-run).
+    """
+    b, s = tokens.shape
+    enc_out = None
+    if cfg.encoder is not None:
+        enc_out = encode(params, frames, cfg)
+    x = embed_tokens(params, tokens, cfg)
+
+    def body(x, unit):
+        cache_unit = {}
+        for i in range(cfg.scan_unit):
+            layer = unit[f"layer_{i}"]
+            h = _norm(x, layer["ln1"], cfg)
+            if cfg.layer_kind(i) == "attn":
+                q, k, v = attn._qkv(layer["attn"], h, cfg, jnp.arange(s),
+                                    rope=True)
+                mask = (jnp.arange(s)[:, None] >= jnp.arange(s)[None, :])[None]
+                o = attn._sdpa(q, k, v, mask, cfg.n_heads // cfg.n_kv_heads)
+                h = dense(o.reshape(b, s, -1), layer["attn"]["wo"])
+                kpad = jnp.zeros((b, max_len - s) + k.shape[2:], k.dtype)
+                cache_unit[f"layer_{i}"] = {
+                    "k": jnp.concatenate([k, kpad], axis=1),
+                    "v": jnp.concatenate([v, kpad], axis=1)}
+            else:
+                h, st = ssm.mamba_block(layer["mamba"], h, cfg,
+                                        return_state=True)
+                cache_unit[f"layer_{i}"] = st
+            x = dist.shard_activations(x + h, "residual")
+            if enc_out is not None:
+                kv = attn.encode_cross_kv(layer["xattn"], enc_out, cfg)
+                cache_unit[f"layer_{i}"]["xk"] = kv["k"]
+                cache_unit[f"layer_{i}"]["xv"] = kv["v"]
+                h = _norm(x, layer["ln_x"], cfg)
+                x = x + attn.cross_attention(layer["xattn"], h, kv, cfg)
+            if cfg.layer_is_moe(i):
+                h = _norm(x, layer["ln2"], cfg)
+                h, _ = moe_lib.moe_block(layer["moe"], h, cfg,
+                                         dropless=dropless)
+                x = dist.shard_activations(x + h, "residual")
+            elif cfg.d_ff > 0:
+                h = _norm(x, layer["ln2"], cfg)
+                h = mlp(h, layer["mlp"], cfg.act)
+                x = dist.shard_activations(x + h, "residual")
+        return x, cache_unit
+
+    x, cache = jax.lax.scan(body, x, params["blocks"])
+    x = _norm(x[:, -1:], params["ln_f"], cfg)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,vd->bsv", x.astype(_F32), head.astype(_F32))
+    return logits[:, 0], cache

@@ -1,0 +1,92 @@
+"""Error-feedback int8 gradient compression for the cross-pod all-reduce.
+
+At 2+ pods the gradient reduction crosses the (slow) inter-pod links; int8
+quantization cuts that wire traffic 4x vs fp32 (2x vs bf16). Error feedback
+(Seide et al. / EF-SGD) keeps the quantization *unbiased over time*: the
+residual of each step's quantization is carried and added to the next step's
+gradient, so the compressed-SGD trajectory provably tracks the exact one.
+
+Mechanics (per leaf):
+  q, scale = quantize(g + err)           # symmetric per-tensor int8
+  err'     = (g + err) - dequantize(q)   # carried residual
+  wire     = q (int8) + scale (f32)      # 4x fewer bytes than f32 g
+
+`cross_pod_mean` composes with SPMD jit via shard_map over the "pod" axis:
+gradients are already pod-replicated means within each pod (XLA's data-axis
+reduction); the pod-axis mean then runs on the quantized representation.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+_F32 = jnp.float32
+_I8_MAX = 127.0
+
+
+class Compressed(NamedTuple):
+    q: jax.Array          # int8 payload, same shape as the gradient
+    scale: jax.Array      # f32 scalar
+
+
+def quantize(g: jax.Array) -> Compressed:
+    """Symmetric per-tensor int8 quantization."""
+    amax = jnp.max(jnp.abs(g.astype(_F32)))
+    scale = jnp.where(amax > 0, amax / _I8_MAX, 1.0).astype(_F32)
+    q = jnp.clip(jnp.round(g.astype(_F32) / scale), -_I8_MAX, _I8_MAX)
+    return Compressed(q=q.astype(jnp.int8), scale=scale)
+
+
+def dequantize(c: Compressed) -> jax.Array:
+    return c.q.astype(_F32) * c.scale
+
+
+def compress_with_feedback(g: jax.Array, err: jax.Array
+                           ) -> tuple[Compressed, jax.Array]:
+    """Returns (compressed(g + err), new_err)."""
+    target = g.astype(_F32) + err
+    c = quantize(target)
+    new_err = target - dequantize(c)
+    return c, new_err
+
+
+def init_error_state(params: Any) -> Any:
+    """Zero residuals, shaped/sharded like the gradients."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, _F32), params)
+
+
+def pod_mean_int8(g: jax.Array, err: jax.Array, axis: str = "pod"
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Mean a per-pod gradient shard over `axis` through an int8 wire with
+    error feedback. MUST run inside a shard_map that maps `axis`.
+
+    jax.lax.psum on the int8 payload would overflow; the standard scheme
+    (1-bit/EF-SGD lineage) all-gathers the int8 payloads + scales and
+    dequant-sums locally -- wire bytes = one int8 payload per pod, a 4x
+    reduction vs an fp32 ring all-reduce (2x vs bf16).
+    """
+    c, new_err = compress_with_feedback(g, err)
+    qs = jax.lax.all_gather(c.q, axis)            # (pods, ...) int8 wire
+    scales = jax.lax.all_gather(c.scale, axis)    # (pods,)
+    n = qs.shape[0]
+    mean = jnp.tensordot(scales, qs.astype(_F32), axes=(0, 0)) / n
+    return mean.astype(g.dtype), new_err
+
+
+def pod_mean_int8_tree(grads: Any, err_state: Any, axis: str = "pod"
+                       ) -> tuple[Any, Any]:
+    """Tree-wide compressed pod-mean. MUST run inside a shard_map mapping
+    `axis` (the caller owns the per-pod loss/grad structure -- grads hold the
+    *pod-local* batch mean on entry and the global mean on exit)."""
+    out = jax.tree.map(lambda g, e: pod_mean_int8(g, e, axis),
+                       grads, err_state)
+    new_grads = jax.tree.map(lambda o: o[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree.map(lambda o: o[1], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return new_grads, new_err

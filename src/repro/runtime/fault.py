@@ -1,0 +1,77 @@
+"""Fault-tolerance runtime: retry supervisor, preemption hook, straggler log.
+
+At thousand-node scale the failure model is: (a) hard worker loss -> the jax
+runtime raises from the collective; (b) SIGTERM preemption warning; (c)
+stragglers -> step-time outliers. The supervisor owns (a) and (b) by
+restarting the step loop from the last committed checkpoint; (c) is surfaced
+by the StepTimer so the scheduler can evict (synchronous SPMD bounds the cost
+of a straggler at the collective -- mitigation = replacement, not async).
+"""
+
+from __future__ import annotations
+
+import signal
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+
+class PreemptionGuard:
+    """Converts SIGTERM into a checkpoint-and-exit request."""
+
+    def __init__(self):
+        self.requested = False
+        try:
+            signal.signal(signal.SIGTERM, self._handler)
+        except ValueError:
+            pass  # not main thread (tests)
+
+    def _handler(self, signum, frame):
+        self.requested = True
+
+
+@dataclass
+class StepTimer:
+    """Rolling step-time stats; flags straggler steps (> k sigma)."""
+    window: int = 50
+    sigma: float = 3.0
+    times: list = field(default_factory=list)
+    stragglers: int = 0
+
+    def record(self, dt: float) -> bool:
+        """Returns True if this step is a straggler outlier."""
+        hist = self.times[-self.window:]
+        is_out = False
+        if len(hist) >= 10:
+            mean = sum(hist) / len(hist)
+            var = sum((t - mean) ** 2 for t in hist) / len(hist)
+            if dt > mean + self.sigma * max(var ** 0.5, 0.05 * mean):
+                self.stragglers += 1
+                is_out = True
+        self.times.append(dt)
+        return is_out
+
+
+def run_with_retries(body: Callable[[int], int], *, max_failures: int = 3,
+                     on_failure: Optional[Callable[[BaseException], None]] = None
+                     ) -> int:
+    """Supervise `body(start_step) -> last_step`, restarting on failure.
+
+    `body` must be restartable from its checkpoint store. Each retry calls
+    body again; the restored start step comes from the checkpoint manager
+    inside body. Raises after max_failures consecutive failures.
+    """
+    failures = 0
+    last = 0
+    while True:
+        try:
+            return body(last)
+        except KeyboardInterrupt:
+            raise
+        except BaseException as e:
+            failures += 1
+            if on_failure:
+                on_failure(e)
+            if failures > max_failures:
+                raise
+            time.sleep(0.1)

@@ -1,0 +1,19 @@
+import os
+import sys
+
+import numpy as np
+import pytest
+
+# repo root on sys.path so tests can import the benchmarks package
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def rel_err(a, b):
+    import jax.numpy as jnp
+    denom = float(jnp.max(jnp.abs(b))) + 1e-9
+    return float(jnp.max(jnp.abs(a - b))) / denom

@@ -1,0 +1,67 @@
+"""Adafactor: factored-state memory claim, descent behaviour, and parity
+with AdamW on a quadratic."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import adafactor
+
+
+def test_factored_state_is_small():
+    params = {"w": jnp.zeros((1024, 4096), jnp.bfloat16)}
+    cfg = adafactor.AdafactorConfig()
+    bytes_fac = adafactor.state_bytes(params, cfg)
+    # AdamW fp32 m+v would be 2 * 4 * 1024 * 4096
+    assert bytes_fac < 0.01 * (8 * 1024 * 4096)
+    st = adafactor.init_state(params, cfg)
+    assert st.vr["w"].shape == (1024,)
+    assert st.vc["w"].shape == (4096,)
+
+
+def test_small_params_not_factored():
+    params = {"b": jnp.zeros((64,)), "s": jnp.zeros(())}
+    st = adafactor.init_state(params, adafactor.AdafactorConfig())
+    assert st.vr["b"].shape == (64,)       # full second moment
+
+
+def test_descends_quadratic(rng):
+    """min ||W - A||^2 converges."""
+    a = jnp.asarray(rng.standard_normal((256, 256)), jnp.float32)
+    params = {"w": jnp.zeros((256, 256), jnp.float32)}
+    cfg = adafactor.AdafactorConfig(lr=0.3)
+    state = adafactor.init_state(params, cfg)
+
+    def loss(p):
+        return jnp.mean(jnp.square(p["w"] - a))
+
+    l0 = float(loss(params))
+    for _ in range(60):
+        g = jax.grad(loss)(params)
+        params, state = adafactor.apply_updates(params, g, state, cfg)
+    assert float(loss(params)) < 0.05 * l0
+    assert int(state.step) == 60
+
+
+def test_beta1_momentum_variant(rng):
+    params = {"w": jnp.asarray(rng.standard_normal((128, 128)), jnp.float32)}
+    cfg = adafactor.AdafactorConfig(lr=0.1, beta1=0.9)
+    state = adafactor.init_state(params, cfg)
+    assert state.m["w"].shape == (128, 128)
+    g = {"w": jnp.ones((128, 128))}
+    new_p, new_s = adafactor.apply_updates(params, g, state, cfg)
+    assert bool(jnp.all(jnp.isfinite(new_p["w"])))
+    assert float(jnp.max(jnp.abs(new_s.m["w"]))) > 0
+
+
+def test_update_rms_clipped(rng):
+    """Huge gradients produce bounded relative updates (clip_threshold)."""
+    params = {"w": jnp.ones((256, 256), jnp.float32)}
+    cfg = adafactor.AdafactorConfig(lr=1e-2, clip_threshold=1.0)
+    state = adafactor.init_state(params, cfg)
+    g = {"w": jnp.asarray(rng.standard_normal((256, 256)) * 1e6, jnp.float32)}
+    new_p, _ = adafactor.apply_updates(params, g, state, cfg)
+    delta_rms = float(jnp.sqrt(jnp.mean(jnp.square(new_p["w"] - 1.0))))
+    # scale = lr * rms(p) = 1e-2; clipped update rms <= 1 (+ weight decay 0)
+    assert delta_rms <= 1.05e-2

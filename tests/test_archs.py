@@ -1,0 +1,183 @@
+"""Per-architecture smoke tests: reduced same-family configs, one forward /
+train / decode step on CPU, asserting output shapes + finiteness, plus
+prefill-vs-decode consistency (the serving-path correctness invariant)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as cfglib
+from repro.launch.steps import make_serve_step, make_train_step
+from repro.models import transformer as tf
+from repro.optim import adamw
+
+_DTYPE = jnp.float32
+
+
+def _batch(cfg, b=2, s=16, seed=0):
+    rng = np.random.default_rng(seed)
+    out = {"tokens": rng.integers(0, cfg.vocab, (b, s)).astype(np.int32),
+           "labels": rng.integers(0, cfg.vocab, (b, s)).astype(np.int32)}
+    if cfg.encoder is not None:
+        out["frames"] = rng.standard_normal(
+            (b, cfg.encoder.n_ctx, cfg.d_model)).astype(np.float32)
+    return out
+
+
+@pytest.fixture(scope="module")
+def smoke_state():
+    """Cache (cfg, params) per arch across tests in this module."""
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = cfglib.get_smoke_config(arch)
+            params = tf.init_params(jax.random.key(0), cfg, _DTYPE)
+            cache[arch] = (cfg, params)
+        return cache[arch]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", cfglib.ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    """The full config must carry the exact published numbers."""
+    cfg = cfglib.get_config(arch)
+    expect = {
+        "falcon_mamba_7b": dict(n_layers=64, d_model=4096, d_ff=0, vocab=65024),
+        "whisper_tiny": dict(n_layers=4, d_model=384, n_heads=6, d_ff=1536,
+                             vocab=51865),
+        "qwen1_5_32b": dict(n_layers=64, d_model=5120, n_heads=40,
+                            n_kv_heads=40, d_ff=27392, vocab=152064),
+        "nemotron_4_340b": dict(n_layers=96, d_model=18432, n_heads=96,
+                                n_kv_heads=8, d_ff=73728, vocab=256000),
+        "qwen2_5_3b": dict(n_layers=36, d_model=2048, n_heads=16,
+                           n_kv_heads=2, d_ff=11008, vocab=151936),
+        "yi_34b": dict(n_layers=60, d_model=7168, n_heads=56, n_kv_heads=8,
+                       d_ff=20480, vocab=64000),
+        "jamba_v0_1_52b": dict(n_layers=32, d_model=4096, n_heads=32,
+                               n_kv_heads=8, d_ff=14336, vocab=65536),
+        "llama4_maverick_400b_a17b": dict(n_layers=48, d_model=5120,
+                                          n_heads=40, n_kv_heads=8, d_ff=8192,
+                                          vocab=202048),
+        "granite_moe_3b_a800m": dict(n_layers=32, d_model=1536, n_heads=24,
+                                     n_kv_heads=8, d_ff=512, vocab=49155),
+        "chameleon_34b": dict(n_layers=48, d_model=8192, n_heads=64,
+                              n_kv_heads=8, d_ff=22016, vocab=65536),
+    }[arch]
+    for k, v in expect.items():
+        assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+    # family-specific invariants
+    if arch == "falcon_mamba_7b":
+        assert cfg.family == "ssm" and cfg.ssm.d_state == 16
+    if arch == "jamba_v0_1_52b":
+        assert cfg.attn_every == 8 and cfg.moe.n_experts == 16 \
+            and cfg.moe.top_k == 2
+    if arch == "llama4_maverick_400b_a17b":
+        assert cfg.moe.n_experts == 128 and cfg.moe.top_k == 1
+    if arch == "granite_moe_3b_a800m":
+        assert cfg.moe.n_experts == 40 and cfg.moe.top_k == 8
+    if arch == "nemotron_4_340b":
+        assert cfg.act == "squared_relu"
+    if arch in ("qwen1_5_32b", "qwen2_5_3b"):
+        assert cfg.qkv_bias
+    if arch == "whisper_tiny":
+        assert cfg.encoder is not None and cfg.encoder.n_layers == 4
+
+
+@pytest.mark.parametrize("arch", cfglib.ARCH_IDS)
+def test_smoke_forward_logits(smoke_state, arch):
+    cfg, params = smoke_state(arch)
+    batch = _batch(cfg)
+    logits = tf.forward_logits(params, jnp.asarray(batch["tokens"]), cfg,
+                               frames=jnp.asarray(batch["frames"])
+                               if cfg.encoder else None)
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", cfglib.ARCH_IDS)
+def test_smoke_train_step(smoke_state, arch):
+    cfg, params = smoke_state(arch)
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    opt = adamw.init_state(params, opt_cfg)
+    step = jax.jit(make_train_step(cfg, opt_cfg))
+    batch = jax.tree.map(jnp.asarray, _batch(cfg))
+    new_params, new_opt, metrics = step(params, opt, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss) and loss > 0
+    assert int(new_opt.step) == 1
+    # params actually moved
+    moved = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                         params, new_params)
+    assert max(jax.tree.leaves(moved)) > 0
+
+
+@pytest.mark.parametrize("arch", ["qwen2_5_3b", "falcon_mamba_7b",
+                                  "jamba_v0_1_52b", "granite_moe_3b_a800m",
+                                  "whisper_tiny"])
+def test_prefill_then_decode_matches_forward(smoke_state, arch):
+    """Teacher-forced decode after prefill must reproduce forward_logits --
+    the invariant tying the three dry-run step kinds together. One arch per
+    family (dense/ssm/hybrid/moe/enc-dec)."""
+    cfg, params = smoke_state(arch)
+    b, s, extra = 2, 8, 4
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (b, s + extra)), jnp.int32)
+    frames = (jnp.asarray(rng.standard_normal(
+        (b, cfg.encoder.n_ctx, cfg.d_model)), jnp.float32)
+        if cfg.encoder else None)
+
+    full = tf.forward_logits(params, toks, cfg, frames=frames)
+
+    max_len = s + extra
+    logits_p, cache = tf.prefill(params, toks[:, :s], cfg, max_len,
+                                 frames=frames)
+    np.testing.assert_allclose(
+        np.asarray(logits_p), np.asarray(full[:, s - 1]), rtol=2e-2, atol=2e-3)
+
+    serve = jax.jit(make_serve_step(cfg))
+    for i in range(extra):
+        logits_d, cache = serve(params, cache, toks[:, s + i:s + i + 1],
+                                jnp.asarray(s + i, jnp.int32))
+        np.testing.assert_allclose(
+            np.asarray(logits_d), np.asarray(full[:, s + i]),
+            rtol=2e-2, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", cfglib.ARCH_IDS)
+def test_cells_assignment(arch):
+    """long_500k runnable iff sub-quadratic; all four shapes accounted for."""
+    cells = {c[0]: c[3] for c in cfglib.cells(arch)}
+    assert set(cells) == set(cfglib.SHAPES)
+    cfg = cfglib.get_config(arch)
+    if cfg.subquadratic:
+        assert cells["long_500k"] == "decode"
+        assert arch in ("falcon_mamba_7b", "jamba_v0_1_52b")
+    else:
+        assert cells["long_500k"] == "skip"
+
+
+@pytest.mark.parametrize("arch", cfglib.ARCH_IDS)
+def test_param_count_order_of_magnitude(arch):
+    """n_params estimate matches the arch's nameplate size (loose: the
+    nameplate rounds, ours counts exactly)."""
+    nameplate = {
+        "falcon_mamba_7b": 7e9, "whisper_tiny": 39e6, "qwen1_5_32b": 32e9,
+        "nemotron_4_340b": 340e9, "qwen2_5_3b": 3e9, "yi_34b": 34e9,
+        "jamba_v0_1_52b": 52e9, "llama4_maverick_400b_a17b": 400e9,
+        "granite_moe_3b_a800m": 3e9, "chameleon_34b": 34e9,
+    }[arch]
+    n = cfglib.get_config(arch).n_params
+    assert 0.4 * nameplate < n < 2.6 * nameplate, (arch, n, nameplate)
+
+
+def test_moe_active_params_below_total():
+    for arch in ("llama4_maverick_400b_a17b", "granite_moe_3b_a800m",
+                 "jamba_v0_1_52b"):
+        cfg = cfglib.get_config(arch)
+        assert cfg.n_active_params < cfg.n_params
+    # llama4: ~17B active of ~400B
+    cfg = cfglib.get_config("llama4_maverick_400b_a17b")
+    assert cfg.n_active_params < 0.15 * cfg.n_params

@@ -1,0 +1,42 @@
+"""Whisper conv stem: the paper's 1D algorithm (stride-1 Cook-Toom +
+polyphase stride-2) vs a direct-convolution oracle, end to end."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as cfglib
+from repro.models import audio
+
+from conftest import rel_err
+
+
+def _direct_stem(params, mel):
+    def conv(x, w, stride):
+        return jax.lax.conv_general_dilated(
+            x[:, :, None], w[:, None], window_strides=(stride, 1),
+            padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))[:, :, 0]
+
+    x = jax.nn.gelu(conv(mel, params["conv1_w"], 1) + params["conv1_b"])
+    return jax.nn.gelu(conv(x, params["conv2_w"], 2) + params["conv2_b"])
+
+
+@pytest.mark.parametrize("algorithm", ["auto", "im2col"])
+def test_stem_matches_direct(rng, algorithm):
+    cfg = cfglib.get_smoke_config("whisper_tiny")
+    params = audio.init_stem(jax.random.key(0), cfg, n_mels=16)
+    mel = jnp.asarray(rng.standard_normal((2, 32, 16)), jnp.float32)
+    got = audio.stem(params, mel, algorithm=algorithm)
+    want = _direct_stem(params, mel)
+    assert got.shape == (2, 16, cfg.d_model)
+    assert rel_err(got, want) < 1e-4
+
+
+def test_stem_halves_time_axis(rng):
+    cfg = cfglib.get_smoke_config("whisper_tiny")
+    params = audio.init_stem(jax.random.key(1), cfg, n_mels=8)
+    for t in (20, 33):
+        mel = jnp.asarray(rng.standard_normal((1, t, 8)), jnp.float32)
+        out = audio.stem(params, mel)
+        assert out.shape[1] == -(-t // 2)

@@ -1,0 +1,59 @@
+"""Paper CNN zoo: every network builds, runs, and the paper's two benchmark
+configurations (fast-mixed vs im2row-everywhere) agree numerically."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import cnn
+
+from conftest import rel_err
+
+# reduced resolutions that keep every VALID conv/pool positive-sized
+_RES = {"vgg16": 64, "vgg19": 64, "googlenet": 64, "inception_v3": 96,
+        "squeezenet": 64}
+
+
+@pytest.mark.parametrize("net", sorted(cnn.NETWORKS))
+def test_network_builds_and_runs(rng, net):
+    specs = cnn.NETWORKS[net][0]()
+    res = _RES[net]
+    params = cnn.init_cnn(jax.random.key(0), specs, 3, res=res)
+    x = jnp.asarray(rng.standard_normal((1, res, res, 3)), jnp.float32)
+    out = cnn.cnn_forward(params, x, specs, algorithm="im2col")
+    assert out.shape == (1, 1000)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+@pytest.mark.parametrize("net", ["squeezenet", "googlenet"])
+@pytest.mark.parametrize("algorithm", ["auto", "auto_tuned"])
+def test_fast_scheme_agrees_with_baseline(rng, net, algorithm):
+    specs = cnn.NETWORKS[net][0]()
+    res = _RES[net]
+    params = cnn.init_cnn(jax.random.key(1), specs, 3, res=res)
+    x = jnp.asarray(rng.standard_normal((1, res, res, 3)), jnp.float32)
+    fast = cnn.cnn_forward(params, x, specs, algorithm=algorithm)
+    base = cnn.cnn_forward(params, x, specs, algorithm="im2col")
+    assert rel_err(fast, base) < 1e-3
+
+
+def test_layer_inventory_census():
+    """Paper Fig-3 denominator: the suitable-layer census is stable."""
+    from benchmarks.common import conv_layer_inventory
+    inv = conv_layer_inventory("squeezenet")
+    assert len(inv) == 26                       # 26 convs in SqueezeNet 1.0
+    suitable = [l for l in inv if l["suitable"]]
+    assert len(suitable) == 8                   # 8 3x3 expand layers
+    assert all(l["kh"] == 3 for l in suitable)
+    # inception has the paper's 1x7/7x1 layers, all suitable
+    inv3 = conv_layer_inventory("inception_v3")
+    one_d = [l for l in inv3 if l["suitable"] and 1 in (l["kh"], l["kw"])]
+    assert len(one_d) >= 10
+
+
+def test_dense_weights_initialized_eagerly():
+    specs = cnn.NETWORKS["vgg16"][0]()
+    params = cnn.init_cnn(jax.random.key(0), specs, 3, res=64)
+    assert params["fc6"]["w"].shape == (2 * 2 * 512, 4096)   # 64 / 2^5 = 2
+    assert params["fc8"]["w"].shape == (4096, 1000)

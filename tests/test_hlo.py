@@ -1,0 +1,128 @@
+"""HLO cost-parser tests: the roofline numbers are only as good as this
+parser, so pin its semantics on hand-written HLO and on real compiled
+programs (1-device) where XLA's own cost_analysis is the cross-check."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo
+
+HLO_SAMPLE = """
+HloModule test, entry_computation_layout={()->f32[]}
+
+%body (p: (s32[], f32[128,256])) -> (s32[], f32[128,256]) {
+  %p = (s32[], f32[128,256]) parameter(0)
+  %i = s32[] get-tuple-element((s32[], f32[128,256]) %p), index=0
+  %x = f32[128,256] get-tuple-element((s32[], f32[128,256]) %p), index=1
+  %w = f32[256,256] constant({...})
+  %y = f32[128,256] dot(f32[128,256] %x, f32[256,256] %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ag = f32[128,256] all-gather(f32[128,256] %y), replica_groups={}, dimensions={0}
+  %one = s32[] constant(1)
+  %ni = s32[] add(s32[] %i, s32[] %one)
+  ROOT %t = (s32[], f32[128,256]) tuple(s32[] %ni, f32[128,256] %ag)
+}
+
+%cond (p: (s32[], f32[128,256])) -> pred[] {
+  %p = (s32[], f32[128,256]) parameter(0)
+  %i = s32[] get-tuple-element((s32[], f32[128,256]) %p), index=0
+  %n = s32[] constant(12)
+  ROOT %lt = pred[] compare(s32[] %i, s32[] %n), direction=LT
+}
+
+ENTRY %main () -> f32[] {
+  %a = f32[128,256] parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[128,256]) tuple(s32[] %zero, f32[128,256] %a)
+  %loop = (s32[], f32[128,256]) while((s32[], f32[128,256]) %init), condition=%cond, body=%body
+  %out = f32[128,256] get-tuple-element((s32[], f32[128,256]) %loop), index=1
+  %ar = f32[128,256] all-reduce(f32[128,256] %out), replica_groups={}, to_apply=%add
+  ROOT %r = f32[] reduce(f32[128,256] %ar, f32[] %zero), dimensions={0,1}, to_apply=%add
+}
+"""
+
+
+def test_parse_hlo_structure():
+    comps = hlo.parse_hlo(HLO_SAMPLE)
+    assert set(comps) >= {"body", "cond", "main"}
+    assert any(i.opcode == "while" for i in comps["main"].instrs)
+    assert any(i.opcode == "dot" for i in comps["body"].instrs)
+
+
+def test_trip_count_from_condition_constant():
+    comps = hlo.parse_hlo(HLO_SAMPLE)
+    assert hlo._trip_count(comps["cond"]) == 12
+
+
+def test_flops_are_trip_aware():
+    cost = hlo.HloCost(HLO_SAMPLE).total("main")
+    # dot: 2 * (128*256) * 256 per trip, 12 trips
+    want = 2.0 * 128 * 256 * 256 * 12
+    assert cost.flops == want
+
+
+def test_collective_bytes_by_kind():
+    cost = hlo.HloCost(HLO_SAMPLE).total("main")
+    buf = 128 * 256 * 4
+    assert cost.coll_by_kind["all-gather"] == buf * 12   # inside the loop
+    assert cost.coll_by_kind["all-reduce"] == buf        # outside
+    assert cost.coll_bytes == buf * 13
+
+
+def test_shape_bytes_parses_dtypes():
+    assert hlo._shape_bytes("f32[128,256]") == 128 * 256 * 4
+    assert hlo._shape_bytes("bf16[10]") == 20
+    assert hlo._shape_bytes("(s32[], f32[4,4])") == 4 + 64
+    assert hlo._shape_bytes("pred[]") == 1
+
+
+def test_real_compiled_dot_flops_close_to_xla():
+    """On a real compiled program (no loops), our dot flops == XLA's."""
+    m, k, n = 256, 512, 128
+
+    @jax.jit
+    def f(a, b):
+        return a @ b
+
+    lowered = f.lower(jax.ShapeDtypeStruct((m, k), jnp.float32),
+                      jax.ShapeDtypeStruct((k, n), jnp.float32))
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    got = hlo.HloCost(compiled.as_text()).total()
+    assert got.flops == pytest.approx(float(cost["flops"]), rel=0.01)
+    assert got.flops == pytest.approx(2.0 * m * k * n, rel=0.01)
+
+
+def test_real_scan_is_trip_aware_but_xla_is_not():
+    """The reason this module exists: XLA counts a scanned body once."""
+    trips = 8
+
+    @jax.jit
+    def f(x, w):
+        def body(x, _):
+            return jnp.tanh(x @ w), None
+        x, _ = jax.lax.scan(body, x, None, length=trips)
+        return x
+
+    compiled = f.lower(jax.ShapeDtypeStruct((64, 64), jnp.float32),
+                       jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    ours = hlo.HloCost(compiled.as_text()).total().flops
+    per_body = 2.0 * 64 * 64 * 64
+    assert ours == pytest.approx(trips * per_body, rel=0.05)
+    # XLA's own count misses the trip multiplier
+    assert float(cost["flops"]) <= per_body * 2
+
+
+def test_roofline_bottleneck_selection():
+    rf = hlo.Roofline(flops=197e12, hbm_bytes=1.0, coll_bytes=1.0, n_chips=1)
+    assert rf.bottleneck == "compute" and rf.t_compute == pytest.approx(1.0)
+    rf = hlo.Roofline(flops=1.0, hbm_bytes=819e9 * 2, coll_bytes=1.0, n_chips=1)
+    assert rf.bottleneck == "memory" and rf.t_memory == pytest.approx(2.0)
+    rf = hlo.Roofline(flops=1.0, hbm_bytes=1.0, coll_bytes=50e9 * 3, n_chips=1)
+    assert rf.bottleneck == "collective" and rf.t_collective == pytest.approx(3.0)

@@ -1,0 +1,146 @@
+"""Per-kernel allclose tests: every Pallas kernel swept over shapes/dtypes
+against the pure-jnp oracle in repro.kernels.ref (interpret=True on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.transforms import cook_toom
+from repro.kernels import conv1d_ct as k_conv1d
+from repro.kernels import matmul as k_matmul
+from repro.kernels import ops, ref
+
+from conftest import rel_err
+
+
+# ---------------------------------------------------------------------------
+# blocked matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 128, 128),
+                                   (128, 384, 256), (512, 256, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_kernel_vs_oracle(rng, m, k, n, dtype):
+    a = jnp.asarray(rng.standard_normal((m, k)), dtype)
+    b = jnp.asarray(rng.standard_normal((k, n)), dtype)
+    got = k_matmul.matmul(a, b, interpret=True)
+    want = ref.matmul(a, b)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    assert got.dtype == dtype
+    assert rel_err(got.astype(jnp.float32), want.astype(jnp.float32)) < tol
+
+
+@pytest.mark.parametrize("m,k,n", [(37, 53, 11), (1, 130, 257), (200, 64, 5)])
+def test_matmul_wrapper_pads_odd_shapes(rng, m, k, n):
+    a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    got = ops.matmul(a, b)
+    want = ref.matmul(a, b)
+    assert got.shape == (m, n)
+    assert rel_err(got, want) < 1e-5
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(64, 64, 64), (128, 256, 128)])
+def test_matmul_block_shape_invariance(rng, bm, bn, bk):
+    a = jnp.asarray(rng.standard_normal((256, 256)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((256, 256)), jnp.float32)
+    got = k_matmul.matmul(a, b, bm=bm, bn=bn, bk=bk, interpret=True)
+    assert rel_err(got, ref.matmul(a, b)) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# fused winograd kernel (tiles domain)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mt,k", [(2, 3), (4, 3), (2, 5), (4, 5)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_winograd_fused_vs_oracle(rng, mt, k, dtype):
+    ct = cook_toom(mt, k)
+    r_, c, mo = 128, 128, 128
+    tiles = jnp.asarray(rng.standard_normal((r_, ct.t, ct.t, c)), dtype)
+    u = jnp.asarray(rng.standard_normal((ct.t * ct.t, c, mo)), dtype)
+    got = ops._k_winograd.winograd_fused(tiles, u, ct_h=ct, ct_w=ct,
+                                         interpret=True)
+    want = ref.winograd_fused(tiles, u, ct_h=ct, ct_w=ct)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    assert got.shape == (r_, mt, mt, mo)
+    assert rel_err(got.astype(jnp.float32), want.astype(jnp.float32)) < tol
+
+
+def test_winograd_fused_multiblock_accumulation(rng):
+    """C > block_c exercises the cross-step fp32 VMEM accumulator."""
+    ct = cook_toom(2, 3)
+    tiles = jnp.asarray(rng.standard_normal((128, ct.t, ct.t, 256)), jnp.float32)
+    u = jnp.asarray(rng.standard_normal((ct.t * ct.t, 256, 128)), jnp.float32)
+    got = ops._k_winograd.winograd_fused(tiles, u, ct_h=ct, ct_w=ct,
+                                         block_c=128, interpret=True)
+    want = ref.winograd_fused(tiles, u, ct_h=ct, ct_w=ct)
+    assert rel_err(got, want) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# end-to-end pallas conv wrappers vs lax.conv oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("hw,c,m,k", [(12, 8, 16, 3), (16, 16, 8, 5),
+                                      (9, 3, 7, 3)])
+@pytest.mark.parametrize("padding", ["SAME", "VALID"])
+def test_ops_winograd_conv2d_vs_direct(rng, hw, c, m, k, padding):
+    x = jnp.asarray(rng.standard_normal((2, hw, hw, c)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, k, c, m)) / k, jnp.float32)
+    got = ops.winograd_conv2d(x, w, padding=padding, interpret=True)
+    want = ref.conv2d_direct(x, w, padding=padding)
+    assert got.shape == want.shape
+    assert rel_err(got, want) < 1e-4
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("k", [1, 3, 7])
+def test_ops_im2col_conv2d_vs_direct(rng, stride, k):
+    x = jnp.asarray(rng.standard_normal((2, 14, 14, 6)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, k, 6, 10)) / k, jnp.float32)
+    got = ops.im2col_conv2d(x, w, stride=stride, interpret=True)
+    want = ref.conv2d_direct(x, w, stride=stride)
+    assert got.shape == want.shape
+    assert rel_err(got, want) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# depthwise causal Cook-Toom conv1d kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("length,c,r", [(64, 128, 4), (100, 130, 4),
+                                        (33, 64, 3), (256, 128, 2)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_conv1d_ct_ops_vs_direct(rng, length, c, r, dtype):
+    x = jnp.asarray(rng.standard_normal((2, length, c)), dtype)
+    w = jnp.asarray(rng.standard_normal((r, c)) / r, dtype)
+    got = ops.ct_depthwise_causal_conv1d(x, w, interpret=True)
+    want = ref.depthwise_causal_conv1d_direct(x, w)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    assert got.shape == x.shape
+    assert rel_err(got.astype(jnp.float32), want.astype(jnp.float32)) < tol
+
+
+@pytest.mark.parametrize("mt", [2, 4, 6])
+def test_conv1d_ct_kernel_tile_domain(rng, mt):
+    ct = cook_toom(mt, 4)
+    b, s, c = 2, 64, 128
+    tiles = jnp.asarray(rng.standard_normal((b, s, ct.t, c)), jnp.float32)
+    u = jnp.asarray(rng.standard_normal((ct.t, c)), jnp.float32)
+    got = k_conv1d.conv1d_ct_fused(tiles, u, ct=ct, block_s=32, block_c=128,
+                                   interpret=True)
+    want = ref.conv1d_ct_fused(tiles, u, ct=ct)
+    assert got.shape == (b, s, ct.m, c)
+    assert rel_err(got, want) < 1e-4
+
+
+def test_conv1d_ct_matches_pure_jax_path(rng):
+    """Pallas wrapper == the pure-JAX core implementation bit-for-contract."""
+    from repro.core.winograd import ct_depthwise_causal_conv1d as core_impl
+    x = jnp.asarray(rng.standard_normal((3, 77, 96)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((4, 96)) / 2, jnp.float32)
+    a = ops.ct_depthwise_causal_conv1d(x, w, interpret=True)
+    b = core_impl(x, w)
+    assert rel_err(a, b) < 1e-5

@@ -1,0 +1,75 @@
+"""Cook-Toom transform generator: exactness and algebraic invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.transforms import (DEFAULT_OUTPUT_TILE, CookToom, cook_toom,
+                                   correlate_1d_reference)
+
+VARIANTS = [(2, 3), (4, 3), (6, 3), (2, 5), (4, 5), (2, 7), (4, 7),
+            (2, 4), (3, 4), (4, 4), (2, 2), (1, 3), (5, 3)]
+
+
+@pytest.mark.parametrize("m,r", VARIANTS)
+def test_correlation_identity(m, r):
+    """y = A^T[(G g) . (B^T d)] equals direct correlation, to fp64 precision."""
+    ct = cook_toom(m, r)
+    rng = np.random.default_rng(m * 100 + r)
+    for _ in range(5):
+        d = rng.standard_normal(ct.t)
+        g = rng.standard_normal(r)
+        y = correlate_1d_reference(ct, d, g)
+        ref = np.array([sum(g[k] * d[i + k] for k in range(r))
+                        for i in range(m)])
+        np.testing.assert_allclose(y, ref, rtol=1e-10, atol=1e-10)
+
+
+@pytest.mark.parametrize("m,r", VARIANTS)
+def test_shapes_and_reduction(m, r):
+    ct = cook_toom(m, r)
+    assert ct.t == m + r - 1
+    assert ct.AT.shape == (m, ct.t)
+    assert ct.G.shape == (ct.t, r)
+    assert ct.BT.shape == (ct.t, ct.t)
+    assert ct.mult_reduction_1d == pytest.approx(m * r / ct.t)
+
+
+def test_f23_matches_known_multiplication_count():
+    """F(2,3) uses 4 multiplies for 2 outputs (the classic 2.25x 2D case)."""
+    ct = cook_toom(2, 3)
+    assert ct.t == 4
+    assert ct.mult_reduction_2d == pytest.approx(36 / 16)
+
+
+def test_caching_and_hashability():
+    a, b = cook_toom(4, 3), cook_toom(4, 3)
+    assert a is b            # lru_cache
+    assert hash(a) == hash(b)
+    assert isinstance(a, CookToom)
+
+
+def test_default_variants_cover_paper_filters():
+    for r in (2, 3, 4, 5, 7):
+        assert r in DEFAULT_OUTPUT_TILE
+        ct = cook_toom(DEFAULT_OUTPUT_TILE[r], r)
+        assert ct.t - 1 >= r - 1
+
+
+@given(m=st.integers(1, 6), r=st.integers(2, 5))
+@settings(max_examples=24, deadline=None)
+def test_property_identity_any_variant(m, r):
+    ct = cook_toom(m, r)
+    rng = np.random.default_rng(m * 7 + r)
+    d = rng.standard_normal(ct.t)
+    g = rng.standard_normal(r)
+    y = correlate_1d_reference(ct, d, g)
+    ref = np.correlate(d, g, mode="valid")[:m]
+    np.testing.assert_allclose(y, ref, rtol=1e-9, atol=1e-9)
+
+
+def test_rejects_bad_args():
+    with pytest.raises(ValueError):
+        cook_toom(0, 3)
+    with pytest.raises(ValueError):
+        cook_toom(30, 30)

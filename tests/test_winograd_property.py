@@ -1,0 +1,189 @@
+"""Property-based tests (hypothesis) for the system's core invariants:
+
+  * cook_toom(m, r) transform identities hold for every variant in range;
+  * the region-wise multi-channel scheme == direct convolution for arbitrary
+    shapes, filter sizes, paddings, output tiles (2D, 1D rows/cols, 1x1);
+  * dispatch policy invariants (suitability is necessary & sufficient);
+  * im2row lowering == direct convolution for arbitrary strides.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dispatch, im2col
+from repro.core.transforms import cook_toom, correlate_1d_reference
+from repro.core.winograd import ct_depthwise_causal_conv1d, winograd_conv2d
+
+from conftest import rel_err
+
+_SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# transform-matrix identities
+# ---------------------------------------------------------------------------
+
+@settings(**_SETTINGS)
+@given(m=st.integers(1, 6), r=st.integers(1, 7), data=st.data())
+def test_cook_toom_identity_correlation(m, r, data):
+    """A^T[(Gg) . (B^T d)] == valid correlation of d with g, exactly."""
+    if m + r - 1 - 1 > 13:
+        return
+    ct = cook_toom(m, r)
+    d = np.array(data.draw(st.lists(
+        st.floats(-4, 4, allow_nan=False), min_size=ct.t, max_size=ct.t)))
+    g = np.array(data.draw(st.lists(
+        st.floats(-4, 4, allow_nan=False), min_size=r, max_size=r)))
+    got = correlate_1d_reference(ct, d, g)
+    want = np.array([np.dot(d[i:i + r], g) for i in range(m)])
+    np.testing.assert_allclose(got, want, rtol=1e-8, atol=1e-8)
+
+
+@settings(**_SETTINGS)
+@given(m=st.integers(1, 6), r=st.integers(1, 7))
+def test_cook_toom_shapes_and_reduction(m, r):
+    if m + r - 1 - 1 > 13:
+        return
+    ct = cook_toom(m, r)
+    assert ct.AT.shape == (m, ct.t)
+    assert ct.G.shape == (ct.t, r)
+    assert ct.BT.shape == (ct.t, ct.t)
+    # the bilinear algorithm uses t multiplies for m*r MACs
+    assert ct.t == m + r - 1
+    assert ct.mult_reduction_1d == (m * r) / ct.t
+
+
+# ---------------------------------------------------------------------------
+# region-wise multi-channel winograd == direct conv
+# ---------------------------------------------------------------------------
+
+@settings(**_SETTINGS)
+@given(
+    h=st.integers(5, 20), w=st.integers(5, 20),
+    c=st.integers(1, 9), mo=st.integers(1, 9),
+    k=st.sampled_from([3, 5]), mt=st.sampled_from([2, 4]),
+    padding=st.sampled_from(["SAME", "VALID"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_winograd2d_equals_direct(h, w, c, mo, k, mt, padding, seed):
+    if padding == "VALID" and (h < k or w < k):
+        return
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((1, h, w, c)), jnp.float32)
+    wt = jnp.asarray(rng.standard_normal((k, k, c, mo)) / k, jnp.float32)
+    got = winograd_conv2d(x, wt, output_tile=mt, padding=padding)
+    want = im2col.direct_conv2d(x, wt, padding=padding)
+    assert got.shape == want.shape
+    assert rel_err(got, want) < 1e-4
+
+
+@settings(**_SETTINGS)
+@given(
+    axis=st.sampled_from(["row", "col"]),
+    k=st.sampled_from([3, 7]),
+    size=st.integers(8, 24), other=st.integers(3, 10),
+    c=st.integers(1, 6), mo=st.integers(1, 6),
+    padding=st.sampled_from(["SAME", "VALID"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_winograd_1d_rows_cols_equals_direct(axis, k, size, other, c, mo,
+                                             padding, seed):
+    """The paper's 1xN / Nx1 case (Inception-v3 1x7/7x1 layers)."""
+    rng = np.random.default_rng(seed)
+    kh, kw = (k, 1) if axis == "row" else (1, k)
+    h, w = (size, other) if axis == "row" else (other, size)
+    x = jnp.asarray(rng.standard_normal((1, h, w, c)), jnp.float32)
+    wt = jnp.asarray(rng.standard_normal((kh, kw, c, mo)) / k, jnp.float32)
+    got = winograd_conv2d(x, wt, output_tile=2, padding=padding)
+    want = im2col.direct_conv2d(x, wt, padding=padding)
+    assert got.shape == want.shape
+    assert rel_err(got, want) < 1e-4
+
+
+@settings(**_SETTINGS)
+@given(
+    length=st.integers(1, 65), c=st.integers(1, 12),
+    r=st.integers(2, 4), mt=st.sampled_from([2, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ct_depthwise_causal_equals_direct(length, c, r, mt, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((2, length, c)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((r, c)), jnp.float32)
+    got = ct_depthwise_causal_conv1d(x, w, output_tile=mt)
+    xp = jnp.pad(x, ((0, 0), (r - 1, 0), (0, 0)))
+    want = sum(xp[:, i:i + length] * w[i][None, None] for i in range(r))
+    assert got.shape == x.shape
+    assert rel_err(got, want) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# im2row baseline == direct conv (any stride)
+# ---------------------------------------------------------------------------
+
+@settings(**_SETTINGS)
+@given(
+    hw=st.integers(6, 18), c=st.integers(1, 8), mo=st.integers(1, 8),
+    k=st.integers(1, 5), stride=st.integers(1, 3),
+    padding=st.sampled_from(["SAME", "VALID"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_im2col_equals_direct(hw, c, mo, k, stride, padding, seed):
+    if padding == "VALID" and hw < k:
+        return
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((2, hw, hw, c)), jnp.float32)
+    wt = jnp.asarray(rng.standard_normal((k, k, c, mo)) / k, jnp.float32)
+    got = im2col.im2col_conv2d(x, wt, stride=stride, padding=padding)
+    want = im2col.direct_conv2d(x, wt, stride=stride, padding=padding)
+    assert got.shape == want.shape
+    assert rel_err(got, want) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# dispatch policy
+# ---------------------------------------------------------------------------
+
+@settings(**_SETTINGS)
+@given(kh=st.integers(1, 8), kw=st.integers(1, 8), stride=st.integers(1, 3))
+def test_dispatch_suitability(kh, kw, stride):
+    s = dispatch.winograd_suitable(kh, kw, stride)
+    if stride != 1 or (kh == 1 and kw == 1):
+        assert not s
+    elif all(k == 1 or k in dispatch.WINOGRAD_FILTER_SIZES for k in (kh, kw)) \
+            and (kh != 1 or kw != 1):
+        assert s
+
+
+@settings(**_SETTINGS)
+@given(k=st.sampled_from([3, 5]), stride=st.integers(1, 2),
+       seed=st.integers(0, 2**31 - 1))
+def test_dispatch_auto_always_matches_direct(k, stride, seed):
+    """algorithm="auto" (the paper's mixed policy) is semantics-preserving
+    regardless of which scheme it picks."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((1, 12, 12, 4)), jnp.float32)
+    wt = jnp.asarray(rng.standard_normal((k, k, 4, 6)) / k, jnp.float32)
+    got = dispatch.conv2d(x, wt, stride=stride, algorithm="auto")
+    want = im2col.direct_conv2d(x, wt, stride=stride)
+    assert rel_err(got, want) < 1e-4
+
+
+@settings(**_SETTINGS)
+@given(stride=st.sampled_from([2, 3]), k=st.sampled_from([3, 5, 7]),
+       length=st.integers(10, 40), seed=st.integers(0, 2**31 - 1))
+def test_conv1d_polyphase_stride_equals_direct(stride, k, length, seed):
+    """Strided sequence conv via polyphase Cook-Toom decomposition (the
+    Whisper stem case) == direct strided conv."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((1, length, 5)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, 5, 7)) / k, jnp.float32)
+    got = dispatch.conv1d(x, w, stride=stride, padding="SAME",
+                          algorithm="auto")
+    want = jax.lax.conv_general_dilated(
+        x[:, :, None], w[:, None], window_strides=(stride, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))[:, :, 0]
+    assert got.shape == want.shape
+    assert rel_err(got, want) < 1e-4
