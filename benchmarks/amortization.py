@@ -3,17 +3,30 @@ output-channel count M grows, so achieved speedup approaches the theoretical
 multiplication reduction asymptotically.
 
 Fixes a 14x14xC 3x3 layer and sweeps M; reports winograd-vs-im2row speedup
-per M alongside the theoretical F(4x4,3x3) bound of 4x."""
+per M alongside the theoretical F(4x4,3x3) bound of 4x.
+
+The sweep also A/Bs the per-call path (filter transform inside every call,
+the seed behavior) against planned execution (transform once at plan time,
+steady-state apply) and records both, plus the plan-build cost -- the
+section-4 insight made directly measurable. Each row records the cold build
+(decisions + geometry + filter transform) and an immediate rebuild of the
+same layer: with --plan-cache (default) the rebuild hits the process-level
+spec cache and pays only the filter transform; --no-plan-cache clears the
+cache first so the rebuild re-derives everything, exposing the cache's
+contribution in the same JSON."""
 
 from __future__ import annotations
 
 import argparse
 import functools
 import json
+import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import plan as planlib
 from repro.core.transforms import cook_toom
 
 from benchmarks.common import time_jitted
@@ -27,6 +40,11 @@ def main(argv=None):
     ap.add_argument("--m-sweep", nargs="*", type=int,
                     default=[4, 16, 64, 128, 256, 512])
     ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--plan-cache", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="let each row's plan *rebuild* hit the process-level "
+                         "spec cache (--no-plan-cache clears the cache before "
+                         "the rebuild, so it re-derives all decisions)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
 
@@ -37,9 +55,11 @@ def main(argv=None):
                     jnp.float32)
     rows = []
     print(f"== Amortization sweep: {args.hw}x{args.hw}x{args.c_in}, 3x3, "
-          f"theoretical bound {bound:.2f}x ==")
-    print(f"{'M':>5s} {'im2col(us)':>11s} {'wino(us)':>10s} {'speedup':>8s} "
-          f"{'of-bound':>9s}")
+          f"theoretical bound {bound:.2f}x "
+          f"(plan cache {'on' if args.plan_cache else 'off'}) ==")
+    print(f"{'M':>5s} {'im2col(us)':>11s} {'wino(us)':>10s} "
+          f"{'planned(us)':>12s} {'build(us)':>10s} {'rebuild':>10s} "
+          f"{'speedup':>8s} {'planned':>8s} {'of-bound':>9s}")
     for m in args.m_sweep:
         w = jnp.asarray(rng.standard_normal((3, 3, args.c_in, m)) / 3,
                         jnp.float32)
@@ -48,11 +68,33 @@ def main(argv=None):
                                             **kw), x, w, iters=args.iters)
         t_w = time_jitted(functools.partial(_run_layer, algorithm="winograd",
                                             **kw), x, w, iters=args.iters)
+        # planned path: the per-call numbers above re-transform the filter
+        # every call; this one pre-transforms at plan time. Cold build first,
+        # then a rebuild whose cost depends on the spec cache (the A/B the
+        # --plan-cache flag controls).
+        planlib.clear_plan_cache()
+        t0 = time.perf_counter()
+        p = planlib.plan_conv2d(x.shape, w, stride=1, algorithm="winograd")
+        jax.block_until_ready(p.u)
+        t_build = time.perf_counter() - t0
+        if not args.plan_cache:
+            planlib.clear_plan_cache()
+        t0 = time.perf_counter()
+        p = planlib.plan_conv2d(x.shape, w, stride=1, algorithm="winograd")
+        jax.block_until_ready(p.u)
+        t_rebuild = time.perf_counter() - t0
+        t_p = time_jitted(jax.jit(p.apply), x, iters=args.iters)
         r = {"m": m, "t_im2col_s": t_i, "t_winograd_s": t_w,
-             "speedup": t_i / t_w, "bound": bound}
+             "t_winograd_planned_s": t_p, "plan_build_s": t_build,
+             "plan_rebuild_s": t_rebuild,
+             "plan_cache": bool(args.plan_cache),
+             "speedup": t_i / t_w, "speedup_planned": t_i / t_p,
+             "bound": bound}
         rows.append(r)
-        print(f"{m:5d} {t_i*1e6:11.0f} {t_w*1e6:10.0f} {r['speedup']:7.2f}x "
-              f"{100*r['speedup']/bound:8.1f}%", flush=True)
+        print(f"{m:5d} {t_i*1e6:11.0f} {t_w*1e6:10.0f} {t_p*1e6:12.0f} "
+              f"{t_build*1e6:10.0f} {t_rebuild*1e6:10.0f} "
+              f"{r['speedup']:7.2f}x {r['speedup_planned']:7.2f}x "
+              f"{100*r['speedup_planned']/bound:8.1f}%", flush=True)
     # the paper's claim: speedup is increasing in M (monotone up to noise)
     sp = [r["speedup"] for r in rows]
     print(f"asymptotic trend: {sp[0]:.2f}x @ M={rows[0]['m']} -> "

@@ -21,6 +21,13 @@ def main(argv=None) -> None:
     ap.add_argument("--skip", nargs="*", default=[],
                     choices=["per_layer", "whole_network", "fast_fraction",
                              "amortization", "roofline"])
+    ap.add_argument("--plan-cache", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="A/B switch for the amortization benchmark: each row "
+                         "records a cold plan build plus a rebuild that hits "
+                         "the spec cache (--plan-cache, default) or starts "
+                         "cold again (--no-plan-cache), next to per-call and "
+                         "planned steady-state times")
     args = ap.parse_args(argv)
 
     from benchmarks import (amortization, fast_fraction, per_layer, roofline,
@@ -57,6 +64,7 @@ def main(argv=None) -> None:
               flush=True)
         am_args = [] if args.full else ["--iters", "3",
                                         "--m-sweep", "16", "64", "256"]
+        am_args += ["--plan-cache" if args.plan_cache else "--no-plan-cache"]
         amortization.main(am_args + ["--out",
                                      "results/bench_amortization.json"])
 

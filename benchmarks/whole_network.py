@@ -1,13 +1,19 @@
 """Paper Table 1 + Fig 3: whole-network latency under the two benchmark
 configurations -- (a) our scheme on suitable layers + im2row elsewhere
 (algorithm="auto"), (b) im2row everywhere -- and the fast-layer runtime
-fraction, for the five paper networks at batch size 1."""
+fraction, for the five paper networks at batch size 1.
+
+Also reports the plan/execute split (the paper's section-4 deployment
+setting): one-time plan-build cost (all filter transforms + geometry) vs
+steady-state planned forward time, separately -- mirroring the paper's
+amortization analysis at whole-network scale."""
 
 from __future__ import annotations
 
 import argparse
 import functools
 import json
+import time
 
 import jax
 import jax.numpy as jnp
@@ -34,12 +40,25 @@ def bench_network(net: str, iters: int, warmup: int, res: int | None = None
         fn = jax.jit(functools.partial(cnn.cnn_forward, params, specs=specs,
                                        algorithm=algo))
         fwd[algo] = time_jitted(fn, x, warmup=warmup, iters=iters)
+
+    # plan/execute split: transforms + decisions once, then steady-state.
+    t0 = time.perf_counter()
+    plans = cnn.plan_cnn(params, specs, res=res, algorithm="auto")
+    jax.block_until_ready([p.u for p in plans.values()])
+    plan_build = time.perf_counter() - t0
+    fn_planned = jax.jit(functools.partial(
+        cnn.cnn_forward, params, specs=specs, plans=plans))
+    fwd["planned"] = time_jitted(fn_planned, x, warmup=warmup, iters=iters)
+
     return {"network": net, "res": res,
             "t_ours_s": fwd["auto"], "t_tuned_s": fwd["auto_tuned"],
             "t_im2row_s": fwd["im2col"],
+            "t_planned_s": fwd["planned"], "plan_build_s": plan_build,
             "speedup_pct": 100.0 * (1 - fwd["auto"] / fwd["im2col"]),
             "speedup_tuned_pct":
-                100.0 * (1 - fwd["auto_tuned"] / fwd["im2col"])}
+                100.0 * (1 - fwd["auto_tuned"] / fwd["im2col"]),
+            "speedup_planned_pct":
+                100.0 * (1 - fwd["planned"] / fwd["im2col"])}
 
 
 def main(argv=None):
@@ -55,13 +74,16 @@ def main(argv=None):
     rows = []
     print("== Table 1 reproduction: whole-network latency (batch 1) ==")
     print(f"{'Network':14s} {'im2row(ms)':>11s} {'ours(ms)':>10s} "
-          f"{'speedup':>8s} {'tuned(ms)':>10s} {'tuned-spd':>9s}")
+          f"{'speedup':>8s} {'tuned(ms)':>10s} {'tuned-spd':>9s} "
+          f"{'planned(ms)':>12s} {'build(ms)':>10s} {'plan-spd':>9s}")
     for net in args.networks:
         r = bench_network(net, args.iters, args.warmup, args.res)
         rows.append(r)
         print(f"{r['network']:14s} {r['t_im2row_s']*1e3:11.1f} "
               f"{r['t_ours_s']*1e3:10.1f} {r['speedup_pct']:7.1f}% "
-              f"{r['t_tuned_s']*1e3:10.1f} {r['speedup_tuned_pct']:8.1f}%",
+              f"{r['t_tuned_s']*1e3:10.1f} {r['speedup_tuned_pct']:8.1f}% "
+              f"{r['t_planned_s']*1e3:12.1f} {r['plan_build_s']*1e3:10.1f} "
+              f"{r['speedup_planned_pct']:8.1f}%",
               flush=True)
     if args.out:
         with open(args.out, "w") as f:

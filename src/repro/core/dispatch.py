@@ -1,20 +1,28 @@
-"""Per-layer convolution algorithm selection.
+"""Per-layer convolution algorithm selection -- thin wrappers over plans.
 
 The paper runs its region-wise multi-channel Winograd scheme on "suitable"
 layers (stride-1 NxN / 1xN / Nx1 with N in {3, 5, 7}) and the im2row baseline
 everywhere else; whole-network numbers mix the two. `conv2d` reproduces that
-dispatch, and is the single convolution entry point used by the model zoo.
+dispatch and stays the single convolution entry point for ad-hoc callers,
+but since the plan/execute split it is a compatibility wrapper: each call
+builds (or cache-hits) a ConvPlan via repro.core.plan and applies it.
+Callers that run the same layer many times should plan once at init /
+weight-load time and call `plan.apply(x)` directly -- that path performs no
+per-call filter transform or geometry derivation (models/cnn.py and
+models/audio.py do exactly this).
 
 `algorithm=`:
   * "auto"       -- the paper's policy (winograd where suitable, else im2col).
   * "auto_tuned" -- beyond-paper: the paper's section-4 amortization insight
-                    turned into a dispatch rule. The paper observes achieved
-                    speedup only approaches the theoretical bound once the
-                    GEMM phase amortizes the transform phase; on layers too
-                    small to amortize, the fast scheme *loses* to one big
-                    im2row GEMM. auto_tuned picks winograd only when the
-                    measured crossover predicts a win (EXPERIMENTS.md
-                    section Perf documents the calibration).
+                    as a *plan-time measured* policy. The paper observes
+                    achieved speedup only approaches the theoretical bound
+                    once the GEMM phase amortizes the transform phase; on
+                    layers too small to amortize, the fast scheme *loses* to
+                    one big im2row GEMM. auto_tuned times both schemes on
+                    the real layer shape at plan time and caches the winner
+                    process-wide; when measurement is impossible (planning
+                    inside a jit trace) it falls back to the static
+                    calibrated crossover (plan.winograd_amortizes).
   * "winograd"   -- force the fast scheme (raises if unsuitable).
   * "im2col"     -- force the baseline (for the paper's A/B benchmarks).
   * "pallas_*"   -- the hand-tiled TPU kernels (see repro.kernels.ops).
@@ -22,53 +30,19 @@ dispatch, and is the single convolution entry point used by the model zoo.
 
 from __future__ import annotations
 
-from typing import Literal
-
 import jax
-import jax.numpy as jnp
 
-from repro.core import im2col as _im2col
 from repro.core import winograd as _winograd
-from repro.core.transforms import DEFAULT_OUTPUT_TILE
+from repro.core.plan import (AMORTIZE_MIN_C_IN, AMORTIZE_MIN_OUT_PIXELS,
+                             WINOGRAD_FILTER_SIZES, Algorithm, plan_conv1d,
+                             plan_conv2d, winograd_amortizes,
+                             winograd_suitable)
 
-Algorithm = Literal["auto", "auto_tuned", "winograd", "im2col",
-                    "pallas_winograd", "pallas_im2col"]
-
-#: Filter sizes the paper's fast scheme covers (2D NxN and 1D 1xN / Nx1).
-WINOGRAD_FILTER_SIZES = frozenset({2, 3, 4, 5, 7})
-
-#: auto_tuned crossover: winograd wins on this backend when the per-point
-#: GEMMs are large enough to amortize the transform passes -- which needs
-#: BOTH enough regions (output pixels) and enough channel depth (the GEMM's
-#: contraction dim). Calibrated on the measured per-layer sweep
-#: (results/bench_per_layer.json; EXPERIMENTS.md section Perf): wins are
-#: {224^2 x 64: 2.05, 112^2 x 64..128: 1.6, 56^2 x 128..256: 1.2,
-#: 35^2 x 64..96: 1.15}; losses are every c_in < 64 layer (0.2-0.6x) and
-#: every sub-34^2 layer (0.3-0.6x).
-AMORTIZE_MIN_OUT_PIXELS = 1156            # 34 x 34
-AMORTIZE_MIN_C_IN = 64
-
-
-def winograd_suitable(kh: int, kw: int, stride) -> bool:
-    s = (stride, stride) if isinstance(stride, int) else tuple(stride)
-    if s != (1, 1):
-        return False
-    if kh == 1 and kw == 1:
-        return False                      # 1x1 is already a pure GEMM
-    for k in (kh, kw):
-        if k != 1 and k not in WINOGRAD_FILTER_SIZES:
-            return False
-    return True
-
-
-def winograd_amortizes(h: int, w: int, kh: int, kw: int, c_in: int,
-                       padding: str = "SAME") -> bool:
-    """The paper's section-4 amortization insight as a dispatch predicate:
-    is the layer big enough that the GEMM phase amortizes the transforms?"""
-    out_h = h if padding == "SAME" else h - kh + 1
-    out_w = w if padding == "SAME" else w - kw + 1
-    return (out_h * out_w >= AMORTIZE_MIN_OUT_PIXELS
-            and c_in >= AMORTIZE_MIN_C_IN)
+__all__ = [
+    "Algorithm", "conv1d", "conv2d", "winograd_amortizes",
+    "winograd_suitable", "WINOGRAD_FILTER_SIZES", "AMORTIZE_MIN_OUT_PIXELS",
+    "AMORTIZE_MIN_C_IN",
+]
 
 
 def conv2d(
@@ -81,33 +55,16 @@ def conv2d(
     output_tile: int | None = None,
     precision=None,
 ) -> jax.Array:
-    """Unified convolution entry point (NHWC x HWIO -> NHWC)."""
-    kh, kw, _, _ = w.shape
-    suitable = winograd_suitable(kh, kw, stride)
-    if algorithm == "auto":
-        algorithm = "winograd" if suitable else "im2col"
-    elif algorithm == "auto_tuned":
-        algorithm = "winograd" if (
-            suitable and winograd_amortizes(x.shape[1], x.shape[2], kh, kw,
-                                            x.shape[3], padding)) else "im2col"
-    if algorithm in ("winograd", "pallas_winograd") and not suitable:
-        raise ValueError(
-            f"winograd requested for unsuitable layer k=({kh},{kw}) stride={stride}")
+    """Unified convolution entry point (NHWC x HWIO -> NHWC).
 
-    if algorithm == "winograd":
-        mt = output_tile or DEFAULT_OUTPUT_TILE.get(max(kh, kw), 2)
-        return _winograd.winograd_conv2d(
-            x, w, output_tile=mt, padding=padding, precision=precision)
-    if algorithm == "im2col":
-        return _im2col.im2col_conv2d(
-            x, w, stride=stride, padding=padding, precision=precision)
-    if algorithm in ("pallas_winograd", "pallas_im2col"):
-        from repro.kernels import ops  # local import: kernels are optional
-        if algorithm == "pallas_winograd":
-            mt = output_tile or DEFAULT_OUTPUT_TILE.get(max(kh, kw), 2)
-            return ops.winograd_conv2d(x, w, output_tile=mt, padding=padding)
-        return ops.im2col_conv2d(x, w, stride=stride, padding=padding)
-    raise ValueError(f"unknown algorithm {algorithm!r}")
+    Compatibility wrapper: plans (cached by shape) then executes. The filter
+    transform still happens on every call here -- hold a ConvPlan instead
+    (repro.core.plan.plan_conv2d) to pre-transform weights once.
+    """
+    plan = plan_conv2d(x.shape, w, stride=stride, padding=padding,
+                       algorithm=algorithm, output_tile=output_tile,
+                       precision=precision)
+    return plan.apply(x)
 
 
 def conv1d(
@@ -124,35 +81,9 @@ def conv1d(
     Stride > 1 is handled by polyphase decomposition into stride-1 Cook-Toom
     convolutions (sub-filter w[p::s] over sub-sequence x[p::s]) when the
     sub-filters stay suitable; otherwise falls back to im2col. This covers the
-    Whisper conv stem (k=3, strides 1 and 2).
+    Whisper conv stem (k=3, strides 1 and 2). Compatibility wrapper over
+    repro.core.plan.plan_conv1d.
     """
-    k, c, m = w.shape
-    if stride == 1:
-        x4 = x[:, :, None, :]                       # (B, L, 1, C)
-        w4 = w[:, None, :, :]                       # (k, 1, C, M)
-        y = conv2d(x4, w4, stride=1, padding=padding,
-                   algorithm=algorithm, output_tile=output_tile)
-        return y[:, :, 0, :]
-
-    if algorithm in ("winograd", "auto") and k > stride:
-        # polyphase: y[i] = sum_p (w[p::s] (*) x[p::s])[i]
-        b, length, _ = x.shape
-        if padding == "SAME":
-            out = -(-length // stride)
-            total = max((out - 1) * stride + k - length, 0)
-            x = jnp.pad(x, ((0, 0), (total // 2, total - total // 2), (0, 0)))
-        else:
-            out = (length - k) // stride + 1
-        acc = None
-        for p in range(stride):
-            sub_w = w[p::stride]                    # (ceil((k-p)/s), C, M)
-            sub_x = x[:, p::stride]
-            y = conv1d(sub_x, sub_w, stride=1, padding="VALID",
-                       algorithm="auto", output_tile=output_tile)[:, :out]
-            acc = y if acc is None else acc + y
-        return acc
-
-    x4 = x[:, :, None, :]
-    w4 = w[:, None, :, :]
-    y = _im2col.im2col_conv2d(x4, w4, stride=(stride, 1), padding=padding)
-    return y[:, :, 0, :]
+    plan = plan_conv1d(x.shape, w, stride=stride, padding=padding,
+                       algorithm=algorithm, output_tile=output_tile)
+    return plan.apply(x)

@@ -9,7 +9,7 @@ counterpart is kernels/im2col_gemm.py.
 
 from __future__ import annotations
 
-from typing import Literal, Sequence
+from typing import Literal, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -24,17 +24,37 @@ def _same_pads(size: int, k: int, stride: int) -> tuple[int, int]:
     return total // 2, total - total // 2
 
 
+class Im2RowGeometry(NamedTuple):
+    """Static padding/output geometry of one im2row lowering -- derived once
+    at plan time (core/plan.py) so the hot path skips the derivation."""
+
+    ph: tuple[int, int]
+    pw: tuple[int, int]
+    oh: int
+    ow: int
+
+
+def im2row_geometry(h: int, w: int, kh: int, kw: int,
+                    stride: tuple[int, int], padding: Padding) -> Im2RowGeometry:
+    sh, sw = stride
+    ph = _same_pads(h, kh, sh) if padding == "SAME" else (0, 0)
+    pw = _same_pads(w, kw, sw) if padding == "SAME" else (0, 0)
+    hp, wp = h + ph[0] + ph[1], w + pw[0] + pw[1]
+    return Im2RowGeometry(ph, pw, (hp - kh) // sh + 1, (wp - kw) // sw + 1)
+
+
 def im2row(x: jax.Array, kh: int, kw: int, stride: tuple[int, int],
-           padding: Padding) -> tuple[jax.Array, tuple[int, int]]:
+           padding: Padding, geometry: Im2RowGeometry | None = None
+           ) -> tuple[jax.Array, tuple[int, int]]:
     """(N, H, W, C) -> ((N * OH * OW, kh * kw * C), (OH, OW))."""
     n, h, w, c = x.shape
     sh, sw = stride
-    if padding == "SAME":
-        ph, pw = _same_pads(h, kh, sh), _same_pads(w, kw, sw)
+    if geometry is None:
+        geometry = im2row_geometry(h, w, kh, kw, stride, padding)
+    ph, pw, oh, ow = geometry
+    if any(ph) or any(pw):
         x = jnp.pad(x, ((0, 0), ph, pw, (0, 0)))
         h, w = x.shape[1], x.shape[2]
-    oh = (h - kh) // sh + 1
-    ow = (w - kw) // sw + 1
     # static gather of patch rows; under jit this lowers to slices/concats.
     rows = []
     for di in range(kh):
@@ -53,6 +73,7 @@ def im2col_conv2d(
     *,
     stride: int | tuple[int, int] = 1,
     padding: Padding = "SAME",
+    geometry: Im2RowGeometry | None = None,
     precision=None,
     preferred_element_type=jnp.float32,
 ) -> jax.Array:
@@ -65,7 +86,7 @@ def im2col_conv2d(
     n = x.shape[0]
     kh, kw, c, m = w.shape
     stride = (stride, stride) if isinstance(stride, int) else stride
-    a, (oh, ow) = im2row(x, kh, kw, stride, padding)
+    a, (oh, ow) = im2row(x, kh, kw, stride, padding, geometry)
     b = w.reshape(kh * kw * c, m)
     y = jnp.matmul(a, b, precision=precision,
                    preferred_element_type=preferred_element_type)

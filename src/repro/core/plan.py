@@ -1,0 +1,526 @@
+"""Plan/execute split for convolution: decide once, run many.
+
+The paper's deployment insight (section 4) is that the fast Winograd /
+Cook-Toom scheme only pays off once the GEMM phase amortizes the transform
+phases -- and that the *filter* transform should never be on the inference
+path at all: weights are transformed once, offline, and reused every step.
+
+This module is that insight as an architecture:
+
+  * `plan_conv2d(x_shape, w, ...)` makes every per-layer decision exactly
+    once -- algorithm choice, CookToom pair, output tile, padding amounts,
+    tile counts, Pallas block sizes -- and pre-transforms the filter into the
+    execution domain (Winograd domain for the fast scheme, the flattened
+    GEMM matrix for im2row).
+  * `ConvPlan.apply(x)` executes with zero per-call filter or geometry work.
+  * A process-level spec cache keyed on (shapes, dtype, stride, padding,
+    algorithm, output tile) means repeated planning of the same layer shape
+    is a dict hit; the cached spec carries the algorithm decision, so a
+    measured `auto_tuned` choice is made once per shape per process.
+  * `algorithm="auto_tuned"` is *plan-time measured autotuning*: both
+    schemes are timed on the real layer shape and the winner is cached.
+    The static amortization constants remain only as the fallback policy
+    when measurement is impossible (planning inside a jit trace).
+
+`core.dispatch.conv2d` / `conv1d` stay as thin per-call wrappers over this
+module for backward compatibility; model code (models/cnn.py, models/audio.py)
+builds plans at init/weight-load time and executes them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Any, Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import im2col as _im2col
+from repro.core import winograd as _wg
+from repro.core.transforms import DEFAULT_OUTPUT_TILE, CookToom, cook_toom
+
+Algorithm = Literal["auto", "auto_tuned", "winograd", "im2col",
+                    "pallas_winograd", "pallas_im2col"]
+Padding = _wg.Padding
+
+#: Filter sizes the paper's fast scheme covers (2D NxN and 1D 1xN / Nx1).
+WINOGRAD_FILTER_SIZES = frozenset({2, 3, 4, 5, 7})
+
+#: auto_tuned *fallback* crossover, used only when plan-time measurement is
+#: impossible (planning under an active jit trace, or REPRO_PLAN_NO_MEASURE
+#: set): winograd wins when the per-point GEMMs are large enough to amortize
+#: the transform passes -- which needs BOTH enough regions (output pixels)
+#: and enough channel depth (the GEMM's contraction dim). Calibrated on the
+#: measured per-layer sweep (results/bench_per_layer.json; EXPERIMENTS.md
+#: section Perf). The primary auto_tuned policy is the measured one below
+#: (_measure_autotune): time both schemes on the real shape, cache the winner.
+AMORTIZE_MIN_OUT_PIXELS = 1156            # 34 x 34
+AMORTIZE_MIN_C_IN = 64
+
+
+def winograd_suitable(kh: int, kw: int, stride) -> bool:
+    s = (stride, stride) if isinstance(stride, int) else tuple(stride)
+    if s != (1, 1):
+        return False
+    if kh == 1 and kw == 1:
+        return False                      # 1x1 is already a pure GEMM
+    for k in (kh, kw):
+        if k != 1 and k not in WINOGRAD_FILTER_SIZES:
+            return False
+    return True
+
+
+def winograd_amortizes(h: int, w: int, kh: int, kw: int, c_in: int,
+                       padding: str = "SAME") -> bool:
+    """The paper's section-4 amortization insight as a static predicate --
+    the auto_tuned fallback when plan-time measurement is unavailable."""
+    out_h = h if padding == "SAME" else h - kh + 1
+    out_w = w if padding == "SAME" else w - kw + 1
+    return (out_h * out_w >= AMORTIZE_MIN_OUT_PIXELS
+            and c_in >= AMORTIZE_MIN_C_IN)
+
+
+# ---------------------------------------------------------------------------
+# Specs: the cacheable, weight-free part of a plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    """Everything about a planned conv layer except the weights: the resolved
+    algorithm, transform variant, geometry, and kernel blocking. Hashable and
+    shape-keyed, so it lives in the process-level plan cache."""
+
+    x_shape: tuple[int, ...]          # (N, H, W, C) the plan was built for
+    w_shape: tuple[int, ...]          # (kh, kw, C, M)
+    dtype: str
+    stride: tuple[int, int]
+    padding: str
+    requested: str                    # the algorithm= the caller asked for
+    algorithm: str                    # resolved executor: winograd |
+                                      # winograd_1d | im2col |
+                                      # pallas_winograd | pallas_im2col
+    output_tile: tuple[int, int] | None = None
+    ct_h: CookToom | None = None
+    ct_w: CookToom | None = None      # also the single CT of the 1D variant
+    geometry: Any = None              # Conv2DGeometry | Axis1DGeometry |
+                                      # Im2RowGeometry
+    axis: int | None = None           # 1xN / Nx1: the non-unit spatial axis
+    blocks: tuple[int, int, int] | None = None   # Pallas block sizes
+    autotune: tuple | None = None     # (("t_winograd_s", ...), ...) measured
+                                      # evidence behind an auto_tuned choice
+
+    @property
+    def autotune_report(self) -> dict | None:
+        return dict(self.autotune) if self.autotune is not None else None
+
+
+# ---------------------------------------------------------------------------
+# Process-level spec cache
+# ---------------------------------------------------------------------------
+
+_SPEC_CACHE: dict[tuple, ConvSpec] = {}
+_CACHE_HITS = 0
+_CACHE_MISSES = 0
+
+
+def plan_cache_info() -> dict:
+    """{'hits', 'misses', 'size'} of the process-level spec cache."""
+    return {"hits": _CACHE_HITS, "misses": _CACHE_MISSES,
+            "size": len(_SPEC_CACHE)}
+
+
+def clear_plan_cache() -> None:
+    global _CACHE_HITS, _CACHE_MISSES
+    _SPEC_CACHE.clear()
+    _CACHE_HITS = 0
+    _CACHE_MISSES = 0
+
+
+def _cache_enabled() -> bool:
+    return not os.environ.get("REPRO_PLAN_NO_CACHE")
+
+
+def _measure_allowed() -> bool:
+    """Measured autotuning needs concrete execution: it is disabled inside an
+    active jit trace and via REPRO_PLAN_NO_MEASURE."""
+    if os.environ.get("REPRO_PLAN_NO_MEASURE"):
+        return False
+    return jax.core.trace_state_clean()
+
+
+# ---------------------------------------------------------------------------
+# Spec construction (all per-layer decisions happen here, once)
+# ---------------------------------------------------------------------------
+
+def _resolve_output_tile(kh: int, kw: int, output_tile) -> tuple[int, int]:
+    if output_tile is None:
+        mt = DEFAULT_OUTPUT_TILE.get(max(kh, kw), 2)
+        return (mt, mt)
+    if isinstance(output_tile, int):
+        return (output_tile, output_tile)
+    return tuple(output_tile)
+
+
+def _build_spec(x_shape, w_shape, dtype, stride, padding, requested,
+                resolved, output_tile) -> ConvSpec:
+    """Materialize geometry/transform/blocking decisions for one resolved
+    algorithm."""
+    n, h, w, c = x_shape
+    kh, kw, _, mout = w_shape
+    base = dict(x_shape=tuple(x_shape), w_shape=tuple(w_shape), dtype=dtype,
+                stride=stride, padding=padding, requested=requested)
+
+    if resolved in ("winograd", "pallas_winograd") and (kh == 1 or kw == 1):
+        # 1xN / Nx1: single-axis Cook-Toom (the Pallas backend also routes
+        # here -- its GEMM is one matmul XLA already maps to the MXU).
+        axis = 1 if kh > 1 else 2
+        k = max(kh, kw)
+        mh, mw = _resolve_output_tile(kh, kw, output_tile)
+        m = (mh, mw)[axis - 1]
+        ct = cook_toom(m, k)
+        geom = _wg.conv1d_axis_geometry(x_shape[axis], axis, k, m, padding)
+        return ConvSpec(algorithm="winograd_1d", output_tile=(m, m),
+                        ct_w=ct, geometry=geom, axis=axis, **base)
+
+    if resolved == "winograd":
+        mh, mw = _resolve_output_tile(kh, kw, output_tile)
+        ct_h, ct_w = cook_toom(mh, kh), cook_toom(mw, kw)
+        geom = _wg.conv2d_geometry(h, w, kh, kw, mh, mw, padding)
+        return ConvSpec(algorithm="winograd", output_tile=(mh, mw),
+                        ct_h=ct_h, ct_w=ct_w, geometry=geom, **base)
+
+    if resolved == "pallas_winograd":
+        from repro.kernels import ops  # local import: kernels are optional
+        mh, mw = _resolve_output_tile(kh, kw, output_tile)
+        ct_h, ct_w = cook_toom(mh, kh), cook_toom(mw, kw)
+        geom = _wg.conv2d_geometry(h, w, kh, kw, mh, mw, padding)
+        blocks = ops.winograd_blocks(n * geom.n_h * geom.n_w, c, mout)
+        return ConvSpec(algorithm="pallas_winograd", output_tile=(mh, mw),
+                        ct_h=ct_h, ct_w=ct_w, geometry=geom, blocks=blocks,
+                        **base)
+
+    if resolved == "im2col":
+        geom = _im2col.im2row_geometry(h, w, kh, kw, stride, padding)
+        return ConvSpec(algorithm="im2col", geometry=geom, **base)
+
+    if resolved == "pallas_im2col":
+        from repro.kernels import ops
+        geom = _im2col.im2row_geometry(h, w, kh, kw, stride, padding)
+        blocks = ops.im2col_blocks(n * geom.oh * geom.ow, kh * kw * c, mout)
+        return ConvSpec(algorithm="pallas_im2col", geometry=geom,
+                        blocks=blocks, **base)
+
+    raise ValueError(f"unknown algorithm {resolved!r}")
+
+
+def _bind_weights(spec: ConvSpec, w: jax.Array) -> jax.Array:
+    """Transform the filter into the spec's execution domain. This is the
+    once-per-plan weight work; ConvPlan.apply never touches it again."""
+    kh, kw, c, mout = spec.w_shape
+    if spec.algorithm == "winograd":
+        return _wg.transform_filter_2d(w, spec.ct_h, spec.ct_w)
+    if spec.algorithm == "winograd_1d":
+        return _wg.transform_filter_1d(w.reshape(max(kh, kw), c, mout),
+                                       spec.ct_w)
+    if spec.algorithm == "pallas_winograd":
+        from repro.kernels import ops
+        u = _wg.transform_filter_2d(w, spec.ct_h, spec.ct_w)
+        u = u.reshape(spec.ct_h.t * spec.ct_w.t, c, mout)
+        return ops.pad_winograd_filter(u, spec.blocks[1], spec.blocks[2])
+    if spec.algorithm == "im2col":
+        return w.reshape(kh * kw * c, mout)
+    if spec.algorithm == "pallas_im2col":
+        from repro.kernels import ops
+        return ops.pad_im2col_filter(w.reshape(kh * kw * c, mout),
+                                     spec.blocks[1], spec.blocks[2])
+    raise ValueError(spec.algorithm)
+
+
+# ---------------------------------------------------------------------------
+# ConvPlan: spec + weights in the execution domain
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ConvPlan:
+    """A fully-decided, weight-bound convolution. apply(x) does only input
+    work: pad, tile, transform the input, GEMM against the cached filter,
+    inverse-transform. No filter transform, no geometry derivation."""
+
+    spec: ConvSpec
+    u: jax.Array                       # filter in the execution domain
+    build_time_s: float = 0.0
+    precision: Any = None
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        return self.apply(x)
+
+    def apply(self, x: jax.Array) -> jax.Array:
+        spec = self.spec
+        if x.shape[1:] != spec.x_shape[1:]:
+            raise ValueError(
+                f"plan built for input {spec.x_shape} got {x.shape} "
+                f"(batch may differ; H/W/C must match)")
+        alg = spec.algorithm
+        if alg == "winograd":
+            return _wg.winograd_conv2d_pretransformed(
+                x, self.u, spec.ct_h, spec.ct_w, padding=spec.padding,
+                geometry=spec.geometry, precision=self.precision)
+        if alg == "winograd_1d":
+            return _wg.winograd_conv1d_axis_pretransformed(
+                x, self.u, spec.ct_w, spec.geometry, precision=self.precision)
+        if alg == "im2col":
+            geom = spec.geometry
+            kh, kw, _, mout = spec.w_shape
+            a, _ = _im2col.im2row(x, kh, kw, spec.stride, spec.padding, geom)
+            y = jnp.matmul(a, self.u, precision=self.precision,
+                           preferred_element_type=jnp.float32)
+            return y.reshape(x.shape[0], geom.oh, geom.ow,
+                             mout).astype(x.dtype)
+        if alg == "pallas_winograd":
+            from repro.kernels import ops
+            _, _, c, mout = spec.w_shape
+            return ops.winograd_conv2d_planned(
+                x, self.u, ct_h=spec.ct_h, ct_w=spec.ct_w,
+                geometry=spec.geometry, blocks=spec.blocks, c_in=c,
+                c_out=mout)
+        if alg == "pallas_im2col":
+            from repro.kernels import ops
+            kh, kw, _, mout = spec.w_shape
+            return ops.im2col_conv2d_planned(
+                x, self.u, kh=kh, kw=kw, stride=spec.stride,
+                padding=spec.padding, geometry=spec.geometry,
+                blocks=spec.blocks, c_out=mout)
+        raise ValueError(alg)
+
+    @property
+    def algorithm(self) -> str:
+        return self.spec.algorithm
+
+    @property
+    def out_shape(self) -> tuple[int, ...]:
+        spec, g = self.spec, self.spec.geometry
+        mout = spec.w_shape[-1]
+        n = spec.x_shape[0]
+        if spec.algorithm in ("winograd", "pallas_winograd"):
+            return (n, g.out_h, g.out_w, mout)
+        if spec.algorithm == "winograd_1d":
+            h, w = spec.x_shape[1:3]
+            return ((n, g.out_size, w, mout) if g.axis == 1
+                    else (n, h, g.out_size, mout))
+        return (n, g.oh, g.ow, mout)
+
+
+# ---------------------------------------------------------------------------
+# Plan-time measured autotuning (algorithm="auto_tuned")
+# ---------------------------------------------------------------------------
+
+def _time_apply(plan: ConvPlan, x, warmup: int = 1, iters: int = 3) -> float:
+    fn = jax.jit(plan.apply)
+    for _ in range(warmup):
+        jax.block_until_ready(fn(x))
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(x))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _measure_autotune(x_shape, w_shape, dtype, stride, padding,
+                      output_tile) -> tuple[str, tuple]:
+    """Time winograd vs im2col on the real shape; return (winner, evidence).
+    Runs once per shape per process (the spec cache holds the result)."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(x_shape), dtype)
+    w = jnp.asarray(rng.standard_normal(w_shape)
+                    / (w_shape[0] * w_shape[1]), dtype)
+    times = {}
+    for alg in ("winograd", "im2col"):
+        spec = _build_spec(x_shape, w_shape, str(jnp.dtype(dtype)), stride,
+                           padding, alg, alg, output_tile)
+        times[alg] = _time_apply(ConvPlan(spec=spec, u=_bind_weights(spec, w)),
+                                 x)
+    winner = min(times, key=times.get)
+    evidence = (("t_winograd_s", times["winograd"]),
+                ("t_im2col_s", times["im2col"]), ("winner", winner))
+    return winner, evidence
+
+
+# ---------------------------------------------------------------------------
+# plan_conv2d: the public entry point
+# ---------------------------------------------------------------------------
+
+def plan_conv2d(
+    x_shape: tuple[int, ...],
+    w: jax.Array,
+    *,
+    stride: int | tuple[int, int] = 1,
+    padding: Padding = "SAME",
+    algorithm: Algorithm = "auto",
+    output_tile: int | tuple[int, int] | None = None,
+    precision=None,
+    dtype=None,
+) -> ConvPlan:
+    """Build a ConvPlan for a (N, H, W, C) x (kh, kw, C, M) convolution.
+
+    All per-layer decisions (algorithm, transform variant, padding/tiling
+    geometry, Pallas blocking) are made here, once; the filter is transformed
+    into the execution domain, once. Decisions are cached process-wide keyed
+    on (shapes, dtype, stride, padding, algorithm, output_tile), so repeated
+    planning of the same layer shape -- including a measured auto_tuned
+    choice -- is a dict lookup plus one filter transform.
+    """
+    global _CACHE_HITS, _CACHE_MISSES
+    t0 = time.perf_counter()
+    x_shape = tuple(x_shape)
+    w_shape = tuple(w.shape)
+    if len(x_shape) != 4 or len(w_shape) != 4:
+        raise ValueError(f"expected NHWC x HWIO, got {x_shape} x {w_shape}")
+    if x_shape[3] != w_shape[2]:
+        raise ValueError(f"channel mismatch: input {x_shape} filter {w_shape}")
+    stride = (stride, stride) if isinstance(stride, int) else tuple(stride)
+    dtype = dtype or w.dtype
+    dtype_str = str(jnp.dtype(dtype))
+    kh, kw = w_shape[:2]
+    n, h, wdt, c = x_shape
+
+    key = (x_shape, w_shape, dtype_str, stride, padding, algorithm,
+           output_tile if not isinstance(output_tile, list) else
+           tuple(output_tile), precision)
+    spec = _SPEC_CACHE.get(key) if _cache_enabled() else None
+    if spec is not None:
+        _CACHE_HITS += 1
+    else:
+        _CACHE_MISSES += 1
+        suitable = winograd_suitable(kh, kw, stride)
+        autotune = None
+        if algorithm == "auto":
+            resolved = "winograd" if suitable else "im2col"
+        elif algorithm == "auto_tuned":
+            if not suitable:
+                resolved = "im2col"
+            elif _measure_allowed():
+                resolved, autotune = _measure_autotune(
+                    x_shape, w_shape, dtype_str, stride, padding, output_tile)
+            else:
+                resolved = "winograd" if winograd_amortizes(
+                    h, wdt, kh, kw, c, padding) else "im2col"
+        else:
+            resolved = algorithm
+            if resolved in ("winograd", "pallas_winograd") and not suitable:
+                raise ValueError(
+                    f"winograd requested for unsuitable layer "
+                    f"k=({kh},{kw}) stride={stride}")
+        spec = _build_spec(x_shape, w_shape, dtype_str, stride, padding,
+                           algorithm, resolved, output_tile)
+        if autotune is not None:
+            spec = dataclasses.replace(spec, autotune=autotune)
+        # An auto_tuned decision made via the heuristic fallback (planning
+        # under a jit trace) must not be cached: a later eager plan of the
+        # same shape should still get to measure. Only measured decisions
+        # (and the deterministic unsuitable->im2col case) are durable.
+        durable = (algorithm != "auto_tuned" or autotune is not None
+                   or not suitable)
+        if _cache_enabled() and durable:
+            _SPEC_CACHE[key] = spec
+
+    u = _bind_weights(spec, w)
+    return ConvPlan(spec=spec, u=u, precision=precision,
+                    build_time_s=time.perf_counter() - t0)
+
+
+# ---------------------------------------------------------------------------
+# conv1d plans (sequence convolutions, incl. polyphase stride > 1)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Conv1DPlan:
+    """Planned (B, L, C) x (k, C, M) -> (B, L', M) sequence convolution.
+
+    mode "as2d": stride-1, executed through a 2D plan on (B, L, 1, C).
+    mode "polyphase": stride > 1 decomposed into stride-1 Cook-Toom
+      sub-convolutions (sub-filter w[p::s] over sub-sequence x[p::s]), each
+      planned independently; geometry (padding, output length) precomputed.
+    mode "im2col": strided baseline through a 2D im2col plan.
+    """
+
+    x_shape: tuple[int, ...]
+    w_shape: tuple[int, ...]
+    stride: int
+    padding: str
+    requested: str
+    mode: str
+    inner: ConvPlan | None = None
+    subplans: tuple[ConvPlan, ...] = ()
+    pad: tuple[int, int] = (0, 0)
+    out_len: int = 0
+    build_time_s: float = 0.0
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        return self.apply(x)
+
+    def apply(self, x: jax.Array) -> jax.Array:
+        if self.mode in ("as2d", "im2col"):
+            return self.inner.apply(x[:, :, None, :])[:, :, 0, :]
+        # polyphase: y[i] = sum_p (w[p::s] (*) x[p::s])[i]
+        s = self.stride
+        x = jnp.pad(x, ((0, 0), self.pad, (0, 0)))
+        acc = None
+        for p, sub in enumerate(self.subplans):
+            sub_x = x[:, p::s, None, :]
+            y = sub.apply(sub_x)[:, :self.out_len, 0, :]
+            acc = y if acc is None else acc + y
+        return acc
+
+
+def plan_conv1d(
+    x_shape: tuple[int, ...],
+    w: jax.Array,
+    *,
+    stride: int = 1,
+    padding: Padding = "SAME",
+    algorithm: Algorithm = "auto",
+    output_tile: int | None = None,
+) -> Conv1DPlan:
+    """Plan a (B, L, C) x (k, C, M) sequence convolution (see Conv1DPlan)."""
+    t0 = time.perf_counter()
+    x_shape = tuple(x_shape)
+    b, length, c = x_shape
+    k, _, m = w.shape
+    base = dict(x_shape=x_shape, w_shape=tuple(w.shape), stride=stride,
+                padding=padding, requested=algorithm)
+    if stride == 1:
+        inner = plan_conv2d((b, length, 1, c), w[:, None, :, :], stride=1,
+                            padding=padding, algorithm=algorithm,
+                            output_tile=output_tile)
+        return Conv1DPlan(mode="as2d", inner=inner,
+                          build_time_s=time.perf_counter() - t0, **base)
+
+    if algorithm in ("winograd", "auto") and k > stride:
+        if padding == "SAME":
+            out = -(-length // stride)
+            total = max((out - 1) * stride + k - length, 0)
+            pad = (total // 2, total - total // 2)
+        else:
+            out = (length - k) // stride + 1
+            pad = (0, 0)
+        padded = length + pad[0] + pad[1]
+        subplans = []
+        for p in range(stride):
+            sub_w = w[p::stride]                    # (ceil((k-p)/s), C, M)
+            sub_len = -(-(padded - p) // stride)
+            subplans.append(plan_conv2d(
+                (b, sub_len, 1, c), sub_w[:, None, :, :], stride=1,
+                padding="VALID", algorithm="auto", output_tile=output_tile))
+        return Conv1DPlan(mode="polyphase", subplans=tuple(subplans),
+                          pad=pad, out_len=out,
+                          build_time_s=time.perf_counter() - t0, **base)
+
+    inner = plan_conv2d((b, length, 1, c), w[:, None, :, :],
+                        stride=(stride, 1), padding=padding,
+                        algorithm="im2col")
+    return Conv1DPlan(mode="im2col", inner=inner,
+                      build_time_s=time.perf_counter() - t0, **base)

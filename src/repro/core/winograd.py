@@ -27,7 +27,7 @@ as the paper restricts the fast scheme to "suitable" layers.
 from __future__ import annotations
 
 import functools
-from typing import Literal, Sequence
+from typing import Literal, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -77,6 +77,50 @@ def _pad_amounts(size: int, k: int, m: int, padding: Padding) -> tuple[int, int,
     padded = n_tiles * m + k - 1
     hi = padded - size - lo
     return lo, hi, n_tiles
+
+
+class Conv2DGeometry(NamedTuple):
+    """Static tiling geometry of one (H, W) conv shape.
+
+    Derived once at plan time (core/plan.py) and threaded through every
+    execution so the hot path never re-derives padding or tile counts.
+    """
+
+    lo_h: int
+    hi_h: int
+    n_h: int          # tile count along H
+    lo_w: int
+    hi_w: int
+    n_w: int          # tile count along W
+    out_h: int
+    out_w: int
+
+
+def conv2d_geometry(h: int, w: int, kh: int, kw: int, mh: int, mw: int,
+                    padding: Padding) -> Conv2DGeometry:
+    """All padding/tiling decisions for an (H, W) layer, computed once."""
+    lo_h, hi_h, nh = _pad_amounts(h, kh, mh, padding)
+    lo_w, hi_w, nw = _pad_amounts(w, kw, mw, padding)
+    out_h = h if padding == "SAME" else h - kh + 1
+    out_w = w if padding == "SAME" else w - kw + 1
+    return Conv2DGeometry(lo_h, hi_h, nh, lo_w, hi_w, nw, out_h, out_w)
+
+
+class Axis1DGeometry(NamedTuple):
+    """Static tiling geometry for the 1xN / Nx1 (single-axis) algorithm."""
+
+    axis: int         # spatial axis the filter runs along (1 = H, 2 = W)
+    lo: int
+    hi: int
+    n_t: int          # tile count along the axis
+    out_size: int
+
+
+def conv1d_axis_geometry(size: int, axis: int, k: int, m: int,
+                         padding: Padding) -> Axis1DGeometry:
+    lo, hi, nt = _pad_amounts(size, k, m, padding)
+    out = size if padding == "SAME" else size - k + 1
+    return Axis1DGeometry(axis, lo, hi, nt, out)
 
 
 def _extract_tiles_1d(x: jax.Array, axis: int, t: int, m: int, n: int) -> jax.Array:
@@ -141,18 +185,23 @@ def winograd_conv2d_pretransformed(
     ct_w: CookToom,
     *,
     padding: Padding = "SAME",
+    geometry: Conv2DGeometry | None = None,
     precision=None,
     preferred_element_type=jnp.float32,
 ) -> jax.Array:
     """Same as winograd_conv2d but with the filter already in the Winograd
     domain -- the deployment path (weights transformed once, reused per step).
+    Pass `geometry` (built once by conv2d_geometry / core.plan) to skip the
+    per-call padding/tiling derivation entirely.
     """
     n, h, wdt, c = x.shape
     th, tw, _, mout = u.shape
     mh, mw, kh, kw = ct_h.m, ct_w.m, ct_h.r, ct_w.r
 
-    lo_h, hi_h, nh = _pad_amounts(h, kh, mh, padding)
-    lo_w, hi_w, nw = _pad_amounts(wdt, kw, mw, padding)
+    if geometry is None:
+        geometry = conv2d_geometry(h, wdt, kh, kw, mh, mw, padding)
+    lo_h, hi_h, nh = geometry.lo_h, geometry.hi_h, geometry.n_h
+    lo_w, hi_w, nw = geometry.lo_w, geometry.hi_w, geometry.n_w
     xp = jnp.pad(x, ((0, 0), (lo_h, hi_h), (lo_w, hi_w), (0, 0)))
 
     # --- phase 1: tile + input transform + scatter -------------------------
@@ -176,33 +225,32 @@ def winograd_conv2d_pretransformed(
     at_w = jnp.asarray(ct_w.AT, y.dtype)
     out = jnp.einsum("it,nhwtum,ju->nhiwjm", at_h, y, at_w)
     out = out.reshape(n, nh * mh, nw * mw, mout)
-
-    out_h = h if padding == "SAME" else h - kh + 1
-    out_w = wdt if padding == "SAME" else wdt - kw + 1
-    return out[:, :out_h, :out_w, :].astype(x.dtype)
+    return out[:, :geometry.out_h, :geometry.out_w, :].astype(x.dtype)
 
 
-def _winograd_conv2d_1d_kernel(
-    x: jax.Array, w: jax.Array, *, output_tile, padding: Padding,
-    precision, preferred_element_type,
+def pointwise_conv2d(x: jax.Array, u: jax.Array, *, precision=None,
+                     preferred_element_type=jnp.float32) -> jax.Array:
+    """1x1 convolution: a pure channel GEMM.  u: (C, M)."""
+    return jnp.einsum("nhwc,cm->nhwm", x, u, precision=precision,
+                      preferred_element_type=preferred_element_type
+                      ).astype(x.dtype)
+
+
+def winograd_conv1d_axis_pretransformed(
+    x: jax.Array,
+    u: jax.Array,
+    ct: CookToom,
+    geometry: Axis1DGeometry,
+    *,
+    precision=None,
+    preferred_element_type=jnp.float32,
 ) -> jax.Array:
-    """1xN / Nx1 layers (paper's Inception-v3 case): 1D Cook-Toom along the
-    non-unit axis, plain channel GEMM along the unit axis."""
-    kh, kw, c, mout = w.shape
-    axis = 1 if kh > 1 else 2          # spatial axis the filter runs along
-    k = max(kh, kw)
-    if k == 1:                          # 1x1: pure channel GEMM (pointwise)
-        return jnp.einsum("nhwc,cm->nhwm", x, w[0, 0],
-                          precision=precision,
-                          preferred_element_type=preferred_element_type
-                          ).astype(x.dtype)
-    m = output_tile if isinstance(output_tile, int) else output_tile[axis - 1]
-    ct = cook_toom(m, k)
-    u = transform_filter_1d(w.reshape(k, c, mout), ct)   # (t, C, M)
-
+    """1xN / Nx1 executor over a pre-transformed (t, C, M) filter and a
+    precomputed axis geometry: 1D Cook-Toom along geometry.axis, plain
+    channel GEMM along the unit axis."""
     n, h, wdt, _ = x.shape
-    size = x.shape[axis]
-    lo, hi, nt = _pad_amounts(size, k, m, padding)
+    axis, lo, hi, nt = geometry.axis, geometry.lo, geometry.hi, geometry.n_t
+    m, mout = ct.m, u.shape[-1]
     pad = [(0, 0)] * 4
     pad[axis] = (lo, hi)
     xp = jnp.pad(x, pad)
@@ -215,16 +263,35 @@ def _winograd_conv2d_1d_kernel(
                        preferred_element_type=preferred_element_type)
         out = jnp.einsum("ot,nstwm->nsowm", at.astype(y.dtype), y)
         out = out.reshape(n, nt * m, wdt, mout)
-        out_sz = h if padding == "SAME" else h - k + 1
-        return out[:, :out_sz].astype(x.dtype)
+        return out[:, :geometry.out_size].astype(x.dtype)
     else:
         v = jnp.einsum("it,nhstc->nhsic", bt, tiles)     # (N, H, nt, t, C)
         y = jnp.einsum("nhsic,icm->nhsim", v, u, precision=precision,
                        preferred_element_type=preferred_element_type)
         out = jnp.einsum("ot,nhstm->nhsom", at.astype(y.dtype), y)
         out = out.reshape(n, h, nt * m, mout)
-        out_sz = wdt if padding == "SAME" else wdt - k + 1
-        return out[:, :, :out_sz].astype(x.dtype)
+        return out[:, :, :geometry.out_size].astype(x.dtype)
+
+
+def _winograd_conv2d_1d_kernel(
+    x: jax.Array, w: jax.Array, *, output_tile, padding: Padding,
+    precision, preferred_element_type,
+) -> jax.Array:
+    """1xN / Nx1 layers (paper's Inception-v3 case): derive the filter
+    transform and geometry, then run the pretransformed executor."""
+    kh, kw, c, mout = w.shape
+    axis = 1 if kh > 1 else 2          # spatial axis the filter runs along
+    k = max(kh, kw)
+    if k == 1:                          # 1x1: pure channel GEMM (pointwise)
+        return pointwise_conv2d(x, w[0, 0], precision=precision,
+                                preferred_element_type=preferred_element_type)
+    m = output_tile if isinstance(output_tile, int) else output_tile[axis - 1]
+    ct = cook_toom(m, k)
+    u = transform_filter_1d(w.reshape(k, c, mout), ct)   # (t, C, M)
+    geometry = conv1d_axis_geometry(x.shape[axis], axis, k, m, padding)
+    return winograd_conv1d_axis_pretransformed(
+        x, u, ct, geometry, precision=precision,
+        preferred_element_type=preferred_element_type)
 
 
 # ---------------------------------------------------------------------------

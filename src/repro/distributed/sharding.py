@@ -22,6 +22,23 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.models.config import ArchConfig
 
 
+def shard_map(f, *, mesh, in_specs, out_specs, check_replication: bool = True):
+    """Version-portable shard_map.
+
+    jax >= 0.5 exposes `jax.shard_map` (replication-check kwarg `check_vma`);
+    the 0.4.x line keeps `jax.experimental.shard_map.shard_map` (kwarg
+    `check_rep`). Everything in this repo (and its spawned-subprocess test
+    snippets) should route through this shim instead of touching either
+    attribute directly.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_replication)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_replication)
+
+
 def _guard(mesh: Mesh, shape: tuple, spec: P) -> P:
     """Drop mesh axes that do not divide the corresponding dim."""
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))

@@ -48,6 +48,61 @@ def _pad_axis(x: jax.Array, axis: int, to: int) -> jax.Array:
 # Winograd conv2d
 # ---------------------------------------------------------------------------
 
+def winograd_blocks(r_tot: int, c: int, mout: int, *, block_r: int = 128,
+                    block_c: int = 128, block_m: int = 128
+                    ) -> tuple[int, int, int]:
+    """Pick (block_r, block_c, block_m) for the fused kernel -- plan-time."""
+    return _block(r_tot, block_r), _block(c, block_c), _block(mout, block_m)
+
+
+def pad_winograd_filter(u: jax.Array, block_c: int, block_m: int) -> jax.Array:
+    """Pad a (P, C, M) Winograd-domain filter to the kernel's block grid.
+    Done once at plan time so apply() never touches the weights."""
+    p, c, mout = u.shape
+    return _pad_axis(_pad_axis(u, 1, _round_up(c, block_c)),
+                     2, _round_up(mout, block_m))
+
+
+def winograd_conv2d_planned(
+    x: jax.Array,
+    u: jax.Array,
+    *,
+    ct_h,
+    ct_w,
+    geometry: _wg.Conv2DGeometry,
+    blocks: tuple[int, int, int],
+    c_in: int,
+    c_out: int,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Execute a planned Pallas Winograd conv: `u` is the pre-transformed,
+    pre-padded (P, Cp, Mp) filter and all geometry/blocking decisions were
+    made at plan time. Only per-call input work happens here."""
+    if interpret is None:
+        interpret = _default_interpret()
+    n, h, wdt, c = x.shape
+    br, bc, bm = blocks
+    nh, nw = geometry.n_h, geometry.n_w
+    xp = jnp.pad(x, ((0, 0), (geometry.lo_h, geometry.hi_h),
+                     (geometry.lo_w, geometry.hi_w), (0, 0)))
+    tiles = _wg._extract_tiles_1d(xp, 1, ct_h.t, ct_h.m, nh)
+    tiles = _wg._extract_tiles_1d(tiles, 3, ct_w.t, ct_w.m, nw)
+    tiles = tiles.transpose(0, 1, 3, 2, 4, 5).reshape(
+        n * nh * nw, ct_h.t, ct_w.t, c)                  # (R, th, tw, C)
+
+    r_tot = tiles.shape[0]
+    tiles = _pad_axis(tiles, 0, _round_up(r_tot, br))
+    tiles = _pad_axis(tiles, 3, _round_up(c_in, bc))
+
+    y = _k_winograd.winograd_fused(
+        tiles, u, ct_h=ct_h, ct_w=ct_w, block_r=br, block_c=bc, block_m=bm,
+        interpret=interpret)                             # (Rp, mh, mw, Mp)
+    y = y[:r_tot, :, :, :c_out].reshape(n, nh, nw, ct_h.m, ct_w.m, c_out)
+    y = y.transpose(0, 1, 3, 2, 4, 5).reshape(
+        n, nh * ct_h.m, nw * ct_w.m, c_out)
+    return y[:, :geometry.out_h, :geometry.out_w]
+
+
 def winograd_conv2d(
     x: jax.Array,
     w: jax.Array,
@@ -59,9 +114,12 @@ def winograd_conv2d(
     block_m: int = 128,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Pallas-backed F(m x m, k x k) convolution, NHWC x HWIO -> NHWC."""
-    if interpret is None:
-        interpret = _default_interpret()
+    """Pallas-backed F(m x m, k x k) convolution, NHWC x HWIO -> NHWC.
+
+    Unplanned compatibility path: derives the filter transform, geometry and
+    block sizes inline, then runs the planned executor. Plan once with
+    repro.core.plan.plan_conv2d to skip the derivation on every call.
+    """
     n, h, wdt, c = x.shape
     kh, kw, _, mout = w.shape
     if kh == 1 or kw == 1:
@@ -74,35 +132,59 @@ def winograd_conv2d(
     u = _wg.transform_filter_2d(w, ct_h, ct_w)           # (th, tw, C, M)
     u = u.reshape(ct_h.t * ct_w.t, c, mout)
 
-    lo_h, hi_h, nh = _wg._pad_amounts(h, kh, ct_h.m, padding)
-    lo_w, hi_w, nw = _wg._pad_amounts(wdt, kw, ct_w.m, padding)
-    xp = jnp.pad(x, ((0, 0), (lo_h, hi_h), (lo_w, hi_w), (0, 0)))
-    tiles = _wg._extract_tiles_1d(xp, 1, ct_h.t, ct_h.m, nh)
-    tiles = _wg._extract_tiles_1d(tiles, 3, ct_w.t, ct_w.m, nw)
-    tiles = tiles.transpose(0, 1, 3, 2, 4, 5).reshape(
-        n * nh * nw, ct_h.t, ct_w.t, c)                  # (R, th, tw, C)
-
-    r_tot = tiles.shape[0]
-    br = _block(r_tot, block_r)
-    bc = _block(c, block_c)
-    bm = _block(mout, block_m)
-    tiles = _pad_axis(tiles, 0, _round_up(r_tot, br))
-    tiles = _pad_axis(tiles, 3, _round_up(c, bc))
-    u = _pad_axis(_pad_axis(u, 1, _round_up(c, bc)), 2, _round_up(mout, bm))
-
-    y = _k_winograd.winograd_fused(
-        tiles, u, ct_h=ct_h, ct_w=ct_w, block_r=br, block_c=bc, block_m=bm,
-        interpret=interpret)                             # (Rp, mh, mw, Mp)
-    y = y[:r_tot, :, :, :mout].reshape(n, nh, nw, ct_h.m, ct_w.m, mout)
-    y = y.transpose(0, 1, 3, 2, 4, 5).reshape(n, nh * ct_h.m, nw * ct_w.m, mout)
-    out_h = h if padding == "SAME" else h - kh + 1
-    out_w = wdt if padding == "SAME" else wdt - kw + 1
-    return y[:, :out_h, :out_w]
+    geometry = _wg.conv2d_geometry(h, wdt, kh, kw, ct_h.m, ct_w.m, padding)
+    r_tot = n * geometry.n_h * geometry.n_w
+    blocks = winograd_blocks(r_tot, c, mout, block_r=block_r,
+                             block_c=block_c, block_m=block_m)
+    u = pad_winograd_filter(u, blocks[1], blocks[2])
+    return winograd_conv2d_planned(
+        x, u, ct_h=ct_h, ct_w=ct_w, geometry=geometry, blocks=blocks,
+        c_in=c, c_out=mout, interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
 # im2col conv2d (baseline)
 # ---------------------------------------------------------------------------
+
+def im2col_blocks(mm: int, kk: int, mout: int, *, block: int = 128
+                  ) -> tuple[int, int, int]:
+    """(bm, bk, bn) for the blocked GEMM -- plan-time."""
+    return _block(mm, block), _block(kk, block), _block(mout, block)
+
+
+def pad_im2col_filter(b: jax.Array, bk: int, bn: int) -> jax.Array:
+    """Pad the (khkwC, M) filter matrix to the GEMM block grid -- plan-time."""
+    kk, mout = b.shape
+    return _pad_axis(_pad_axis(b, 0, _round_up(kk, bk)),
+                     1, _round_up(mout, bn))
+
+
+def im2col_conv2d_planned(
+    x: jax.Array,
+    b: jax.Array,
+    *,
+    kh: int,
+    kw: int,
+    stride: tuple[int, int],
+    padding: _wg.Padding,
+    geometry: _im2col.Im2RowGeometry,
+    blocks: tuple[int, int, int],
+    c_out: int,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Execute a planned Pallas im2row conv: `b` is the pre-reshaped,
+    pre-padded (Kp, Np) filter matrix; geometry and block sizes come from
+    the plan."""
+    if interpret is None:
+        interpret = _default_interpret()
+    n = x.shape[0]
+    bm_, bk_, bn_ = blocks
+    a, (oh, ow) = _im2col.im2row(x, kh, kw, stride, padding, geometry)
+    mm, kk = a.shape
+    a = _pad_axis(_pad_axis(a, 0, _round_up(mm, bm_)), 1, _round_up(kk, bk_))
+    y = _k_matmul.matmul(a, b, bm=bm_, bn=bn_, bk=bk_, interpret=interpret)
+    return y[:mm, :c_out].reshape(n, oh, ow, c_out).astype(x.dtype)
+
 
 def im2col_conv2d(
     x: jax.Array,
@@ -113,22 +195,17 @@ def im2col_conv2d(
     block: int = 128,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Pallas-backed im2row + GEMM baseline."""
-    if interpret is None:
-        interpret = _default_interpret()
-    n = x.shape[0]
-    kh, kw, c, mout = w.shape
+    """Pallas-backed im2row + GEMM baseline (unplanned compatibility path)."""
+    n, h, wdt, c = x.shape
+    kh, kw, _, mout = w.shape
     stride = (stride, stride) if isinstance(stride, int) else stride
-    a, (oh, ow) = _im2col.im2row(x, kh, kw, stride, padding)
-    b = w.reshape(kh * kw * c, mout)
-    mm, kk = a.shape
-    bm_ = _block(mm, block)
-    bk_ = _block(kk, block)
-    bn_ = _block(mout, block)
-    a = _pad_axis(_pad_axis(a, 0, _round_up(mm, bm_)), 1, _round_up(kk, bk_))
-    b = _pad_axis(_pad_axis(b, 0, _round_up(kk, bk_)), 1, _round_up(mout, bn_))
-    y = _k_matmul.matmul(a, b, bm=bm_, bn=bn_, bk=bk_, interpret=interpret)
-    return y[:mm, :mout].reshape(n, oh, ow, mout).astype(x.dtype)
+    geometry = _im2col.im2row_geometry(h, wdt, kh, kw, stride, padding)
+    mm = n * geometry.oh * geometry.ow
+    blocks = im2col_blocks(mm, kh * kw * c, mout, block=block)
+    b = pad_im2col_filter(w.reshape(kh * kw * c, mout), blocks[1], blocks[2])
+    return im2col_conv2d_planned(
+        x, b, kh=kh, kw=kw, stride=stride, padding=padding, geometry=geometry,
+        blocks=blocks, c_out=mout, interpret=interpret)
 
 
 # ---------------------------------------------------------------------------

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.dispatch import conv1d
+from repro.core.plan import Conv1DPlan, plan_conv1d
 from repro.models.config import ArchConfig
 from repro.models.layers import truncated_normal_init
 
@@ -29,8 +30,28 @@ def init_stem(key, cfg: ArchConfig, n_mels: int = 80, dtype=jnp.float32) -> dict
     }
 
 
-def stem(params: dict, mel: jax.Array, algorithm: str = "auto") -> jax.Array:
-    """mel: (B, T, n_mels) -> frame embeddings (B, T // 2, d_model)."""
+def plan_stem(params: dict, mel_shape: tuple[int, ...],
+              algorithm: str = "auto") -> dict[str, Conv1DPlan]:
+    """Plan both stem convolutions for a fixed (B, T, n_mels) input shape:
+    filter transforms (incl. the per-phase polyphase sub-filters of conv2)
+    and all tiling geometry happen here, once, at weight-load time."""
+    b, t, n_mels = mel_shape
+    p1 = plan_conv1d((b, t, n_mels), params["conv1_w"], stride=1,
+                     padding="SAME", algorithm=algorithm)
+    p2 = plan_conv1d((b, t, params["conv2_w"].shape[1]), params["conv2_w"],
+                     stride=2, padding="SAME", algorithm=algorithm)
+    return {"conv1": p1, "conv2": p2}
+
+
+def stem(params: dict, mel: jax.Array, algorithm: str = "auto",
+         plans: dict[str, Conv1DPlan] | None = None) -> jax.Array:
+    """mel: (B, T, n_mels) -> frame embeddings (B, T // 2, d_model).
+
+    With `plans` (from plan_stem) both convolutions run their pre-built
+    Conv1DPlans -- no per-call filter transform or geometry work."""
+    if plans is not None:
+        x = jax.nn.gelu(plans["conv1"].apply(mel) + params["conv1_b"])
+        return jax.nn.gelu(plans["conv2"].apply(x) + params["conv2_b"])
     x = conv1d(mel, params["conv1_w"], stride=1, padding="SAME",
                algorithm=algorithm)
     x = jax.nn.gelu(x + params["conv1_b"])

@@ -9,6 +9,12 @@ layers, im2row elsewhere vs im2row everywhere).
 
 Networks are expressed as layer-spec lists; `init_cnn` / `cnn_forward`
 interpret them. Inference-only (the paper measures single-batch latency).
+
+Deployment path (the paper's section-4 insight): `plan_cnn` builds one
+ConvPlan per conv layer at init/weight-load time -- algorithm decisions,
+tiling geometry and the Winograd-domain filter transform all happen once --
+and `cnn_forward(..., plans=...)` executes them with zero per-call filter or
+geometry work.
 """
 
 from __future__ import annotations
@@ -19,7 +25,9 @@ from typing import Any, Literal, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.dispatch import Algorithm, conv2d, winograd_suitable
+from repro.core.dispatch import Algorithm, winograd_suitable
+from repro.core.plan import ConvPlan, plan_conv2d
+from repro.models.layers import conv2d_layer, init_conv2d
 
 _F32 = jnp.float32
 
@@ -81,11 +89,8 @@ def init_cnn(key, specs, c_in: int, dtype=_F32, res: int = 224) -> dict:
         for spec in specs:
             if isinstance(spec, Conv):
                 key, k1 = jax.random.split(key)
-                scale = (spec.kh * spec.kw * c) ** -0.5
-                params[spec.name] = {
-                    "w": scale * jax.random.normal(
-                        k1, (spec.kh, spec.kw, c, spec.c_out), dtype),
-                    "b": jnp.zeros((spec.c_out,), dtype)}
+                params[spec.name] = init_conv2d(k1, spec.kh, spec.kw, c,
+                                                spec.c_out, dtype)
                 h = _out_size(h, spec.kh, spec.stride, spec.padding)
                 w = _out_size(w, spec.kw, spec.stride, spec.padding)
                 c = spec.c_out
@@ -115,6 +120,52 @@ def init_cnn(key, specs, c_in: int, dtype=_F32, res: int = 224) -> dict:
     return params
 
 
+def _layer_algorithm(spec: Conv, algorithm: Algorithm) -> Algorithm:
+    """Forced winograd falls back to im2col on unsuitable layers -- the
+    paper's mixed policy applied to a forced global setting."""
+    if algorithm in ("winograd", "pallas_winograd") and \
+            not winograd_suitable(spec.kh, spec.kw, spec.stride):
+        return "im2col"
+    return algorithm
+
+
+def plan_cnn(params: dict, specs, *, res: int, c_in: int = 3, batch: int = 1,
+             algorithm: Algorithm = "auto") -> dict[str, ConvPlan]:
+    """Build one ConvPlan per conv layer, walking the spec list with the same
+    shape tracking as init_cnn. All algorithm decisions (including measured
+    auto_tuned choices) and every filter transform happen here, once; the
+    returned dict feeds cnn_forward(plans=...) for transform-free inference.
+    """
+    plans: dict[str, ConvPlan] = {}
+
+    def walk(specs, h, w, c):
+        for spec in specs:
+            if isinstance(spec, Conv):
+                plans[spec.name] = plan_conv2d(
+                    (batch, h, w, c), params[spec.name]["w"],
+                    stride=spec.stride, padding=spec.padding,
+                    algorithm=_layer_algorithm(spec, algorithm))
+                h = _out_size(h, spec.kh, spec.stride, spec.padding)
+                w = _out_size(w, spec.kw, spec.stride, spec.padding)
+                c = spec.c_out
+            elif isinstance(spec, Pool):
+                h = _out_size(h, spec.k, spec.stride, spec.padding)
+                w = _out_size(w, spec.k, spec.stride, spec.padding)
+            elif isinstance(spec, Concat):
+                outs = [walk(br, h, w, c) for br in spec.branches]
+                h, w = outs[0][0], outs[0][1]
+                c = sum(o[2] for o in outs)
+            elif isinstance(spec, GlobalAvgPool):
+                h = w = 1
+            elif isinstance(spec, Dense):
+                h = w = 1
+                c = spec.n_out
+        return h, w, c
+
+    walk(specs, res, res, c_in)
+    return plans
+
+
 def _pool(x, spec: Pool):
     init = -jnp.inf if spec.kind == "max" else 0.0
     op = jax.lax.max if spec.kind == "max" else jax.lax.add
@@ -128,29 +179,27 @@ def _pool(x, spec: Pool):
 
 def cnn_forward(params: dict, x: jax.Array, specs,
                 algorithm: Algorithm = "auto",
-                layer_times: dict | None = None) -> jax.Array:
+                layer_times: dict | None = None,
+                plans: dict[str, ConvPlan] | None = None) -> jax.Array:
     """Run the network. `algorithm` selects the conv scheme globally ("auto"
-    = the paper's mixed policy). layer_times: optional dict to collect
-    per-layer conv descriptors for the benchmark harness."""
+    = the paper's mixed policy). With `plans` (from plan_cnn) convolutions
+    execute their pre-built ConvPlans: no per-call filter transform or
+    geometry derivation. layer_times: optional dict to collect per-layer
+    conv descriptors for the benchmark harness."""
     def walk(x, specs):
         for spec in specs:
             if isinstance(spec, Conv):
-                p = params[spec.name]
-                algo = algorithm
-                if algo in ("winograd", "pallas_winograd") and \
-                        not winograd_suitable(spec.kh, spec.kw, spec.stride):
-                    algo = "im2col"
                 if layer_times is not None:
                     layer_times[spec.name] = dict(
                         kh=spec.kh, kw=spec.kw, c_in=x.shape[-1],
                         c_out=spec.c_out, h=x.shape[1], w=x.shape[2],
                         stride=spec.stride,
                         suitable=winograd_suitable(spec.kh, spec.kw, spec.stride))
-                x = conv2d(x, p["w"], stride=spec.stride, padding=spec.padding,
-                           algorithm=algo)
-                x = x + p["b"]
-                if spec.relu:
-                    x = jax.nn.relu(x)
+                x = conv2d_layer(
+                    params[spec.name], x, relu=spec.relu,
+                    plan=plans.get(spec.name) if plans else None,
+                    stride=spec.stride, padding=spec.padding,
+                    algorithm=_layer_algorithm(spec, algorithm))
             elif isinstance(spec, Pool):
                 x = _pool(x, spec)
             elif isinstance(spec, Concat):

@@ -121,6 +121,33 @@ def init_mlp(key, d_model: int, d_ff: int, act: str, dtype) -> Params:
 
 
 # ---------------------------------------------------------------------------
+# Convolution layers (plan/execute split)
+# ---------------------------------------------------------------------------
+
+def init_conv2d(key, kh: int, kw: int, c_in: int, c_out: int,
+                dtype=jnp.float32) -> Params:
+    """He-style conv init, HWIO weight + bias."""
+    scale = (kh * kw * c_in) ** -0.5
+    return {"w": scale * jax.random.normal(key, (kh, kw, c_in, c_out), dtype),
+            "b": jnp.zeros((c_out,), dtype)}
+
+
+def conv2d_layer(p: Params, x: jax.Array, *, plan=None, relu: bool = True,
+                 **conv_kwargs) -> jax.Array:
+    """Conv + bias + optional relu. With `plan` (a repro.core.plan.ConvPlan,
+    built once at init/weight-load time) execution performs no per-call
+    filter transform or geometry work; without it, falls back to the
+    per-call dispatcher (conv_kwargs: stride/padding/algorithm/...)."""
+    if plan is not None:
+        y = plan.apply(x)
+    else:
+        from repro.core.dispatch import conv2d
+        y = conv2d(x, p["w"], **conv_kwargs)
+    y = y + p["b"]
+    return jax.nn.relu(y) if relu else y
+
+
+# ---------------------------------------------------------------------------
 # Rotary position embeddings
 # ---------------------------------------------------------------------------
 

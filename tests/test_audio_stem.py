@@ -33,6 +33,19 @@ def test_stem_matches_direct(rng, algorithm):
     assert rel_err(got, want) < 1e-4
 
 
+def test_stem_planned_matches_direct(rng):
+    """plan_stem builds both conv plans once (incl. polyphase stride-2);
+    stem(plans=...) matches the direct oracle with no per-call transform."""
+    cfg = cfglib.get_smoke_config("whisper_tiny")
+    params = audio.init_stem(jax.random.key(0), cfg, n_mels=16)
+    mel = jnp.asarray(rng.standard_normal((2, 32, 16)), jnp.float32)
+    plans = audio.plan_stem(params, mel.shape)
+    got = audio.stem(params, mel, plans=plans)
+    want = _direct_stem(params, mel)
+    assert got.shape == (2, 16, cfg.d_model)
+    assert rel_err(got, want) < 1e-4
+
+
 def test_stem_halves_time_axis(rng):
     cfg = cfglib.get_smoke_config("whisper_tiny")
     params = audio.init_stem(jax.random.key(1), cfg, n_mels=8)

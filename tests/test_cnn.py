@@ -38,6 +38,22 @@ def test_fast_scheme_agrees_with_baseline(rng, net, algorithm):
     assert rel_err(fast, base) < 1e-3
 
 
+@pytest.mark.parametrize("net", ["squeezenet", "googlenet"])
+def test_planned_forward_agrees_with_baseline(rng, net):
+    """plan_cnn + cnn_forward(plans=...) == im2row everywhere, numerically."""
+    specs = cnn.NETWORKS[net][0]()
+    res = _RES[net]
+    params = cnn.init_cnn(jax.random.key(2), specs, 3, res=res)
+    plans = cnn.plan_cnn(params, specs, res=res)
+    x = jnp.asarray(rng.standard_normal((1, res, res, 3)), jnp.float32)
+    planned = cnn.cnn_forward(params, x, specs, plans=plans)
+    base = cnn.cnn_forward(params, x, specs, algorithm="im2col")
+    assert rel_err(planned, base) < 1e-3
+    # planned forward also works under jit (plans close over the filters)
+    jitted = jax.jit(lambda x: cnn.cnn_forward(params, x, specs, plans=plans))
+    assert rel_err(jitted(x), base) < 1e-3
+
+
 def test_layer_inventory_census():
     """Paper Fig-3 denominator: the suitable-layer census is stable."""
     from benchmarks.common import conv_layer_inventory

@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
@@ -63,10 +64,11 @@ def test_pod_mean_int8_in_shard_map():
     def body(g, e):
         return comp.pod_mean_int8(g[0], e[0], "pod")
 
-    fn = jax.jit(jax.shard_map(body, mesh=mesh,
-                               in_specs=(P("pod"), P("pod")),
-                               out_specs=(P(), P("pod")),
-                               check_vma=False))
+    from repro.distributed.sharding import shard_map
+    fn = jax.jit(shard_map(body, mesh=mesh,
+                           in_specs=(P("pod"), P("pod")),
+                           out_specs=(P(), P("pod")),
+                           check_replication=False))
     mean, new_err = fn(per_pod, errs)
     want = np.asarray(per_pod).mean(axis=0)
     got = np.asarray(mean)

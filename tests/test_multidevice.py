@@ -103,6 +103,7 @@ def test_pod_mean_int8_wire():
     stdout = _run("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.distributed.sharding import shard_map
         from repro.optim import compression as comp
 
         mesh = jax.make_mesh((4,), ("pod",))
@@ -113,10 +114,10 @@ def test_pod_mean_int8_wire():
         def body(g, e):
             return comp.pod_mean_int8(g[0], e[0], "pod")
 
-        fn = jax.jit(jax.shard_map(body, mesh=mesh,
-                                   in_specs=(P("pod"), P("pod")),
-                                   out_specs=(P(), P("pod")),
-                                   check_vma=False))
+        fn = jax.jit(shard_map(body, mesh=mesh,
+                               in_specs=(P("pod"), P("pod")),
+                               out_specs=(P(), P("pod")),
+                               check_replication=False))
         mean, new_err = fn(per_pod, errs)
         want = np.asarray(per_pod).mean(axis=0)
         err = np.max(np.abs(np.asarray(mean) - want))
