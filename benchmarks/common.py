@@ -25,6 +25,80 @@ def time_jitted(fn: Callable, *args, warmup: int = 2, iters: int = 5,
     return float(np.median(times))
 
 
+def pairwise_min_times(fa: Callable, fb: Callable, x, warmup: int = 2,
+                       iters: int = 5) -> tuple[float, float]:
+    """Interleaved best-of timing of two callables on the same input.
+
+    Interleaving cancels slow drift (thermal / co-tenant noise) that makes
+    back-to-back medians unreliable; min is the steady-state floor."""
+    for _ in range(warmup):
+        jax.block_until_ready(fa(x))
+        jax.block_until_ready(fb(x))
+    ta, tb = [], []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fa(x))
+        ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fb(x))
+        tb.append(time.perf_counter() - t0)
+    return min(ta), min(tb)
+
+
+def streamed_hbm_bytes(spec, batch: int = 1) -> int:
+    """Analytic HBM bytes moved per call by the streaming Winograd executor
+    (kernels.winograd.winograd_streamed): halo strip reads (each strip is
+    DMA'd once per (M sweep, C block) because the input block index carries
+    the channel slice, and adjacent strips re-read their k-1 halo rows/cols)
+    + filter block reads (re-fetched per strip) + NHWC output write. No tile
+    tensor, no separate epilogue round trips. fp32 accounting; the full
+    derivation is in EXPERIMENTS.md section Perf."""
+    s = spec.stream
+    th, tw = spec.ct_h.t, spec.ct_w.t
+    mh, mw = spec.ct_h.m, spec.ct_w.m
+    p = th * tw
+    hs = s.bh * mh + th - mh
+    ws = s.bw * mw + tw - mw
+    n_strips = batch * s.n_hb * s.n_wb
+    n_mb = s.m_pad // s.block_m
+    read_x = n_strips * hs * ws * s.c_pad * n_mb * 4
+    read_u = n_strips * p * s.c_pad * s.m_pad * 4
+    write_y = batch * (s.n_hb * s.bh * mh) * (s.n_wb * s.bw * mw) \
+        * s.m_pad * 4
+    return read_x + read_u + write_y
+
+
+def materialized_hbm_bytes(spec, batch: int = 1) -> int:
+    """Analytic HBM bytes moved per call by the pre-streaming executor
+    (ops.winograd_conv2d_planned_materialized + XLA epilogue): padded input
+    read, (R, th, tw, C) tile tensor write + per-M-block re-read, filter
+    reads, kernel output write, un-tiling read+write, and the bias+relu
+    round trips. fp32 accounting; see EXPERIMENTS.md section Perf."""
+    g = spec.geometry
+    br, bc, bm = spec.blocks
+    th, tw = spec.ct_h.t, spec.ct_w.t
+    mh, mw = spec.ct_h.m, spec.ct_w.m
+    p = th * tw
+    c_in, c_out = spec.w_shape[2], spec.w_shape[3]
+    r = batch * g.n_h * g.n_w
+    r_pad = -(-r // br) * br
+    c_pad = -(-c_in // bc) * bc
+    m_pad = -(-c_out // bm) * bm
+    n_mb, n_cb = m_pad // bm, c_pad // bc
+    read_x = batch * (g.n_h * mh + th - mh) * (g.n_w * mw + tw - mw) \
+        * c_in * 4
+    tiles = r_pad * p * c_pad * 4
+    write_tiles = tiles
+    read_tiles = tiles * n_mb                 # re-read per M block
+    read_u = (r_pad // br) * n_mb * n_cb * p * bc * bm * 4
+    write_kernel_out = r_pad * mh * mw * m_pad * 4
+    out_nhwc = batch * g.out_h * g.out_w * c_out * 4
+    untile = write_kernel_out + out_nhwc      # transpose/reshape pass
+    epilogue = 4 * out_nhwc                   # bias add + relu, each r+w
+    return (read_x + write_tiles + read_tiles + read_u + write_kernel_out
+            + untile + epilogue)
+
+
 def conv_layer_inventory(network: str) -> list[dict]:
     """Every conv layer of a paper network as {name, kh, kw, c_in, c_out,
     h, w, stride, suitable}, collected by tracing the spec interpreter."""

@@ -26,9 +26,100 @@ import numpy as np
 from repro.core import dispatch
 from repro.core import plan as planlib
 
-from benchmarks.common import conv_layer_inventory, time_jitted
+from benchmarks.common import (conv_layer_inventory, materialized_hbm_bytes,
+                               pairwise_min_times, streamed_hbm_bytes,
+                               time_jitted)
 
 NETWORKS = ["vgg16", "vgg19", "googlenet", "inception_v3", "squeezenet"]
+
+#: The unique 3x3 stride-1 conv shapes of VGG-16 at paper resolution --
+#: the "VGG-style config" the streaming-vs-materialized Pallas A/B runs on
+#: (BENCH_PR2.json; EXPERIMENTS.md section Perf). `vgg_style_quick` is the
+#: same ladder at half spatial size for CI.
+VGG_STYLE_LAYERS = [
+    dict(name="conv1_1", kh=3, kw=3, h=224, w=224, c_in=3, c_out=64),
+    dict(name="conv1_2", kh=3, kw=3, h=224, w=224, c_in=64, c_out=64),
+    dict(name="conv2_1", kh=3, kw=3, h=112, w=112, c_in=64, c_out=128),
+    dict(name="conv2_2", kh=3, kw=3, h=112, w=112, c_in=128, c_out=128),
+    dict(name="conv3_1", kh=3, kw=3, h=56, w=56, c_in=128, c_out=256),
+    dict(name="conv3_2", kh=3, kw=3, h=56, w=56, c_in=256, c_out=256),
+    dict(name="conv4_1", kh=3, kw=3, h=28, w=28, c_in=256, c_out=512),
+    dict(name="conv4_2", kh=3, kw=3, h=28, w=28, c_in=512, c_out=512),
+    dict(name="conv5_1", kh=3, kw=3, h=14, w=14, c_in=512, c_out=512),
+]
+
+
+def vgg_style_layers(scale: int = 1) -> list[dict]:
+    out = []
+    for l in VGG_STYLE_LAYERS:
+        l = dict(l, h=max(l["h"] // scale, 8), w=max(l["w"] // scale, 8),
+                 stride=1)
+        out.append(l)
+    return out
+
+
+def bench_layer_pallas(layer: dict, iters: int, warmup: int) -> dict:
+    """Streamed (halo-streaming kernel, fused bias+relu epilogue) vs the
+    pre-streaming planned Pallas path (materialized tiles + un-tiling pass +
+    XLA bias/relu), interleaved best-of timing plus the analytic HBM bytes
+    each path moves."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(
+        (1, layer["h"], layer["w"], layer["c_in"])), jnp.float32)
+    wt = jnp.asarray(rng.standard_normal(
+        (layer["kh"], layer["kw"], layer["c_in"], layer["c_out"]))
+        / (layer["kh"] * layer["kw"]), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((layer["c_out"],)), jnp.float32)
+    t0 = time.perf_counter()
+    p_new = planlib.plan_conv2d(x.shape, wt, algorithm="pallas_winograd")
+    jax.block_until_ready(p_new.u)
+    plan_build = time.perf_counter() - t0
+    p_old = planlib.plan_conv2d(x.shape, wt,
+                                algorithm="pallas_winograd_materialized")
+    f_new = jax.jit(lambda x: p_new.apply(x, bias=b, activation="relu"))
+    f_old = jax.jit(lambda x: jax.nn.relu(p_old.apply(x) + b))
+    t_new, t_old = pairwise_min_times(f_new, f_old, x, warmup=warmup,
+                                      iters=iters)
+    by_new = streamed_hbm_bytes(p_new.spec)
+    by_old = materialized_hbm_bytes(p_old.spec)
+    s = p_new.spec.stream
+    return {"t_pallas_streamed_s": t_new, "t_pallas_old_s": t_old,
+            "speedup_streamed": t_old / t_new,
+            "hbm_bytes_streamed": by_new, "hbm_bytes_materialized": by_old,
+            "hbm_bytes_ratio": by_old / by_new,
+            "plan_build_s": plan_build,
+            "stream_blocks": [s.bh, s.bw, s.block_c, s.block_m]}
+
+
+def run_vgg_style(args) -> tuple[list[dict], list[dict]]:
+    layers = vgg_style_layers(scale=2 if args.config == "vgg_style_quick"
+                              else 1)
+    rows = []
+    for l in layers:
+        r = bench_layer_pallas(l, args.iters, args.warmup)
+        r.update(net="vgg_style", layer=l["name"],
+                 ltype=_layer_type(l["kh"], l["kw"]),
+                 shape=f"{l['h']}x{l['w']}x{l['c_in']}->{l['c_out']}")
+        rows.append(r)
+        print(f"{l['name']:10s} {r['shape']:22s} "
+              f"streamed={r['t_pallas_streamed_s']*1e3:8.2f}ms "
+              f"old={r['t_pallas_old_s']*1e3:8.2f}ms "
+              f"speedup={r['speedup_streamed']:.2f}x "
+              f"bytes {r['hbm_bytes_streamed']/2**20:7.1f}MiB vs "
+              f"{r['hbm_bytes_materialized']/2**20:7.1f}MiB "
+              f"({r['hbm_bytes_ratio']:.2f}x)", flush=True)
+    sp = [r["speedup_streamed"] for r in rows]
+    br = [r["hbm_bytes_ratio"] for r in rows]
+    summary = [{"net": "vgg_style", "ltype": "3x3",
+                "avg_speedup_streamed": float(np.mean(sp)),
+                "min_speedup_streamed": float(np.min(sp)),
+                "avg_hbm_bytes_ratio": float(np.mean(br)),
+                "n_layers": len(rows)}]
+    print(f"\n== streaming vs materialized Pallas path ({args.config}) ==")
+    print(f"avg speedup {summary[0]['avg_speedup_streamed']:.2f}x  "
+          f"min {summary[0]['min_speedup_streamed']:.2f}x  "
+          f"avg HBM-bytes ratio {summary[0]['avg_hbm_bytes_ratio']:.2f}x")
+    return rows, summary
 
 
 def _layer_type(kh: int, kw: int) -> str:
@@ -79,8 +170,21 @@ def main(argv=None):
     ap.add_argument("--warmup", type=int, default=1)
     ap.add_argument("--max-layers-per-net", type=int, default=0,
                     help="0 = all unique suitable layers")
+    ap.add_argument("--config", default="paper",
+                    choices=["paper", "vgg_style", "vgg_style_quick"],
+                    help="paper: Table-2 sweep over the five networks; "
+                         "vgg_style[_quick]: streamed-vs-materialized "
+                         "Pallas A/B on the VGG 3x3 stride-1 ladder")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
+
+    if args.config != "paper":
+        rows, summary = run_vgg_style(args)
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump({"config": args.config, "layers": rows,
+                           "summary": summary}, f, indent=1)
+        return summary
 
     rows = []
     seen = set()

@@ -2,6 +2,11 @@
 
   PYTHONPATH=src python -m benchmarks.run               # quick CPU pass
   PYTHONPATH=src python -m benchmarks.run --full        # full layer sweeps
+  PYTHONPATH=src python -m benchmarks.run --json BENCH_ci.json
+      # emit the perf-trajectory artifact: per-layer steady-state ms +
+      # HBM bytes moved for the streamed vs pre-streaming Pallas Winograd
+      # paths on the VGG-style config (CI uploads this; BENCH_PR2.json in
+      # the repo root is the committed run for this PR)
 
 Quick mode trims iteration counts and caps per-network layer counts so the
 whole suite finishes in minutes on one CPU core; --full runs every unique
@@ -28,12 +33,27 @@ def main(argv=None) -> None:
                          "the spec cache (--plan-cache, default) or starts "
                          "cold again (--no-plan-cache), next to per-call and "
                          "planned steady-state times")
+    ap.add_argument("--json", default=None, metavar="BENCH_<tag>.json",
+                    help="run ONLY the streamed-vs-materialized Pallas "
+                         "per-layer benchmark (VGG-style config; "
+                         "vgg_style_quick unless --full) and write the "
+                         "per-layer steady-state ms + bytes-moved artifact "
+                         "to this path")
     args = ap.parse_args(argv)
 
     from benchmarks import (amortization, fast_fraction, per_layer, roofline,
                             whole_network)
 
     t0 = time.time()
+
+    if args.json:
+        cfg = "vgg_style" if args.full else "vgg_style_quick"
+        iters = "3" if args.full else "2"
+        per_layer.main(["--config", cfg, "--iters", iters, "--warmup", "1",
+                        "--out", args.json])
+        print(f"\nwrote {args.json} in {time.time() - t0:.0f}s")
+        return
+
     quick_nets = ["vgg16", "googlenet", "inception_v3", "squeezenet"]
 
     if "per_layer" not in args.skip:

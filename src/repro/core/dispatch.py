@@ -35,13 +35,13 @@ import jax
 from repro.core import winograd as _winograd
 from repro.core.plan import (AMORTIZE_MIN_C_IN, AMORTIZE_MIN_OUT_PIXELS,
                              WINOGRAD_FILTER_SIZES, Algorithm, plan_conv1d,
-                             plan_conv2d, winograd_amortizes,
-                             winograd_suitable)
+                             plan_conv2d, plan_depthwise_conv1d,
+                             winograd_amortizes, winograd_suitable)
 
 __all__ = [
-    "Algorithm", "conv1d", "conv2d", "winograd_amortizes",
-    "winograd_suitable", "WINOGRAD_FILTER_SIZES", "AMORTIZE_MIN_OUT_PIXELS",
-    "AMORTIZE_MIN_C_IN",
+    "Algorithm", "conv1d", "conv2d", "plan_depthwise_conv1d",
+    "winograd_amortizes", "winograd_suitable", "WINOGRAD_FILTER_SIZES",
+    "AMORTIZE_MIN_OUT_PIXELS", "AMORTIZE_MIN_C_IN",
 ]
 
 
@@ -54,17 +54,21 @@ def conv2d(
     algorithm: Algorithm = "auto",
     output_tile: int | None = None,
     precision=None,
+    bias: jax.Array | None = None,
+    activation: str = "none",
 ) -> jax.Array:
     """Unified convolution entry point (NHWC x HWIO -> NHWC).
 
     Compatibility wrapper: plans (cached by shape) then executes. The filter
     transform still happens on every call here -- hold a ConvPlan instead
     (repro.core.plan.plan_conv2d) to pre-transform weights once.
+    `bias`/`activation` run the layer epilogue through the plan's fused path
+    (in-kernel on the Pallas executors).
     """
     plan = plan_conv2d(x.shape, w, stride=stride, padding=padding,
                        algorithm=algorithm, output_tile=output_tile,
                        precision=precision)
-    return plan.apply(x)
+    return plan.apply(x, bias=bias, activation=activation)
 
 
 def conv1d(

@@ -41,9 +41,18 @@ import numpy as np
 from repro.core import im2col as _im2col
 from repro.core import winograd as _wg
 from repro.core.transforms import DEFAULT_OUTPUT_TILE, CookToom, cook_toom
+# Shared epilogue vocabulary, dependency-free (the heavy Pallas kernels in
+# repro.kernels stay optional, imported locally where needed).
+# EPILOGUE_ACTIVATIONS: the activations plan.apply(..., activation=) accepts
+# (kernels/runtime.py is the single source of truth): the Pallas executors
+# fuse these into the kernel store, the pure-JAX executors apply them as one
+# XLA op (_epilogue_jnp).
+from repro.kernels.runtime import ACTIVATIONS as EPILOGUE_ACTIVATIONS
+from repro.kernels.runtime import epilogue_jnp as _epilogue_jnp
 
 Algorithm = Literal["auto", "auto_tuned", "winograd", "im2col",
-                    "pallas_winograd", "pallas_im2col"]
+                    "pallas_winograd", "pallas_winograd_materialized",
+                    "pallas_im2col"]
 Padding = _wg.Padding
 
 #: Filter sizes the paper's fast scheme covers (2D NxN and 1D 1xN / Nx1).
@@ -101,14 +110,18 @@ class ConvSpec:
     requested: str                    # the algorithm= the caller asked for
     algorithm: str                    # resolved executor: winograd |
                                       # winograd_1d | im2col |
-                                      # pallas_winograd | pallas_im2col
+                                      # pallas_winograd |
+                                      # pallas_winograd_materialized |
+                                      # pallas_im2col
     output_tile: tuple[int, int] | None = None
     ct_h: CookToom | None = None
     ct_w: CookToom | None = None      # also the single CT of the 1D variant
     geometry: Any = None              # Conv2DGeometry | Axis1DGeometry |
                                       # Im2RowGeometry
     axis: int | None = None           # 1xN / Nx1: the non-unit spatial axis
-    blocks: tuple[int, int, int] | None = None   # Pallas block sizes
+    blocks: tuple[int, ...] | None = None        # Pallas block sizes
+    stream: Any = None                # StreamGeometry (halo blocking) of the
+                                      # streaming pallas_winograd executor
     autotune: tuple | None = None     # (("t_winograd_s", ...), ...) measured
                                       # evidence behind an auto_tuned choice
 
@@ -173,7 +186,8 @@ def _build_spec(x_shape, w_shape, dtype, stride, padding, requested,
     base = dict(x_shape=tuple(x_shape), w_shape=tuple(w_shape), dtype=dtype,
                 stride=stride, padding=padding, requested=requested)
 
-    if resolved in ("winograd", "pallas_winograd") and (kh == 1 or kw == 1):
+    if resolved in ("winograd", "pallas_winograd",
+                    "pallas_winograd_materialized") and (kh == 1 or kw == 1):
         # 1xN / Nx1: single-axis Cook-Toom (the Pallas backend also routes
         # here -- its GEMM is one matmul XLA already maps to the MXU).
         axis = 1 if kh > 1 else 2
@@ -193,14 +207,26 @@ def _build_spec(x_shape, w_shape, dtype, stride, padding, requested,
                         ct_h=ct_h, ct_w=ct_w, geometry=geom, **base)
 
     if resolved == "pallas_winograd":
+        # Streaming executor: halo-blocking geometry (strip origins,
+        # edge-block padding, VMEM budget -> block sizes) derived here, once.
+        mh, mw = _resolve_output_tile(kh, kw, output_tile)
+        ct_h, ct_w = cook_toom(mh, kh), cook_toom(mw, kw)
+        geom = _wg.conv2d_geometry(h, w, kh, kw, mh, mw, padding)
+        stream = _wg.stream_geometry(geom.n_h, geom.n_w, c, mout, ct_h, ct_w)
+        return ConvSpec(algorithm="pallas_winograd", output_tile=(mh, mw),
+                        ct_h=ct_h, ct_w=ct_w, geometry=geom, stream=stream,
+                        blocks=(stream.bh * stream.bw, stream.block_c,
+                                stream.block_m), **base)
+
+    if resolved == "pallas_winograd_materialized":
         from repro.kernels import ops  # local import: kernels are optional
         mh, mw = _resolve_output_tile(kh, kw, output_tile)
         ct_h, ct_w = cook_toom(mh, kh), cook_toom(mw, kw)
         geom = _wg.conv2d_geometry(h, w, kh, kw, mh, mw, padding)
         blocks = ops.winograd_blocks(n * geom.n_h * geom.n_w, c, mout)
-        return ConvSpec(algorithm="pallas_winograd", output_tile=(mh, mw),
-                        ct_h=ct_h, ct_w=ct_w, geometry=geom, blocks=blocks,
-                        **base)
+        return ConvSpec(algorithm="pallas_winograd_materialized",
+                        output_tile=(mh, mw), ct_h=ct_h, ct_w=ct_w,
+                        geometry=geom, blocks=blocks, **base)
 
     if resolved == "im2col":
         geom = _im2col.im2row_geometry(h, w, kh, kw, stride, padding)
@@ -225,7 +251,7 @@ def _bind_weights(spec: ConvSpec, w: jax.Array) -> jax.Array:
     if spec.algorithm == "winograd_1d":
         return _wg.transform_filter_1d(w.reshape(max(kh, kw), c, mout),
                                        spec.ct_w)
-    if spec.algorithm == "pallas_winograd":
+    if spec.algorithm in ("pallas_winograd", "pallas_winograd_materialized"):
         from repro.kernels import ops
         u = _wg.transform_filter_2d(w, spec.ct_h, spec.ct_w)
         u = u.reshape(spec.ct_h.t * spec.ct_w.t, c, mout)
@@ -247,52 +273,72 @@ def _bind_weights(spec: ConvSpec, w: jax.Array) -> jax.Array:
 class ConvPlan:
     """A fully-decided, weight-bound convolution. apply(x) does only input
     work: pad, tile, transform the input, GEMM against the cached filter,
-    inverse-transform. No filter transform, no geometry derivation."""
+    inverse-transform. No filter transform, no geometry derivation.
+
+    apply(x, bias=..., activation=...) runs the layer epilogue too: on the
+    Pallas executors (streaming Winograd, im2col GEMM) the bias add and
+    activation are fused into the kernel's store step, so the conv output
+    never round-trips HBM before the elementwise work; pure-JAX executors
+    apply the same contract as one XLA op."""
 
     spec: ConvSpec
     u: jax.Array                       # filter in the execution domain
     build_time_s: float = 0.0
     precision: Any = None
 
-    def __call__(self, x: jax.Array) -> jax.Array:
-        return self.apply(x)
+    def __call__(self, x: jax.Array, **kwargs) -> jax.Array:
+        return self.apply(x, **kwargs)
 
-    def apply(self, x: jax.Array) -> jax.Array:
+    def apply(self, x: jax.Array, bias: jax.Array | None = None,
+              activation: str = "none") -> jax.Array:
         spec = self.spec
         if x.shape[1:] != spec.x_shape[1:]:
             raise ValueError(
                 f"plan built for input {spec.x_shape} got {x.shape} "
                 f"(batch may differ; H/W/C must match)")
+        if activation not in EPILOGUE_ACTIVATIONS:
+            raise ValueError(f"unknown activation {activation!r}; "
+                             f"expected one of {EPILOGUE_ACTIVATIONS}")
         alg = spec.algorithm
         if alg == "winograd":
-            return _wg.winograd_conv2d_pretransformed(
+            y = _wg.winograd_conv2d_pretransformed(
                 x, self.u, spec.ct_h, spec.ct_w, padding=spec.padding,
                 geometry=spec.geometry, precision=self.precision)
+            return _epilogue_jnp(y, bias, activation)
         if alg == "winograd_1d":
-            return _wg.winograd_conv1d_axis_pretransformed(
+            y = _wg.winograd_conv1d_axis_pretransformed(
                 x, self.u, spec.ct_w, spec.geometry, precision=self.precision)
+            return _epilogue_jnp(y, bias, activation)
         if alg == "im2col":
             geom = spec.geometry
             kh, kw, _, mout = spec.w_shape
             a, _ = _im2col.im2row(x, kh, kw, spec.stride, spec.padding, geom)
             y = jnp.matmul(a, self.u, precision=self.precision,
                            preferred_element_type=jnp.float32)
-            return y.reshape(x.shape[0], geom.oh, geom.ow,
-                             mout).astype(x.dtype)
+            y = y.reshape(x.shape[0], geom.oh, geom.ow, mout).astype(x.dtype)
+            return _epilogue_jnp(y, bias, activation)
         if alg == "pallas_winograd":
             from repro.kernels import ops
-            _, _, c, mout = spec.w_shape
             return ops.winograd_conv2d_planned(
+                x, self.u, ct_h=spec.ct_h, ct_w=spec.ct_w,
+                geometry=spec.geometry, stream=spec.stream,
+                c_out=spec.w_shape[3], bias=bias, activation=activation)
+        if alg == "pallas_winograd_materialized":
+            from repro.kernels import ops
+            _, _, c, mout = spec.w_shape
+            y = ops.winograd_conv2d_planned_materialized(
                 x, self.u, ct_h=spec.ct_h, ct_w=spec.ct_w,
                 geometry=spec.geometry, blocks=spec.blocks, c_in=c,
                 c_out=mout)
+            return _epilogue_jnp(y, bias, activation)
         if alg == "pallas_im2col":
             from repro.kernels import ops
             kh, kw, _, mout = spec.w_shape
             return ops.im2col_conv2d_planned(
                 x, self.u, kh=kh, kw=kw, stride=spec.stride,
                 padding=spec.padding, geometry=spec.geometry,
-                blocks=spec.blocks, c_out=mout)
+                blocks=spec.blocks, c_out=mout, bias=bias,
+                activation=activation)
         raise ValueError(alg)
 
     @property
@@ -304,7 +350,8 @@ class ConvPlan:
         spec, g = self.spec, self.spec.geometry
         mout = spec.w_shape[-1]
         n = spec.x_shape[0]
-        if spec.algorithm in ("winograd", "pallas_winograd"):
+        if spec.algorithm in ("winograd", "pallas_winograd",
+                              "pallas_winograd_materialized"):
             return (n, g.out_h, g.out_w, mout)
         if spec.algorithm == "winograd_1d":
             h, w = spec.x_shape[1:3]
@@ -410,7 +457,8 @@ def plan_conv2d(
                     h, wdt, kh, kw, c, padding) else "im2col"
         else:
             resolved = algorithm
-            if resolved in ("winograd", "pallas_winograd") and not suitable:
+            if resolved in ("winograd", "pallas_winograd",
+                            "pallas_winograd_materialized") and not suitable:
                 raise ValueError(
                     f"winograd requested for unsuitable layer "
                     f"k=({kh},{kw}) stride={stride}")
@@ -459,13 +507,16 @@ class Conv1DPlan:
     out_len: int = 0
     build_time_s: float = 0.0
 
-    def __call__(self, x: jax.Array) -> jax.Array:
-        return self.apply(x)
+    def __call__(self, x: jax.Array, **kwargs) -> jax.Array:
+        return self.apply(x, **kwargs)
 
-    def apply(self, x: jax.Array) -> jax.Array:
+    def apply(self, x: jax.Array, bias: jax.Array | None = None,
+              activation: str = "none") -> jax.Array:
         if self.mode in ("as2d", "im2col"):
-            return self.inner.apply(x[:, :, None, :])[:, :, 0, :]
-        # polyphase: y[i] = sum_p (w[p::s] (*) x[p::s])[i]
+            return self.inner.apply(x[:, :, None, :], bias=bias,
+                                    activation=activation)[:, :, 0, :]
+        # polyphase: y[i] = sum_p (w[p::s] (*) x[p::s])[i]. The epilogue can
+        # only run after the cross-phase sum, so it stays an XLA op here.
         s = self.stride
         x = jnp.pad(x, ((0, 0), self.pad, (0, 0)))
         acc = None
@@ -473,7 +524,7 @@ class Conv1DPlan:
             sub_x = x[:, p::s, None, :]
             y = sub.apply(sub_x)[:, :self.out_len, 0, :]
             acc = y if acc is None else acc + y
-        return acc
+        return _epilogue_jnp(acc, bias, activation)
 
 
 def plan_conv1d(
@@ -524,3 +575,109 @@ def plan_conv1d(
                         algorithm="im2col")
     return Conv1DPlan(mode="im2col", inner=inner,
                       build_time_s=time.perf_counter() - t0, **base)
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal Cook-Toom conv1d plans (Mamba's short conv)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DepthwiseConv1DSpec:
+    """Cacheable decisions of a planned (B, L, C) x (r, C) causal depthwise
+    Cook-Toom convolution: the F(m, r) transform set, tile count, padding and
+    kernel blocking -- everything the unplanned path re-derived per call."""
+
+    x_shape: tuple[int, ...]          # (B, L, C) the plan was built for
+    w_shape: tuple[int, ...]          # (r, C)
+    dtype: str
+    output_tile: int
+    backend: str                      # "jnp" | "pallas"
+    ct: CookToom = None
+    n_tiles: int = 0
+    pad_hi: int = 0                   # right pad so tiles cover n_tiles * m
+    blocks: tuple[int, int] | None = None   # (block_s, block_c), pallas only
+
+
+@dataclasses.dataclass(frozen=True)
+class DepthwiseConv1DPlan:
+    """Spec + taps in the Cook-Toom domain. apply(x) performs no cook_toom
+    construction, tile-count or padding derivation -- only the input work."""
+
+    spec: DepthwiseConv1DSpec
+    u: jax.Array                      # (t, C) (jnp) / (t, Cp) (pallas) taps
+    build_time_s: float = 0.0
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        return self.apply(x)
+
+    def apply(self, x: jax.Array) -> jax.Array:
+        spec = self.spec
+        if x.shape[1:] != spec.x_shape[1:]:
+            raise ValueError(
+                f"plan built for input {spec.x_shape} got {x.shape} "
+                f"(batch may differ; L/C must match)")
+        if spec.backend == "pallas":
+            from repro.kernels import ops
+            return ops.ct_depthwise_causal_conv1d_planned(
+                x, self.u, ct=spec.ct, n_tiles=spec.n_tiles,
+                pad_hi=spec.pad_hi, blocks=spec.blocks,
+                c_in=spec.w_shape[1])
+        return _wg.ct_depthwise_causal_conv1d_pretransformed(
+            x, self.u, spec.ct, n_tiles=spec.n_tiles, pad_hi=spec.pad_hi)
+
+
+def plan_depthwise_conv1d(
+    x_shape: tuple[int, ...],
+    w: jax.Array,
+    *,
+    output_tile: int = 4,
+    backend: str = "jnp",
+    dtype=None,
+) -> DepthwiseConv1DPlan:
+    """Plan a causal depthwise Cook-Toom conv (B, L, C) x (r, C) -> (B, L, C).
+
+    Decisions (cook_toom transform set, tile count, padding, Pallas blocking)
+    are made once and cached process-wide keyed on (shape, dtype, output
+    tile, backend); the taps are transformed into the Cook-Toom domain here.
+    models/mamba.py routes its short conv through this, so the hot path does
+    only input work per call.
+    """
+    global _CACHE_HITS, _CACHE_MISSES
+    t0 = time.perf_counter()
+    x_shape = tuple(x_shape)
+    if len(x_shape) != 3 or len(w.shape) != 2 or x_shape[2] != w.shape[1]:
+        raise ValueError(f"expected (B, L, C) x (r, C), got "
+                         f"{x_shape} x {tuple(w.shape)}")
+    r, c = w.shape
+    length = x_shape[1]
+    dtype_str = str(jnp.dtype(dtype or w.dtype))
+    key = ("dwconv1d", x_shape, tuple(w.shape), dtype_str, output_tile,
+           backend)
+    spec = _SPEC_CACHE.get(key) if _cache_enabled() else None
+    if spec is not None:
+        _CACHE_HITS += 1
+    else:
+        _CACHE_MISSES += 1
+        ct = cook_toom(output_tile, r)
+        nt = -(-length // ct.m)
+        blocks = None
+        if backend == "pallas":
+            from repro.kernels import ops
+            blocks = ops.conv1d_ct_blocks(nt, c)
+        elif backend != "jnp":
+            raise ValueError(f"unknown backend {backend!r}")
+        spec = DepthwiseConv1DSpec(
+            x_shape=x_shape, w_shape=tuple(w.shape), dtype=dtype_str,
+            output_tile=output_tile, backend=backend, ct=ct, n_tiles=nt,
+            pad_hi=nt * ct.m - length, blocks=blocks)
+        if _cache_enabled():
+            _SPEC_CACHE[key] = spec
+
+    u = jnp.einsum("ij,jc->ic", jnp.asarray(spec.ct.G, w.dtype), w)  # (t, C)
+    if spec.backend == "pallas":
+        bc = spec.blocks[1]
+        pad_c = -(-c // bc) * bc - c
+        if pad_c:
+            u = jnp.pad(u, ((0, 0), (0, pad_c)))
+    return DepthwiseConv1DPlan(spec=spec, u=u,
+                               build_time_s=time.perf_counter() - t0)

@@ -34,6 +34,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.transforms import CookToom, cook_toom
+# dependency-free shared blocking-granularity rule (repro.kernels stays an
+# optional package; runtime.py imports nothing heavy)
+from repro.kernels.runtime import pick_block as _stream_block
 
 Padding = Literal["SAME", "VALID"]
 
@@ -104,6 +107,106 @@ def conv2d_geometry(h: int, w: int, kh: int, kw: int, mh: int, mw: int,
     out_h = h if padding == "SAME" else h - kh + 1
     out_w = w if padding == "SAME" else w - kw + 1
     return Conv2DGeometry(lo_h, hi_h, nh, lo_w, hi_w, nw, out_h, out_w)
+
+
+class StreamGeometry(NamedTuple):
+    """Halo-blocking geometry for the region-streaming Pallas kernel
+    (kernels/winograd.py:winograd_streamed), derived once at plan time.
+
+    The kernel's grid walks (n_hb, n_wb) blocks of (bh, bw) output tiles;
+    each grid cell reads one overlapping halo strip of the padded input
+    (origin stride bh*mh / bw*mw, extent k-1 larger) and writes one
+    non-overlapping (bh*mh, bw*mw) NHWC output block. Edge blocks are
+    covered by padding the input up to n_hb*bh / n_wb*bw whole tile blocks
+    (`pad_h` / `pad_w` extra rows/cols beyond the convolution padding);
+    the surplus outputs are cropped after the kernel.
+    """
+
+    bh: int           # output-tile rows per grid cell
+    bw: int           # output-tile cols per grid cell
+    n_hb: int         # grid extent along H  (= ceil(n_h / bh))
+    n_wb: int         # grid extent along W  (= ceil(n_w / bw))
+    pad_h: int        # extra rows of input padding for edge blocks
+    pad_w: int        # extra cols of input padding for edge blocks
+    block_c: int      # Pallas channel block
+    block_m: int      # Pallas output-channel block
+    c_pad: int        # C rounded up to block_c
+    m_pad: int        # M rounded up to block_m
+
+
+#: Per-strip fixed cost in tile-equivalents for the stream_geometry score:
+#: each (i, j) grid strip pays DMA setup / loop overhead on top of its
+#: per-tile compute, so blockings that shatter the image into many small
+#: strips lose to slightly-wasteful large strips.
+_STRIP_OVERHEAD_TILES = 16
+
+
+def stream_geometry(n_h: int, n_w: int, c: int, mout: int,
+                    ct_h: CookToom, ct_w: CookToom, *,
+                    vmem_budget_bytes: int = 15 * 2 ** 20) -> StreamGeometry:
+    """Choose the halo blocking for one layer, once, at plan time.
+
+    Candidate (bh, bw) tile-block shapes are scored by estimated cost:
+    padded tile count (edge-block compute waste) plus a fixed per-strip
+    overhead term (many tiny strips lose), tie-broken toward larger region
+    blocks (bigger point-GEMMs). Candidates that do not fit the VMEM budget
+    (halo strip + filter block double-buffered, fp32 accumulator,
+    transformed-input cache, transform transient, output block) are
+    discarded.
+    """
+    th, tw, mh, mw = ct_h.t, ct_w.t, ct_h.m, ct_w.m
+    p = th * tw
+    c_ref = -(-c // _stream_block(c, 128)) * _stream_block(c, 128)
+    m_ref = -(-mout // _stream_block(mout, 128)) * _stream_block(mout, 128)
+
+    def tile_candidates(n_tiles: int) -> list[int]:
+        cand = {b for b in (1, 2, 4, 8, 16) if b <= max(n_tiles, 1)}
+        cand |= {b for b in range(1, 17) if n_tiles % b == 0}
+        return sorted(cand)
+
+    def chan_candidates(dim: int) -> list[int]:
+        cand = {_stream_block(dim, 128)}
+        if dim > 128:
+            cand.add(256)               # fewer, fatter grid steps when it fits
+        return sorted(cand)
+
+    best = None
+    for bc in chan_candidates(c):
+        c_pad = -(-c // bc) * bc
+        for bm in chan_candidates(mout):
+            m_pad = -(-mout // bm) * bm
+            n_cb, n_mb = c_pad // bc, m_pad // bm
+            for bh in tile_candidates(n_h):
+                for bw in tile_candidates(n_w):
+                    n_hb, n_wb = -(-n_h // bh), -(-n_w // bw)
+                    br = bh * bw
+                    if br > 256:
+                        continue
+                    hs, ws = bh * mh + th - mh, bw * mw + tw - mw
+                    vmem = 4 * (2 * hs * ws * bc    # halo strip (x2 buffer)
+                                + 2 * p * bc * bm   # filter block (x2 buffer)
+                                + p * br * bm       # fp32 accumulator
+                                + p * br * c_pad    # transformed-input cache
+                                + p * br * bc       # transform transient
+                                + bh * mh * bw * mw * bm)   # output block
+                    if vmem > vmem_budget_bytes:
+                        continue
+                    # work: padded tiles, scaled by any extra C/M padding
+                    # this blocking forces; overhead: fixed cost per grid
+                    # step (tiny steps lose to slightly-wasteful fat ones).
+                    work = (n_hb * bh * n_wb * bw * c_pad * m_pad
+                            / (c_ref * m_ref))
+                    steps = n_hb * n_wb * n_cb * n_mb
+                    score = (work + _STRIP_OVERHEAD_TILES * steps, -br, -bc)
+                    if best is None or score < best[0]:
+                        best = (score, (bh, bw, n_hb, n_wb, bc, bm,
+                                        c_pad, m_pad))
+    assert best is not None, (n_h, n_w, c, mout)
+    bh, bw, n_hb, n_wb, bc, bm, c_pad, m_pad = best[1]
+    return StreamGeometry(bh=bh, bw=bw, n_hb=n_hb, n_wb=n_wb,
+                          pad_h=(n_hb * bh - n_h) * mh,
+                          pad_w=(n_wb * bw - n_w) * mw,
+                          block_c=bc, block_m=bm, c_pad=c_pad, m_pad=m_pad)
 
 
 class Axis1DGeometry(NamedTuple):
@@ -316,13 +419,26 @@ def ct_depthwise_causal_conv1d(
     b, length, _ = x.shape
     ct = cook_toom(output_tile, r)
     nt = -(-length // ct.m)
-    # causal pad left r-1; pad right so tiles cover nt * m outputs.
-    xp = jnp.pad(x, ((0, 0), (r - 1, nt * ct.m - length), (0, 0)))
-    tiles = _extract_tiles_1d(xp, 1, ct.t, ct.m, nt)     # (B, nt, t, C)
+    u = jnp.einsum("ij,jc->ic", jnp.asarray(ct.G, w.dtype), w)   # (t, C)
+    return ct_depthwise_causal_conv1d_pretransformed(
+        x, u, ct, n_tiles=nt, pad_hi=nt * ct.m - length)
+
+
+def ct_depthwise_causal_conv1d_pretransformed(
+    x: jax.Array, u: jax.Array, ct: CookToom, *, n_tiles: int, pad_hi: int,
+) -> jax.Array:
+    """Planned executor for the depthwise causal Cook-Toom conv: `u` is the
+    pre-transformed (t, C) taps and the tile count / padding come from the
+    plan (core.plan.plan_depthwise_conv1d) -- no per-call cook_toom or
+    geometry derivation."""
+    b, length, c = x.shape
+    r = ct.r
+    # causal pad left r-1; pad right so tiles cover n_tiles * m outputs.
+    xp = jnp.pad(x, ((0, 0), (r - 1, pad_hi), (0, 0)))
+    tiles = _extract_tiles_1d(xp, 1, ct.t, ct.m, n_tiles)   # (B, nt, t, C)
     bt = jnp.asarray(ct.BT, x.dtype)
     at = jnp.asarray(ct.AT, x.dtype)
-    u = jnp.einsum("ij,jc->ic", jnp.asarray(ct.G, w.dtype), w)   # (t, C)
     v = jnp.einsum("it,bstc->bsic", bt, tiles)
-    y = v * u[None, None]                                 # Hadamard, per channel
-    out = jnp.einsum("ot,bstc->bsoc", at, y).reshape(b, nt * ct.m, c)
+    y = v * u.astype(x.dtype)[None, None]                 # Hadamard, per channel
+    out = jnp.einsum("ot,bstc->bsoc", at, y).reshape(b, n_tiles * ct.m, c)
     return out[:, :length].astype(x.dtype)

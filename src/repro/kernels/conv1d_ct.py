@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.transforms import CookToom
+from repro.kernels.runtime import resolve_interpret
 
 
 def _kernel(bt_ref, at_ref, x_ref, u_ref, o_ref):
@@ -39,9 +40,12 @@ def conv1d_ct_fused(
     ct: CookToom,
     block_s: int = 256,
     block_c: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
-    """Returns (B, S, m, C) output tiles. S % block_s == 0, C % block_c == 0."""
+    """Returns (B, S, m, C) output tiles. S % block_s == 0, C % block_c == 0.
+    `interpret=None` resolves via the shared REPRO_PALLAS_COMPILE-aware rule
+    (kernels.runtime)."""
+    interpret = resolve_interpret(interpret)
     b, s, t, c = tiles.shape
     assert t == ct.t and u.shape == (t, c)
     assert s % block_s == 0 and c % block_c == 0, (tiles.shape, block_s, block_c)

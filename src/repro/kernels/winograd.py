@@ -1,30 +1,44 @@
-"""Fused region-wise multi-channel Winograd convolution Pallas kernel.
+"""Fused region-wise multi-channel Winograd convolution Pallas kernels.
 
 TPU-native adaptation of the paper's three-phase scheme. The paper stages
 (input transform -> scatter to matrices in memory -> GEMMs -> gather -> output
-transform) through L1/L2; on TPU we instead *fuse* all three phases in VMEM:
+transform) through L1/L2; on TPU we instead *fuse* all three phases in VMEM.
 
-  grid = (R / bR,  M / bM,  C / bC)        # C innermost: accumulation axis
+Two kernels live here:
+
+`winograd_streamed` -- the halo-aware region-streaming kernel (the planned
+hot path). Nothing but the NHWC input and the NHWC output ever touches HBM:
+
+  grid = (N,  nHb,  nWb,  M / bM,  C / bC)     # C innermost: accumulation
 
   per step:
-    1. load a (bR, th, tw, bC) block of pre-extracted input tiles,
-       apply B^T (.) B  -- a fixed pattern of small matmuls over the tile
-       axes, vectorized over (bR, bC); channels stay on the 128-lane axis
-       (the paper's NHWC/NEON argument, 128 lanes wide instead of 4);
-    2. one *batched* dot_general over the P = th*tw Winograd points:
-       (P, bR, bC) x (P, bC, bM) -> accumulate (P, bR, bM) fp32 in VMEM.
-       This is the paper's "array of GEMMs", batched so the MXU pipeline
-       never drains between points;
-    3. on the last C step, apply A^T (.) A and write the (bR, mh, mw, bM)
-       spatial output block.
+    1. the input BlockSpec reads an *overlapping* halo strip of the padded
+       NHWC input directly from HBM (element-offset / Unblocked indexing:
+       strip (i, j) starts at (i * bh * mh, j * bw * mw) and extends k - 1
+       rows/cols past the next strip's origin). The gather into the
+       (bR, th, tw, bC) overlapping-tile layout happens in VMEM -- a fixed
+       pattern of static slices -- so the ~(t/m)^2 read-amplified tile tensor
+       the pre-streaming path materialized in HBM never exists;
+    2. apply B^T (.) B -- small matmuls over the tile axes, vectorized over
+       (bR, bC); channels stay on the 128-lane axis (the paper's NHWC/NEON
+       argument, 128 lanes wide instead of 4); then one *batched* dot_general
+       over the P = th*tw Winograd points: (P, bR, bC) x (P, bC, bM) ->
+       accumulate (P, bR, bM) fp32 in VMEM. This is the paper's "array of
+       GEMMs", batched so the MXU pipeline never drains between points;
+    3. on the last C step, apply A^T (.) A, run the fused epilogue
+       (bias add + none/relu/gelu), and scatter the (bh*mh, bw*mw, bM)
+       spatial block straight into the NHWC output -- no post-kernel
+       un-tiling transpose/reshape pass.
+
+`winograd_fused` -- the pre-streaming kernel over pre-extracted tiles
+(grid (R/bR, M/bM, C/bC)), kept as the A/B baseline the benchmarks measure
+the streaming win against (benchmarks/per_layer.py, BENCH_PR2.json) and for
+callers that already hold a tile tensor.
 
 The Winograd-domain tensors (the paper's scattered 'A'/'C' matrices) never
-touch HBM -- this fusion is the main beyond-paper optimization and is measured
-in EXPERIMENTS.md section Perf.
-
-Tile extraction (overlapping windows) happens outside the kernel: XLA lowers
-it to strided slices, and it is the only part of the algorithm that cannot be
-expressed as a non-overlapping BlockSpec.
+touch HBM in either kernel; the streaming kernel additionally keeps the
+overlapping-tile tensor and the separate bias/activation round trips out of
+HBM. The HBM-bytes accounting is in EXPERIMENTS.md section Perf.
 """
 
 from __future__ import annotations
@@ -37,6 +51,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.transforms import CookToom
+from repro.kernels.runtime import apply_activation, resolve_interpret
 
 
 def _apply_pair(mat_h, mat_w, x):
@@ -51,6 +66,152 @@ def _apply_pair(mat_h, mat_w, x):
     y = jnp.tensordot(mat_w, y, axes=(1, 2)).transpose(1, 2, 0, 3)
     return y
 
+
+# ---------------------------------------------------------------------------
+# Halo-aware region-streaming kernel
+# ---------------------------------------------------------------------------
+
+def _streamed_kernel(bt_h_ref, bt_w_ref, at_h_ref, at_w_ref, x_ref, u_ref,
+                     bias_ref, o_ref, acc_ref, v_ref, *, n_c: int, bh: int,
+                     bw: int, block_c: int, activation: str, has_bias: bool):
+    m_step = pl.program_id(3)
+    c_step = pl.program_id(4)
+
+    @pl.when(c_step == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    mh, th = at_h_ref.shape
+    mw, tw = at_w_ref.shape
+    br = bh * bw
+
+    # The strip's block index carries the channel slice, so the halo DMA
+    # recurs per (M sweep, C block); the gather+transform below runs only
+    # once per (strip, C block) -- the first M step fills the v cache,
+    # later M steps reuse it.
+    @pl.when(m_step == 0)
+    def _transform():
+        strip = x_ref[0].astype(jnp.float32)         # (Hs, Ws, bC)
+        # VMEM gather: halo strip -> (th, tw, bh, bw, bC) overlapping tiles,
+        # offset-major: one strided slice per in-tile offset (th + tw static
+        # slices total, independent of the region-block size), unrolled at
+        # trace time. Offset-major means the tile axes land leading, which
+        # is exactly the layout the transform contractions below want -- no
+        # region-major transpose of the big tensor ever happens.
+        rows = jnp.stack([strip[r:r + (bh - 1) * mh + 1:mh]
+                          for r in range(th)], 0)         # (th, bh, Ws, bC)
+        x = jnp.stack([rows[:, :, q:q + (bw - 1) * mw + 1:mw]
+                       for q in range(tw)], 0)            # (tw, th, bh, bw, bC)
+        # input transform B^T (.) B: contract tile axes, (bh, bw, bC) rides.
+        v = jnp.tensordot(bt_h_ref[...], x, axes=(1, 1))  # (i, tw, bh, bw, bC)
+        v = jnp.tensordot(bt_w_ref[...], v, axes=(1, 1))  # (j, i, bh, bw, bC)
+        v_ref[c_step] = v.transpose(1, 0, 2, 3, 4).reshape(
+            th * tw, br, block_c)                         # (P, bR, bC)
+
+    u = u_ref[...]                                   # (P, bC, bM)
+    # batched point-GEMM: the paper's t^2 GEMMs as one dot_general.
+    acc_ref[...] += jax.lax.dot_general(
+        v_ref[c_step], u.astype(jnp.float32),
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)          # (P, bR, bM)
+
+    @pl.when(c_step == n_c - 1)
+    def _store():
+        bm_ = acc_ref.shape[-1]
+        y = acc_ref[...].reshape(th, tw, bh, bw, bm_)
+        # output transform A^T (.) A, same contraction pattern.
+        out = jnp.tensordot(at_h_ref[...], y, axes=(1, 0))   # (mi, tw, bh, bw, bM)
+        out = jnp.tensordot(at_w_ref[...], out, axes=(1, 1)) # (mj, mi, bh, bw, bM)
+        # fused epilogue: bias + activation on the fp32 accumulator, in VMEM.
+        if has_bias:
+            out = out + bias_ref[0][None, None, None, None, :]
+        out = apply_activation(out, activation)
+        # NHWC scatter: un-tile to (bh*mh, bw*mw) in VMEM and write the
+        # spatial block straight into the NHWC output.
+        out = out.transpose(2, 1, 3, 0, 4)               # (bh, mi, bw, mj, bM)
+        o_ref[0] = out.reshape(bh * mh, bw * mw, bm_).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "ct_h", "ct_w", "bh", "bw", "block_c", "block_m", "activation",
+    "interpret"))
+def winograd_streamed(
+    xp: jax.Array,           # (N, Hp, Wp, Cp) halo-padded NHWC input
+    u: jax.Array,            # (P, Cp, Mp) Winograd-domain filter (P = th*tw)
+    bias: jax.Array | None,  # (1, Mp) fp32 epilogue bias, or None
+    *,
+    ct_h: CookToom,
+    ct_w: CookToom,
+    bh: int,
+    bw: int,
+    block_c: int = 128,
+    block_m: int = 128,
+    activation: str = "none",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Halo-streaming transform+GEMM+inverse+epilogue over the padded input.
+
+    `xp` must be padded so Hp = nHb*bh*mh + (th - mh) and
+    Wp = nWb*bw*mw + (tw - mw) for integer strip counts nHb/nWb (ops.py pads
+    from the plan's StreamGeometry). Returns (N, nHb*bh*mh, nWb*bw*mw, Mp)
+    NHWC output; the caller crops the geometry surplus.
+    """
+    interpret = resolve_interpret(interpret)
+    n, hp, wp, c = xp.shape
+    p, c2, m = u.shape
+    th, tw, mh, mw = ct_h.t, ct_w.t, ct_h.m, ct_w.m
+    sh, sw = bh * mh, bw * mw                        # strip origin stride
+    hs, ws = sh + th - mh, sw + tw - mw              # halo strip extent
+    assert p == th * tw and c == c2, (xp.shape, u.shape)
+    assert c % block_c == 0 and m % block_m == 0, (xp.shape, u.shape,
+                                                   (block_c, block_m))
+    n_hb, rh = divmod(hp - (th - mh), sh)
+    n_wb, rw = divmod(wp - (tw - mw), sw)
+    assert rh == 0 and rw == 0, (xp.shape, (bh, bw), (mh, mw))
+    n_c = c // block_c
+    grid = (n, n_hb, n_wb, m // block_m, n_c)
+
+    has_bias = bias is not None
+    if bias is None:
+        bias = jnp.zeros((1, m), jnp.float32)
+    bt_h = jnp.asarray(ct_h.BT, jnp.float32)
+    bt_w = jnp.asarray(ct_w.BT, jnp.float32)
+    at_h = jnp.asarray(ct_h.AT, jnp.float32)
+    at_w = jnp.asarray(ct_w.AT, jnp.float32)
+    whole = lambda arr: pl.BlockSpec(arr.shape,
+                                     lambda n_, i, j, mb, cb: (0,) * arr.ndim)
+    return pl.pallas_call(
+        functools.partial(_streamed_kernel, n_c=n_c, bh=bh, bw=bw,
+                          block_c=block_c, activation=activation,
+                          has_bias=has_bias),
+        grid=grid,
+        in_specs=[
+            whole(bt_h), whole(bt_w), whole(at_h), whole(at_w),
+            # overlapping halo strips: element-offset indexing; strip (i, j)
+            # origin is (i*sh, j*sw), extent (hs, ws) with hs > sh, ws > sw.
+            pl.BlockSpec((1, hs, ws, block_c),
+                         lambda n_, i, j, mb, cb: (n_, i * sh, j * sw,
+                                                   cb * block_c),
+                         indexing_mode=pl.Unblocked()),
+            pl.BlockSpec((p, block_c, block_m),
+                         lambda n_, i, j, mb, cb: (0, cb, mb)),
+            pl.BlockSpec((1, block_m), lambda n_, i, j, mb, cb: (0, mb)),
+        ],
+        out_specs=pl.BlockSpec((1, sh, sw, block_m),
+                               lambda n_, i, j, mb, cb: (n_, i, j, mb)),
+        out_shape=jax.ShapeDtypeStruct((n, n_hb * sh, n_wb * sw, m), xp.dtype),
+        scratch_shapes=[pltpu.VMEM((p, bh * bw, block_m), jnp.float32),
+                        # transformed-input cache: filled on the first M
+                        # step of each strip, reused by the rest of the
+                        # (M, C) sweep.
+                        pltpu.VMEM((n_c, p, bh * bw, block_c), jnp.float32)],
+        interpret=interpret,
+    )(bt_h, bt_w, at_h, at_w, xp, u, bias)
+
+
+# ---------------------------------------------------------------------------
+# Pre-extracted-tiles kernel (A/B baseline for the streaming path)
+# ---------------------------------------------------------------------------
 
 def _winograd_kernel(bt_h_ref, bt_w_ref, at_h_ref, at_w_ref, x_ref, u_ref,
                      o_ref, acc_ref, *, n_c: int):
@@ -92,13 +253,16 @@ def winograd_fused(
     block_r: int = 128,
     block_c: int = 128,
     block_m: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Fused transform+GEMM+inverse over pre-extracted tiles.
 
     Returns (R, mh, mw, M) spatial output tiles. R, C, M must be multiples of
-    the block sizes (ops.py pads).
+    the block sizes (ops.py pads). `interpret=None` resolves via the shared
+    REPRO_PALLAS_COMPILE-aware rule (kernels.runtime), so direct callers
+    compile on TPU just like the ops.py wrappers.
     """
+    interpret = resolve_interpret(interpret)
     r_, th, tw, c = tiles.shape
     p, c2, m = u.shape
     assert (th, tw) == (ct_h.t, ct_w.t) and p == th * tw and c == c2

@@ -48,10 +48,14 @@ def stem(params: dict, mel: jax.Array, algorithm: str = "auto",
     """mel: (B, T, n_mels) -> frame embeddings (B, T // 2, d_model).
 
     With `plans` (from plan_stem) both convolutions run their pre-built
-    Conv1DPlans -- no per-call filter transform or geometry work."""
+    Conv1DPlans -- no per-call filter transform or geometry work -- and the
+    bias+gelu epilogue goes through the plan's fused path (in-kernel on the
+    Pallas executors, one XLA op otherwise)."""
     if plans is not None:
-        x = jax.nn.gelu(plans["conv1"].apply(mel) + params["conv1_b"])
-        return jax.nn.gelu(plans["conv2"].apply(x) + params["conv2_b"])
+        x = plans["conv1"].apply(mel, bias=params["conv1_b"],
+                                 activation="gelu")
+        return plans["conv2"].apply(x, bias=params["conv2_b"],
+                                    activation="gelu")
     x = conv1d(mel, params["conv1_w"], stride=1, padding="SAME",
                algorithm=algorithm)
     x = jax.nn.gelu(x + params["conv1_b"])

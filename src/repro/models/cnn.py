@@ -123,7 +123,8 @@ def init_cnn(key, specs, c_in: int, dtype=_F32, res: int = 224) -> dict:
 def _layer_algorithm(spec: Conv, algorithm: Algorithm) -> Algorithm:
     """Forced winograd falls back to im2col on unsuitable layers -- the
     paper's mixed policy applied to a forced global setting."""
-    if algorithm in ("winograd", "pallas_winograd") and \
+    if algorithm in ("winograd", "pallas_winograd",
+                     "pallas_winograd_materialized") and \
             not winograd_suitable(spec.kh, spec.kw, spec.stride):
         return "im2col"
     return algorithm

@@ -136,15 +136,16 @@ def conv2d_layer(p: Params, x: jax.Array, *, plan=None, relu: bool = True,
                  **conv_kwargs) -> jax.Array:
     """Conv + bias + optional relu. With `plan` (a repro.core.plan.ConvPlan,
     built once at init/weight-load time) execution performs no per-call
-    filter transform or geometry work; without it, falls back to the
-    per-call dispatcher (conv_kwargs: stride/padding/algorithm/...)."""
+    filter transform or geometry work, and the bias+relu epilogue rides the
+    plan's fused path (in-kernel on the Pallas executors -- the conv output
+    never revisits HBM for the elementwise work). Without a plan, falls back
+    to the per-call dispatcher (conv_kwargs: stride/padding/algorithm/...)."""
+    activation = "relu" if relu else "none"
     if plan is not None:
-        y = plan.apply(x)
-    else:
-        from repro.core.dispatch import conv2d
-        y = conv2d(x, p["w"], **conv_kwargs)
-    y = y + p["b"]
-    return jax.nn.relu(y) if relu else y
+        return plan.apply(x, bias=p["b"], activation=activation)
+    from repro.core.dispatch import conv2d
+    return conv2d(x, p["w"], bias=p["b"], activation=activation,
+                  **conv_kwargs)
 
 
 # ---------------------------------------------------------------------------

@@ -1,10 +1,12 @@
 """Mamba-1 (S6) block: gated selective state-space layer.
 
 The short depthwise causal conv (k = d_conv) is where the paper's technique
-lands in this family: it routes through the region-wise 1D Cook-Toom algorithm
-(core.winograd.ct_depthwise_causal_conv1d / kernels.conv1d_ct), cutting the
-conv multiply count by m*r/t (F(4,4): 2.29x). `SSMConfig.conv_algorithm`
-switches between cook_toom and the direct conv for the A/B benchmarks.
+lands in this family: it routes through a cached region-wise 1D Cook-Toom
+plan (core.plan.plan_depthwise_conv1d -> core.winograd /
+kernels.conv1d_ct), cutting the conv multiply count by m*r/t (F(4,4): 2.29x)
+with the transform set, tile counts and padding decided once per shape.
+`SSMConfig.conv_algorithm` switches between cook_toom and the direct conv
+for the A/B benchmarks.
 
 Selective scan: h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ; y_t = C_t h_t + D x_t.
 Implemented as a *chunked* linear recurrence: sequential lax.scan over chunks
@@ -21,7 +23,7 @@ import os
 import jax
 import jax.numpy as jnp
 
-from repro.core.winograd import ct_depthwise_causal_conv1d
+from repro.core.plan import plan_depthwise_conv1d
 from repro.models.config import ArchConfig
 from repro.models.layers import dense, truncated_normal_init
 
@@ -168,7 +170,12 @@ def mamba_block(p, x: jax.Array, cfg: ArchConfig,
     xs_raw = xs                                        # pre-conv (decode cache)
 
     if s.conv_algorithm == "cook_toom":
-        xs = ct_depthwise_causal_conv1d(xs, p["conv_w"].astype(xs.dtype))
+        # Planned path: the F(m, r) transform set, tile count, padding and
+        # blocking come from the process-level plan cache (decided once per
+        # (L, C) shape); only the tap transform + input work are per-call.
+        conv_plan = plan_depthwise_conv1d(xs.shape,
+                                          p["conv_w"].astype(xs.dtype))
+        xs = conv_plan.apply(xs)
     else:
         pad = jnp.pad(xs, ((0, 0), (s.d_conv - 1, 0), (0, 0)))
         xs = sum(pad[:, k:k + l] * p["conv_w"][k].astype(xs.dtype)[None, None]

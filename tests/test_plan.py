@@ -9,7 +9,8 @@ import pytest
 from repro.core import winograd as wg
 from repro.core.im2col import direct_conv2d
 from repro.core.plan import (ConvPlan, clear_plan_cache, plan_cache_info,
-                             plan_conv1d, plan_conv2d)
+                             plan_conv1d, plan_conv2d,
+                             plan_depthwise_conv1d)
 
 from conftest import rel_err
 
@@ -224,3 +225,49 @@ def test_conv1d_polyphase_subplans_are_pretransformed(rng):
     p = plan_conv1d(x.shape, w, stride=2)
     assert len(p.subplans) == 2
     assert all(isinstance(s, ConvPlan) for s in p.subplans)
+
+
+# ---------------------------------------------------------------------------
+# depthwise causal Cook-Toom conv1d plans (Mamba's short conv)
+# ---------------------------------------------------------------------------
+
+def _direct_depthwise_causal(x, w):
+    r = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (r - 1, 0), (0, 0)))
+    return sum(xp[:, k:k + x.shape[1]] * w[k][None, None] for k in range(r))
+
+
+@pytest.mark.parametrize("length,r", [(64, 4), (33, 4), (20, 3)])
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_depthwise_plan_matches_direct(rng, length, r, backend):
+    x = jnp.asarray(rng.standard_normal((2, length, 16)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((r, 16)) / r, jnp.float32)
+    p = plan_depthwise_conv1d(x.shape, w, backend=backend)
+    got = p.apply(x)
+    assert got.shape == x.shape
+    assert rel_err(got, _direct_depthwise_causal(x, w)) < 1e-4
+
+
+def test_depthwise_plan_decisions_are_cached(rng):
+    """Second plan of the same (L, C) shape is a spec-cache hit: cook_toom,
+    tile count, padding, and blocking are decided once per shape."""
+    x_shape = (2, 48, 16)
+    w = jnp.asarray(rng.standard_normal((4, 16)) / 4, jnp.float32)
+    p1 = plan_depthwise_conv1d(x_shape, w)
+    before = plan_cache_info()["hits"]
+    p2 = plan_depthwise_conv1d(x_shape, w)
+    assert plan_cache_info()["hits"] == before + 1
+    assert p2.spec is p1.spec
+    # batch may differ, L/C must match
+    x5 = jnp.asarray(jnp.zeros((5,) + x_shape[1:]), jnp.float32)
+    assert p1.apply(x5).shape == x5.shape
+    with pytest.raises(ValueError, match="plan built for"):
+        p1.apply(jnp.zeros((2, 47, 16), jnp.float32))
+
+
+def test_depthwise_plan_taps_are_pretransformed(rng):
+    """apply() never re-derives the transform set: u is already (t, C)."""
+    w = jnp.asarray(rng.standard_normal((4, 8)) / 4, jnp.float32)
+    p = plan_depthwise_conv1d((1, 32, 8), w)
+    assert p.u.shape == (p.spec.ct.t, 8)
+    assert p.spec.n_tiles == 8 and p.spec.ct.m == 4

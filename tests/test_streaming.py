@@ -1,0 +1,236 @@
+"""Halo-aware region-streaming Winograd path (kernels.winograd
+winograd_streamed + the planned pallas_winograd executor).
+
+Covers: oracle equivalence vs jax.lax.conv_general_dilated across odd H/W
+(non-multiples of the tile), SAME/VALID, batch > 1, C/M not multiples of the
+block sizes, and every fused epilogue activation; the jaxpr regression that
+the streamed path materializes no (R, th, tw, C) tile tensor and performs no
+post-kernel un-tiling transpose; the fused GEMM epilogue; and the shared
+interpret-mode resolution rule."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import winograd as wg
+from repro.core.plan import clear_plan_cache, plan_conv2d
+from repro.kernels import ops, ref
+from repro.kernels import matmul as k_matmul
+from repro.kernels import winograd as k_winograd
+from repro.kernels import runtime
+
+from conftest import rel_err
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    clear_plan_cache()
+    yield
+    clear_plan_cache()
+
+
+def _oracle(x, w, bias, activation, padding):
+    y = ref.conv2d_direct(x, w, padding=padding)
+    if bias is not None:
+        y = y + bias
+    if activation == "relu":
+        y = jax.nn.relu(y)
+    elif activation == "gelu":
+        y = jax.nn.gelu(y)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# oracle equivalence of the planned streaming executor
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("h,w", [(11, 13), (9, 16)])   # odd / non-tile-multiple
+@pytest.mark.parametrize("padding", ["SAME", "VALID"])
+@pytest.mark.parametrize("batch", [1, 3])
+def test_streamed_plan_vs_direct(rng, h, w, padding, batch):
+    c, m = 5, 7                                  # below the block quantum
+    x = jnp.asarray(rng.standard_normal((batch, h, w, c)), jnp.float32)
+    wt = jnp.asarray(rng.standard_normal((3, 3, c, m)) / 3, jnp.float32)
+    p = plan_conv2d(x.shape, wt, padding=padding, algorithm="pallas_winograd")
+    assert p.algorithm == "pallas_winograd"
+    got = p.apply(x)
+    want = _oracle(x, wt, None, "none", padding)
+    assert got.shape == want.shape
+    assert rel_err(got, want) < 1e-4
+
+
+@pytest.mark.parametrize("activation", ["none", "relu", "gelu"])
+def test_streamed_fused_epilogue_vs_direct(rng, activation):
+    x = jnp.asarray(rng.standard_normal((2, 14, 10, 6)), jnp.float32)
+    wt = jnp.asarray(rng.standard_normal((3, 3, 6, 9)) / 3, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((9,)), jnp.float32)
+    p = plan_conv2d(x.shape, wt, algorithm="pallas_winograd")
+    got = p.apply(x, bias=b, activation=activation)
+    want = _oracle(x, wt, b, activation, "SAME")
+    assert rel_err(got, want) < 1e-4
+
+
+def test_streamed_multiblock_channels(rng):
+    """C and M above one block exercise the cross-C-step accumulator and the
+    M-block grid axis; C/M deliberately not multiples of 128."""
+    x = jnp.asarray(rng.standard_normal((1, 12, 12, 130)), jnp.float32)
+    wt = jnp.asarray(rng.standard_normal((3, 3, 130, 136)) / 9, jnp.float32)
+    p = plan_conv2d(x.shape, wt, algorithm="pallas_winograd")
+    got = p.apply(x)
+    assert rel_err(got, _oracle(x, wt, None, "none", "SAME")) < 1e-4
+
+
+def test_streamed_5x5_filter(rng):
+    x = jnp.asarray(rng.standard_normal((2, 13, 13, 4)), jnp.float32)
+    wt = jnp.asarray(rng.standard_normal((5, 5, 4, 6)) / 25, jnp.float32)
+    p = plan_conv2d(x.shape, wt, algorithm="pallas_winograd")
+    got = p.apply(x)
+    assert rel_err(got, _oracle(x, wt, None, "none", "SAME")) < 1e-4
+
+
+def test_materialized_plan_out_shape(rng):
+    """out_shape must resolve for every winograd-family algorithm."""
+    w = jnp.asarray(rng.standard_normal((3, 3, 8, 12)) / 3, jnp.float32)
+    for alg in ("pallas_winograd", "pallas_winograd_materialized"):
+        p = plan_conv2d((2, 17, 11, 8), w, algorithm=alg)
+        assert p.out_shape == (2, 17, 11, 12)
+
+
+def test_streamed_matches_materialized_baseline(rng):
+    """Streaming executor == the pre-streaming materialized-tiles executor
+    (the A/B pair benchmarks/per_layer.py measures)."""
+    x = jnp.asarray(rng.standard_normal((2, 17, 11, 8)), jnp.float32)
+    wt = jnp.asarray(rng.standard_normal((3, 3, 8, 12)) / 3, jnp.float32)
+    p_new = plan_conv2d(x.shape, wt, algorithm="pallas_winograd")
+    p_old = plan_conv2d(x.shape, wt,
+                        algorithm="pallas_winograd_materialized")
+    assert rel_err(p_new.apply(x), p_old.apply(x)) < 1e-5
+
+
+def test_streamed_kernel_direct_call(rng):
+    """winograd_streamed standalone: pre-padded input, aligned channels."""
+    from repro.core.transforms import cook_toom
+    ct = cook_toom(4, 3)
+    bh = bw = 2
+    c, m = 8, 8
+    xp = jnp.asarray(rng.standard_normal((1, 2 * bh * 4 + 2, bw * 4 + 2, c)),
+                     jnp.float32)
+    u = jnp.asarray(rng.standard_normal((36, c, m)), jnp.float32)
+    y = k_winograd.winograd_streamed(xp, u, None, ct_h=ct, ct_w=ct,
+                                     bh=bh, bw=bw, block_c=c, block_m=m,
+                                     interpret=True)
+    assert y.shape == (1, 2 * bh * 4, bw * 4, m)
+    # reference: extract tiles by hand and run the tiles-domain oracle
+    tiles = wg._extract_tiles_1d(xp, 1, ct.t, ct.m, 2 * bh)
+    tiles = wg._extract_tiles_1d(tiles, 3, ct.t, ct.m, bw)
+    tiles = tiles.transpose(0, 1, 3, 2, 4, 5).reshape(2 * bh * bw, ct.t,
+                                                      ct.t, c)
+    want = ref.winograd_fused(tiles, u, ct_h=ct, ct_w=ct)
+    want = want.reshape(1, 2 * bh, bw, 4, 4, m).transpose(0, 1, 3, 2, 4, 5)
+    want = want.reshape(1, 2 * bh * 4, bw * 4, m)
+    assert rel_err(y, want) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# jaxpr regression: nothing materializes the tile tensor, nothing un-tiles
+# ---------------------------------------------------------------------------
+
+def _top_level_shapes(jaxpr):
+    for eqn in jaxpr.eqns:
+        for v in eqn.outvars:
+            yield eqn.primitive.name, tuple(getattr(v.aval, "shape", ()))
+
+
+def test_streamed_jaxpr_has_no_tile_intermediate(rng):
+    """The planned streaming path must not materialize a (R, th, tw, C)
+    overlapping-tile tensor in HBM nor run a post-kernel un-tiling
+    transpose; the whole algorithm lives inside one pallas_call."""
+    x = jnp.asarray(rng.standard_normal((1, 20, 20, 12)), jnp.float32)
+    wt = jnp.asarray(rng.standard_normal((3, 3, 12, 10)) / 3, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((10,)), jnp.float32)
+    p = plan_conv2d(x.shape, wt, algorithm="pallas_winograd")
+    th = tw = p.spec.ct_h.t
+    jaxpr = jax.make_jaxpr(
+        lambda xx: p.apply(xx, bias=b, activation="relu"))(x).jaxpr
+
+    tile_like = [s for _, s in _top_level_shapes(jaxpr)
+                 if len(s) == 4 and s[1] == th and s[2] == tw]
+    assert not tile_like, f"tile tensor materialized: {tile_like}"
+    untile = [s for nm, s in _top_level_shapes(jaxpr)
+              if nm == "transpose" and len(s) >= 5]
+    assert not untile, f"post-kernel un-tiling transpose: {untile}"
+    # the epilogue is fused: no add/max on the full NHWC output outside
+    # the kernel (bias broadcast add would be a top-level add of rank 4)
+    epilogue = [nm for nm, s in _top_level_shapes(jaxpr)
+                if nm in ("add", "max") and len(s) == 4]
+    assert not epilogue, f"unfused epilogue ops: {epilogue}"
+
+
+def test_materialized_jaxpr_shows_what_streaming_removed(rng):
+    """Sanity check that the regression assertions have teeth: the
+    pre-streaming executor does materialize tiles and does un-tile."""
+    x = jnp.asarray(rng.standard_normal((1, 20, 20, 12)), jnp.float32)
+    wt = jnp.asarray(rng.standard_normal((3, 3, 12, 10)) / 3, jnp.float32)
+    p = plan_conv2d(x.shape, wt, algorithm="pallas_winograd_materialized")
+    th = tw = p.spec.ct_h.t
+    jaxpr = jax.make_jaxpr(p.apply)(x).jaxpr
+    tile_like = [s for _, s in _top_level_shapes(jaxpr)
+                 if len(s) == 4 and s[1] == th and s[2] == tw]
+    untile = [s for nm, s in _top_level_shapes(jaxpr)
+              if nm == "transpose" and len(s) >= 5]
+    assert tile_like and untile
+
+
+# ---------------------------------------------------------------------------
+# fused GEMM epilogue (im2col path)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("activation", ["none", "relu", "gelu"])
+def test_matmul_kernel_fused_epilogue(rng, activation):
+    a = jnp.asarray(rng.standard_normal((128, 128)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((128, 128)), jnp.float32)
+    bias = jnp.asarray(rng.standard_normal((1, 128)), jnp.float32)
+    got = k_matmul.matmul(a, b, bias=bias, activation=activation,
+                          interpret=True)
+    want = runtime.apply_activation(
+        jnp.matmul(a, b, preferred_element_type=jnp.float32) + bias,
+        activation)
+    assert rel_err(got, want) < 1e-5
+
+
+def test_im2col_planned_fused_epilogue(rng):
+    x = jnp.asarray(rng.standard_normal((2, 10, 10, 6)), jnp.float32)
+    wt = jnp.asarray(rng.standard_normal((3, 3, 6, 9)) / 3, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((9,)), jnp.float32)
+    p = plan_conv2d(x.shape, wt, stride=2, algorithm="pallas_im2col")
+    got = p.apply(x, bias=b, activation="relu")
+    want = jax.nn.relu(ref.conv2d_direct(x, wt, stride=2) + b)
+    assert rel_err(got, want) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# shared interpret-mode resolution (REPRO_PALLAS_COMPILE-aware defaults)
+# ---------------------------------------------------------------------------
+
+def test_default_interpret_env_rule(monkeypatch):
+    monkeypatch.delenv("REPRO_PALLAS_COMPILE", raising=False)
+    on_tpu = jax.default_backend() == "tpu"
+    assert runtime.default_interpret() == (not on_tpu)
+    monkeypatch.setenv("REPRO_PALLAS_COMPILE", "1")
+    assert runtime.default_interpret() is False
+    assert runtime.resolve_interpret(True) is True
+    assert runtime.resolve_interpret(False) is False
+
+
+def test_winograd_fused_interpret_defaults_to_runtime_rule(rng):
+    """Satellite regression: winograd_fused no longer hardcodes
+    interpret=True -- with no argument it follows the shared rule (True on
+    this CPU-only host) and still matches the oracle."""
+    from repro.core.transforms import cook_toom
+    ct = cook_toom(2, 3)
+    tiles = jnp.asarray(rng.standard_normal((128, ct.t, ct.t, 128)),
+                        jnp.float32)
+    u = jnp.asarray(rng.standard_normal((ct.t * ct.t, 128, 128)), jnp.float32)
+    got = k_winograd.winograd_fused(tiles, u, ct_h=ct, ct_w=ct)
+    assert rel_err(got, ref.winograd_fused(tiles, u, ct_h=ct, ct_w=ct)) < 1e-4
