@@ -3,11 +3,32 @@ layer-shape inventories of the paper's five networks."""
 
 from __future__ import annotations
 
+import subprocess
 import time
 from typing import Callable
 
 import jax
 import numpy as np
+
+
+def bench_metadata() -> dict:
+    """Environment stamp for emitted BENCH_*.json artifacts: jax version,
+    backend/device kind, git SHA and a timestamp, so the perf trajectory is
+    comparable across runs and machines."""
+    try:
+        sha = subprocess.run(["git", "rev-parse", "HEAD"],
+                             capture_output=True, text=True,
+                             timeout=10).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        sha = "unknown"
+    dev = jax.devices()[0]
+    return {"jax_version": jax.__version__,
+            "backend": jax.default_backend(),
+            "device_kind": getattr(dev, "device_kind", str(dev)),
+            "device_count": jax.device_count(),
+            "git_sha": sha,
+            "timestamp_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ",
+                                           time.gmtime())}
 
 
 def time_jitted(fn: Callable, *args, warmup: int = 2, iters: int = 5,
@@ -97,6 +118,60 @@ def materialized_hbm_bytes(spec, batch: int = 1) -> int:
     epilogue = 4 * out_nhwc                   # bias add + relu, each r+w
     return (read_x + write_tiles + read_tiles + read_u + write_kernel_out
             + untile + epilogue)
+
+
+def separable_fused_hbm_bytes(spec, batch: int = 1) -> int:
+    """Analytic HBM bytes per call of the FUSED separable-block kernel
+    (kernels.depthwise.separable_streamed, spec a plan.SeparableSpec): halo
+    strip reads (the input block index carries the channel slice and recurs
+    per pointwise M block), depthwise-tap and pointwise-filter block reads,
+    and the NHWC output write. The depthwise -> pointwise intermediate
+    moves ZERO bytes -- it lives in the kernel's VMEM z-cache."""
+    s = spec.stream
+    th, tw = spec.ct_h.t, spec.ct_w.t
+    mh, mw = spec.ct_h.m, spec.ct_w.m
+    p = th * tw
+    hs = s.bh * mh + th - mh
+    ws = s.bw * mw + tw - mw
+    n_strips = batch * s.n_hb * s.n_wb
+    n_mb = s.m_pad // s.block_m
+    read_x = n_strips * hs * ws * s.c_pad * n_mb * 4
+    read_u_dw = n_strips * p * s.c_pad * n_mb * 4
+    read_u_pw = n_strips * s.c_pad * s.m_pad * 4
+    write_y = batch * (s.n_hb * s.bh * mh) * (s.n_wb * s.bw * mw) \
+        * s.m_pad * 4
+    return read_x + read_u_dw + read_u_pw + write_y
+
+
+def separable_unfused_hbm_bytes(dw_spec, pw_mm: int, pw_k: int, pw_n: int,
+                                blocks: tuple[int, int, int],
+                                batch: int = 1) -> int:
+    """Analytic HBM bytes per call of the UNFUSED Pallas separable pipeline:
+    the streamed depthwise kernel (one C sweep of halo strips + taps +
+    intermediate write), then the pointwise GEMM kernel re-reading the
+    intermediate once per output-channel block plus its filter blocks and
+    output write. `dw_spec` is the pallas_depthwise ConvSpec; (pw_mm, pw_k,
+    pw_n) the pointwise GEMM dims; `blocks` its (bm, bk, bn)."""
+    s = dw_spec.stream
+    th, tw = dw_spec.ct_h.t, dw_spec.ct_w.t
+    mh, mw = dw_spec.ct_h.m, dw_spec.ct_w.m
+    p = th * tw
+    hs = s.bh * mh + th - mh
+    ws = s.bw * mw + tw - mw
+    n_strips = batch * s.n_hb * s.n_wb
+    read_x = n_strips * hs * ws * s.c_pad * 4
+    read_u_dw = n_strips * p * s.c_pad * 4
+    write_z = batch * (s.n_hb * s.bh * mh) * (s.n_wb * s.bw * mw) \
+        * s.c_pad * 4
+    bm_, bk_, bn_ = blocks
+    mm_pad = -(-pw_mm // bm_) * bm_
+    k_pad = -(-pw_k // bk_) * bk_
+    n_pad = -(-pw_n // bn_) * bn_
+    n_nb = n_pad // bn_
+    read_z = mm_pad * k_pad * n_nb * 4          # A re-read per N block
+    read_u_pw = (mm_pad // bm_) * k_pad * n_pad * 4
+    write_y = mm_pad * n_pad * 4
+    return read_x + read_u_dw + write_z + read_z + read_u_pw + write_y
 
 
 def conv_layer_inventory(network: str) -> list[dict]:

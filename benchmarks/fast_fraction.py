@@ -27,12 +27,14 @@ def bench(net: str, iters: int, warmup: int) -> dict:
     rng = np.random.default_rng(0)
     t_fast_im2row = t_fast_ours = t_rest = 0.0
     for l in conv_layer_inventory(net):
+        groups = l.get("groups", 1)
         x = jnp.asarray(rng.standard_normal(
             (1, l["h"], l["w"], l["c_in"])), jnp.float32)
         w = jnp.asarray(rng.standard_normal(
-            (l["kh"], l["kw"], l["c_in"], l["c_out"]))
+            (l["kh"], l["kw"], l["c_in"] // groups, l["c_out"]))
             / (l["kh"] * l["kw"]), jnp.float32)
-        kw = dict(kh=l["kh"], kw=l["kw"], c_out=l["c_out"], stride=l["stride"])
+        kw = dict(kh=l["kh"], kw=l["kw"], c_out=l["c_out"],
+                  stride=l["stride"], groups=groups)
         t_i = time_jitted(functools.partial(_run_layer, algorithm="im2col",
                                             **kw), x, w,
                           warmup=warmup, iters=iters)

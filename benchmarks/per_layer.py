@@ -26,9 +26,11 @@ import numpy as np
 from repro.core import dispatch
 from repro.core import plan as planlib
 
-from benchmarks.common import (conv_layer_inventory, materialized_hbm_bytes,
-                               pairwise_min_times, streamed_hbm_bytes,
-                               time_jitted)
+from benchmarks.common import (bench_metadata, conv_layer_inventory,
+                               materialized_hbm_bytes, pairwise_min_times,
+                               separable_fused_hbm_bytes,
+                               separable_unfused_hbm_bytes,
+                               streamed_hbm_bytes, time_jitted)
 
 NETWORKS = ["vgg16", "vgg19", "googlenet", "inception_v3", "squeezenet"]
 
@@ -56,6 +58,27 @@ def vgg_style_layers(scale: int = 1) -> list[dict]:
                  stride=1)
         out.append(l)
     return out
+
+
+#: The stride-1 depthwise-separable block shapes of MobileNet-v1 at paper
+#: resolution -- the "mobilenet config" ladder the separable-block A/B runs
+#: on (BENCH_PR3.json). Each row is one SeparableConv: a 3x3 depthwise conv
+#: (groups = C_in, multiplier 1) followed by a 1x1 pointwise conv.
+#: `mobilenet_quick` halves the spatial size for CI.
+MOBILENET_LAYERS = [
+    dict(name="sep2", k=3, h=112, w=112, c_in=32, c_out=64),
+    dict(name="sep4", k=3, h=56, w=56, c_in=128, c_out=128),
+    dict(name="sep6", k=3, h=28, w=28, c_in=256, c_out=256),
+    dict(name="sep8", k=3, h=14, w=14, c_in=512, c_out=512),
+    dict(name="sep14", k=3, h=7, w=7, c_in=1024, c_out=1024),
+]
+
+
+def mobilenet_layers(scale: int = 1) -> list[dict]:
+    if scale == 1:
+        return [dict(l) for l in MOBILENET_LAYERS]
+    return [dict(l, h=max(l["h"] // scale, 8), w=max(l["w"] // scale, 8))
+            for l in MOBILENET_LAYERS]
 
 
 def bench_layer_pallas(layer: dict, iters: int, warmup: int) -> dict:
@@ -122,25 +145,139 @@ def run_vgg_style(args) -> tuple[list[dict], list[dict]]:
     return rows, summary
 
 
+def bench_layer_mobilenet(layer: dict, iters: int, warmup: int) -> dict:
+    """One MobileNet separable block, three A/Bs:
+
+      * depthwise layer alone, same XLA backend: transform-domain-Hadamard
+        depthwise Winograd vs the grouped im2row GEMM baseline;
+      * whole block, same Pallas backend: the FUSED separable streamed
+        kernel (one kernel, intermediate in VMEM, both epilogues in-kernel)
+        vs the UNFUSED pipeline (streamed depthwise kernel + pointwise GEMM
+        kernel, intermediate round-tripping HBM) -- interleaved best-of
+        timing plus the analytic HBM bytes each path moves;
+      * whole block, unfused grouped-im2row XLA reference (the dense-only
+        repo's best pre-PR3 answer for a separable block).
+    """
+    rng = np.random.default_rng(0)
+    c, m = layer["c_in"], layer["c_out"]
+    x = jnp.asarray(rng.standard_normal(
+        (1, layer["h"], layer["w"], c)), jnp.float32)
+    w_dw = jnp.asarray(rng.standard_normal((layer["k"], layer["k"], 1, c))
+                       / layer["k"] ** 2, jnp.float32)
+    w_pw = jnp.asarray(rng.standard_normal((1, 1, c, m)) / np.sqrt(c),
+                       jnp.float32)
+    b_dw = jnp.asarray(rng.standard_normal((c,)), jnp.float32)
+    b_pw = jnp.asarray(rng.standard_normal((m,)), jnp.float32)
+
+    # depthwise layer alone: Winograd (Hadamard phase 2) vs grouped im2row.
+    p_dw_wino = planlib.plan_conv2d(x.shape, w_dw, groups=c,
+                                    algorithm="winograd")
+    p_dw_im2row = planlib.plan_conv2d(x.shape, w_dw, groups=c,
+                                      algorithm="im2col")
+    t_dw_wino, t_dw_im2row = pairwise_min_times(
+        jax.jit(p_dw_wino.apply), jax.jit(p_dw_im2row.apply), x,
+        warmup=warmup, iters=iters)
+
+    # whole block, Pallas: fused separable kernel vs unfused two-kernel
+    # pipeline (intermediate via HBM).
+    t0 = time.perf_counter()
+    p_fused = planlib.plan_separable_block(x.shape, w_dw, w_pw,
+                                           algorithm="pallas_winograd")
+    jax.block_until_ready(p_fused.u_pw)
+    plan_build = time.perf_counter() - t0
+    assert p_fused.mode == "fused_pallas", p_fused.mode
+    p_dw_pallas = planlib.plan_conv2d(x.shape, w_dw, groups=c,
+                                      algorithm="pallas_winograd")
+    p_pw_pallas = planlib.plan_conv2d(p_dw_pallas.out_shape, w_pw,
+                                      algorithm="pallas_im2col")
+    f_fused = jax.jit(lambda x: p_fused.apply(x, bias_dw=b_dw, bias_pw=b_pw))
+    f_unfused = jax.jit(lambda x: p_pw_pallas.apply(
+        p_dw_pallas.apply(x, bias=b_dw, activation="relu"),
+        bias=b_pw, activation="relu"))
+    t_fused, t_unfused = pairwise_min_times(f_fused, f_unfused, x,
+                                            warmup=warmup, iters=iters)
+
+    # whole block, unfused grouped-im2row XLA reference.
+    p_pw_im2row = planlib.plan_conv2d(p_dw_im2row.out_shape, w_pw,
+                                      algorithm="im2col")
+    f_im2row = jax.jit(lambda x: p_pw_im2row.apply(
+        p_dw_im2row.apply(x, bias=b_dw, activation="relu"),
+        bias=b_pw, activation="relu"))
+    t_block_im2row = time_jitted(f_im2row, x, warmup=warmup, iters=iters)
+
+    oh, ow = p_dw_pallas.out_shape[1:3]
+    by_fused = separable_fused_hbm_bytes(p_fused.spec)
+    by_unfused = separable_unfused_hbm_bytes(
+        p_dw_pallas.spec, pw_mm=oh * ow, pw_k=c, pw_n=m,
+        blocks=p_pw_pallas.spec.blocks)
+    s = p_fused.spec.stream
+    return {"t_dw_winograd_s": t_dw_wino, "t_dw_im2row_s": t_dw_im2row,
+            "speedup_dw": t_dw_im2row / t_dw_wino,
+            "t_sep_fused_s": t_fused, "t_sep_unfused_s": t_unfused,
+            "speedup_fused": t_unfused / t_fused,
+            "t_sep_im2row_xla_s": t_block_im2row,
+            "hbm_bytes_fused": by_fused, "hbm_bytes_unfused": by_unfused,
+            "hbm_bytes_ratio": by_unfused / by_fused,
+            "plan_build_s": plan_build,
+            "stream_blocks": [s.bh, s.bw, s.block_c, s.block_m]}
+
+
+def run_mobilenet(args) -> tuple[list[dict], list[dict]]:
+    layers = mobilenet_layers(scale=2 if args.config == "mobilenet_quick"
+                              else 1)
+    rows = []
+    for l in layers:
+        r = bench_layer_mobilenet(l, args.iters, args.warmup)
+        r.update(net="mobilenet_v1", layer=l["name"], ltype="sep3x3",
+                 shape=f"{l['h']}x{l['w']}x{l['c_in']}->{l['c_out']}")
+        rows.append(r)
+        print(f"{l['name']:8s} {r['shape']:22s} "
+              f"fused={r['t_sep_fused_s']*1e3:8.2f}ms "
+              f"unfused={r['t_sep_unfused_s']*1e3:8.2f}ms "
+              f"speedup={r['speedup_fused']:.2f}x "
+              f"dw wino/im2row={r['speedup_dw']:.2f}x "
+              f"bytes {r['hbm_bytes_fused']/2**20:6.1f}MiB vs "
+              f"{r['hbm_bytes_unfused']/2**20:6.1f}MiB "
+              f"({r['hbm_bytes_ratio']:.2f}x)", flush=True)
+    sp = [r["speedup_fused"] for r in rows]
+    sd = [r["speedup_dw"] for r in rows]
+    br = [r["hbm_bytes_ratio"] for r in rows]
+    summary = [{"net": "mobilenet_v1", "ltype": "sep3x3",
+                "avg_speedup_fused": float(np.mean(sp)),
+                "min_speedup_fused": float(np.min(sp)),
+                "avg_speedup_dw": float(np.mean(sd)),
+                "avg_hbm_bytes_ratio": float(np.mean(br)),
+                "n_layers": len(rows)}]
+    print(f"\n== fused separable block vs unfused baseline "
+          f"({args.config}) ==")
+    print(f"avg speedup {summary[0]['avg_speedup_fused']:.2f}x  "
+          f"min {summary[0]['min_speedup_fused']:.2f}x  "
+          f"avg dw wino/im2row {summary[0]['avg_speedup_dw']:.2f}x  "
+          f"avg HBM-bytes ratio {summary[0]['avg_hbm_bytes_ratio']:.2f}x")
+    return rows, summary
+
+
 def _layer_type(kh: int, kw: int) -> str:
     return f"{kh}x{kw}"
 
 
 @functools.partial(jax.jit, static_argnames=("kh", "kw", "c_out", "stride",
-                                             "algorithm"))
-def _run_layer(x, w, *, kh, kw, c_out, stride, algorithm):
-    return dispatch.conv2d(x, w, stride=stride, algorithm=algorithm)
+                                             "algorithm", "groups"))
+def _run_layer(x, w, *, kh, kw, c_out, stride, algorithm, groups=1):
+    return dispatch.conv2d(x, w, stride=stride, algorithm=algorithm,
+                           groups=groups)
 
 
 def bench_layer(layer: dict, iters: int, warmup: int) -> dict:
     rng = np.random.default_rng(0)
+    groups = layer.get("groups", 1)
     x = jnp.asarray(rng.standard_normal(
         (1, layer["h"], layer["w"], layer["c_in"])), jnp.float32)
     wt = jnp.asarray(rng.standard_normal(
-        (layer["kh"], layer["kw"], layer["c_in"], layer["c_out"]))
-        / (layer["kh"] * layer["kw"]), jnp.float32)
+        (layer["kh"], layer["kw"], layer["c_in"] // groups,
+         layer["c_out"])) / (layer["kh"] * layer["kw"]), jnp.float32)
     kw = dict(kh=layer["kh"], kw=layer["kw"], c_out=layer["c_out"],
-              stride=layer["stride"])
+              stride=layer["stride"], groups=groups)
     t_im2col = time_jitted(
         functools.partial(_run_layer, algorithm="im2col", **kw), x, wt,
         warmup=warmup, iters=iters)
@@ -151,7 +288,7 @@ def bench_layer(layer: dict, iters: int, warmup: int) -> dict:
     # time; steady-state apply() is the paper's deployment-path number.
     t0 = time.perf_counter()
     p = planlib.plan_conv2d(x.shape, wt, stride=layer["stride"],
-                            algorithm="winograd")
+                            algorithm="winograd", groups=groups)
     jax.block_until_ready(p.u)
     plan_build = time.perf_counter() - t0
     t_wino_planned = time_jitted(jax.jit(p.apply), x,
@@ -171,19 +308,25 @@ def main(argv=None):
     ap.add_argument("--max-layers-per-net", type=int, default=0,
                     help="0 = all unique suitable layers")
     ap.add_argument("--config", default="paper",
-                    choices=["paper", "vgg_style", "vgg_style_quick"],
+                    choices=["paper", "vgg_style", "vgg_style_quick",
+                             "mobilenet", "mobilenet_quick"],
                     help="paper: Table-2 sweep over the five networks; "
                          "vgg_style[_quick]: streamed-vs-materialized "
-                         "Pallas A/B on the VGG 3x3 stride-1 ladder")
+                         "Pallas A/B on the VGG 3x3 stride-1 ladder; "
+                         "mobilenet[_quick]: fused-vs-unfused separable-"
+                         "block A/B on the MobileNet-v1 stride-1 ladder")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
 
     if args.config != "paper":
-        rows, summary = run_vgg_style(args)
+        if args.config.startswith("mobilenet"):
+            rows, summary = run_mobilenet(args)
+        else:
+            rows, summary = run_vgg_style(args)
         if args.out:
             with open(args.out, "w") as f:
-                json.dump({"config": args.config, "layers": rows,
-                           "summary": summary}, f, indent=1)
+                json.dump({"config": args.config, "meta": bench_metadata(),
+                           "layers": rows, "summary": summary}, f, indent=1)
         return summary
 
     rows = []
@@ -192,7 +335,8 @@ def main(argv=None):
         layers = [l for l in conv_layer_inventory(net) if l["suitable"]]
         uniq = []
         for l in layers:
-            key = (l["kh"], l["kw"], l["c_in"], l["c_out"], l["h"], l["w"])
+            key = (l["kh"], l["kw"], l["c_in"], l["c_out"], l["h"], l["w"],
+                   l.get("groups", 1))
             if key not in seen:
                 seen.add(key)
                 uniq.append(l)
@@ -237,7 +381,8 @@ def main(argv=None):
               f"{row['peak_speedup_planned']:6.2f} {len(sp):3d}")
     if args.out:
         with open(args.out, "w") as f:
-            json.dump({"layers": rows, "summary": summary}, f, indent=1)
+            json.dump({"meta": bench_metadata(), "layers": rows,
+                       "summary": summary}, f, indent=1)
     return summary
 
 

@@ -6,7 +6,16 @@
       # emit the perf-trajectory artifact: per-layer steady-state ms +
       # HBM bytes moved for the streamed vs pre-streaming Pallas Winograd
       # paths on the VGG-style config (CI uploads this; BENCH_PR2.json in
-      # the repo root is the committed run for this PR)
+      # the repo root is the committed run for that config)
+  PYTHONPATH=src python -m benchmarks.run --json BENCH_PR3.json \
+      --config mobilenet
+      # same artifact on the MobileNet separable-block ladder: fused
+      # separable streamed kernel vs the unfused two-kernel pipeline
+      # (BENCH_PR3.json in the repo root is the committed run)
+
+Every emitted BENCH_*.json is stamped with jax version, backend/device
+kind, git SHA and a UTC timestamp (benchmarks.common.bench_metadata), so
+artifacts from different runs/machines are comparable.
 
 Quick mode trims iteration counts and caps per-network layer counts so the
 whole suite finishes in minutes on one CPU core; --full runs every unique
@@ -34,11 +43,16 @@ def main(argv=None) -> None:
                          "cold again (--no-plan-cache), next to per-call and "
                          "planned steady-state times")
     ap.add_argument("--json", default=None, metavar="BENCH_<tag>.json",
-                    help="run ONLY the streamed-vs-materialized Pallas "
-                         "per-layer benchmark (VGG-style config; "
-                         "vgg_style_quick unless --full) and write the "
-                         "per-layer steady-state ms + bytes-moved artifact "
-                         "to this path")
+                    help="run ONLY the per-layer Pallas A/B benchmark of "
+                         "the chosen --config (quick variant unless "
+                         "--full) and write the per-layer steady-state ms "
+                         "+ bytes-moved artifact, stamped with "
+                         "jax/backend/git-SHA metadata, to this path")
+    ap.add_argument("--config", default="vgg_style",
+                    choices=["vgg_style", "mobilenet"],
+                    help="which --json ladder to run: vgg_style (streamed "
+                         "vs materialized dense Winograd) or mobilenet "
+                         "(fused vs unfused separable blocks)")
     args = ap.parse_args(argv)
 
     from benchmarks import (amortization, fast_fraction, per_layer, roofline,
@@ -47,7 +61,7 @@ def main(argv=None) -> None:
     t0 = time.time()
 
     if args.json:
-        cfg = "vgg_style" if args.full else "vgg_style_quick"
+        cfg = args.config if args.full else f"{args.config}_quick"
         iters = "3" if args.full else "2"
         per_layer.main(["--config", cfg, "--iters", iters, "--warmup", "1",
                         "--out", args.json])

@@ -23,7 +23,18 @@ from repro.models import cnn
 
 from benchmarks.common import time_jitted
 
-NETWORKS = ["vgg16", "vgg19", "googlenet", "inception_v3", "squeezenet"]
+NETWORKS = ["vgg16", "vgg19", "googlenet", "inception_v3", "squeezenet",
+            "mobilenet_v1"]
+
+
+def _plan_weight_arrays(p) -> list:
+    """The execution-domain weight arrays of a ConvPlan or
+    SeparableBlockPlan (what plan build materializes)."""
+    if hasattr(p, "u"):
+        return [p.u]
+    if p.mode == "fused_pallas":
+        return [p.u_dw, p.u_pw]
+    return [p.dw.u, p.pw.u]
 
 
 def bench_network(net: str, iters: int, warmup: int, res: int | None = None
@@ -44,7 +55,8 @@ def bench_network(net: str, iters: int, warmup: int, res: int | None = None
     # plan/execute split: transforms + decisions once, then steady-state.
     t0 = time.perf_counter()
     plans = cnn.plan_cnn(params, specs, res=res, algorithm="auto")
-    jax.block_until_ready([p.u for p in plans.values()])
+    jax.block_until_ready([a for p in plans.values()
+                           for a in _plan_weight_arrays(p)])
     plan_build = time.perf_counter() - t0
     fn_planned = jax.jit(functools.partial(
         cnn.cnn_forward, params, specs=specs, plans=plans))

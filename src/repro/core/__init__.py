@@ -1,16 +1,18 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
-from repro.core.dispatch import Algorithm, conv1d, conv2d
+from repro.core.dispatch import ALGORITHMS, Algorithm, conv1d, conv2d
 from repro.core.plan import (Conv1DPlan, ConvPlan, ConvSpec,
-                             DepthwiseConv1DPlan, clear_plan_cache,
-                             plan_cache_info, plan_conv1d, plan_conv2d,
-                             plan_depthwise_conv1d, winograd_amortizes,
+                             DepthwiseConv1DPlan, SeparableBlockPlan,
+                             clear_plan_cache, plan_cache_info, plan_conv1d,
+                             plan_conv2d, plan_depthwise_conv1d,
+                             plan_separable_block, winograd_amortizes,
                              winograd_suitable)
 
 __all__ = [
-    "Algorithm", "Conv1DPlan", "ConvPlan", "ConvSpec", "DepthwiseConv1DPlan",
-    "clear_plan_cache", "conv1d", "conv2d", "plan_cache_info", "plan_conv1d",
-    "plan_conv2d", "plan_depthwise_conv1d", "winograd_amortizes",
+    "ALGORITHMS", "Algorithm", "Conv1DPlan", "ConvPlan", "ConvSpec",
+    "DepthwiseConv1DPlan", "SeparableBlockPlan", "clear_plan_cache",
+    "conv1d", "conv2d", "plan_cache_info", "plan_conv1d", "plan_conv2d",
+    "plan_depthwise_conv1d", "plan_separable_block", "winograd_amortizes",
     "winograd_suitable",
 ]

@@ -11,7 +11,8 @@ weight-load time and call `plan.apply(x)` directly -- that path performs no
 per-call filter transform or geometry derivation (models/cnn.py and
 models/audio.py do exactly this).
 
-`algorithm=`:
+`algorithm=` (the full requestable set is plan.ALGORITHMS; every resolver
+error message lists it):
   * "auto"       -- the paper's policy (winograd where suitable, else im2col).
   * "auto_tuned" -- beyond-paper: the paper's section-4 amortization insight
                     as a *plan-time measured* policy. The paper observes
@@ -23,9 +24,18 @@ models/audio.py do exactly this).
                     process-wide; when measurement is impossible (planning
                     inside a jit trace) it falls back to the static
                     calibrated crossover (plan.winograd_amortizes).
-  * "winograd"   -- force the fast scheme (raises if unsuitable).
-  * "im2col"     -- force the baseline (for the paper's A/B benchmarks).
-  * "pallas_*"   -- the hand-tiled TPU kernels (see repro.kernels.ops).
+  * "winograd"   -- force the fast scheme (raises if unsuitable); with
+                    groups > 1 this resolves to the depthwise
+                    (transform-domain Hadamard) or block-diagonal grouped
+                    executor.
+  * "im2col"     -- force the baseline (for the paper's A/B benchmarks);
+                    any stride/size/groups (grouped im2row for groups > 1).
+  * "pallas_winograd" -- the streamed TPU kernel (repro.kernels.ops); with
+                    groups == C_in this is the streamed depthwise kernel.
+  * "pallas_winograd_materialized" -- the pre-streaming tiles-domain Pallas
+                    executor, kept as the A/B baseline for the streaming
+                    path (dense only: groups == 1).
+  * "pallas_im2col" -- the Pallas im2row GEMM baseline (dense only).
 """
 
 from __future__ import annotations
@@ -33,15 +43,18 @@ from __future__ import annotations
 import jax
 
 from repro.core import winograd as _winograd
-from repro.core.plan import (AMORTIZE_MIN_C_IN, AMORTIZE_MIN_OUT_PIXELS,
-                             WINOGRAD_FILTER_SIZES, Algorithm, plan_conv1d,
+from repro.core.plan import (ALGORITHMS, AMORTIZE_MIN_C_IN,
+                             AMORTIZE_MIN_OUT_PIXELS, WINOGRAD_FILTER_SIZES,
+                             Algorithm, algorithm_supported, plan_conv1d,
                              plan_conv2d, plan_depthwise_conv1d,
-                             winograd_amortizes, winograd_suitable)
+                             plan_separable_block, winograd_amortizes,
+                             winograd_suitable)
 
 __all__ = [
-    "Algorithm", "conv1d", "conv2d", "plan_depthwise_conv1d",
-    "winograd_amortizes", "winograd_suitable", "WINOGRAD_FILTER_SIZES",
-    "AMORTIZE_MIN_OUT_PIXELS", "AMORTIZE_MIN_C_IN",
+    "ALGORITHMS", "Algorithm", "algorithm_supported", "conv1d", "conv2d",
+    "plan_depthwise_conv1d", "plan_separable_block", "winograd_amortizes",
+    "winograd_suitable", "WINOGRAD_FILTER_SIZES", "AMORTIZE_MIN_OUT_PIXELS",
+    "AMORTIZE_MIN_C_IN",
 ]
 
 
@@ -52,6 +65,7 @@ def conv2d(
     stride: int | tuple[int, int] = 1,
     padding: _winograd.Padding = "SAME",
     algorithm: Algorithm = "auto",
+    groups: int = 1,
     output_tile: int | None = None,
     precision=None,
     bias: jax.Array | None = None,
@@ -63,11 +77,13 @@ def conv2d(
     transform still happens on every call here -- hold a ConvPlan instead
     (repro.core.plan.plan_conv2d) to pre-transform weights once.
     `bias`/`activation` run the layer epilogue through the plan's fused path
-    (in-kernel on the Pallas executors).
+    (in-kernel on the Pallas executors). `groups` is feature_group_count
+    (C_in for a depthwise conv); the filter then carries C_in/groups input
+    channels: (kh, kw, C_in/groups, M).
     """
     plan = plan_conv2d(x.shape, w, stride=stride, padding=padding,
-                       algorithm=algorithm, output_tile=output_tile,
-                       precision=precision)
+                       algorithm=algorithm, groups=groups,
+                       output_tile=output_tile, precision=precision)
     return plan.apply(x, bias=bias, activation=activation)
 
 

@@ -43,10 +43,11 @@ def im2row_geometry(h: int, w: int, kh: int, kw: int,
     return Im2RowGeometry(ph, pw, (hp - kh) // sh + 1, (wp - kw) // sw + 1)
 
 
-def im2row(x: jax.Array, kh: int, kw: int, stride: tuple[int, int],
-           padding: Padding, geometry: Im2RowGeometry | None = None
-           ) -> tuple[jax.Array, tuple[int, int]]:
-    """(N, H, W, C) -> ((N * OH * OW, kh * kw * C), (OH, OW))."""
+def _patches(x: jax.Array, kh: int, kw: int, stride: tuple[int, int],
+             padding: Padding, geometry: Im2RowGeometry | None
+             ) -> tuple[jax.Array, tuple[int, int]]:
+    """(N, H, W, C) -> ((N, OH, OW, kh*kw, C), (OH, OW)) patch extraction
+    shared by the dense and grouped im2row lowerings."""
     n, h, w, c = x.shape
     sh, sw = stride
     if geometry is None:
@@ -63,8 +64,45 @@ def im2row(x: jax.Array, kh: int, kw: int, stride: tuple[int, int],
                 jax.lax.slice(x, (0, di, dj, 0),
                               (n, di + (oh - 1) * sh + 1, dj + (ow - 1) * sw + 1, c),
                               (1, sh, sw, 1)))
-    patches = jnp.stack(rows, axis=3)                 # (N, OH, OW, khkw, C)
+    return jnp.stack(rows, axis=3), (oh, ow)          # (N, OH, OW, khkw, C)
+
+
+def im2row(x: jax.Array, kh: int, kw: int, stride: tuple[int, int],
+           padding: Padding, geometry: Im2RowGeometry | None = None
+           ) -> tuple[jax.Array, tuple[int, int]]:
+    """(N, H, W, C) -> ((N * OH * OW, kh * kw * C), (OH, OW))."""
+    n, _, _, c = x.shape
+    patches, (oh, ow) = _patches(x, kh, kw, stride, padding, geometry)
     return patches.reshape(n * oh * ow, kh * kw * c), (oh, ow)
+
+
+def grouped_im2row(x: jax.Array, kh: int, kw: int, stride: tuple[int, int],
+                   padding: Padding, groups: int,
+                   geometry: Im2RowGeometry | None = None
+                   ) -> tuple[jax.Array, tuple[int, int]]:
+    """Grouped im2row lowering: per-group patch rows.
+
+    (N, H, W, C) -> ((N * OH * OW, G, kh * kw * C/G), (OH, OW)); each row
+    group g multiplies only its own (kh*kw*Cg, Mg) filter block -- the
+    block-diagonal structure of a grouped conv never materializes the zero
+    blocks a dense [khkwC x M] lowering would carry.
+    """
+    n, _, _, c = x.shape
+    cg = c // groups
+    patches, (oh, ow) = _patches(x, kh, kw, stride, padding, geometry)
+    patches = patches.reshape(n * oh * ow, kh * kw, groups, cg)
+    return (patches.transpose(0, 2, 1, 3).reshape(
+        n * oh * ow, groups, kh * kw * cg), (oh, ow))
+
+
+def grouped_filter_matrix(w: jax.Array, groups: int) -> jax.Array:
+    """(kh, kw, Cg, M) HWIO grouped filter -> (G, kh*kw*Cg, Mg) per-group
+    GEMM matrices (group-major on the output axis, matching
+    feature_group_count). Plan-time: done once per plan."""
+    kh, kw, cg, m = w.shape
+    mg = m // groups
+    return (w.reshape(kh * kw, cg, groups, mg)
+            .transpose(2, 0, 1, 3).reshape(groups, kh * kw * cg, mg))
 
 
 def im2col_conv2d(
@@ -73,30 +111,40 @@ def im2col_conv2d(
     *,
     stride: int | tuple[int, int] = 1,
     padding: Padding = "SAME",
+    groups: int = 1,
     geometry: Im2RowGeometry | None = None,
     precision=None,
     preferred_element_type=jnp.float32,
 ) -> jax.Array:
-    """Baseline convolution: im2row lowering + one big GEMM.
+    """Baseline convolution: im2row lowering + GEMM (per-group for
+    groups > 1, covering grouped and depthwise layers).
 
     Args:
       x: (N, H, W, C) NHWC.
-      w: (kh, kw, C, M) HWIO.
+      w: (kh, kw, C/groups, M) HWIO; M % groups == 0.
     """
     n = x.shape[0]
-    kh, kw, c, m = w.shape
+    kh, kw, _, m = w.shape
     stride = (stride, stride) if isinstance(stride, int) else stride
-    a, (oh, ow) = im2row(x, kh, kw, stride, padding, geometry)
-    b = w.reshape(kh * kw * c, m)
-    y = jnp.matmul(a, b, precision=precision,
-                   preferred_element_type=preferred_element_type)
+    if groups == 1:
+        a, (oh, ow) = im2row(x, kh, kw, stride, padding, geometry)
+        b = w.reshape(kh * kw * x.shape[3], m)
+        y = jnp.matmul(a, b, precision=precision,
+                       preferred_element_type=preferred_element_type)
+    else:
+        a, (oh, ow) = grouped_im2row(x, kh, kw, stride, padding, groups,
+                                     geometry)
+        b = grouped_filter_matrix(w, groups)
+        y = jnp.einsum("rgk,gkm->rgm", a, b, precision=precision,
+                       preferred_element_type=preferred_element_type)
     return y.reshape(n, oh, ow, m).astype(x.dtype)
 
 
 def direct_conv2d(x: jax.Array, w: jax.Array, *, stride=1,
-                  padding: Padding = "SAME") -> jax.Array:
+                  padding: Padding = "SAME", groups: int = 1) -> jax.Array:
     """lax.conv_general_dilated oracle (testing only)."""
     stride = (stride, stride) if isinstance(stride, int) else stride
     return jax.lax.conv_general_dilated(
         x, w, window_strides=stride, padding=padding,
+        feature_group_count=groups,
         dimension_numbers=("NHWC", "HWIO", "NHWC"))

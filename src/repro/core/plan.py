@@ -32,6 +32,7 @@ from __future__ import annotations
 import dataclasses
 import os
 import time
+import typing
 from typing import Any, Literal
 
 import jax
@@ -53,6 +54,9 @@ from repro.kernels.runtime import epilogue_jnp as _epilogue_jnp
 Algorithm = Literal["auto", "auto_tuned", "winograd", "im2col",
                     "pallas_winograd", "pallas_winograd_materialized",
                     "pallas_im2col"]
+#: The requestable algorithm names, derived from the Literal so the type,
+#: the resolver checks, and every unknown-algorithm error message agree.
+ALGORITHMS: tuple[str, ...] = typing.get_args(Algorithm)
 Padding = _wg.Padding
 
 #: Filter sizes the paper's fast scheme covers (2D NxN and 1D 1xN / Nx1).
@@ -83,13 +87,77 @@ def winograd_suitable(kh: int, kw: int, stride) -> bool:
 
 
 def winograd_amortizes(h: int, w: int, kh: int, kw: int, c_in: int,
-                       padding: str = "SAME") -> bool:
+                       padding: str = "SAME", groups: int = 1) -> bool:
     """The paper's section-4 amortization insight as a static predicate --
-    the auto_tuned fallback when plan-time measurement is unavailable."""
+    the auto_tuned fallback when plan-time measurement is unavailable.
+
+    For grouped convs the GEMM contraction depth is the per-group channel
+    count C/G, so that is what must clear the channel threshold. Depthwise
+    (G == C) has no channel GEMM to amortize at all -- it is memory-bound
+    (Zhang et al. 2020) and the transform passes pay for themselves on
+    spatial extent alone, so only the output-pixel threshold applies."""
     out_h = h if padding == "SAME" else h - kh + 1
     out_w = w if padding == "SAME" else w - kw + 1
-    return (out_h * out_w >= AMORTIZE_MIN_OUT_PIXELS
-            and c_in >= AMORTIZE_MIN_C_IN)
+    if out_h * out_w < AMORTIZE_MIN_OUT_PIXELS:
+        return False
+    if groups > 1 and groups == c_in:     # depthwise
+        return True
+    return c_in // groups >= AMORTIZE_MIN_C_IN
+
+
+def _resolve_winograd(groups: int, c_in: int) -> str:
+    """Map the requested 'winograd' family onto the grouped executor
+    variants: dense, transform-domain-Hadamard depthwise, or block-diagonal
+    grouped."""
+    if groups == 1:
+        return "winograd"
+    if groups == c_in:
+        return "winograd_depthwise"
+    return "winograd_grouped"
+
+
+def _winograd_family_suitable(kh: int, kw: int, stride,
+                              groups: int) -> bool:
+    """Suitability of the whole winograd executor family for one layer:
+    the paper's stride-1/filter-size rule, minus grouped 1xN / Nx1 layers
+    (which have no grouped single-axis executor). Shared by
+    algorithm_supported and plan_conv2d so the rule exists once."""
+    return winograd_suitable(kh, kw, stride) and not (
+        groups > 1 and (kh == 1 or kw == 1))
+
+
+def algorithm_supported(algorithm: str, kh: int, kw: int, stride,
+                        *, groups: int = 1, c_in: int | None = None,
+                        c_out: int | None = None) -> bool:
+    """Whether plan_conv2d would accept this (algorithm, layer) combination
+    without raising -- the single source of the executor-coverage rules.
+    Model-level fallback policies (models/cnn.py:_layer_algorithm) consult
+    this instead of duplicating the constraint list."""
+    stride = (stride, stride) if isinstance(stride, int) else tuple(stride)
+    suitable = _winograd_family_suitable(kh, kw, stride, groups)
+    if algorithm in ("auto", "auto_tuned", "im2col"):
+        return True
+    if algorithm == "winograd":
+        return suitable
+    if algorithm == "pallas_winograd":
+        if groups == 1:
+            return suitable
+        return suitable and groups == c_in and c_out == c_in
+    if algorithm == "pallas_winograd_materialized":
+        return groups == 1 and suitable
+    if algorithm == "pallas_im2col":
+        return groups == 1
+    return False
+
+
+def _unsuitable_error(algorithm: str, kh: int, kw: int, stride,
+                      groups: int) -> ValueError:
+    return ValueError(
+        f"algorithm={algorithm!r} requested for unsuitable layer "
+        f"k=({kh},{kw}) stride={stride} groups={groups}: the Winograd/"
+        f"Cook-Toom schemes need stride (1, 1) and filter sizes in "
+        f"{sorted(WINOGRAD_FILTER_SIZES)} (1xN/Nx1 only with groups=1); "
+        f"use algorithm='im2col' (any stride/size/groups) instead")
 
 
 # ---------------------------------------------------------------------------
@@ -103,16 +171,19 @@ class ConvSpec:
     shape-keyed, so it lives in the process-level plan cache."""
 
     x_shape: tuple[int, ...]          # (N, H, W, C) the plan was built for
-    w_shape: tuple[int, ...]          # (kh, kw, C, M)
+    w_shape: tuple[int, ...]          # (kh, kw, C/groups, M)
     dtype: str
     stride: tuple[int, int]
     padding: str
     requested: str                    # the algorithm= the caller asked for
     algorithm: str                    # resolved executor: winograd |
-                                      # winograd_1d | im2col |
-                                      # pallas_winograd |
+                                      # winograd_1d | winograd_depthwise |
+                                      # winograd_grouped | im2col |
+                                      # pallas_winograd | pallas_depthwise |
                                       # pallas_winograd_materialized |
                                       # pallas_im2col
+    groups: int = 1                   # feature_group_count (1 = dense,
+                                      # C = depthwise)
     output_tile: tuple[int, int] | None = None
     ct_h: CookToom | None = None
     ct_w: CookToom | None = None      # also the single CT of the 1D variant
@@ -178,13 +249,35 @@ def _resolve_output_tile(kh: int, kw: int, output_tile) -> tuple[int, int]:
 
 
 def _build_spec(x_shape, w_shape, dtype, stride, padding, requested,
-                resolved, output_tile) -> ConvSpec:
+                resolved, output_tile, groups: int = 1) -> ConvSpec:
     """Materialize geometry/transform/blocking decisions for one resolved
     algorithm."""
     n, h, w, c = x_shape
     kh, kw, _, mout = w_shape
     base = dict(x_shape=tuple(x_shape), w_shape=tuple(w_shape), dtype=dtype,
-                stride=stride, padding=padding, requested=requested)
+                stride=stride, padding=padding, requested=requested,
+                groups=groups)
+
+    if resolved in ("winograd_depthwise", "winograd_grouped"):
+        mh, mw = _resolve_output_tile(kh, kw, output_tile)
+        ct_h, ct_w = cook_toom(mh, kh), cook_toom(mw, kw)
+        geom = _wg.conv2d_geometry(h, w, kh, kw, mh, mw, padding)
+        return ConvSpec(algorithm=resolved, output_tile=(mh, mw),
+                        ct_h=ct_h, ct_w=ct_w, geometry=geom, **base)
+
+    if resolved == "pallas_depthwise":
+        # Streamed depthwise: same halo blocking machinery as the dense
+        # streaming kernel, channel axes collapsed (no M sweep, no C
+        # reduction).
+        mh, mw = _resolve_output_tile(kh, kw, output_tile)
+        ct_h, ct_w = cook_toom(mh, kh), cook_toom(mw, kw)
+        geom = _wg.conv2d_geometry(h, w, kh, kw, mh, mw, padding)
+        stream = _wg.stream_geometry_depthwise(geom.n_h, geom.n_w, c,
+                                               ct_h, ct_w)
+        return ConvSpec(algorithm="pallas_depthwise", output_tile=(mh, mw),
+                        ct_h=ct_h, ct_w=ct_w, geometry=geom, stream=stream,
+                        blocks=(stream.bh * stream.bw, stream.block_c),
+                        **base)
 
     if resolved in ("winograd", "pallas_winograd",
                     "pallas_winograd_materialized") and (kh == 1 or kw == 1):
@@ -242,21 +335,42 @@ def _build_spec(x_shape, w_shape, dtype, stride, padding, requested,
     raise ValueError(f"unknown algorithm {resolved!r}")
 
 
+def _depthwise_domain_taps(w: jax.Array, ct_h: CookToom, ct_w: CookToom,
+                           c_in: int, c_pad: int) -> jax.Array:
+    """(kh, kw, 1, C) depthwise filter -> (P, Cp) Winograd-domain taps,
+    channel-padded to the kernel block grid. The one recipe shared by the
+    pallas_depthwise plan binding and the fused separable-block binding."""
+    u = _wg.transform_filter_2d(w, ct_h, ct_w)            # (th, tw, 1, C)
+    u = u.reshape(ct_h.t * ct_w.t, c_in)                  # (P, C)
+    return jnp.pad(u, ((0, 0), (0, c_pad - c_in)))
+
+
 def _bind_weights(spec: ConvSpec, w: jax.Array) -> jax.Array:
     """Transform the filter into the spec's execution domain. This is the
     once-per-plan weight work; ConvPlan.apply never touches it again."""
-    kh, kw, c, mout = spec.w_shape
+    kh, kw, c, mout = spec.w_shape     # c = C/groups (HWIO grouped filter)
     if spec.algorithm == "winograd":
         return _wg.transform_filter_2d(w, spec.ct_h, spec.ct_w)
     if spec.algorithm == "winograd_1d":
         return _wg.transform_filter_1d(w.reshape(max(kh, kw), c, mout),
                                        spec.ct_w)
+    if spec.algorithm == "winograd_depthwise":
+        c_in = spec.x_shape[3]
+        u = _wg.transform_filter_2d(w, spec.ct_h, spec.ct_w)  # (th, tw, 1, M)
+        return u.reshape(spec.ct_h.t, spec.ct_w.t, c_in, mout // c_in)
+    if spec.algorithm == "winograd_grouped":
+        return _wg.transform_filter_2d(w, spec.ct_h, spec.ct_w)
+    if spec.algorithm == "pallas_depthwise":
+        return _depthwise_domain_taps(w, spec.ct_h, spec.ct_w,
+                                      spec.x_shape[3], spec.stream.c_pad)
     if spec.algorithm in ("pallas_winograd", "pallas_winograd_materialized"):
         from repro.kernels import ops
         u = _wg.transform_filter_2d(w, spec.ct_h, spec.ct_w)
         u = u.reshape(spec.ct_h.t * spec.ct_w.t, c, mout)
         return ops.pad_winograd_filter(u, spec.blocks[1], spec.blocks[2])
     if spec.algorithm == "im2col":
+        if spec.groups > 1:
+            return _im2col.grouped_filter_matrix(w, spec.groups)
         return w.reshape(kh * kw * c, mout)
     if spec.algorithm == "pallas_im2col":
         from repro.kernels import ops
@@ -309,14 +423,39 @@ class ConvPlan:
             y = _wg.winograd_conv1d_axis_pretransformed(
                 x, self.u, spec.ct_w, spec.geometry, precision=self.precision)
             return _epilogue_jnp(y, bias, activation)
+        if alg == "winograd_depthwise":
+            y = _wg.winograd_depthwise_conv2d_pretransformed(
+                x, self.u, spec.ct_h, spec.ct_w, padding=spec.padding,
+                geometry=spec.geometry)
+            return _epilogue_jnp(y, bias, activation)
+        if alg == "winograd_grouped":
+            y = _wg.winograd_grouped_conv2d_pretransformed(
+                x, self.u, spec.ct_h, spec.ct_w, spec.groups,
+                padding=spec.padding, geometry=spec.geometry,
+                precision=self.precision)
+            return _epilogue_jnp(y, bias, activation)
         if alg == "im2col":
             geom = spec.geometry
             kh, kw, _, mout = spec.w_shape
-            a, _ = _im2col.im2row(x, kh, kw, spec.stride, spec.padding, geom)
-            y = jnp.matmul(a, self.u, precision=self.precision,
-                           preferred_element_type=jnp.float32)
+            if spec.groups > 1:
+                a, _ = _im2col.grouped_im2row(x, kh, kw, spec.stride,
+                                              spec.padding, spec.groups, geom)
+                y = jnp.einsum("rgk,gkm->rgm", a, self.u,
+                               precision=self.precision,
+                               preferred_element_type=jnp.float32)
+            else:
+                a, _ = _im2col.im2row(x, kh, kw, spec.stride, spec.padding,
+                                      geom)
+                y = jnp.matmul(a, self.u, precision=self.precision,
+                               preferred_element_type=jnp.float32)
             y = y.reshape(x.shape[0], geom.oh, geom.ow, mout).astype(x.dtype)
             return _epilogue_jnp(y, bias, activation)
+        if alg == "pallas_depthwise":
+            from repro.kernels import ops
+            return ops.depthwise_conv2d_planned(
+                x, self.u, ct_h=spec.ct_h, ct_w=spec.ct_w,
+                geometry=spec.geometry, stream=spec.stream,
+                c_out=spec.w_shape[3], bias=bias, activation=activation)
         if alg == "pallas_winograd":
             from repro.kernels import ops
             return ops.winograd_conv2d_planned(
@@ -350,7 +489,9 @@ class ConvPlan:
         spec, g = self.spec, self.spec.geometry
         mout = spec.w_shape[-1]
         n = spec.x_shape[0]
-        if spec.algorithm in ("winograd", "pallas_winograd",
+        if spec.algorithm in ("winograd", "winograd_depthwise",
+                              "winograd_grouped", "pallas_winograd",
+                              "pallas_depthwise",
                               "pallas_winograd_materialized"):
             return (n, g.out_h, g.out_w, mout)
         if spec.algorithm == "winograd_1d":
@@ -377,21 +518,24 @@ def _time_apply(plan: ConvPlan, x, warmup: int = 1, iters: int = 3) -> float:
 
 
 def _measure_autotune(x_shape, w_shape, dtype, stride, padding,
-                      output_tile) -> tuple[str, tuple]:
+                      output_tile, groups: int = 1) -> tuple[str, tuple]:
     """Time winograd vs im2col on the real shape; return (winner, evidence).
-    Runs once per shape per process (the spec cache holds the result)."""
+    Runs once per shape per process (the spec cache holds the result). For
+    grouped layers the winograd contender is the matching grouped/depthwise
+    executor variant; the baseline is the grouped im2row GEMM."""
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.standard_normal(x_shape), dtype)
     w = jnp.asarray(rng.standard_normal(w_shape)
                     / (w_shape[0] * w_shape[1]), dtype)
+    wino = _resolve_winograd(groups, x_shape[3])
     times = {}
-    for alg in ("winograd", "im2col"):
+    for alg in (wino, "im2col"):
         spec = _build_spec(x_shape, w_shape, str(jnp.dtype(dtype)), stride,
-                           padding, alg, alg, output_tile)
+                           padding, alg, alg, output_tile, groups)
         times[alg] = _time_apply(ConvPlan(spec=spec, u=_bind_weights(spec, w)),
                                  x)
     winner = min(times, key=times.get)
-    evidence = (("t_winograd_s", times["winograd"]),
+    evidence = (("t_winograd_s", times[wino]),
                 ("t_im2col_s", times["im2col"]), ("winner", winner))
     return winner, evidence
 
@@ -407,27 +551,45 @@ def plan_conv2d(
     stride: int | tuple[int, int] = 1,
     padding: Padding = "SAME",
     algorithm: Algorithm = "auto",
+    groups: int = 1,
     output_tile: int | tuple[int, int] | None = None,
     precision=None,
     dtype=None,
 ) -> ConvPlan:
-    """Build a ConvPlan for a (N, H, W, C) x (kh, kw, C, M) convolution.
+    """Build a ConvPlan for a (N, H, W, C) x (kh, kw, C/groups, M) conv.
 
     All per-layer decisions (algorithm, transform variant, padding/tiling
     geometry, Pallas blocking) are made here, once; the filter is transformed
     into the execution domain, once. Decisions are cached process-wide keyed
-    on (shapes, dtype, stride, padding, algorithm, output_tile), so repeated
-    planning of the same layer shape -- including a measured auto_tuned
-    choice -- is a dict lookup plus one filter transform.
+    on (shapes, dtype, stride, padding, algorithm, groups, output_tile), so
+    repeated planning of the same layer shape -- including a measured
+    auto_tuned choice -- is a dict lookup plus one filter transform.
+
+    `groups` is jax.lax's feature_group_count: 1 is the dense conv, C is a
+    depthwise conv ((kh, kw, 1, C*mult) filter), anything between is a
+    grouped conv. The winograd family resolves to the matching executor
+    (transform-domain-Hadamard depthwise / block-diagonal grouped), im2col
+    to the grouped im2row GEMM, and pallas_winograd to the streamed
+    depthwise kernel (depthwise, multiplier 1 only).
     """
     global _CACHE_HITS, _CACHE_MISSES
     t0 = time.perf_counter()
     x_shape = tuple(x_shape)
     w_shape = tuple(w.shape)
+    if algorithm not in ALGORITHMS:
+        raise ValueError(f"unknown algorithm {algorithm!r}; expected one of "
+                         f"{ALGORITHMS}")
     if len(x_shape) != 4 or len(w_shape) != 4:
         raise ValueError(f"expected NHWC x HWIO, got {x_shape} x {w_shape}")
-    if x_shape[3] != w_shape[2]:
-        raise ValueError(f"channel mismatch: input {x_shape} filter {w_shape}")
+    if groups < 1 or x_shape[3] % groups or w_shape[3] % groups:
+        raise ValueError(
+            f"groups={groups} must divide both C_in={x_shape[3]} and "
+            f"C_out={w_shape[3]}")
+    if x_shape[3] != w_shape[2] * groups:
+        raise ValueError(
+            f"channel mismatch: input {x_shape} filter {w_shape} "
+            f"groups={groups} (HWIO grouped filters carry C_in/groups "
+            f"input channels)")
     stride = (stride, stride) if isinstance(stride, int) else tuple(stride)
     dtype = dtype or w.dtype
     dtype_str = str(jnp.dtype(dtype))
@@ -436,34 +598,61 @@ def plan_conv2d(
 
     key = (x_shape, w_shape, dtype_str, stride, padding, algorithm,
            output_tile if not isinstance(output_tile, list) else
-           tuple(output_tile), precision)
+           tuple(output_tile), precision, groups)
     spec = _SPEC_CACHE.get(key) if _cache_enabled() else None
     if spec is not None:
         _CACHE_HITS += 1
     else:
         _CACHE_MISSES += 1
-        suitable = winograd_suitable(kh, kw, stride)
+        suitable = _winograd_family_suitable(kh, kw, stride, groups)
         autotune = None
         if algorithm == "auto":
-            resolved = "winograd" if suitable else "im2col"
+            resolved = _resolve_winograd(groups, c) if suitable else "im2col"
         elif algorithm == "auto_tuned":
             if not suitable:
                 resolved = "im2col"
             elif _measure_allowed():
                 resolved, autotune = _measure_autotune(
-                    x_shape, w_shape, dtype_str, stride, padding, output_tile)
+                    x_shape, w_shape, dtype_str, stride, padding, output_tile,
+                    groups)
             else:
-                resolved = "winograd" if winograd_amortizes(
-                    h, wdt, kh, kw, c, padding) else "im2col"
+                resolved = _resolve_winograd(groups, c) if winograd_amortizes(
+                    h, wdt, kh, kw, c, padding, groups) else "im2col"
+        elif algorithm == "winograd":
+            if not suitable:
+                raise _unsuitable_error(algorithm, kh, kw, stride, groups)
+            resolved = _resolve_winograd(groups, c)
+        elif algorithm == "pallas_winograd" and groups > 1:
+            if groups != c:
+                raise ValueError(
+                    f"algorithm='pallas_winograd' supports groups=1 (dense "
+                    f"streaming kernel) or groups == C_in (streamed "
+                    f"depthwise kernel); got groups={groups} with C_in={c}. "
+                    f"Use algorithm='winograd' (block-diagonal grouped "
+                    f"executor) or 'im2col' (grouped im2row) instead")
+            if not suitable:
+                raise _unsuitable_error(algorithm, kh, kw, stride, groups)
+            if w_shape[3] != c:
+                raise ValueError(
+                    f"the streamed Pallas depthwise kernel needs channel "
+                    f"multiplier 1 (C_out == C_in); got C_in={c} "
+                    f"C_out={w_shape[3]}. Use algorithm='winograd' or "
+                    f"'im2col' for channel multipliers > 1")
+            resolved = "pallas_depthwise"
+        elif algorithm in ("pallas_winograd_materialized",
+                           "pallas_im2col") and groups > 1:
+            raise ValueError(
+                f"algorithm={algorithm!r} has no grouped executor; use "
+                f"'pallas_winograd' (depthwise, groups == C_in), 'winograd' "
+                f"(grouped/depthwise), or 'im2col' (grouped im2row) for "
+                f"grouped convolutions")
         else:
             resolved = algorithm
-            if resolved in ("winograd", "pallas_winograd",
+            if resolved in ("pallas_winograd",
                             "pallas_winograd_materialized") and not suitable:
-                raise ValueError(
-                    f"winograd requested for unsuitable layer "
-                    f"k=({kh},{kw}) stride={stride}")
+                raise _unsuitable_error(algorithm, kh, kw, stride, groups)
         spec = _build_spec(x_shape, w_shape, dtype_str, stride, padding,
-                           algorithm, resolved, output_tile)
+                           algorithm, resolved, output_tile, groups)
         if autotune is not None:
             spec = dataclasses.replace(spec, autotune=autotune)
         # An auto_tuned decision made via the heuristic fallback (planning
@@ -478,6 +667,195 @@ def plan_conv2d(
     u = _bind_weights(spec, w)
     return ConvPlan(spec=spec, u=u, precision=precision,
                     build_time_s=time.perf_counter() - t0)
+
+
+# ---------------------------------------------------------------------------
+# Separable blocks: depthwise kxk -> pointwise 1x1 planned as one fused unit
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SeparableSpec:
+    """Cacheable decisions of a planned separable (depthwise kxk +
+    pointwise 1x1) block. mode 'fused_pallas' runs both convs and both
+    epilogues in ONE streamed kernel (kernels/depthwise.py:
+    separable_streamed -- the intermediate never touches HBM); mode
+    'composed' chains two ConvPlans (each with its own fused-epilogue
+    path), covering strided / multiplier>1 / non-Pallas configurations."""
+
+    x_shape: tuple[int, ...]          # (N, H, W, C)
+    w_dw_shape: tuple[int, ...]       # (kh, kw, 1, C*mult)
+    w_pw_shape: tuple[int, ...]       # (1, 1, C*mult, M)
+    dtype: str
+    stride: tuple[int, int]
+    padding: str
+    requested: str
+    mode: str                         # "fused_pallas" | "composed"
+    output_tile: tuple[int, int] | None = None
+    ct_h: CookToom | None = None
+    ct_w: CookToom | None = None
+    geometry: Any = None              # Conv2DGeometry (fused mode)
+    stream: Any = None                # StreamGeometry (fused mode)
+
+
+@dataclasses.dataclass(frozen=True)
+class SeparableBlockPlan:
+    """A planned MobileNet-style separable block with a single epilogue
+    contract: apply(x, bias_dw=, bias_pw=, inner_activation=, activation=)
+    runs depthwise conv -> bias+activation -> pointwise conv ->
+    bias+activation. In fused mode all of it happens inside one Pallas
+    kernel; in composed mode each conv rides its own plan's epilogue."""
+
+    spec: SeparableSpec
+    u_dw: jax.Array | None = None      # (P, Cp) fused-mode depthwise taps
+    u_pw: jax.Array | None = None      # (Cp, Mp) fused-mode pointwise matrix
+    dw: ConvPlan | None = None         # composed-mode sub-plans
+    pw: ConvPlan | None = None
+    build_time_s: float = 0.0
+
+    def __call__(self, x: jax.Array, **kwargs) -> jax.Array:
+        return self.apply(x, **kwargs)
+
+    def apply(self, x: jax.Array, bias_dw: jax.Array | None = None,
+              bias_pw: jax.Array | None = None,
+              inner_activation: str = "relu",
+              activation: str = "relu") -> jax.Array:
+        spec = self.spec
+        if x.shape[1:] != spec.x_shape[1:]:
+            raise ValueError(
+                f"plan built for input {spec.x_shape} got {x.shape} "
+                f"(batch may differ; H/W/C must match)")
+        for act in (inner_activation, activation):
+            if act not in EPILOGUE_ACTIVATIONS:
+                raise ValueError(f"unknown activation {act!r}; expected one "
+                                 f"of {EPILOGUE_ACTIVATIONS}")
+        if spec.mode == "fused_pallas":
+            from repro.kernels import ops
+            return ops.separable_conv2d_planned(
+                x, self.u_dw, self.u_pw, ct_h=spec.ct_h, ct_w=spec.ct_w,
+                geometry=spec.geometry, stream=spec.stream,
+                c_out=spec.w_pw_shape[3], bias_dw=bias_dw, bias_pw=bias_pw,
+                inner_activation=inner_activation, activation=activation)
+        h = self.dw.apply(x, bias=bias_dw, activation=inner_activation)
+        return self.pw.apply(h, bias=bias_pw, activation=activation)
+
+    @property
+    def mode(self) -> str:
+        return self.spec.mode
+
+    @property
+    def out_shape(self) -> tuple[int, ...]:
+        if self.spec.mode == "fused_pallas":
+            g = self.spec.geometry
+            return (self.spec.x_shape[0], g.out_h, g.out_w,
+                    self.spec.w_pw_shape[3])
+        return self.pw.out_shape
+
+
+def plan_separable_block(
+    x_shape: tuple[int, ...],
+    w_dw: jax.Array,
+    w_pw: jax.Array,
+    *,
+    stride: int | tuple[int, int] = 1,
+    padding: Padding = "SAME",
+    algorithm: Algorithm = "auto",
+    output_tile: int | tuple[int, int] | None = None,
+    dtype=None,
+) -> SeparableBlockPlan:
+    """Plan a depthwise kxk conv and its following 1x1 pointwise conv as one
+    unit (the MobileNet separable block).
+
+    With a Pallas algorithm on a fusable configuration (stride 1, suitable
+    filter size, channel multiplier 1) the block is planned onto the fused
+    streamed kernel: the depthwise output stays in VMEM and feeds the
+    pointwise GEMM directly, with both bias+activation epilogues applied
+    in-kernel. Every other configuration composes two ConvPlans (the
+    depthwise one falling back per the usual suitability rules), so this
+    entry point never rejects a block shape.
+    """
+    global _CACHE_HITS, _CACHE_MISSES
+    t0 = time.perf_counter()
+    x_shape = tuple(x_shape)
+    dw_shape, pw_shape = tuple(w_dw.shape), tuple(w_pw.shape)
+    if algorithm not in ALGORITHMS:
+        raise ValueError(f"unknown algorithm {algorithm!r}; expected one of "
+                         f"{ALGORITHMS}")
+    if len(x_shape) != 4 or len(dw_shape) != 4 or len(pw_shape) != 4:
+        raise ValueError(f"expected NHWC x HWIO x HWIO, got {x_shape} x "
+                         f"{dw_shape} x {pw_shape}")
+    n, h, wdt, c = x_shape
+    kh, kw = dw_shape[:2]
+    if dw_shape[2] != 1 or dw_shape[3] % c:
+        raise ValueError(f"depthwise filter must be (kh, kw, 1, C*mult) for "
+                         f"C={c}, got {dw_shape}")
+    if pw_shape[:2] != (1, 1) or pw_shape[2] != dw_shape[3]:
+        raise ValueError(f"pointwise filter must be (1, 1, {dw_shape[3]}, M), "
+                         f"got {pw_shape}")
+    stride = (stride, stride) if isinstance(stride, int) else tuple(stride)
+    dtype = dtype or w_dw.dtype
+    dtype_str = str(jnp.dtype(dtype))
+    mult = dw_shape[3] // c
+    pallas = algorithm in ("pallas_winograd", "pallas_winograd_materialized",
+                           "pallas_im2col")
+    # Only the streamed-kernel request fuses; the Pallas *baseline*
+    # algorithms must never be silently substituted with the fast path
+    # (their whole point is to be the other arm of an A/B).
+    fusable = (algorithm == "pallas_winograd" and mult == 1
+               and winograd_suitable(kh, kw, stride))
+
+    if fusable:
+        key = ("sepblock", x_shape, dw_shape, pw_shape, dtype_str, stride,
+               padding, algorithm, output_tile)
+        spec = _SPEC_CACHE.get(key) if _cache_enabled() else None
+        if spec is not None:
+            _CACHE_HITS += 1
+        else:
+            _CACHE_MISSES += 1
+            mh, mw = _resolve_output_tile(kh, kw, output_tile)
+            ct_h, ct_w = cook_toom(mh, kh), cook_toom(mw, kw)
+            geom = _wg.conv2d_geometry(h, wdt, kh, kw, mh, mw, padding)
+            stream = _wg.stream_geometry(geom.n_h, geom.n_w, c, pw_shape[3],
+                                         ct_h, ct_w)
+            spec = SeparableSpec(
+                x_shape=x_shape, w_dw_shape=dw_shape, w_pw_shape=pw_shape,
+                dtype=dtype_str, stride=stride, padding=padding,
+                requested=algorithm, mode="fused_pallas",
+                output_tile=(mh, mw), ct_h=ct_h, ct_w=ct_w, geometry=geom,
+                stream=stream)
+            if _cache_enabled():
+                _SPEC_CACHE[key] = spec
+        u_dw = _depthwise_domain_taps(w_dw, spec.ct_h, spec.ct_w, c,
+                                      spec.stream.c_pad)
+        u_pw = jnp.pad(w_pw.reshape(c, pw_shape[3]),
+                       ((0, spec.stream.c_pad - c),
+                        (0, spec.stream.m_pad - pw_shape[3])))
+        return SeparableBlockPlan(spec=spec, u_dw=u_dw, u_pw=u_pw,
+                                  build_time_s=time.perf_counter() - t0)
+
+    # composed fallback: two plans, each on its best available executor.
+    if pallas:
+        # reached when the block cannot fuse (stride > 1, unsuitable k,
+        # mult > 1) or a Pallas baseline was requested: the depthwise half
+        # has no Pallas baseline executor, so it runs grouped im2row.
+        dw_alg = "im2col"
+        pw_alg = "pallas_im2col"
+    else:
+        dw_alg = algorithm
+        if algorithm in ("winograd",) and not winograd_suitable(kh, kw,
+                                                                stride):
+            dw_alg = "im2col"
+        pw_alg = "im2col" if algorithm == "im2col" else "auto"
+    dw = plan_conv2d(x_shape, w_dw, stride=stride, padding=padding,
+                     algorithm=dw_alg, groups=c, output_tile=output_tile,
+                     dtype=dtype)
+    pw = plan_conv2d(dw.out_shape, w_pw, stride=1, padding="SAME",
+                     algorithm=pw_alg, dtype=dtype)
+    spec = SeparableSpec(x_shape=x_shape, w_dw_shape=dw_shape,
+                         w_pw_shape=pw_shape, dtype=dtype_str, stride=stride,
+                         padding=padding, requested=algorithm,
+                         mode="composed")
+    return SeparableBlockPlan(spec=spec, dw=dw, pw=pw,
+                              build_time_s=time.perf_counter() - t0)
 
 
 # ---------------------------------------------------------------------------

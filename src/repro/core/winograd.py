@@ -209,6 +209,21 @@ def stream_geometry(n_h: int, n_w: int, c: int, mout: int,
                           block_c=bc, block_m=bm, c_pad=c_pad, m_pad=m_pad)
 
 
+def stream_geometry_depthwise(n_h: int, n_w: int, c: int,
+                              ct_h: CookToom, ct_w: CookToom, *,
+                              vmem_budget_bytes: int = 15 * 2 ** 20
+                              ) -> StreamGeometry:
+    """Halo blocking for the streamed depthwise kernel: reuse the dense
+    chooser (same strip-origin / edge-padding / per-strip-overhead model;
+    its dense VMEM estimate upper-bounds the depthwise kernel's working set,
+    which has no filter blocks or cross-C accumulator) with the output
+    channel axis collapsed onto the channel axis -- depthwise walks ONE
+    channel axis, so block_m is pinned to block_c."""
+    g = stream_geometry(n_h, n_w, c, c, ct_h, ct_w,
+                        vmem_budget_bytes=vmem_budget_bytes)
+    return g._replace(block_m=g.block_c, m_pad=g.c_pad)
+
+
 class Axis1DGeometry(NamedTuple):
     """Static tiling geometry for the 1xN / Nx1 (single-axis) algorithm."""
 
@@ -323,6 +338,112 @@ def winograd_conv2d_pretransformed(
                    preferred_element_type=preferred_element_type)
 
     # --- phase 3: gather + output transform --------------------------------
+    y = y.transpose(1, 0, 2).reshape(n, nh, nw, th, tw, mout)
+    at_h = jnp.asarray(ct_h.AT, y.dtype)
+    at_w = jnp.asarray(ct_w.AT, y.dtype)
+    out = jnp.einsum("it,nhwtum,ju->nhiwjm", at_h, y, at_w)
+    out = out.reshape(n, nh * mh, nw * mw, mout)
+    return out[:, :geometry.out_h, :geometry.out_w, :].astype(x.dtype)
+
+
+def winograd_depthwise_conv2d_pretransformed(
+    x: jax.Array,
+    u: jax.Array,
+    ct_h: CookToom,
+    ct_w: CookToom,
+    *,
+    padding: Padding = "SAME",
+    geometry: Conv2DGeometry | None = None,
+) -> jax.Array:
+    """Depthwise 2D Winograd executor: the transform-domain channel GEMM of
+    the dense scheme degenerates to an *elementwise* multiply batched over
+    channels -- each channel convolves with its own filter, so phase 2 is a
+    Hadamard product over the (P, R, C) Winograd points instead of a GEMM
+    over C. Phases 1 and 3 (tiling, B^T (.) B, A^T (.) A) are identical to
+    the dense path and reuse its geometry.
+
+    Args:
+      x: (N, H, W, C) input, NHWC.
+      u: (th, tw, C, mult) pre-transformed depthwise filter -- the HWIO
+         (kh, kw, 1, C*mult) filter transformed by G_h (.) G_w^T and
+         regrouped so the channel axis is explicit (mult = channel
+         multiplier; the common MobileNet case is mult = 1).
+
+    Returns:
+      (N, H', W', C*mult), matching jax.lax.conv_general_dilated with
+      feature_group_count = C (output channel o = c * mult + j).
+    """
+    n, h, wdt, c = x.shape
+    th, tw, _, mult = u.shape
+    mh, mw, kh, kw = ct_h.m, ct_w.m, ct_h.r, ct_w.r
+    if geometry is None:
+        geometry = conv2d_geometry(h, wdt, kh, kw, mh, mw, padding)
+    nh, nw = geometry.n_h, geometry.n_w
+    xp = jnp.pad(x, ((0, 0), (geometry.lo_h, geometry.hi_h),
+                     (geometry.lo_w, geometry.hi_w), (0, 0)))
+
+    tiles = _extract_tiles_1d(xp, 1, th, mh, nh)
+    tiles = _extract_tiles_1d(tiles, 3, tw, mw, nw)     # (N, nh, th, nw, tw, C)
+    bt_h = jnp.asarray(ct_h.BT, jnp.float32)
+    bt_w = jnp.asarray(ct_w.BT, jnp.float32)
+    v = jnp.einsum("it,nhtwuc,ju->nhwijc", bt_h,
+                   tiles.astype(jnp.float32), bt_w)     # (N, nh, nw, th, tw, C)
+    # phase 2, depthwise: Hadamard over channels (batched over mult). The
+    # repeated c axis makes this an elementwise product, not a contraction.
+    y = jnp.einsum("nhwijc,ijcm->nhwijcm", v, u.astype(jnp.float32))
+    at_h = jnp.asarray(ct_h.AT, jnp.float32)
+    at_w = jnp.asarray(ct_w.AT, jnp.float32)
+    out = jnp.einsum("it,nhwtucm,ju->nhiwjcm", at_h, y, at_w)
+    out = out.reshape(n, nh * mh, nw * mw, c * mult)
+    return out[:, :geometry.out_h, :geometry.out_w, :].astype(x.dtype)
+
+
+def winograd_grouped_conv2d_pretransformed(
+    x: jax.Array,
+    u: jax.Array,
+    ct_h: CookToom,
+    ct_w: CookToom,
+    groups: int,
+    *,
+    padding: Padding = "SAME",
+    geometry: Conv2DGeometry | None = None,
+    precision=None,
+    preferred_element_type=jnp.float32,
+) -> jax.Array:
+    """Grouped dense Winograd executor: the full channel reduction becomes a
+    block-diagonal reduction -- one (R x Cg) x (Cg x Mg) GEMM per group per
+    Winograd point, expressed as a single batched einsum so the per-group
+    GEMMs stay fused. Phases 1 and 3 are the dense path's.
+
+    Args:
+      x: (N, H, W, C) input; C = groups * Cg.
+      u: (th, tw, Cg, M) pre-transformed grouped filter; M = groups * Mg,
+         group-major on the output axis (matching feature_group_count).
+    """
+    n, h, wdt, c = x.shape
+    th, tw, cg, mout = u.shape
+    mg = mout // groups
+    mh, mw, kh, kw = ct_h.m, ct_w.m, ct_h.r, ct_w.r
+    if geometry is None:
+        geometry = conv2d_geometry(h, wdt, kh, kw, mh, mw, padding)
+    nh, nw = geometry.n_h, geometry.n_w
+    xp = jnp.pad(x, ((0, 0), (geometry.lo_h, geometry.hi_h),
+                     (geometry.lo_w, geometry.hi_w), (0, 0)))
+
+    tiles = _extract_tiles_1d(xp, 1, th, mh, nh)
+    tiles = _extract_tiles_1d(tiles, 3, tw, mw, nw)     # (N, nh, th, nw, tw, C)
+    bt_h = jnp.asarray(ct_h.BT, x.dtype)
+    bt_w = jnp.asarray(ct_w.BT, x.dtype)
+    v = jnp.einsum("it,nhtwuc,ju->nhwijc", bt_h, tiles, bt_w)
+    # scatter with the channel axis split (P, R, G, Cg)
+    v = v.reshape(n * nh * nw, th * tw, groups, cg).transpose(1, 0, 2, 3)
+
+    # phase 2: block-diagonal reduction -- P x G batched (R, Cg) x (Cg, Mg)
+    uu = u.reshape(th * tw, cg, groups, mg)
+    y = jnp.einsum("prgc,pcgm->prgm", v, uu, precision=precision,
+                   preferred_element_type=preferred_element_type)
+    y = y.reshape(th * tw, n * nh * nw, mout)           # group-major M
+
     y = y.transpose(1, 0, 2).reshape(n, nh, nw, th, tw, mout)
     at_h = jnp.asarray(ct_h.AT, y.dtype)
     at_w = jnp.asarray(ct_w.AT, y.dtype)

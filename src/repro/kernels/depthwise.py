@@ -1,0 +1,280 @@
+"""Streamed Pallas depthwise and fused separable (depthwise -> pointwise)
+convolution kernels.
+
+Depthwise layers are memory-bound (Zhang et al. 2020; Hao et al. 2022): the
+per-channel transform-domain work is a Hadamard product, so the win lives
+entirely in layout and fusion -- exactly what the halo-streaming machinery
+from kernels/winograd.py provides. Both kernels reuse its structure: the
+input BlockSpec reads overlapping halo strips of the padded NHWC input
+(element-offset indexing), the gather into overlapping-tile layout happens
+in VMEM, and the output BlockSpec scatters non-overlapping NHWC spatial
+blocks. Halo blocking comes from the same plan-time chooser
+(core/winograd.py:stream_geometry via stream_geometry_depthwise).
+
+`depthwise_streamed` -- grid (N, nHb, nWb, C/bC). One pass, no reduction
+axis: per step, transform the halo strip (B^T (.) B), multiply elementwise
+by the (P, bC) Winograd-domain taps, inverse-transform (A^T (.) A), run the
+fused bias+activation epilogue, and scatter the NHWC block. The only HBM
+tensors are the padded input and the output.
+
+`separable_streamed` -- the fused MobileNet block: depthwise k x k ->
+bias+activation -> pointwise 1x1 -> bias+activation, in ONE kernel. Grid
+(N, nHb, nWb, M/bM, C/bC) with C innermost, mirroring the dense streaming
+kernel's (M, C) sweep: on the first M step of each strip the depthwise
+output block for channel slice cb is computed in VMEM and cached (the
+z-cache below, the analogue of the dense kernel's transformed-input cache);
+every step then runs one (S, bC) x (bC, bM) pointwise GEMM into the fp32
+accumulator; the last C step applies the pointwise epilogue and stores the
+NHWC block. The depthwise -> pointwise intermediate NEVER touches HBM --
+that round trip (write + re-read per pointwise M block + separate epilogue
+passes) is precisely what the unfused baseline pays.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.transforms import CookToom
+from repro.kernels.runtime import apply_activation, resolve_interpret
+
+
+def _depthwise_block(bt_h_ref, bt_w_ref, at_h_ref, at_w_ref, strip, taps,
+                     bias, *, bh: int, bw: int, activation: str):
+    """Shared depthwise compute: halo strip (Hs, Ws, bC) -> spatial block
+    (bh*mh, bw*mw, bC), all in VMEM/registers. `taps` is the (P, bC)
+    Winograd-domain filter slice; `bias` the (bC,) epilogue bias or None."""
+    mh, th = at_h_ref.shape
+    mw, tw = at_w_ref.shape
+    bc = strip.shape[-1]
+    # VMEM gather: halo strip -> (tw, th, bh, bw, bC) overlapping tiles,
+    # offset-major (th + tw static strided slices, as in the dense kernel).
+    rows = jnp.stack([strip[r:r + (bh - 1) * mh + 1:mh]
+                      for r in range(th)], 0)           # (th, bh, Ws, bC)
+    xt = jnp.stack([rows[:, :, q:q + (bw - 1) * mw + 1:mw]
+                    for q in range(tw)], 0)             # (tw, th, bh, bw, bC)
+    # input transform B^T (.) B: contract tile axes, (bh, bw, bC) rides.
+    v = jnp.tensordot(bt_h_ref[...], xt, axes=(1, 1))   # (i, tw, bh, bw, bC)
+    v = jnp.tensordot(bt_w_ref[...], v, axes=(1, 1))    # (j, i, bh, bw, bC)
+    # depthwise phase 2: Hadamard over channels -- the channel GEMM of the
+    # dense kernel degenerates to an elementwise multiply per Winograd point.
+    u = taps.astype(jnp.float32).reshape(th, tw, bc).transpose(1, 0, 2)
+    y = v * u[:, :, None, None, :]                      # (j, i, bh, bw, bC)
+    # output transform A^T (.) A.
+    out = jnp.tensordot(at_h_ref[...], y, axes=(1, 1))  # (mi, j, bh, bw, bC)
+    out = jnp.tensordot(at_w_ref[...], out, axes=(1, 1))  # (mj, mi, bh, bw, bC)
+    if bias is not None:
+        out = out + bias[None, None, None, None, :]
+    out = apply_activation(out, activation)
+    # un-tile to the (bh*mh, bw*mw, bC) NHWC spatial block, in VMEM.
+    out = out.transpose(2, 1, 3, 0, 4)                  # (bh, mi, bw, mj, bC)
+    return out.reshape(bh * mh, bw * mw, bc)
+
+
+def _depthwise_kernel(bt_h_ref, bt_w_ref, at_h_ref, at_w_ref, x_ref, u_ref,
+                      bias_ref, o_ref, *, bh: int, bw: int, activation: str,
+                      has_bias: bool):
+    strip = x_ref[0].astype(jnp.float32)                # (Hs, Ws, bC)
+    bias = bias_ref[0] if has_bias else None
+    o_ref[0] = _depthwise_block(
+        bt_h_ref, bt_w_ref, at_h_ref, at_w_ref, strip, u_ref[...], bias,
+        bh=bh, bw=bw, activation=activation).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "ct_h", "ct_w", "bh", "bw", "block_c", "activation", "interpret"))
+def depthwise_streamed(
+    xp: jax.Array,           # (N, Hp, Wp, Cp) halo-padded NHWC input
+    u: jax.Array,            # (P, Cp) Winograd-domain depthwise taps
+    bias: jax.Array | None,  # (1, Cp) fp32 epilogue bias, or None
+    *,
+    ct_h: CookToom,
+    ct_w: CookToom,
+    bh: int,
+    bw: int,
+    block_c: int = 128,
+    activation: str = "none",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Halo-streaming depthwise transform+Hadamard+inverse+epilogue.
+
+    `xp` must be padded so Hp = nHb*bh*mh + (th - mh) and
+    Wp = nWb*bw*mw + (tw - mw) for integer strip counts (ops.py pads from
+    the plan's StreamGeometry). Returns (N, nHb*bh*mh, nWb*bw*mw, Cp); the
+    caller crops the geometry surplus.
+    """
+    interpret = resolve_interpret(interpret)
+    n, hp, wp, c = xp.shape
+    p, c2 = u.shape
+    th, tw, mh, mw = ct_h.t, ct_w.t, ct_h.m, ct_w.m
+    sh, sw = bh * mh, bw * mw
+    hs, ws = sh + th - mh, sw + tw - mw
+    assert p == th * tw and c == c2, (xp.shape, u.shape)
+    assert c % block_c == 0, (xp.shape, block_c)
+    n_hb, rh = divmod(hp - (th - mh), sh)
+    n_wb, rw = divmod(wp - (tw - mw), sw)
+    assert rh == 0 and rw == 0, (xp.shape, (bh, bw), (mh, mw))
+    grid = (n, n_hb, n_wb, c // block_c)
+
+    has_bias = bias is not None
+    if bias is None:
+        bias = jnp.zeros((1, c), jnp.float32)
+    bt_h = jnp.asarray(ct_h.BT, jnp.float32)
+    bt_w = jnp.asarray(ct_w.BT, jnp.float32)
+    at_h = jnp.asarray(ct_h.AT, jnp.float32)
+    at_w = jnp.asarray(ct_w.AT, jnp.float32)
+    whole = lambda arr: pl.BlockSpec(arr.shape,
+                                     lambda n_, i, j, cb: (0,) * arr.ndim)
+    return pl.pallas_call(
+        functools.partial(_depthwise_kernel, bh=bh, bw=bw,
+                          activation=activation, has_bias=has_bias),
+        grid=grid,
+        in_specs=[
+            whole(bt_h), whole(bt_w), whole(at_h), whole(at_w),
+            pl.BlockSpec((1, hs, ws, block_c),
+                         lambda n_, i, j, cb: (n_, i * sh, j * sw,
+                                               cb * block_c),
+                         indexing_mode=pl.Unblocked()),
+            pl.BlockSpec((p, block_c), lambda n_, i, j, cb: (0, cb)),
+            pl.BlockSpec((1, block_c), lambda n_, i, j, cb: (0, cb)),
+        ],
+        out_specs=pl.BlockSpec((1, sh, sw, block_c),
+                               lambda n_, i, j, cb: (n_, i, j, cb)),
+        out_shape=jax.ShapeDtypeStruct((n, n_hb * sh, n_wb * sw, c),
+                                       xp.dtype),
+        interpret=interpret,
+    )(bt_h, bt_w, at_h, at_w, xp, u, bias)
+
+
+# ---------------------------------------------------------------------------
+# Fused separable block: depthwise -> epilogue -> pointwise -> epilogue
+# ---------------------------------------------------------------------------
+
+def _separable_kernel(bt_h_ref, bt_w_ref, at_h_ref, at_w_ref, x_ref, udw_ref,
+                      upw_ref, bdw_ref, bpw_ref, o_ref, acc_ref, z_ref, *,
+                      n_c: int, bh: int, bw: int, block_c: int,
+                      inner_activation: str, activation: str,
+                      has_bias_dw: bool, has_bias_pw: bool):
+    m_step = pl.program_id(3)
+    c_step = pl.program_id(4)
+
+    @pl.when(c_step == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    mh, th = at_h_ref.shape
+    mw, tw = at_w_ref.shape
+    sh, sw = bh * mh, bw * mw
+
+    # Depthwise stage runs once per (strip, C block) -- the first M step
+    # fills the z cache with the post-epilogue depthwise output, later M
+    # steps reuse it (the analogue of the dense kernel's transformed-input
+    # cache). The intermediate lives only in this VMEM scratch.
+    @pl.when(m_step == 0)
+    def _dw():
+        strip = x_ref[0].astype(jnp.float32)            # (Hs, Ws, bC)
+        bias = bdw_ref[0] if has_bias_dw else None
+        z = _depthwise_block(bt_h_ref, bt_w_ref, at_h_ref, at_w_ref, strip,
+                             udw_ref[...], bias, bh=bh, bw=bw,
+                             activation=inner_activation)
+        z_ref[c_step] = z.reshape(sh * sw, block_c)
+
+    # pointwise stage: one (S, bC) x (bC, bM) GEMM per step, fp32 accumulate.
+    acc_ref[...] += jnp.dot(z_ref[c_step], upw_ref[...].astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(c_step == n_c - 1)
+    def _store():
+        out = acc_ref[...]
+        if has_bias_pw:
+            out = out + bpw_ref[0][None, :]
+        out = apply_activation(out, activation)
+        o_ref[0] = out.reshape(sh, sw, -1).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "ct_h", "ct_w", "bh", "bw", "block_c", "block_m", "inner_activation",
+    "activation", "interpret"))
+def separable_streamed(
+    xp: jax.Array,            # (N, Hp, Wp, Cp) halo-padded NHWC input
+    u_dw: jax.Array,          # (P, Cp) Winograd-domain depthwise taps
+    u_pw: jax.Array,          # (Cp, Mp) pointwise filter matrix
+    bias_dw: jax.Array | None,   # (1, Cp) fp32 depthwise bias, or None
+    bias_pw: jax.Array | None,   # (1, Mp) fp32 pointwise bias, or None
+    *,
+    ct_h: CookToom,
+    ct_w: CookToom,
+    bh: int,
+    bw: int,
+    block_c: int = 128,
+    block_m: int = 128,
+    inner_activation: str = "none",
+    activation: str = "none",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused separable block over the halo-padded input: depthwise Winograd
+    + bias/activation + pointwise 1x1 + bias/activation in one kernel; the
+    depthwise -> pointwise intermediate never leaves VMEM. Returns
+    (N, nHb*bh*mh, nWb*bw*mw, Mp); the caller crops the geometry surplus.
+    """
+    interpret = resolve_interpret(interpret)
+    n, hp, wp, c = xp.shape
+    p, c2 = u_dw.shape
+    c3, m = u_pw.shape
+    th, tw, mh, mw = ct_h.t, ct_w.t, ct_h.m, ct_w.m
+    sh, sw = bh * mh, bw * mw
+    hs, ws = sh + th - mh, sw + tw - mw
+    assert p == th * tw and c == c2 == c3, (xp.shape, u_dw.shape, u_pw.shape)
+    assert c % block_c == 0 and m % block_m == 0, (xp.shape, u_pw.shape,
+                                                   (block_c, block_m))
+    n_hb, rh = divmod(hp - (th - mh), sh)
+    n_wb, rw = divmod(wp - (tw - mw), sw)
+    assert rh == 0 and rw == 0, (xp.shape, (bh, bw), (mh, mw))
+    n_c = c // block_c
+    grid = (n, n_hb, n_wb, m // block_m, n_c)
+
+    has_bias_dw = bias_dw is not None
+    has_bias_pw = bias_pw is not None
+    if bias_dw is None:
+        bias_dw = jnp.zeros((1, c), jnp.float32)
+    if bias_pw is None:
+        bias_pw = jnp.zeros((1, m), jnp.float32)
+    bt_h = jnp.asarray(ct_h.BT, jnp.float32)
+    bt_w = jnp.asarray(ct_w.BT, jnp.float32)
+    at_h = jnp.asarray(ct_h.AT, jnp.float32)
+    at_w = jnp.asarray(ct_w.AT, jnp.float32)
+    whole = lambda arr: pl.BlockSpec(arr.shape,
+                                     lambda n_, i, j, mb, cb: (0,) * arr.ndim)
+    return pl.pallas_call(
+        functools.partial(_separable_kernel, n_c=n_c, bh=bh, bw=bw,
+                          block_c=block_c, inner_activation=inner_activation,
+                          activation=activation, has_bias_dw=has_bias_dw,
+                          has_bias_pw=has_bias_pw),
+        grid=grid,
+        in_specs=[
+            whole(bt_h), whole(bt_w), whole(at_h), whole(at_w),
+            pl.BlockSpec((1, hs, ws, block_c),
+                         lambda n_, i, j, mb, cb: (n_, i * sh, j * sw,
+                                                   cb * block_c),
+                         indexing_mode=pl.Unblocked()),
+            pl.BlockSpec((p, block_c), lambda n_, i, j, mb, cb: (0, cb)),
+            pl.BlockSpec((block_c, block_m),
+                         lambda n_, i, j, mb, cb: (cb, mb)),
+            pl.BlockSpec((1, block_c), lambda n_, i, j, mb, cb: (0, cb)),
+            pl.BlockSpec((1, block_m), lambda n_, i, j, mb, cb: (0, mb)),
+        ],
+        out_specs=pl.BlockSpec((1, sh, sw, block_m),
+                               lambda n_, i, j, mb, cb: (n_, i, j, mb)),
+        out_shape=jax.ShapeDtypeStruct((n, n_hb * sh, n_wb * sw, m),
+                                       xp.dtype),
+        scratch_shapes=[pltpu.VMEM((sh * sw, block_m), jnp.float32),
+                        # depthwise-output cache: filled on the first M step
+                        # of each strip, reused by the rest of the (M, C)
+                        # sweep -- the fused block's only "intermediate".
+                        pltpu.VMEM((n_c, sh * sw, block_c), jnp.float32)],
+        interpret=interpret,
+    )(bt_h, bt_w, at_h, at_w, xp, u_dw, u_pw, bias_dw, bias_pw)

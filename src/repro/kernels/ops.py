@@ -188,6 +188,75 @@ def winograd_conv2d_planned_materialized(
 
 
 # ---------------------------------------------------------------------------
+# Depthwise / fused separable streamed paths
+# ---------------------------------------------------------------------------
+
+def depthwise_conv2d_planned(
+    x: jax.Array,
+    u: jax.Array,
+    *,
+    ct_h,
+    ct_w,
+    geometry: _wg.Conv2DGeometry,
+    stream: _wg.StreamGeometry,
+    c_out: int,
+    bias: jax.Array | None = None,
+    activation: str = "none",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Execute a planned streaming Pallas depthwise conv: `u` is the
+    pre-transformed, pre-padded (P, Cp) taps; conv padding, halo blocking
+    and channel blocks come from the plan. Per-call work is one NHWC pad,
+    the kernel, one crop."""
+    from repro.kernels import depthwise as _k_depthwise
+    c = x.shape[3]
+    xp = jnp.pad(x, ((0, 0),
+                     (geometry.lo_h, geometry.hi_h + stream.pad_h),
+                     (geometry.lo_w, geometry.hi_w + stream.pad_w),
+                     (0, stream.c_pad - c)))
+    y = _k_depthwise.depthwise_streamed(
+        xp, u, _pad_bias(bias, stream.c_pad), ct_h=ct_h, ct_w=ct_w,
+        bh=stream.bh, bw=stream.bw, block_c=stream.block_c,
+        activation=activation, interpret=interpret)
+    return y[:, :geometry.out_h, :geometry.out_w, :c_out]
+
+
+def separable_conv2d_planned(
+    x: jax.Array,
+    u_dw: jax.Array,
+    u_pw: jax.Array,
+    *,
+    ct_h,
+    ct_w,
+    geometry: _wg.Conv2DGeometry,
+    stream: _wg.StreamGeometry,
+    c_out: int,
+    bias_dw: jax.Array | None = None,
+    bias_pw: jax.Array | None = None,
+    inner_activation: str = "none",
+    activation: str = "none",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Execute a planned fused separable block (depthwise Winograd +
+    epilogue + pointwise 1x1 + epilogue in one streamed kernel; the
+    intermediate never touches HBM). `u_dw` is the (P, Cp) depthwise taps,
+    `u_pw` the (Cp, Mp) pointwise matrix, both pre-padded at plan time."""
+    from repro.kernels import depthwise as _k_depthwise
+    c = x.shape[3]
+    xp = jnp.pad(x, ((0, 0),
+                     (geometry.lo_h, geometry.hi_h + stream.pad_h),
+                     (geometry.lo_w, geometry.hi_w + stream.pad_w),
+                     (0, stream.c_pad - c)))
+    y = _k_depthwise.separable_streamed(
+        xp, u_dw, u_pw, _pad_bias(bias_dw, stream.c_pad),
+        _pad_bias(bias_pw, stream.m_pad), ct_h=ct_h, ct_w=ct_w,
+        bh=stream.bh, bw=stream.bw, block_c=stream.block_c,
+        block_m=stream.block_m, inner_activation=inner_activation,
+        activation=activation, interpret=interpret)
+    return y[:, :geometry.out_h, :geometry.out_w, :c_out]
+
+
+# ---------------------------------------------------------------------------
 # im2col conv2d (baseline)
 # ---------------------------------------------------------------------------
 

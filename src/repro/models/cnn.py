@@ -1,5 +1,6 @@
-"""The paper's evaluation networks: VGG-16/19, GoogleNet (Inception-v1),
-Inception-v3 and SqueezeNet, built on the unified conv dispatcher.
+"""The paper's evaluation networks -- VGG-16/19, GoogleNet (Inception-v1),
+Inception-v3, SqueezeNet -- plus the depthwise-separable MobileNet-v1
+family, built on the unified conv dispatcher.
 
 Every convolution goes through repro.core.dispatch.conv2d, so a whole network
 can be flipped between the paper's region-wise multi-channel Winograd scheme
@@ -26,7 +27,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.dispatch import Algorithm, winograd_suitable
-from repro.core.plan import ConvPlan, plan_conv2d
+from repro.core.plan import (ConvPlan, SeparableBlockPlan,
+                             algorithm_supported, plan_conv2d,
+                             plan_separable_block)
 from repro.models.layers import conv2d_layer, init_conv2d
 
 _F32 = jnp.float32
@@ -41,6 +44,22 @@ class Conv:
     stride: int = 1
     padding: str = "SAME"
     relu: bool = True
+    groups: int = 1                    # feature_group_count (must divide the
+                                       # incoming channel count at this spot)
+
+
+@dataclasses.dataclass(frozen=True)
+class SeparableConv:
+    """MobileNet depthwise-separable unit: k x k depthwise conv (groups =
+    C_in, channel multiplier 1) + 1x1 pointwise conv, bias+ReLU after each.
+    Planned as ONE unit by plan_cnn (plan_separable_block), so the Pallas
+    path fuses the whole block into a single streamed kernel."""
+
+    name: str
+    k: int
+    c_out: int
+    stride: int = 1
+    padding: str = "SAME"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,9 +109,19 @@ def init_cnn(key, specs, c_in: int, dtype=_F32, res: int = 224) -> dict:
             if isinstance(spec, Conv):
                 key, k1 = jax.random.split(key)
                 params[spec.name] = init_conv2d(k1, spec.kh, spec.kw, c,
-                                                spec.c_out, dtype)
+                                                spec.c_out, dtype,
+                                                groups=spec.groups)
                 h = _out_size(h, spec.kh, spec.stride, spec.padding)
                 w = _out_size(w, spec.kw, spec.stride, spec.padding)
+                c = spec.c_out
+            elif isinstance(spec, SeparableConv):
+                key, k1, k2 = jax.random.split(key, 3)
+                params[spec.name] = {
+                    "dw": init_conv2d(k1, spec.k, spec.k, c, c, dtype,
+                                      groups=c),
+                    "pw": init_conv2d(k2, 1, 1, c, spec.c_out, dtype)}
+                h = _out_size(h, spec.k, spec.stride, spec.padding)
+                w = _out_size(w, spec.k, spec.stride, spec.padding)
                 c = spec.c_out
             elif isinstance(spec, Pool):
                 h = _out_size(h, spec.k, spec.stride, spec.padding)
@@ -120,24 +149,28 @@ def init_cnn(key, specs, c_in: int, dtype=_F32, res: int = 224) -> dict:
     return params
 
 
-def _layer_algorithm(spec: Conv, algorithm: Algorithm) -> Algorithm:
-    """Forced winograd falls back to im2col on unsuitable layers -- the
-    paper's mixed policy applied to a forced global setting."""
-    if algorithm in ("winograd", "pallas_winograd",
-                     "pallas_winograd_materialized") and \
-            not winograd_suitable(spec.kh, spec.kw, spec.stride):
-        return "im2col"
-    return algorithm
+def _layer_algorithm(spec: Conv, algorithm: Algorithm,
+                     c_in: int | None = None) -> Algorithm:
+    """Forced winograd/Pallas settings fall back to im2col on layers their
+    executor does not cover (unsuitable filter/stride, grouped constraints)
+    -- the paper's mixed policy applied to a forced global setting. The
+    coverage rules live in ONE place: plan.algorithm_supported."""
+    if algorithm_supported(algorithm, spec.kh, spec.kw, spec.stride,
+                           groups=spec.groups, c_in=c_in, c_out=spec.c_out):
+        return algorithm
+    return "im2col"
 
 
 def plan_cnn(params: dict, specs, *, res: int, c_in: int = 3, batch: int = 1,
-             algorithm: Algorithm = "auto") -> dict[str, ConvPlan]:
-    """Build one ConvPlan per conv layer, walking the spec list with the same
-    shape tracking as init_cnn. All algorithm decisions (including measured
-    auto_tuned choices) and every filter transform happen here, once; the
-    returned dict feeds cnn_forward(plans=...) for transform-free inference.
+             algorithm: Algorithm = "auto"
+             ) -> dict[str, ConvPlan | SeparableBlockPlan]:
+    """Build one ConvPlan per conv layer -- and one SeparableBlockPlan per
+    separable block -- walking the spec list with the same shape tracking as
+    init_cnn. All algorithm decisions (including measured auto_tuned
+    choices) and every filter transform happen here, once; the returned
+    dict feeds cnn_forward(plans=...) for transform-free inference.
     """
-    plans: dict[str, ConvPlan] = {}
+    plans: dict[str, ConvPlan | SeparableBlockPlan] = {}
 
     def walk(specs, h, w, c):
         for spec in specs:
@@ -145,9 +178,18 @@ def plan_cnn(params: dict, specs, *, res: int, c_in: int = 3, batch: int = 1,
                 plans[spec.name] = plan_conv2d(
                     (batch, h, w, c), params[spec.name]["w"],
                     stride=spec.stride, padding=spec.padding,
-                    algorithm=_layer_algorithm(spec, algorithm))
+                    groups=spec.groups,
+                    algorithm=_layer_algorithm(spec, algorithm, c))
                 h = _out_size(h, spec.kh, spec.stride, spec.padding)
                 w = _out_size(w, spec.kw, spec.stride, spec.padding)
+                c = spec.c_out
+            elif isinstance(spec, SeparableConv):
+                plans[spec.name] = plan_separable_block(
+                    (batch, h, w, c), params[spec.name]["dw"]["w"],
+                    params[spec.name]["pw"]["w"], stride=spec.stride,
+                    padding=spec.padding, algorithm=algorithm)
+                h = _out_size(h, spec.k, spec.stride, spec.padding)
+                w = _out_size(w, spec.k, spec.stride, spec.padding)
                 c = spec.c_out
             elif isinstance(spec, Pool):
                 h = _out_size(h, spec.k, spec.stride, spec.padding)
@@ -194,13 +236,49 @@ def cnn_forward(params: dict, x: jax.Array, specs,
                     layer_times[spec.name] = dict(
                         kh=spec.kh, kw=spec.kw, c_in=x.shape[-1],
                         c_out=spec.c_out, h=x.shape[1], w=x.shape[2],
-                        stride=spec.stride,
+                        stride=spec.stride, groups=spec.groups,
                         suitable=winograd_suitable(spec.kh, spec.kw, spec.stride))
                 x = conv2d_layer(
                     params[spec.name], x, relu=spec.relu,
                     plan=plans.get(spec.name) if plans else None,
                     stride=spec.stride, padding=spec.padding,
-                    algorithm=_layer_algorithm(spec, algorithm))
+                    groups=spec.groups,
+                    algorithm=_layer_algorithm(spec, algorithm, x.shape[-1]))
+            elif isinstance(spec, SeparableConv):
+                p = params[spec.name]
+                c = x.shape[-1]
+                if layer_times is not None:
+                    layer_times[f"{spec.name}_dw"] = dict(
+                        kh=spec.k, kw=spec.k, c_in=c, c_out=c,
+                        h=x.shape[1], w=x.shape[2], stride=spec.stride,
+                        groups=c,
+                        suitable=winograd_suitable(spec.k, spec.k,
+                                                   spec.stride))
+                    layer_times[f"{spec.name}_pw"] = dict(
+                        kh=1, kw=1, c_in=c, c_out=spec.c_out,
+                        h=_out_size(x.shape[1], spec.k, spec.stride,
+                                    spec.padding),
+                        w=_out_size(x.shape[2], spec.k, spec.stride,
+                                    spec.padding),
+                        stride=1, groups=1, suitable=False)
+                if plans:
+                    x = plans[spec.name].apply(
+                        x, bias_dw=p["dw"]["b"], bias_pw=p["pw"]["b"])
+                else:
+                    from repro.core.dispatch import conv2d
+                    dw_spec = Conv(spec.name, spec.k, spec.k, c,
+                                   stride=spec.stride, padding=spec.padding,
+                                   groups=c)
+                    x = conv2d(x, p["dw"]["w"], stride=spec.stride,
+                               padding=spec.padding, groups=c,
+                               algorithm=_layer_algorithm(dw_spec, algorithm,
+                                                          c),
+                               bias=p["dw"]["b"], activation="relu")
+                    pw_spec = Conv(f"{spec.name}_pw", 1, 1, spec.c_out)
+                    x = conv2d(x, p["pw"]["w"],
+                               algorithm=_layer_algorithm(pw_spec, algorithm,
+                                                          c),
+                               bias=p["pw"]["b"], activation="relu")
             elif isinstance(spec, Pool):
                 x = _pool(x, spec)
             elif isinstance(spec, Concat):
@@ -358,10 +436,42 @@ def inception_v3():
     ]
 
 
+#: MobileNet-v1 body: (c_out, stride) of each depthwise-separable block
+#: (Howard et al. 2017, Table 1), after the stride-2 3x3 stem.
+_MOBILENET_V1_BLOCKS = (
+    (64, 1), (128, 2), (128, 1), (256, 2), (256, 1), (512, 2),
+    (512, 1), (512, 1), (512, 1), (512, 1), (512, 1), (1024, 2), (1024, 1),
+)
+
+
+def mobilenet_v1(width_mult: float = 1.0):
+    """MobileNet-v1: a stride-2 3x3 stem + 13 depthwise-separable blocks.
+
+    `width_mult` is the paper's width multiplier alpha: every channel count
+    is scaled and rounded to a multiple of 8 (floored at 8), the standard
+    slim-model convention. Each SeparableConv is planned as one fused unit
+    by plan_cnn."""
+    def ch(c: int) -> int:
+        return max(int(c * width_mult + 4) // 8 * 8, 8)
+
+    s = [Conv("conv1", 3, 3, ch(32), stride=2)]
+    s += [SeparableConv(f"sep{i + 2}", 3, ch(c), stride=st)
+          for i, (c, st) in enumerate(_MOBILENET_V1_BLOCKS)]
+    s += [GlobalAvgPool(), Dense("fc", 1000, relu=False)]
+    return s
+
+
+def mobilenet_v1_050():
+    """MobileNet-v1 at width multiplier 0.5."""
+    return mobilenet_v1(width_mult=0.5)
+
+
 NETWORKS = {
     "vgg16": (vgg16, 224),
     "vgg19": (vgg19, 224),
     "googlenet": (googlenet, 224),
     "inception_v3": (inception_v3, 299),
     "squeezenet": (squeezenet, 224),
+    "mobilenet_v1": (mobilenet_v1, 224),
+    "mobilenet_v1_050": (mobilenet_v1_050, 224),
 }

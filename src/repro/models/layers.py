@@ -125,10 +125,15 @@ def init_mlp(key, d_model: int, d_ff: int, act: str, dtype) -> Params:
 # ---------------------------------------------------------------------------
 
 def init_conv2d(key, kh: int, kw: int, c_in: int, c_out: int,
-                dtype=jnp.float32) -> Params:
-    """He-style conv init, HWIO weight + bias."""
-    scale = (kh * kw * c_in) ** -0.5
-    return {"w": scale * jax.random.normal(key, (kh, kw, c_in, c_out), dtype),
+                dtype=jnp.float32, groups: int = 1) -> Params:
+    """He-style conv init, HWIO weight + bias. Grouped filters carry
+    c_in/groups input channels (groups = c_in is a depthwise conv)."""
+    if c_in % groups or c_out % groups:
+        raise ValueError(f"groups={groups} must divide c_in={c_in} and "
+                         f"c_out={c_out}")
+    cg = c_in // groups
+    scale = (kh * kw * cg) ** -0.5
+    return {"w": scale * jax.random.normal(key, (kh, kw, cg, c_out), dtype),
             "b": jnp.zeros((c_out,), dtype)}
 
 

@@ -13,6 +13,18 @@ def rng():
     return np.random.default_rng(0)
 
 
+@pytest.fixture(autouse=True)
+def _fresh_plan_cache():
+    """Process-level plan/spec cache state must not leak between tests:
+    ordering-dependent cache hits can mask spec-keying bugs (a test that
+    plans a shape another test already planned would silently reuse the
+    other test's decisions)."""
+    from repro.core.plan import clear_plan_cache
+    clear_plan_cache()
+    yield
+    clear_plan_cache()
+
+
 def rel_err(a, b):
     import jax.numpy as jnp
     denom = float(jnp.max(jnp.abs(b))) + 1e-9

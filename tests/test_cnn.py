@@ -12,7 +12,7 @@ from conftest import rel_err
 
 # reduced resolutions that keep every VALID conv/pool positive-sized
 _RES = {"vgg16": 64, "vgg19": 64, "googlenet": 64, "inception_v3": 96,
-        "squeezenet": 64}
+        "squeezenet": 64, "mobilenet_v1": 64, "mobilenet_v1_050": 64}
 
 
 @pytest.mark.parametrize("net", sorted(cnn.NETWORKS))

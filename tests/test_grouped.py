@@ -1,0 +1,449 @@
+"""Grouped / depthwise 2D convolution through the plan -> dispatch ->
+executor -> kernel stack (PR 3).
+
+Covers: oracle equivalence of every grouped executor (depthwise Winograd's
+transform-domain Hadamard, block-diagonal grouped Winograd, grouped im2row,
+the streamed Pallas depthwise kernel, and the fused separable block) vs
+jax.lax.conv_general_dilated with feature_group_count; a hypothesis shape
+sweep over all of them; plan-cache keying on groups; the groups constraint
+errors; and the MobileNet-v1 zoo entry end-to-end through plan_cnn.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dispatch
+from repro.core.im2col import direct_conv2d
+from repro.core.plan import (plan_cache_info, plan_conv2d,
+                             plan_separable_block)
+
+from conftest import rel_err
+
+
+def _sep_oracle(x, w_dw, w_pw, b_dw, b_pw, stride=1):
+    c = x.shape[-1]
+    h = jax.nn.relu(direct_conv2d(x, w_dw, stride=stride, groups=c) + b_dw)
+    return jax.nn.relu(direct_conv2d(h, w_pw) + b_pw)
+
+
+# ---------------------------------------------------------------------------
+# oracle equivalence: every grouped executor vs feature_group_count
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algorithm", ["auto", "winograd", "im2col",
+                                       "pallas_winograd", "auto_tuned"])
+@pytest.mark.parametrize("padding", ["SAME", "VALID"])
+def test_depthwise_plan_matches_direct(rng, algorithm, padding):
+    c = 10
+    x = jnp.asarray(rng.standard_normal((2, 13, 11, c)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 3, 1, c)) / 3, jnp.float32)
+    p = plan_conv2d(x.shape, w, groups=c, padding=padding,
+                    algorithm=algorithm)
+    got = p.apply(x)
+    want = direct_conv2d(x, w, padding=padding, groups=c)
+    assert got.shape == want.shape
+    assert p.out_shape == want.shape
+    assert rel_err(got, want) < 1e-4
+
+
+@pytest.mark.parametrize("algorithm,resolved", [
+    ("auto", "winograd_grouped"), ("winograd", "winograd_grouped"),
+    ("im2col", "im2col")])
+@pytest.mark.parametrize("groups", [2, 3, 6])
+def test_grouped_plan_matches_direct(rng, algorithm, resolved, groups):
+    c, m = 12, 18
+    x = jnp.asarray(rng.standard_normal((1, 14, 9, c)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 3, c // groups, m)) / 3,
+                    jnp.float32)
+    p = plan_conv2d(x.shape, w, groups=groups, algorithm=algorithm)
+    assert p.algorithm == resolved
+    got = p.apply(x)
+    want = direct_conv2d(x, w, groups=groups)
+    assert got.shape == want.shape
+    assert rel_err(got, want) < 1e-4
+
+
+def test_depthwise_channel_multiplier(rng):
+    """Depthwise with channel multiplier > 1 (output channel o = c*mult+j,
+    the lax ordering) through the pure-JAX executors."""
+    c, mult = 6, 3
+    x = jnp.asarray(rng.standard_normal((1, 12, 12, c)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 3, 1, c * mult)) / 3, jnp.float32)
+    want = direct_conv2d(x, w, groups=c)
+    for algorithm in ("winograd", "im2col"):
+        p = plan_conv2d(x.shape, w, groups=c, algorithm=algorithm)
+        assert rel_err(p.apply(x), want) < 1e-4
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+def test_grouped_strided_falls_back_to_im2col(rng, stride):
+    c, g = 8, 4
+    x = jnp.asarray(rng.standard_normal((1, 11, 11, c)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 3, c // g, 8)) / 3, jnp.float32)
+    p = plan_conv2d(x.shape, w, groups=g, stride=stride, algorithm="auto")
+    assert p.algorithm == ("winograd_grouped" if stride == 1 else "im2col")
+    want = direct_conv2d(x, w, stride=stride, groups=g)
+    assert rel_err(p.apply(x), want) < 1e-4
+
+
+def test_depthwise_pallas_fused_epilogue(rng):
+    """The streamed depthwise kernel fuses bias+activation into its store."""
+    c = 9
+    x = jnp.asarray(rng.standard_normal((2, 14, 10, c)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 3, 1, c)) / 3, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((c,)), jnp.float32)
+    p = plan_conv2d(x.shape, w, groups=c, algorithm="pallas_winograd")
+    assert p.algorithm == "pallas_depthwise"
+    for act, fn in (("relu", jax.nn.relu), ("gelu", jax.nn.gelu)):
+        got = p.apply(x, bias=b, activation=act)
+        want = fn(direct_conv2d(x, w, groups=c) + b)
+        assert rel_err(got, want) < 1e-4
+
+
+def test_depthwise_pallas_multiblock_channels(rng):
+    """C above one 128 block exercises the depthwise kernel's channel grid
+    axis; C deliberately not a multiple of 128."""
+    c = 131
+    x = jnp.asarray(rng.standard_normal((1, 12, 12, c)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 3, 1, c)) / 9, jnp.float32)
+    p = plan_conv2d(x.shape, w, groups=c, algorithm="pallas_winograd")
+    assert rel_err(p.apply(x), direct_conv2d(x, w, groups=c)) < 1e-4
+
+
+def test_dispatch_conv2d_groups(rng):
+    c = 8
+    x = jnp.asarray(rng.standard_normal((1, 10, 10, c)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 3, 1, c)) / 3, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((c,)), jnp.float32)
+    got = dispatch.conv2d(x, w, groups=c, bias=b, activation="relu")
+    want = jax.nn.relu(direct_conv2d(x, w, groups=c) + b)
+    assert rel_err(got, want) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# separable blocks (fused + composed)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algorithm,mode", [
+    ("pallas_winograd", "fused_pallas"), ("auto", "composed"),
+    ("im2col", "composed")])
+def test_separable_block_matches_oracle(rng, algorithm, mode):
+    c, m = 10, 14
+    x = jnp.asarray(rng.standard_normal((2, 13, 11, c)), jnp.float32)
+    w_dw = jnp.asarray(rng.standard_normal((3, 3, 1, c)) / 3, jnp.float32)
+    w_pw = jnp.asarray(rng.standard_normal((1, 1, c, m)) / 3, jnp.float32)
+    b_dw = jnp.asarray(rng.standard_normal((c,)), jnp.float32)
+    b_pw = jnp.asarray(rng.standard_normal((m,)), jnp.float32)
+    p = plan_separable_block(x.shape, w_dw, w_pw, algorithm=algorithm)
+    assert p.mode == mode
+    got = p.apply(x, bias_dw=b_dw, bias_pw=b_pw)
+    want = _sep_oracle(x, w_dw, w_pw, b_dw, b_pw)
+    assert got.shape == want.shape == p.out_shape
+    assert rel_err(got, want) < 1e-4
+
+
+def test_separable_block_strided_composes(rng):
+    """Stride-2 blocks (MobileNet reductions) cannot fuse; the composed
+    fallback must still match the oracle, on the Pallas path too."""
+    c, m = 6, 8
+    x = jnp.asarray(rng.standard_normal((1, 12, 12, c)), jnp.float32)
+    w_dw = jnp.asarray(rng.standard_normal((3, 3, 1, c)) / 3, jnp.float32)
+    w_pw = jnp.asarray(rng.standard_normal((1, 1, c, m)) / 3, jnp.float32)
+    b_dw = jnp.asarray(rng.standard_normal((c,)), jnp.float32)
+    b_pw = jnp.asarray(rng.standard_normal((m,)), jnp.float32)
+    for algorithm in ("pallas_winograd", "auto"):
+        p = plan_separable_block(x.shape, w_dw, w_pw, stride=2,
+                                 algorithm=algorithm)
+        assert p.mode == "composed"
+        got = p.apply(x, bias_dw=b_dw, bias_pw=b_pw)
+        assert rel_err(got, _sep_oracle(x, w_dw, w_pw, b_dw, b_pw,
+                                        stride=2)) < 1e-4
+
+
+def test_separable_pallas_baselines_never_fuse(rng):
+    """Requesting a Pallas *baseline* algorithm must not silently
+    substitute the fused fast path -- the baselines exist to be the other
+    arm of an A/B."""
+    c, m = 8, 8
+    x = jnp.asarray(rng.standard_normal((1, 12, 12, c)), jnp.float32)
+    w_dw = jnp.asarray(rng.standard_normal((3, 3, 1, c)) / 3, jnp.float32)
+    w_pw = jnp.asarray(rng.standard_normal((1, 1, c, m)) / 3, jnp.float32)
+    for alg in ("pallas_im2col", "pallas_winograd_materialized"):
+        p = plan_separable_block(x.shape, w_dw, w_pw, algorithm=alg)
+        assert p.mode == "composed", (alg, p.mode)
+        assert p.dw.algorithm == "im2col"       # no grouped Pallas baseline
+        assert p.pw.algorithm == "pallas_im2col"
+        got = p.apply(x, bias_dw=jnp.zeros((c,)), bias_pw=jnp.zeros((m,)))
+        want = _sep_oracle(x, w_dw, w_pw, jnp.zeros((c,)), jnp.zeros((m,)))
+        assert rel_err(got, want) < 1e-4
+
+
+def test_algorithm_supported_matches_plan_conv2d(rng):
+    """The coverage predicate and the planner must agree: supported ->
+    plan_conv2d succeeds; unsupported (for concrete algorithms) ->
+    plan_conv2d raises. This is the single-source contract
+    models/cnn.py:_layer_algorithm relies on."""
+    from repro.core.plan import ALGORITHMS, algorithm_supported
+    cases = [
+        # (kh, kw, stride, groups, c_in, c_out)
+        (3, 3, 1, 1, 8, 8), (3, 3, 2, 1, 8, 8), (1, 7, 1, 1, 8, 8),
+        (3, 3, 1, 8, 8, 8), (3, 3, 2, 8, 8, 8), (3, 3, 1, 8, 8, 16),
+        (3, 3, 1, 2, 8, 8), (1, 3, 1, 8, 8, 8), (4, 4, 1, 1, 8, 8),
+    ]
+    for kh, kw, stride, groups, c_in, c_out in cases:
+        w = jnp.zeros((kh, kw, c_in // groups, c_out), jnp.float32)
+        for alg in ALGORITHMS:
+            ok = algorithm_supported(alg, kh, kw, stride, groups=groups,
+                                     c_in=c_in, c_out=c_out)
+            try:
+                plan_conv2d((1, 16, 16, c_in), w, stride=stride,
+                            groups=groups, algorithm=alg)
+                planned = True
+            except ValueError:
+                planned = False
+            if alg in ("auto", "auto_tuned"):
+                assert planned           # policies always resolve something
+            else:
+                assert planned == ok, (alg, kh, kw, stride, groups,
+                                       c_in, c_out)
+
+
+def test_separable_block_under_jit(rng):
+    c, m = 8, 8
+    x = jnp.asarray(rng.standard_normal((1, 12, 12, c)), jnp.float32)
+    w_dw = jnp.asarray(rng.standard_normal((3, 3, 1, c)) / 3, jnp.float32)
+    w_pw = jnp.asarray(rng.standard_normal((1, 1, c, m)) / 3, jnp.float32)
+    p = plan_separable_block(x.shape, w_dw, w_pw,
+                             algorithm="pallas_winograd")
+    got = jax.jit(lambda x: p.apply(x))(x)
+    want = _sep_oracle(x, w_dw, w_pw, jnp.zeros((c,)), jnp.zeros((m,)))
+    assert rel_err(got, want) < 1e-4
+
+
+def test_separable_fused_keeps_intermediate_out_of_hbm(rng):
+    """jaxpr regression: the fused separable path is ONE pallas_call -- no
+    top-level op produces the (N, H, W, C) depthwise intermediate, and no
+    epilogue add/max runs outside the kernel."""
+    c, m = 8, 12
+    x = jnp.asarray(rng.standard_normal((1, 16, 16, c)), jnp.float32)
+    w_dw = jnp.asarray(rng.standard_normal((3, 3, 1, c)) / 3, jnp.float32)
+    w_pw = jnp.asarray(rng.standard_normal((1, 1, c, m)) / 3, jnp.float32)
+    b_dw = jnp.asarray(rng.standard_normal((c,)), jnp.float32)
+    b_pw = jnp.asarray(rng.standard_normal((m,)), jnp.float32)
+    p = plan_separable_block(x.shape, w_dw, w_pw,
+                             algorithm="pallas_winograd")
+    assert p.mode == "fused_pallas"
+    jaxpr = jax.make_jaxpr(
+        lambda xx: p.apply(xx, bias_dw=b_dw, bias_pw=b_pw))(x).jaxpr
+
+    def count(jaxpr, name):
+        n = 0
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == name:
+                n += 1
+            for v in eqn.params.values():
+                inner = getattr(v, "jaxpr", None)
+                if inner is not None:
+                    n += count(getattr(inner, "jaxpr", inner), name)
+        return n
+
+    n_kernels = count(jaxpr, "pallas_call")
+    assert n_kernels == 1, f"expected one fused kernel, got {n_kernels}"
+    # the depthwise intermediate would be a rank-4 tensor with C channels at
+    # the input spatial size; only pad/crop of the input itself may match.
+    bad = [eqn.primitive.name for eqn in jaxpr.eqns
+           for v in eqn.outvars
+           if eqn.primitive.name in ("add", "max", "custom_jvp_call")
+           and getattr(v.aval, "ndim", 0) == 4]
+    assert not bad, f"unfused separable ops outside the kernel: {bad}"
+
+
+# ---------------------------------------------------------------------------
+# hypothesis shape sweep across every grouped executor
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:                        # pragma: no cover - CI installs it
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        h=st.integers(7, 24), w=st.integers(7, 24),
+        c=st.integers(2, 16), mult=st.integers(1, 2),
+        k=st.sampled_from([3, 5]),
+        algorithm=st.sampled_from(["winograd", "im2col", "pallas_winograd"]),
+        padding=st.sampled_from(["SAME", "VALID"]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_depthwise_sweep_matches_direct(h, w, c, mult, k, algorithm,
+                                            padding, seed):
+        if algorithm == "pallas_winograd" and mult != 1:
+            mult = 1                      # the streamed kernel is mult-1 only
+        if padding == "VALID" and (h < k or w < k):
+            return
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((1, h, w, c)), jnp.float32)
+        wt = jnp.asarray(rng.standard_normal((k, k, 1, c * mult)) / k,
+                         jnp.float32)
+        p = plan_conv2d(x.shape, wt, groups=c, padding=padding,
+                        algorithm=algorithm)
+        got = p.apply(x)
+        want = direct_conv2d(x, wt, padding=padding, groups=c)
+        assert got.shape == want.shape
+        assert rel_err(got, want) < 1e-4
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        hw=st.integers(7, 20), cg=st.integers(1, 6),
+        groups=st.sampled_from([2, 3, 4]), mg=st.integers(1, 5),
+        algorithm=st.sampled_from(["winograd", "im2col"]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_grouped_sweep_matches_direct(hw, cg, groups, mg, algorithm,
+                                          seed):
+        rng = np.random.default_rng(seed)
+        c, m = cg * groups, mg * groups
+        x = jnp.asarray(rng.standard_normal((1, hw, hw, c)), jnp.float32)
+        wt = jnp.asarray(rng.standard_normal((3, 3, cg, m)) / 3, jnp.float32)
+        p = plan_conv2d(x.shape, wt, groups=groups, algorithm=algorithm)
+        got = p.apply(x)
+        want = direct_conv2d(x, wt, groups=groups)
+        assert got.shape == want.shape
+        assert rel_err(got, want) < 1e-4
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        h=st.integers(8, 20), w=st.integers(8, 20),
+        c=st.integers(2, 12), m=st.integers(1, 14),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_separable_sweep_matches_oracle(h, w, c, m, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((1, h, w, c)), jnp.float32)
+        w_dw = jnp.asarray(rng.standard_normal((3, 3, 1, c)) / 3,
+                           jnp.float32)
+        w_pw = jnp.asarray(rng.standard_normal((1, 1, c, m)) / 3,
+                           jnp.float32)
+        b_dw = jnp.asarray(rng.standard_normal((c,)), jnp.float32)
+        b_pw = jnp.asarray(rng.standard_normal((m,)), jnp.float32)
+        p = plan_separable_block(x.shape, w_dw, w_pw,
+                                 algorithm="pallas_winograd")
+        assert p.mode == "fused_pallas"
+        got = p.apply(x, bias_dw=b_dw, bias_pw=b_pw)
+        want = _sep_oracle(x, w_dw, w_pw, b_dw, b_pw)
+        assert rel_err(got, want) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# plan-cache keying and constraint errors
+# ---------------------------------------------------------------------------
+
+def test_cache_key_includes_groups(rng):
+    """Two plans of the same shapes with different groups must not share a
+    spec (the depthwise (3, 3, 1, C) filter is also a valid dense filter for
+    a 1-channel input slice -- keying on shapes alone is not enough)."""
+    c = 8
+    w_dense = jnp.asarray(rng.standard_normal((3, 3, 8, 8)) / 3, jnp.float32)
+    w_dw = jnp.asarray(rng.standard_normal((3, 3, 1, 8)) / 3, jnp.float32)
+    plan_conv2d((1, 12, 12, c), w_dense)
+    p = plan_conv2d((1, 12, 12, c), w_dw, groups=c)
+    assert plan_cache_info()["hits"] == 0
+    assert plan_cache_info()["misses"] == 2
+    assert p.spec.groups == c
+    p2 = plan_conv2d((1, 12, 12, c), w_dw, groups=c)
+    assert plan_cache_info()["hits"] == 1
+    assert p2.spec is p.spec
+
+
+def test_groups_constraint_errors(rng):
+    w = jnp.asarray(jnp.zeros((3, 3, 4, 8)), jnp.float32)
+    # non-divisible groups
+    with pytest.raises(ValueError, match="must divide"):
+        plan_conv2d((1, 10, 10, 9), jnp.zeros((3, 3, 3, 9)), groups=2)
+    # filter input channels inconsistent with groups
+    with pytest.raises(ValueError, match="channel mismatch"):
+        plan_conv2d((1, 10, 10, 8), w, groups=4)
+    # grouped (non-depthwise) pallas_winograd: actionable rejection
+    with pytest.raises(ValueError, match="groups == C_in"):
+        plan_conv2d((1, 10, 10, 8), w, groups=2, algorithm="pallas_winograd")
+    # depthwise with multiplier > 1 on the streamed kernel
+    with pytest.raises(ValueError, match="channel multiplier 1"):
+        plan_conv2d((1, 10, 10, 4), jnp.zeros((3, 3, 1, 8)), groups=4,
+                    algorithm="pallas_winograd")
+    # grouped pallas baselines: no grouped executor
+    for alg in ("pallas_winograd_materialized", "pallas_im2col"):
+        with pytest.raises(ValueError, match="no grouped executor"):
+            plan_conv2d((1, 10, 10, 8), jnp.zeros((3, 3, 1, 8)), groups=8,
+                        algorithm=alg)
+    # unknown algorithm lists the requestable set
+    with pytest.raises(ValueError, match="expected one of"):
+        plan_conv2d((1, 10, 10, 8), jnp.zeros((3, 3, 8, 8)),
+                    algorithm="winogradd")
+
+
+def test_grouped_1xn_has_no_winograd_executor(rng):
+    """Grouped 1xN layers are unsuitable for the winograd family: auto falls
+    back to im2col, forced winograd raises the actionable error."""
+    c = 6
+    x = jnp.asarray(rng.standard_normal((1, 10, 10, c)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((1, 3, 1, c)) / 3, jnp.float32)
+    p = plan_conv2d(x.shape, w, groups=c, algorithm="auto")
+    assert p.algorithm == "im2col"
+    assert rel_err(p.apply(x), direct_conv2d(x, w, groups=c)) < 1e-4
+    with pytest.raises(ValueError, match="unsuitable"):
+        plan_conv2d(x.shape, w, groups=c, algorithm="winograd")
+
+
+# ---------------------------------------------------------------------------
+# MobileNet-v1 zoo entry
+# ---------------------------------------------------------------------------
+
+def test_mobilenet_v1_builds_and_plans(rng):
+    from repro.models import cnn
+    specs = cnn.NETWORKS["mobilenet_v1"][0]()
+    res = 64
+    params = cnn.init_cnn(jax.random.key(0), specs, 3, res=res)
+    x = jnp.asarray(rng.standard_normal((1, res, res, 3)), jnp.float32)
+    base = cnn.cnn_forward(params, x, specs, algorithm="im2col")
+    assert base.shape == (1, 1000)
+    plans = cnn.plan_cnn(params, specs, res=res)
+    planned = cnn.cnn_forward(params, x, specs, plans=plans)
+    assert rel_err(planned, base) < 1e-3
+    # the zoo routes separable blocks through separable-block plans
+    from repro.core.plan import SeparableBlockPlan
+    sep_plans = [p for p in plans.values()
+                 if isinstance(p, SeparableBlockPlan)]
+    assert len(sep_plans) == 13
+
+
+def test_mobilenet_v1_pallas_fuses_stride1_blocks(rng):
+    from repro.models import cnn
+    specs = cnn.NETWORKS["mobilenet_v1_050"][0]()
+    res = 32
+    params = cnn.init_cnn(jax.random.key(1), specs, 3, res=res)
+    plans = cnn.plan_cnn(params, specs, res=res, algorithm="pallas_winograd")
+    modes = {name: p.mode for name, p in plans.items()
+             if hasattr(p, "mode")}
+    # stride-1 blocks fuse; stride-2 reduction blocks compose
+    assert modes["sep2"] == "fused_pallas"
+    assert modes["sep3"] == "composed"
+    x = jnp.asarray(rng.standard_normal((1, res, res, 3)), jnp.float32)
+    planned = cnn.cnn_forward(params, x, specs, plans=plans)
+    base = cnn.cnn_forward(params, x, specs, algorithm="im2col")
+    assert rel_err(planned, base) < 1e-3
+
+
+def test_mobilenet_width_multiplier():
+    from repro.models import cnn
+    full = cnn.mobilenet_v1()
+    half = cnn.mobilenet_v1(width_mult=0.5)
+    sep_full = [s for s in full if isinstance(s, cnn.SeparableConv)]
+    sep_half = [s for s in half if isinstance(s, cnn.SeparableConv)]
+    assert len(sep_full) == len(sep_half) == 13
+    assert sep_full[-1].c_out == 1024 and sep_half[-1].c_out == 512
+    assert all(s.c_out % 8 == 0 for s in sep_half)

@@ -14,12 +14,8 @@ from repro.core.plan import (ConvPlan, clear_plan_cache, plan_cache_info,
 
 from conftest import rel_err
 
-
-@pytest.fixture(autouse=True)
-def _fresh_cache():
-    clear_plan_cache()
-    yield
-    clear_plan_cache()
+# (plan-cache isolation is provided by the autouse _fresh_plan_cache fixture
+# in conftest.py)
 
 
 # ---------------------------------------------------------------------------

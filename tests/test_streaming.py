@@ -14,7 +14,7 @@ import numpy as np
 import pytest
 
 from repro.core import winograd as wg
-from repro.core.plan import clear_plan_cache, plan_conv2d
+from repro.core.plan import plan_conv2d
 from repro.kernels import ops, ref
 from repro.kernels import matmul as k_matmul
 from repro.kernels import winograd as k_winograd
@@ -22,12 +22,8 @@ from repro.kernels import runtime
 
 from conftest import rel_err
 
-
-@pytest.fixture(autouse=True)
-def _fresh_cache():
-    clear_plan_cache()
-    yield
-    clear_plan_cache()
+# (plan-cache isolation is provided by the autouse _fresh_plan_cache fixture
+# in conftest.py)
 
 
 def _oracle(x, w, bias, activation, padding):
@@ -106,6 +102,68 @@ def test_streamed_matches_materialized_baseline(rng):
     p_old = plan_conv2d(x.shape, wt,
                         algorithm="pallas_winograd_materialized")
     assert rel_err(p_new.apply(x), p_old.apply(x)) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# streamed vs materialized parity on asymmetric and edge shapes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("h,w,c,m", [
+    (11, 25, 5, 7),      # H != W, both non-multiples of the output tile
+    (32, 8, 130, 12),    # extreme aspect ratio, C just past one 128 block
+    (9, 31, 8, 136),     # M just past one block, W prime
+    (17, 11, 3, 5),      # tiny channels (below the block quantum)
+    (8, 8, 1, 1),        # degenerate single-channel square
+])
+@pytest.mark.parametrize("padding", ["SAME", "VALID"])
+def test_streamed_vs_materialized_edge_shapes(rng, h, w, c, m, padding):
+    """The streaming executor and the pre-streaming materialized-tiles
+    executor must agree wherever the tile grid is ragged: H != W, spatial
+    sizes not multiples of the output tile, C/M not multiples of the block
+    sizes."""
+    x = jnp.asarray(rng.standard_normal((1, h, w, c)), jnp.float32)
+    wt = jnp.asarray(rng.standard_normal((3, 3, c, m)) / 3, jnp.float32)
+    p_new = plan_conv2d(x.shape, wt, padding=padding,
+                        algorithm="pallas_winograd")
+    p_old = plan_conv2d(x.shape, wt, padding=padding,
+                        algorithm="pallas_winograd_materialized")
+    got, want = p_new.apply(x), p_old.apply(x)
+    assert got.shape == want.shape
+    assert rel_err(got, want) < 1e-5
+    # both must also agree with the direct-conv oracle, not just each other
+    assert rel_err(got, _oracle(x, wt, None, "none", padding)) < 1e-4
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:                        # pragma: no cover - CI installs it
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        h=st.integers(8, 33), w=st.integers(8, 33),
+        c=st.integers(1, 17), m=st.integers(1, 17),
+        k=st.sampled_from([3, 5]),
+        padding=st.sampled_from(["SAME", "VALID"]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_streamed_vs_materialized_property(h, w, c, m, k, padding, seed):
+        """Property sweep: for arbitrary (H, W, C, M, k, padding) the
+        streamed plan, the materialized plan, and the direct-conv oracle all
+        agree."""
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((1, h, w, c)), jnp.float32)
+        wt = jnp.asarray(rng.standard_normal((k, k, c, m)) / k, jnp.float32)
+        p_new = plan_conv2d(x.shape, wt, padding=padding,
+                            algorithm="pallas_winograd")
+        p_old = plan_conv2d(x.shape, wt, padding=padding,
+                            algorithm="pallas_winograd_materialized")
+        got, want = p_new.apply(x), p_old.apply(x)
+        assert got.shape == want.shape
+        assert rel_err(got, want) < 1e-5
+        assert rel_err(got, _oracle(x, wt, None, "none", padding)) < 1e-4
 
 
 def test_streamed_kernel_direct_call(rng):
