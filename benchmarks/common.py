@@ -174,6 +174,51 @@ def separable_unfused_hbm_bytes(dw_spec, pw_mm: int, pw_k: int, pw_n: int,
     return read_x + read_u_dw + write_z + read_z + read_u_pw + write_y
 
 
+def strided_streamed_hbm_bytes(spec, batch: int = 1) -> int:
+    """Analytic HBM bytes per call of the stride-2 streaming Winograd kernel
+    (kernels.winograd.winograd_strided_streamed): full-resolution halo strip
+    reads (2x extent per axis, re-DMA'd per (M sweep, C block)), phase-major
+    filter block reads (4P points), and the stride-2 NHWC output write. The
+    four phase tile tensors never exist in HBM -- they are gathered in VMEM
+    from the one strip."""
+    s = spec.stream
+    th, tw = spec.ct_h.t, spec.ct_w.t
+    mh, mw = spec.ct_h.m, spec.ct_w.m
+    p4 = 4 * th * tw
+    hs = 2 * (s.bh * mh + th - mh)
+    ws = 2 * (s.bw * mw + tw - mw)
+    n_strips = batch * s.n_hb * s.n_wb
+    n_mb = s.m_pad // s.block_m
+    read_x = n_strips * hs * ws * s.c_pad * n_mb * 4
+    read_u = n_strips * p4 * s.c_pad * s.m_pad * 4
+    write_y = batch * (s.n_hb * s.bh * mh) * (s.n_wb * s.bw * mw) \
+        * s.m_pad * 4
+    return read_x + read_u + write_y
+
+
+def pallas_im2row_hbm_bytes(spec, batch: int = 1) -> int:
+    """Analytic HBM bytes per call of the planned Pallas im2row baseline
+    (ops.im2col_conv2d_planned): input read, patch-matrix write (the
+    kh*kw/(sh*sw) read-amplified copy of the input at stride (sh, sw)),
+    per-N-block patch re-reads by the GEMM kernel, filter block reads, and
+    the output write (epilogue fused in-kernel)."""
+    g = spec.geometry
+    bm_, bk_, bn_ = spec.blocks
+    kh, kw, cg, c_out = spec.w_shape
+    c_in = cg * spec.groups
+    mm = batch * g.oh * g.ow
+    mm_pad = -(-mm // bm_) * bm_
+    k_pad = -(-(kh * kw * c_in) // bk_) * bk_
+    n_pad = -(-c_out // bn_) * bn_
+    h_in, w_in = spec.x_shape[1:3]
+    read_x = batch * (h_in + sum(g.ph)) * (w_in + sum(g.pw)) * c_in * 4
+    patches = mm_pad * k_pad * 4
+    read_patches = patches * (n_pad // bn_)       # A re-read per N block
+    read_u = (mm_pad // bm_) * k_pad * n_pad * 4
+    write_y = mm_pad * n_pad * 4
+    return read_x + patches + read_patches + read_u + write_y
+
+
 def conv_layer_inventory(network: str) -> list[dict]:
     """Every conv layer of a paper network as {name, kh, kw, c_in, c_out,
     h, w, stride, suitable}, collected by tracing the spec interpreter."""

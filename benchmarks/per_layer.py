@@ -28,9 +28,11 @@ from repro.core import plan as planlib
 
 from benchmarks.common import (bench_metadata, conv_layer_inventory,
                                materialized_hbm_bytes, pairwise_min_times,
+                               pallas_im2row_hbm_bytes,
                                separable_fused_hbm_bytes,
                                separable_unfused_hbm_bytes,
-                               streamed_hbm_bytes, time_jitted)
+                               streamed_hbm_bytes,
+                               strided_streamed_hbm_bytes, time_jitted)
 
 NETWORKS = ["vgg16", "vgg19", "googlenet", "inception_v3", "squeezenet"]
 
@@ -75,10 +77,36 @@ MOBILENET_LAYERS = [
 
 
 def mobilenet_layers(scale: int = 1) -> list[dict]:
+    return scaled(MOBILENET_LAYERS, scale)
+
+
+#: The stride-2 reduction blocks of MobileNet-v1 at paper resolution -- the
+#: ladder the stride-2 Winograd (transform-domain phase decomposition) A/B
+#: runs on (BENCH_PR4.json). Each row benchmarks the dense 3x3 stride-2
+#: shape (strided streaming Pallas kernel vs the Pallas im2row baseline,
+#: plus the XLA winograd_strided vs im2row A/B) and the depthwise stride-2
+#: layer (XLA strided Winograd vs grouped im2row).
+MOBILENET_REDUCTION_LAYERS = [
+    dict(name="sep3_s2", k=3, h=112, w=112, c_in=64, c_out=128),
+    dict(name="sep5_s2", k=3, h=56, w=56, c_in=128, c_out=256),
+    dict(name="sep7_s2", k=3, h=28, w=28, c_in=256, c_out=512),
+    dict(name="sep12_s2", k=3, h=14, w=14, c_in=512, c_out=1024),
+]
+
+#: MobileNet-v2 stride-1 inverted-residual shapes (expand 6) for the fused
+#: (expand GEMM + ONE streamed separable kernel) vs composed (three Pallas
+#: plans, intermediates via HBM) A/B.
+MOBILENET_V2_LAYERS = [
+    dict(name="ir4", h=28, w=28, c_in=32, expand=6),
+    dict(name="ir11", h=14, w=14, c_in=96, expand=6),
+]
+
+
+def scaled(layers: list[dict], scale: int) -> list[dict]:
     if scale == 1:
-        return [dict(l) for l in MOBILENET_LAYERS]
+        return [dict(l) for l in layers]
     return [dict(l, h=max(l["h"] // scale, 8), w=max(l["w"] // scale, 8))
-            for l in MOBILENET_LAYERS]
+            for l in layers]
 
 
 def bench_layer_pallas(layer: dict, iters: int, warmup: int) -> dict:
@@ -222,9 +250,130 @@ def bench_layer_mobilenet(layer: dict, iters: int, warmup: int) -> dict:
             "stream_blocks": [s.bh, s.bw, s.block_c, s.block_m]}
 
 
+def bench_layer_reduction(layer: dict, iters: int, warmup: int) -> dict:
+    """One stride-2 reduction-block shape, three A/Bs:
+
+      * dense 3x3 stride-2, same Pallas backend: the strided streaming
+        kernel (transform-domain phase decomposition, fused bias+relu) vs
+        the Pallas im2row GEMM baseline (patch-matrix materialization +
+        blocked GEMM, fused epilogue) -- interleaved best-of timing plus the
+        analytic HBM bytes each path moves;
+      * dense 3x3 stride-2, same XLA backend: winograd_strided vs im2row;
+      * depthwise 3x3 stride-2 (the actual MobileNet reduction layer), same
+        XLA backend: strided Winograd (Hadamard phase 2) vs grouped im2row.
+    """
+    rng = np.random.default_rng(0)
+    c, m = layer["c_in"], layer["c_out"]
+    x = jnp.asarray(rng.standard_normal(
+        (1, layer["h"], layer["w"], c)), jnp.float32)
+    w_dense = jnp.asarray(rng.standard_normal((layer["k"], layer["k"], c, m))
+                          / layer["k"] ** 2, jnp.float32)
+    w_dw = jnp.asarray(rng.standard_normal((layer["k"], layer["k"], 1, c))
+                       / layer["k"] ** 2, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((m,)), jnp.float32)
+
+    # dense, Pallas backend: strided streaming kernel vs im2row GEMM kernel.
+    t0 = time.perf_counter()
+    p_strided = planlib.plan_conv2d(x.shape, w_dense, stride=2,
+                                    algorithm="pallas_winograd")
+    jax.block_until_ready(p_strided.u)
+    plan_build = time.perf_counter() - t0
+    assert p_strided.algorithm == "pallas_winograd_strided"
+    p_im2row_pl = planlib.plan_conv2d(x.shape, w_dense, stride=2,
+                                      algorithm="pallas_im2col")
+    f_strided = jax.jit(lambda x: p_strided.apply(x, bias=b,
+                                                  activation="relu"))
+    f_im2row_pl = jax.jit(lambda x: p_im2row_pl.apply(x, bias=b,
+                                                      activation="relu"))
+    t_strided, t_im2row_pl = pairwise_min_times(f_strided, f_im2row_pl, x,
+                                                warmup=warmup, iters=iters)
+
+    # dense, XLA backend.
+    p_xw = planlib.plan_conv2d(x.shape, w_dense, stride=2,
+                               algorithm="winograd")
+    p_xi = planlib.plan_conv2d(x.shape, w_dense, stride=2,
+                               algorithm="im2col")
+    t_xla_wino, t_xla_im2row = pairwise_min_times(
+        jax.jit(p_xw.apply), jax.jit(p_xi.apply), x,
+        warmup=warmup, iters=iters)
+
+    # depthwise stride-2 (the real reduction layer), XLA backend.
+    p_dw_w = planlib.plan_conv2d(x.shape, w_dw, stride=2, groups=c,
+                                 algorithm="winograd")
+    p_dw_i = planlib.plan_conv2d(x.shape, w_dw, stride=2, groups=c,
+                                 algorithm="im2col")
+    t_dw_wino, t_dw_im2row = pairwise_min_times(
+        jax.jit(p_dw_w.apply), jax.jit(p_dw_i.apply), x,
+        warmup=warmup, iters=iters)
+
+    by_strided = strided_streamed_hbm_bytes(p_strided.spec)
+    by_im2row = pallas_im2row_hbm_bytes(p_im2row_pl.spec)
+    s = p_strided.spec.stream
+    return {"t_pallas_strided_s": t_strided,
+            "t_pallas_im2row_s": t_im2row_pl,
+            "speedup_strided": t_im2row_pl / t_strided,
+            "t_xla_strided_wino_s": t_xla_wino,
+            "t_xla_im2row_s": t_xla_im2row,
+            "speedup_xla": t_xla_im2row / t_xla_wino,
+            "t_dw_strided_wino_s": t_dw_wino, "t_dw_im2row_s": t_dw_im2row,
+            "speedup_dw": t_dw_im2row / t_dw_wino,
+            "hbm_bytes_strided": by_strided, "hbm_bytes_im2row": by_im2row,
+            "hbm_bytes_ratio": by_im2row / by_strided,
+            "plan_build_s": plan_build,
+            "output_tile": list(p_strided.spec.output_tile),
+            "stream_blocks": [s.bh, s.bw, s.block_c, s.block_m]}
+
+
+def bench_layer_mbv2(layer: dict, iters: int, warmup: int) -> dict:
+    """One stride-1 MobileNet-v2 inverted-residual block, same Pallas
+    backend: the FUSED plan (expand GEMM + ONE streamed separable kernel,
+    depthwise->project intermediate in VMEM, residual add) vs the COMPOSED
+    pipeline (expand GEMM + streamed depthwise kernel + Pallas pointwise
+    GEMM, intermediates round-tripping HBM)."""
+    rng = np.random.default_rng(0)
+    c, t = layer["c_in"], layer["expand"]
+    ce = c * t
+    x = jnp.asarray(rng.standard_normal(
+        (1, layer["h"], layer["w"], c)), jnp.float32)
+    w_exp = jnp.asarray(rng.standard_normal((1, 1, c, ce)) / np.sqrt(c),
+                        jnp.float32)
+    w_dw = jnp.asarray(rng.standard_normal((3, 3, 1, ce)) / 9, jnp.float32)
+    w_pw = jnp.asarray(rng.standard_normal((1, 1, ce, c)) / np.sqrt(ce),
+                       jnp.float32)
+    b_exp = jnp.asarray(rng.standard_normal((ce,)), jnp.float32)
+    b_dw = jnp.asarray(rng.standard_normal((ce,)), jnp.float32)
+    b_pw = jnp.asarray(rng.standard_normal((c,)), jnp.float32)
+
+    t0 = time.perf_counter()
+    p_fused = planlib.plan_inverted_residual(
+        x.shape, w_exp, w_dw, w_pw, stride=1, algorithm="pallas_winograd")
+    jax.block_until_ready(p_fused.sep.u_pw)
+    plan_build = time.perf_counter() - t0
+    assert p_fused.mode == "fused_pallas", p_fused.mode
+    f_fused = jax.jit(lambda x: p_fused.apply(
+        x, bias_exp=b_exp, bias_dw=b_dw, bias_pw=b_pw))
+
+    p_exp = planlib.plan_conv2d(x.shape, w_exp, algorithm="im2col")
+    p_dw = planlib.plan_conv2d(p_exp.out_shape, w_dw, groups=ce,
+                               algorithm="pallas_winograd")
+    p_pw = planlib.plan_conv2d(p_dw.out_shape, w_pw,
+                               algorithm="pallas_im2col")
+
+    def composed(x):
+        h = p_exp.apply(x, bias=b_exp, activation="relu6")
+        h = p_dw.apply(h, bias=b_dw, activation="relu6")
+        return x + p_pw.apply(h, bias=b_pw, activation="none")
+
+    t_fused, t_composed = pairwise_min_times(f_fused, jax.jit(composed), x,
+                                             warmup=warmup, iters=iters)
+    return {"t_mbv2_fused_s": t_fused, "t_mbv2_composed_s": t_composed,
+            "speedup_fused": t_composed / t_fused,
+            "plan_build_s": plan_build}
+
+
 def run_mobilenet(args) -> tuple[list[dict], list[dict]]:
-    layers = mobilenet_layers(scale=2 if args.config == "mobilenet_quick"
-                              else 1)
+    scale = 2 if args.config == "mobilenet_quick" else 1
+    layers = mobilenet_layers(scale=scale)
     rows = []
     for l in layers:
         r = bench_layer_mobilenet(l, args.iters, args.warmup)
@@ -254,6 +403,70 @@ def run_mobilenet(args) -> tuple[list[dict], list[dict]]:
           f"min {summary[0]['min_speedup_fused']:.2f}x  "
           f"avg dw wino/im2row {summary[0]['avg_speedup_dw']:.2f}x  "
           f"avg HBM-bytes ratio {summary[0]['avg_hbm_bytes_ratio']:.2f}x")
+
+    # stride-2 reduction-block ladder: strided Winograd vs im2row A/Bs.
+    red_rows = []
+    for l in scaled(MOBILENET_REDUCTION_LAYERS, scale):
+        r = bench_layer_reduction(l, args.iters, args.warmup)
+        r.update(net="mobilenet_v1", layer=l["name"], ltype="3x3s2",
+                 shape=f"{l['h']}x{l['w']}x{l['c_in']}->{l['c_out']}")
+        red_rows.append(r)
+        print(f"{l['name']:9s} {r['shape']:22s} "
+              f"pallas strided={r['t_pallas_strided_s']*1e3:8.2f}ms "
+              f"im2row={r['t_pallas_im2row_s']*1e3:8.2f}ms "
+              f"speedup={r['speedup_strided']:.2f}x "
+              f"(xla {r['speedup_xla']:.2f}x, dw {r['speedup_dw']:.2f}x) "
+              f"bytes {r['hbm_bytes_strided']/2**20:6.1f}MiB vs "
+              f"{r['hbm_bytes_im2row']/2**20:6.1f}MiB "
+              f"({r['hbm_bytes_ratio']:.2f}x)", flush=True)
+    ss = [r["speedup_strided"] for r in red_rows]
+    tot_strided = sum(r["t_pallas_strided_s"] for r in red_rows)
+    tot_im2row = sum(r["t_pallas_im2row_s"] for r in red_rows)
+    summary.append({
+        "net": "mobilenet_v1", "ltype": "3x3s2",
+        "avg_speedup_strided": float(np.mean(ss)),
+        "min_speedup_strided": float(np.min(ss)),
+        "ladder_speedup_strided": float(tot_im2row / tot_strided),
+        "avg_speedup_xla": float(np.mean([r["speedup_xla"]
+                                          for r in red_rows])),
+        "avg_speedup_dw": float(np.mean([r["speedup_dw"]
+                                         for r in red_rows])),
+        "avg_hbm_bytes_ratio": float(np.mean([r["hbm_bytes_ratio"]
+                                              for r in red_rows])),
+        "n_layers": len(red_rows)})
+    print(f"\n== stride-2 Winograd vs im2row, reduction ladder "
+          f"({args.config}) ==")
+    print(f"pallas avg {summary[-1]['avg_speedup_strided']:.2f}x  "
+          f"min {summary[-1]['min_speedup_strided']:.2f}x  "
+          f"whole-ladder {summary[-1]['ladder_speedup_strided']:.2f}x  "
+          f"xla avg {summary[-1]['avg_speedup_xla']:.2f}x  "
+          f"dw xla avg {summary[-1]['avg_speedup_dw']:.2f}x  "
+          f"avg HBM-bytes ratio {summary[-1]['avg_hbm_bytes_ratio']:.2f}x")
+    rows += red_rows
+
+    # MobileNet-v2 inverted residual: fused vs composed, same backend.
+    mb_rows = []
+    for l in scaled(MOBILENET_V2_LAYERS, scale):
+        r = bench_layer_mbv2(l, args.iters, args.warmup)
+        r.update(net="mobilenet_v2", layer=l["name"], ltype="invres",
+                 shape=f"{l['h']}x{l['w']}x{l['c_in']}(x{l['expand']})")
+        mb_rows.append(r)
+        print(f"{l['name']:9s} {r['shape']:22s} "
+              f"fused={r['t_mbv2_fused_s']*1e3:8.2f}ms "
+              f"composed={r['t_mbv2_composed_s']*1e3:8.2f}ms "
+              f"speedup={r['speedup_fused']:.2f}x", flush=True)
+    summary.append({
+        "net": "mobilenet_v2", "ltype": "invres",
+        "avg_speedup_fused": float(np.mean([r["speedup_fused"]
+                                            for r in mb_rows])),
+        "min_speedup_fused": float(np.min([r["speedup_fused"]
+                                           for r in mb_rows])),
+        "n_layers": len(mb_rows)})
+    print(f"\n== MBv2 fused vs composed inverted residual "
+          f"({args.config}) ==")
+    print(f"avg speedup {summary[-1]['avg_speedup_fused']:.2f}x  "
+          f"min {summary[-1]['min_speedup_fused']:.2f}x")
+    rows += mb_rows
     return rows, summary
 
 

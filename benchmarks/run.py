@@ -7,11 +7,14 @@
       # HBM bytes moved for the streamed vs pre-streaming Pallas Winograd
       # paths on the VGG-style config (CI uploads this; BENCH_PR2.json in
       # the repo root is the committed run for that config)
-  PYTHONPATH=src python -m benchmarks.run --json BENCH_PR3.json \
+  PYTHONPATH=src python -m benchmarks.run --json BENCH_PR4.json \
       --config mobilenet
-      # same artifact on the MobileNet separable-block ladder: fused
-      # separable streamed kernel vs the unfused two-kernel pipeline
-      # (BENCH_PR3.json in the repo root is the committed run)
+      # same artifact on the MobileNet ladders: fused separable streamed
+      # kernel vs the unfused two-kernel pipeline, the stride-2 Winograd
+      # (transform-domain phase decomposition) vs im2row A/B on the
+      # reduction-block ladder, and the fused-vs-composed MobileNet-v2
+      # inverted-residual A/B (BENCH_PR3.json / BENCH_PR4.json in the repo
+      # root are the committed runs; CI runs the quick variant per PR)
 
 Every emitted BENCH_*.json is stamped with jax version, backend/device
 kind, git SHA and a UTC timestamp (benchmarks.common.bench_metadata), so

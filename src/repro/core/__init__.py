@@ -1,18 +1,22 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+from repro.core import registry
 from repro.core.dispatch import ALGORITHMS, Algorithm, conv1d, conv2d
 from repro.core.plan import (Conv1DPlan, ConvPlan, ConvSpec,
-                             DepthwiseConv1DPlan, SeparableBlockPlan,
+                             DepthwiseConv1DPlan, InvertedResidualPlan,
+                             SeparableBlockPlan, algorithm_supported,
                              clear_plan_cache, plan_cache_info, plan_conv1d,
                              plan_conv2d, plan_depthwise_conv1d,
-                             plan_separable_block, winograd_amortizes,
-                             winograd_suitable)
+                             plan_inverted_residual, plan_separable_block,
+                             winograd_amortizes, winograd_suitable)
 
 __all__ = [
     "ALGORITHMS", "Algorithm", "Conv1DPlan", "ConvPlan", "ConvSpec",
-    "DepthwiseConv1DPlan", "SeparableBlockPlan", "clear_plan_cache",
-    "conv1d", "conv2d", "plan_cache_info", "plan_conv1d", "plan_conv2d",
-    "plan_depthwise_conv1d", "plan_separable_block", "winograd_amortizes",
+    "DepthwiseConv1DPlan", "InvertedResidualPlan", "SeparableBlockPlan",
+    "algorithm_supported", "clear_plan_cache", "conv1d", "conv2d",
+    "plan_cache_info", "plan_conv1d", "plan_conv2d",
+    "plan_depthwise_conv1d", "plan_inverted_residual",
+    "plan_separable_block", "registry", "winograd_amortizes",
     "winograd_suitable",
 ]

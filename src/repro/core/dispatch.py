@@ -11,6 +11,11 @@ weight-load time and call `plan.apply(x)` directly -- that path performs no
 per-call filter transform or geometry derivation (models/cnn.py and
 models/audio.py do exactly this).
 
+Which executor may run which layer is declared by the executors themselves
+in the capability registry (repro.core.registry): every algorithm choice is
+a registry query, and a request the registered executors cannot cover
+raises an error enumerating the capabilities that DO match the layer.
+
 `algorithm=` (the full requestable set is plan.ALGORITHMS; every resolver
 error message lists it):
   * "auto"       -- the paper's policy (winograd where suitable, else im2col).
@@ -24,14 +29,16 @@ error message lists it):
                     process-wide; when measurement is impossible (planning
                     inside a jit trace) it falls back to the static
                     calibrated crossover (plan.winograd_amortizes).
-  * "winograd"   -- force the fast scheme (raises if unsuitable); with
-                    groups > 1 this resolves to the depthwise
+  * "winograd"   -- force the fast scheme (raises if no capability matches);
+                    with groups > 1 this resolves to the depthwise
                     (transform-domain Hadamard) or block-diagonal grouped
-                    executor.
+                    executor, and stride-2 layers resolve to the
+                    transform-domain phase-decomposition executor.
   * "im2col"     -- force the baseline (for the paper's A/B benchmarks);
                     any stride/size/groups (grouped im2row for groups > 1).
   * "pallas_winograd" -- the streamed TPU kernel (repro.kernels.ops); with
-                    groups == C_in this is the streamed depthwise kernel.
+                    groups == C_in this is the streamed depthwise kernel;
+                    stride-2 layers run the strided streaming kernels.
   * "pallas_winograd_materialized" -- the pre-streaming tiles-domain Pallas
                     executor, kept as the A/B baseline for the streaming
                     path (dense only: groups == 1).
@@ -70,6 +77,7 @@ def conv2d(
     precision=None,
     bias: jax.Array | None = None,
     activation: str = "none",
+    data_format: str = "NHWC",
 ) -> jax.Array:
     """Unified convolution entry point (NHWC x HWIO -> NHWC).
 
@@ -79,11 +87,14 @@ def conv2d(
     `bias`/`activation` run the layer epilogue through the plan's fused path
     (in-kernel on the Pallas executors). `groups` is feature_group_count
     (C_in for a depthwise conv); the filter then carries C_in/groups input
-    channels: (kh, kw, C_in/groups, M).
+    channels: (kh, kw, C_in/groups, M). `data_format="NCHW"` ingests NCHW
+    inputs with an OIHW filter and returns NCHW output (the weight transpose
+    happens at plan time, cache-keyed).
     """
     plan = plan_conv2d(x.shape, w, stride=stride, padding=padding,
                        algorithm=algorithm, groups=groups,
-                       output_tile=output_tile, precision=precision)
+                       output_tile=output_tile, precision=precision,
+                       data_format=data_format)
     return plan.apply(x, bias=bias, activation=activation)
 
 

@@ -3,8 +3,15 @@
 The paper benchmarks its region-wise multi-channel Winograd scheme against
 "aggressively optimized" im2row lowering: patches are linearized into rows of
 an [OHW x khkwC] matrix and multiplied with the [khkwC x M] filter matrix.
-We implement the same lowering in JAX (NHWC / row-major => im2row); the Pallas
-counterpart is kernels/im2col_gemm.py.
+We implement the same lowering in JAX (NHWC / row-major => im2row); the
+Pallas counterpart is the blocked GEMM path in kernels/ops.py
+(im2col_conv2d_planned over kernels/matmul.py).
+
+The patch matrix is a read-amplified copy of the input: each input element
+appears in up to kh*kw/(sh*sw) patch rows (9/4 = 2.25x for a 3x3 stride-2
+layer), which is exactly the HBM traffic the streaming Winograd executors
+avoid -- see read_amplification() and the bytes models in
+benchmarks/common.py.
 """
 
 from __future__ import annotations
@@ -65,6 +72,13 @@ def _patches(x: jax.Array, kh: int, kw: int, stride: tuple[int, int],
                               (n, di + (oh - 1) * sh + 1, dj + (ow - 1) * sw + 1, c),
                               (1, sh, sw, 1)))
     return jnp.stack(rows, axis=3), (oh, ow)          # (N, OH, OW, khkw, C)
+
+
+def read_amplification(kh: int, kw: int, stride: tuple[int, int]) -> float:
+    """How many times the im2row lowering copies each input element into the
+    patch matrix (the kernel-window overlap factor at this stride)."""
+    sh, sw = stride
+    return (kh * kw) / (sh * sw)
 
 
 def im2row(x: jax.Array, kh: int, kw: int, stride: tuple[int, int],

@@ -21,6 +21,9 @@ This module is that insight as an architecture:
     schemes are timed on the real layer shape and the winner is cached.
     The static amortization constants remain only as the fallback policy
     when measurement is impossible (planning inside a jit trace).
+  * Which executor may run which layer is declared by the executors
+    themselves in the capability registry (repro.core.registry); every
+    algorithm choice and coverage error message here is a registry query.
 
 `core.dispatch.conv2d` / `conv1d` stay as thin per-call wrappers over this
 module for backward compatibility; model code (models/cnn.py, models/audio.py)
@@ -40,7 +43,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import im2col as _im2col
+from repro.core import registry
 from repro.core import winograd as _wg
+from repro.core.registry import LayerQuery
 from repro.core.transforms import DEFAULT_OUTPUT_TILE, CookToom, cook_toom
 # Shared epilogue vocabulary, dependency-free (the heavy Pallas kernels in
 # repro.kernels stay optional, imported locally where needed).
@@ -60,7 +65,8 @@ ALGORITHMS: tuple[str, ...] = typing.get_args(Algorithm)
 Padding = _wg.Padding
 
 #: Filter sizes the paper's fast scheme covers (2D NxN and 1D 1xN / Nx1).
-WINOGRAD_FILTER_SIZES = frozenset({2, 3, 4, 5, 7})
+#: Declared by the executor registry; re-exported for compatibility.
+WINOGRAD_FILTER_SIZES = registry.WINOGRAD_FILTER_SIZES
 
 #: auto_tuned *fallback* crossover, used only when plan-time measurement is
 #: impossible (planning under an active jit trace, or REPRO_PLAN_NO_MEASURE
@@ -75,19 +81,17 @@ AMORTIZE_MIN_C_IN = 64
 
 
 def winograd_suitable(kh: int, kw: int, stride) -> bool:
-    s = (stride, stride) if isinstance(stride, int) else tuple(stride)
-    if s != (1, 1):
-        return False
-    if kh == 1 and kw == 1:
-        return False                      # 1x1 is already a pure GEMM
-    for k in (kh, kw):
-        if k != 1 and k not in WINOGRAD_FILTER_SIZES:
-            return False
-    return True
+    """Whether some winograd-family executor covers this filter/stride
+    combination (a registry query; kept as the historical entry point).
+    Since the stride-2 phase-decomposition executors registered, suitable
+    no longer means stride (1, 1)."""
+    q = registry.as_query(kh, kw, stride)
+    return registry.best_fast(q) is not None
 
 
 def winograd_amortizes(h: int, w: int, kh: int, kw: int, c_in: int,
-                       padding: str = "SAME", groups: int = 1) -> bool:
+                       padding: str = "SAME", groups: int = 1,
+                       stride=1) -> bool:
     """The paper's section-4 amortization insight as a static predicate --
     the auto_tuned fallback when plan-time measurement is unavailable.
 
@@ -96,8 +100,9 @@ def winograd_amortizes(h: int, w: int, kh: int, kw: int, c_in: int,
     (G == C) has no channel GEMM to amortize at all -- it is memory-bound
     (Zhang et al. 2020) and the transform passes pay for themselves on
     spatial extent alone, so only the output-pixel threshold applies."""
-    out_h = h if padding == "SAME" else h - kh + 1
-    out_w = w if padding == "SAME" else w - kw + 1
+    sh, sw = (stride, stride) if isinstance(stride, int) else tuple(stride)
+    out_h = -(-h // sh) if padding == "SAME" else (h - kh) // sh + 1
+    out_w = -(-w // sw) if padding == "SAME" else (w - kw) // sw + 1
     if out_h * out_w < AMORTIZE_MIN_OUT_PIXELS:
         return False
     if groups > 1 and groups == c_in:     # depthwise
@@ -105,59 +110,17 @@ def winograd_amortizes(h: int, w: int, kh: int, kw: int, c_in: int,
     return c_in // groups >= AMORTIZE_MIN_C_IN
 
 
-def _resolve_winograd(groups: int, c_in: int) -> str:
-    """Map the requested 'winograd' family onto the grouped executor
-    variants: dense, transform-domain-Hadamard depthwise, or block-diagonal
-    grouped."""
-    if groups == 1:
-        return "winograd"
-    if groups == c_in:
-        return "winograd_depthwise"
-    return "winograd_grouped"
-
-
-def _winograd_family_suitable(kh: int, kw: int, stride,
-                              groups: int) -> bool:
-    """Suitability of the whole winograd executor family for one layer:
-    the paper's stride-1/filter-size rule, minus grouped 1xN / Nx1 layers
-    (which have no grouped single-axis executor). Shared by
-    algorithm_supported and plan_conv2d so the rule exists once."""
-    return winograd_suitable(kh, kw, stride) and not (
-        groups > 1 and (kh == 1 or kw == 1))
-
-
 def algorithm_supported(algorithm: str, kh: int, kw: int, stride,
                         *, groups: int = 1, c_in: int | None = None,
-                        c_out: int | None = None) -> bool:
+                        c_out: int | None = None,
+                        layout: str = "NHWC") -> bool:
     """Whether plan_conv2d would accept this (algorithm, layer) combination
-    without raising -- the single source of the executor-coverage rules.
-    Model-level fallback policies (models/cnn.py:_layer_algorithm) consult
-    this instead of duplicating the constraint list."""
-    stride = (stride, stride) if isinstance(stride, int) else tuple(stride)
-    suitable = _winograd_family_suitable(kh, kw, stride, groups)
-    if algorithm in ("auto", "auto_tuned", "im2col"):
-        return True
-    if algorithm == "winograd":
-        return suitable
-    if algorithm == "pallas_winograd":
-        if groups == 1:
-            return suitable
-        return suitable and groups == c_in and c_out == c_in
-    if algorithm == "pallas_winograd_materialized":
-        return groups == 1 and suitable
-    if algorithm == "pallas_im2col":
-        return groups == 1
-    return False
-
-
-def _unsuitable_error(algorithm: str, kh: int, kw: int, stride,
-                      groups: int) -> ValueError:
-    return ValueError(
-        f"algorithm={algorithm!r} requested for unsuitable layer "
-        f"k=({kh},{kw}) stride={stride} groups={groups}: the Winograd/"
-        f"Cook-Toom schemes need stride (1, 1) and filter sizes in "
-        f"{sorted(WINOGRAD_FILTER_SIZES)} (1xN/Nx1 only with groups=1); "
-        f"use algorithm='im2col' (any stride/size/groups) instead")
+    without raising -- a registry query over the capabilities the executors
+    declare. Model-level fallback policies (models/cnn.py:_layer_algorithm)
+    consult this instead of duplicating the constraint list."""
+    q = registry.as_query(kh, kw, stride, groups=groups, c_in=c_in,
+                          c_out=c_out, layout=layout)
+    return registry.supported(algorithm, q)
 
 
 # ---------------------------------------------------------------------------
@@ -171,19 +134,28 @@ class ConvSpec:
     shape-keyed, so it lives in the process-level plan cache."""
 
     x_shape: tuple[int, ...]          # (N, H, W, C) the plan was built for
+                                      # (always NHWC internally; see layout)
     w_shape: tuple[int, ...]          # (kh, kw, C/groups, M)
     dtype: str
     stride: tuple[int, int]
     padding: str
     requested: str                    # the algorithm= the caller asked for
-    algorithm: str                    # resolved executor: winograd |
+    algorithm: str                    # resolved executor (a registry
+                                      # Capability.executor name): winograd |
                                       # winograd_1d | winograd_depthwise |
-                                      # winograd_grouped | im2col |
-                                      # pallas_winograd | pallas_depthwise |
+                                      # winograd_grouped | winograd_strided |
+                                      # im2col | pallas_winograd |
+                                      # pallas_depthwise |
+                                      # pallas_winograd_strided |
+                                      # pallas_depthwise_strided |
                                       # pallas_winograd_materialized |
                                       # pallas_im2col
     groups: int = 1                   # feature_group_count (1 = dense,
                                       # C = depthwise)
+    layout: str = "NHWC"              # caller-facing data format; "NCHW"
+                                      # plans transpose weights once at plan
+                                      # time and apply() transposes x/y at
+                                      # the boundary
     output_tile: tuple[int, int] | None = None
     ct_h: CookToom | None = None
     ct_w: CookToom | None = None      # also the single CT of the 1D variant
@@ -248,15 +220,71 @@ def _resolve_output_tile(kh: int, kw: int, output_tile) -> tuple[int, int]:
     return tuple(output_tile)
 
 
+#: Shape thresholds below/above which the stride-2 executors default to the
+#: F(2, r_ph) tile set instead of F(4, r_ph). The larger tile cuts the
+#: per-output multiply count (4 * t^2/m^2 phase points per output) but its
+#: four t=5 phase banks quadruple the transformed-input cache, so on small
+#: output grids the point-GEMMs are too thin to amortize the transforms and
+#: on deep layers the VMEM budget forces tiny region blocks. Calibrated on
+#: the stride-2 reduction-block ladder (BENCH_PR4.json; EXPERIMENTS.md
+#: section Perf): F(4, .) wins only on large-spatial shallow layers.
+STRIDED_TILE4_MIN_OUT = 24
+STRIDED_TILE4_MAX_C = 64
+
+
+def _resolve_strided_tile(h: int, w: int, kh: int, kw: int, padding,
+                          output_tile, c_in: int) -> tuple[int, int]:
+    """Output tile of the stride-2 phase algorithm (per-axis F(m, r_ph),
+    r_ph = (k+1)//2): explicit request wins; the default is shape-aware --
+    F(4, .) on large-spatial shallow layers, F(2, .) everywhere else."""
+    if output_tile is not None:
+        if isinstance(output_tile, int):
+            return (output_tile, output_tile)
+        return tuple(output_tile)
+    out_h = _wg.strided_out_size(h, kh, padding)
+    out_w = _wg.strided_out_size(w, kw, padding)
+    mt = 4 if (min(out_h, out_w) >= STRIDED_TILE4_MIN_OUT
+               and c_in <= STRIDED_TILE4_MAX_C) else 2
+    return (mt, mt)
+
+
 def _build_spec(x_shape, w_shape, dtype, stride, padding, requested,
-                resolved, output_tile, groups: int = 1) -> ConvSpec:
+                resolved, output_tile, groups: int = 1,
+                layout: str = "NHWC") -> ConvSpec:
     """Materialize geometry/transform/blocking decisions for one resolved
     algorithm."""
     n, h, w, c = x_shape
     kh, kw, _, mout = w_shape
     base = dict(x_shape=tuple(x_shape), w_shape=tuple(w_shape), dtype=dtype,
                 stride=stride, padding=padding, requested=requested,
-                groups=groups)
+                groups=groups, layout=layout)
+
+    if resolved in ("winograd_strided", "pallas_winograd_strided",
+                    "pallas_depthwise_strided"):
+        # shared stride-2 derivation: phase tile set F(m, (k+1)/2) and the
+        # full-resolution phase geometry; only the halo blocking differs
+        # per executor.
+        mh, mw = _resolve_strided_tile(h, w, kh, kw, padding, output_tile, c)
+        ct_h = cook_toom(mh, (kh + 1) // 2)
+        ct_w = cook_toom(mw, (kw + 1) // 2)
+        geom = _wg.conv2d_strided_geometry(h, w, kh, kw, mh, mw, padding)
+        strided = dict(algorithm=resolved, output_tile=(mh, mw), ct_h=ct_h,
+                       ct_w=ct_w, geometry=geom, **base)
+        if resolved == "pallas_winograd_strided":
+            stream = _wg.stream_geometry(geom.n_h, geom.n_w, c, mout,
+                                         ct_h, ct_w, phases=4,
+                                         input_stride=2)
+            return ConvSpec(stream=stream,
+                            blocks=(stream.bh * stream.bw, stream.block_c,
+                                    stream.block_m), **strided)
+        if resolved == "pallas_depthwise_strided":
+            stream = _wg.stream_geometry_depthwise(geom.n_h, geom.n_w, c,
+                                                   ct_h, ct_w, phases=4,
+                                                   input_stride=2)
+            return ConvSpec(stream=stream,
+                            blocks=(stream.bh * stream.bw, stream.block_c),
+                            **strided)
+        return ConvSpec(**strided)
 
     if resolved in ("winograd_depthwise", "winograd_grouped"):
         mh, mw = _resolve_output_tile(kh, kw, output_tile)
@@ -279,10 +307,10 @@ def _build_spec(x_shape, w_shape, dtype, stride, padding, requested,
                         blocks=(stream.bh * stream.bw, stream.block_c),
                         **base)
 
-    if resolved in ("winograd", "pallas_winograd",
-                    "pallas_winograd_materialized") and (kh == 1 or kw == 1):
-        # 1xN / Nx1: single-axis Cook-Toom (the Pallas backend also routes
-        # here -- its GEMM is one matmul XLA already maps to the MXU).
+    if resolved == "winograd_1d":
+        # 1xN / Nx1: single-axis Cook-Toom (the Pallas families also declare
+        # this executor -- its GEMM is one matmul XLA already maps to the
+        # MXU).
         axis = 1 if kh > 1 else 2
         k = max(kh, kw)
         mh, mw = _resolve_output_tile(kh, kw, output_tile)
@@ -360,6 +388,23 @@ def _bind_weights(spec: ConvSpec, w: jax.Array) -> jax.Array:
         return u.reshape(spec.ct_h.t, spec.ct_w.t, c_in, mout // c_in)
     if spec.algorithm == "winograd_grouped":
         return _wg.transform_filter_2d(w, spec.ct_h, spec.ct_w)
+    if spec.algorithm == "winograd_strided":
+        u = _wg.strided_phase_filters(w, spec.ct_h, spec.ct_w)
+        if spec.groups > 1 and spec.groups == spec.x_shape[3]:
+            # depthwise: make the channel axis explicit, (2,2,th,tw,C,mult)
+            c_in = spec.x_shape[3]
+            return u.reshape(*u.shape[:4], c_in, mout // c_in)
+        return u                                     # (2, 2, th, tw, Cg, M)
+    if spec.algorithm == "pallas_winograd_strided":
+        from repro.kernels import ops
+        u = _wg.strided_phase_filters(w, spec.ct_h, spec.ct_w)
+        u = u.reshape(4 * spec.ct_h.t * spec.ct_w.t, c, mout)  # phase-major
+        return ops.pad_winograd_filter(u, spec.blocks[1], spec.blocks[2])
+    if spec.algorithm == "pallas_depthwise_strided":
+        c_in = spec.x_shape[3]
+        u = _wg.strided_phase_filters(w, spec.ct_h, spec.ct_w)
+        u = u.reshape(4 * spec.ct_h.t * spec.ct_w.t, c_in)     # (4P, C)
+        return jnp.pad(u, ((0, 0), (0, spec.stream.c_pad - c_in)))
     if spec.algorithm == "pallas_depthwise":
         return _depthwise_domain_taps(w, spec.ct_h, spec.ct_w,
                                       spec.x_shape[3], spec.stream.c_pad)
@@ -406,6 +451,23 @@ class ConvPlan:
     def apply(self, x: jax.Array, bias: jax.Array | None = None,
               activation: str = "none") -> jax.Array:
         spec = self.spec
+        if spec.layout == "NCHW":
+            # NCHW ingest: one boundary transpose per call (the weights were
+            # transposed once, at plan time); executors always run NHWC.
+            want = (spec.x_shape[3],) + spec.x_shape[1:3]
+            if x.shape[1:] != want:
+                raise ValueError(
+                    f"plan built for NCHW input (N, {want[0]}, {want[1]}, "
+                    f"{want[2]}) got {x.shape} (batch may differ; C/H/W "
+                    f"must match)")
+            y = self._apply_nhwc(jnp.transpose(x, (0, 2, 3, 1)), bias,
+                                 activation)
+            return jnp.transpose(y, (0, 3, 1, 2))
+        return self._apply_nhwc(x, bias, activation)
+
+    def _apply_nhwc(self, x: jax.Array, bias: jax.Array | None,
+                    activation: str) -> jax.Array:
+        spec = self.spec
         if x.shape[1:] != spec.x_shape[1:]:
             raise ValueError(
                 f"plan built for input {spec.x_shape} got {x.shape} "
@@ -434,6 +496,23 @@ class ConvPlan:
                 padding=spec.padding, geometry=spec.geometry,
                 precision=self.precision)
             return _epilogue_jnp(y, bias, activation)
+        if alg == "winograd_strided":
+            y = _wg.winograd_strided_conv2d_pretransformed(
+                x, self.u, spec.ct_h, spec.ct_w, groups=spec.groups,
+                geometry=spec.geometry, precision=self.precision)
+            return _epilogue_jnp(y, bias, activation)
+        if alg == "pallas_winograd_strided":
+            from repro.kernels import ops
+            return ops.winograd_strided_conv2d_planned(
+                x, self.u, ct_h=spec.ct_h, ct_w=spec.ct_w,
+                geometry=spec.geometry, stream=spec.stream,
+                c_out=spec.w_shape[3], bias=bias, activation=activation)
+        if alg == "pallas_depthwise_strided":
+            from repro.kernels import ops
+            return ops.depthwise_strided_conv2d_planned(
+                x, self.u, ct_h=spec.ct_h, ct_w=spec.ct_w,
+                geometry=spec.geometry, stream=spec.stream,
+                c_out=spec.w_shape[3], bias=bias, activation=activation)
         if alg == "im2col":
             geom = spec.geometry
             kh, kw, _, mout = spec.w_shape
@@ -490,15 +569,21 @@ class ConvPlan:
         mout = spec.w_shape[-1]
         n = spec.x_shape[0]
         if spec.algorithm in ("winograd", "winograd_depthwise",
-                              "winograd_grouped", "pallas_winograd",
-                              "pallas_depthwise",
+                              "winograd_grouped", "winograd_strided",
+                              "pallas_winograd", "pallas_depthwise",
+                              "pallas_winograd_strided",
+                              "pallas_depthwise_strided",
                               "pallas_winograd_materialized"):
-            return (n, g.out_h, g.out_w, mout)
-        if spec.algorithm == "winograd_1d":
+            shape = (n, g.out_h, g.out_w, mout)
+        elif spec.algorithm == "winograd_1d":
             h, w = spec.x_shape[1:3]
-            return ((n, g.out_size, w, mout) if g.axis == 1
-                    else (n, h, g.out_size, mout))
-        return (n, g.oh, g.ow, mout)
+            shape = ((n, g.out_size, w, mout) if g.axis == 1
+                     else (n, h, g.out_size, mout))
+        else:
+            shape = (n, g.oh, g.ow, mout)
+        if spec.layout == "NCHW":
+            return (shape[0], shape[3], shape[1], shape[2])
+        return shape
 
 
 # ---------------------------------------------------------------------------
@@ -518,16 +603,18 @@ def _time_apply(plan: ConvPlan, x, warmup: int = 1, iters: int = 3) -> float:
 
 
 def _measure_autotune(x_shape, w_shape, dtype, stride, padding,
-                      output_tile, groups: int = 1) -> tuple[str, tuple]:
-    """Time winograd vs im2col on the real shape; return (winner, evidence).
-    Runs once per shape per process (the spec cache holds the result). For
-    grouped layers the winograd contender is the matching grouped/depthwise
-    executor variant; the baseline is the grouped im2row GEMM."""
+                      output_tile, groups: int = 1,
+                      fast: str = "winograd") -> tuple[str, tuple]:
+    """Time the fast-scheme contender vs im2col on the real shape; return
+    (winner, evidence). Runs once per shape per process (the spec cache
+    holds the result). `fast` is the winograd-family executor the registry
+    matched for this layer (grouped/depthwise/strided variants included);
+    the baseline is the (grouped) im2row GEMM."""
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.standard_normal(x_shape), dtype)
     w = jnp.asarray(rng.standard_normal(w_shape)
                     / (w_shape[0] * w_shape[1]), dtype)
-    wino = _resolve_winograd(groups, x_shape[3])
+    wino = fast
     times = {}
     for alg in (wino, "im2col"):
         spec = _build_spec(x_shape, w_shape, str(jnp.dtype(dtype)), stride,
@@ -555,104 +642,100 @@ def plan_conv2d(
     output_tile: int | tuple[int, int] | None = None,
     precision=None,
     dtype=None,
+    data_format: str = "NHWC",
 ) -> ConvPlan:
     """Build a ConvPlan for a (N, H, W, C) x (kh, kw, C/groups, M) conv.
 
     All per-layer decisions (algorithm, transform variant, padding/tiling
     geometry, Pallas blocking) are made here, once; the filter is transformed
     into the execution domain, once. Decisions are cached process-wide keyed
-    on (shapes, dtype, stride, padding, algorithm, groups, output_tile), so
-    repeated planning of the same layer shape -- including a measured
-    auto_tuned choice -- is a dict lookup plus one filter transform.
+    on (shapes, dtype, stride, padding, algorithm, groups, output_tile,
+    data_format), so repeated planning of the same layer shape -- including
+    a measured auto_tuned choice -- is a dict lookup plus one filter
+    transform.
+
+    Algorithm resolution is a query against the capability-declaring
+    executor registry (repro.core.registry): the concrete families resolve
+    to the matching declared executor or raise an error enumerating the
+    executors that do cover the layer; "auto" is the paper's mixed policy
+    (cheapest matching fast-scheme capability, else im2row). Stride-2
+    layers with odd filters resolve to the transform-domain
+    phase-decomposition executors (winograd_strided / the strided Pallas
+    kernels).
 
     `groups` is jax.lax's feature_group_count: 1 is the dense conv, C is a
     depthwise conv ((kh, kw, 1, C*mult) filter), anything between is a
-    grouped conv. The winograd family resolves to the matching executor
-    (transform-domain-Hadamard depthwise / block-diagonal grouped), im2col
-    to the grouped im2row GEMM, and pallas_winograd to the streamed
-    depthwise kernel (depthwise, multiplier 1 only).
+    grouped conv.
+
+    `data_format="NCHW"` ingests NCHW inputs with an OIHW (M, C/groups, kh,
+    kw) filter -- checkpoint compatibility: the filter is transposed to HWIO
+    once, here, and apply() transposes x/y at the call boundary.
     """
     global _CACHE_HITS, _CACHE_MISSES
     t0 = time.perf_counter()
     x_shape = tuple(x_shape)
-    w_shape = tuple(w.shape)
     if algorithm not in ALGORITHMS:
         raise ValueError(f"unknown algorithm {algorithm!r}; expected one of "
                          f"{ALGORITHMS}")
-    if len(x_shape) != 4 or len(w_shape) != 4:
-        raise ValueError(f"expected NHWC x HWIO, got {x_shape} x {w_shape}")
+    if data_format not in registry.LAYOUTS:
+        raise ValueError(f"unknown data_format {data_format!r}; expected one "
+                         f"of {registry.LAYOUTS}")
+    if len(x_shape) != 4 or len(w.shape) != 4:
+        raise ValueError(f"expected 4D input x 4D filter, got {x_shape} x "
+                         f"{tuple(w.shape)}")
+    if data_format == "NCHW":
+        # One plan-time normalization: NCHW/OIHW -> NHWC/HWIO. The weight
+        # transpose happens once per plan; the spec cache key carries the
+        # layout so NCHW and NHWC plans of the same shape stay distinct.
+        x_shape = (x_shape[0], x_shape[2], x_shape[3], x_shape[1])
+        w = jnp.transpose(w, (2, 3, 1, 0))
+    w_shape = tuple(w.shape)
     if groups < 1 or x_shape[3] % groups or w_shape[3] % groups:
         raise ValueError(
             f"groups={groups} must divide both C_in={x_shape[3]} and "
             f"C_out={w_shape[3]}")
     if x_shape[3] != w_shape[2] * groups:
         raise ValueError(
-            f"channel mismatch: input {x_shape} filter {w_shape} "
-            f"groups={groups} (HWIO grouped filters carry C_in/groups "
+            f"channel mismatch: input {x_shape} (NHWC) filter {w_shape} "
+            f"(HWIO) groups={groups} (grouped filters carry C_in/groups "
             f"input channels)")
     stride = (stride, stride) if isinstance(stride, int) else tuple(stride)
     dtype = dtype or w.dtype
     dtype_str = str(jnp.dtype(dtype))
     kh, kw = w_shape[:2]
     n, h, wdt, c = x_shape
+    query = LayerQuery(kh=kh, kw=kw, stride=stride, groups=groups, c_in=c,
+                       c_out=w_shape[3], layout=data_format)
 
     key = (x_shape, w_shape, dtype_str, stride, padding, algorithm,
            output_tile if not isinstance(output_tile, list) else
-           tuple(output_tile), precision, groups)
+           tuple(output_tile), precision, groups, data_format)
     spec = _SPEC_CACHE.get(key) if _cache_enabled() else None
     if spec is not None:
         _CACHE_HITS += 1
     else:
         _CACHE_MISSES += 1
-        suitable = _winograd_family_suitable(kh, kw, stride, groups)
+        fast = registry.best_fast(query)
         autotune = None
         if algorithm == "auto":
-            resolved = _resolve_winograd(groups, c) if suitable else "im2col"
+            resolved = registry.select_auto(query).executor
         elif algorithm == "auto_tuned":
-            if not suitable:
+            if fast is None:
                 resolved = "im2col"
             elif _measure_allowed():
                 resolved, autotune = _measure_autotune(
                     x_shape, w_shape, dtype_str, stride, padding, output_tile,
-                    groups)
+                    groups, fast=fast.executor)
             else:
-                resolved = _resolve_winograd(groups, c) if winograd_amortizes(
-                    h, wdt, kh, kw, c, padding, groups) else "im2col"
-        elif algorithm == "winograd":
-            if not suitable:
-                raise _unsuitable_error(algorithm, kh, kw, stride, groups)
-            resolved = _resolve_winograd(groups, c)
-        elif algorithm == "pallas_winograd" and groups > 1:
-            if groups != c:
-                raise ValueError(
-                    f"algorithm='pallas_winograd' supports groups=1 (dense "
-                    f"streaming kernel) or groups == C_in (streamed "
-                    f"depthwise kernel); got groups={groups} with C_in={c}. "
-                    f"Use algorithm='winograd' (block-diagonal grouped "
-                    f"executor) or 'im2col' (grouped im2row) instead")
-            if not suitable:
-                raise _unsuitable_error(algorithm, kh, kw, stride, groups)
-            if w_shape[3] != c:
-                raise ValueError(
-                    f"the streamed Pallas depthwise kernel needs channel "
-                    f"multiplier 1 (C_out == C_in); got C_in={c} "
-                    f"C_out={w_shape[3]}. Use algorithm='winograd' or "
-                    f"'im2col' for channel multipliers > 1")
-            resolved = "pallas_depthwise"
-        elif algorithm in ("pallas_winograd_materialized",
-                           "pallas_im2col") and groups > 1:
-            raise ValueError(
-                f"algorithm={algorithm!r} has no grouped executor; use "
-                f"'pallas_winograd' (depthwise, groups == C_in), 'winograd' "
-                f"(grouped/depthwise), or 'im2col' (grouped im2row) for "
-                f"grouped convolutions")
+                resolved = fast.executor if winograd_amortizes(
+                    h, wdt, kh, kw, c, padding, groups, stride) else "im2col"
         else:
-            resolved = algorithm
-            if resolved in ("pallas_winograd",
-                            "pallas_winograd_materialized") and not suitable:
-                raise _unsuitable_error(algorithm, kh, kw, stride, groups)
+            # concrete algorithm families: the registry either yields the
+            # declared executor or raises the capability-enumerating error.
+            resolved = registry.resolve(algorithm, query).executor
         spec = _build_spec(x_shape, w_shape, dtype_str, stride, padding,
-                           algorithm, resolved, output_tile, groups)
+                           algorithm, resolved, output_tile, groups,
+                           data_format)
         if autotune is not None:
             spec = dataclasses.replace(spec, autotune=autotune)
         # An auto_tuned decision made via the heuristic fallback (planning
@@ -660,7 +743,7 @@ def plan_conv2d(
         # same shape should still get to measure. Only measured decisions
         # (and the deterministic unsuitable->im2col case) are durable.
         durable = (algorithm != "auto_tuned" or autotune is not None
-                   or not suitable)
+                   or fast is None)
         if _cache_enabled() and durable:
             _SPEC_CACHE[key] = spec
 
@@ -797,11 +880,16 @@ def plan_separable_block(
     mult = dw_shape[3] // c
     pallas = algorithm in ("pallas_winograd", "pallas_winograd_materialized",
                            "pallas_im2col")
+    dw_query = registry.as_query(kh, kw, stride, groups=c, c_in=c,
+                                 c_out=dw_shape[3])
     # Only the streamed-kernel request fuses; the Pallas *baseline*
     # algorithms must never be silently substituted with the fast path
-    # (their whole point is to be the other arm of an A/B).
+    # (their whole point is to be the other arm of an A/B). The fused
+    # separable kernel itself is stride-1 only -- stride-2 blocks compose a
+    # strided depthwise plan with a pointwise plan below.
     fusable = (algorithm == "pallas_winograd" and mult == 1
-               and winograd_suitable(kh, kw, stride))
+               and stride == (1, 1)
+               and registry.supported("pallas_winograd", dw_query))
 
     if fusable:
         key = ("sepblock", x_shape, dw_shape, pw_shape, dtype_str, stride,
@@ -835,14 +923,20 @@ def plan_separable_block(
     # composed fallback: two plans, each on its best available executor.
     if pallas:
         # reached when the block cannot fuse (stride > 1, unsuitable k,
-        # mult > 1) or a Pallas baseline was requested: the depthwise half
-        # has no Pallas baseline executor, so it runs grouped im2row.
-        dw_alg = "im2col"
+        # mult > 1) or a Pallas baseline was requested. The streamed-kernel
+        # family keeps its own depthwise executors where one is declared
+        # (e.g. the stride-2 streamed depthwise kernel); the Pallas
+        # *baselines* have no depthwise executor and run grouped im2row.
+        if algorithm == "pallas_winograd" and registry.supported(algorithm,
+                                                                 dw_query):
+            dw_alg = "pallas_winograd"
+        else:
+            dw_alg = "im2col"
         pw_alg = "pallas_im2col"
     else:
         dw_alg = algorithm
-        if algorithm in ("winograd",) and not winograd_suitable(kh, kw,
-                                                                stride):
+        if algorithm == "winograd" and not registry.supported("winograd",
+                                                              dw_query):
             dw_alg = "im2col"
         pw_alg = "im2col" if algorithm == "im2col" else "auto"
     dw = plan_conv2d(x_shape, w_dw, stride=stride, padding=padding,
@@ -856,6 +950,93 @@ def plan_separable_block(
                          mode="composed")
     return SeparableBlockPlan(spec=spec, dw=dw, pw=pw,
                               build_time_s=time.perf_counter() - t0)
+
+
+# ---------------------------------------------------------------------------
+# Inverted residual blocks (MobileNet-v2): expand -> depthwise -> project
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class InvertedResidualPlan:
+    """A planned MobileNet-v2 inverted residual unit: 1x1 expand (+bias,
+    activation) -> kxk depthwise (+bias, activation) -> 1x1 linear project
+    (+bias, NO activation) -> residual add when stride 1 and C_in == C_out.
+
+    Built on the separable-block machinery: the depthwise+project pair is
+    ONE SeparableBlockPlan, so on the Pallas path (stride 1, suitable k,
+    multiplier 1) it runs as a single streamed kernel with the intermediate
+    in VMEM; the expand conv is a pure channel GEMM XLA maps to the MXU
+    directly. Stride-2 blocks compose, with the depthwise half on the
+    strided transform-domain executors."""
+
+    x_shape: tuple[int, ...]
+    stride: tuple[int, int]
+    residual: bool
+    expand: ConvPlan | None            # None when expansion factor is 1
+    sep: SeparableBlockPlan
+    build_time_s: float = 0.0
+
+    def __call__(self, x: jax.Array, **kwargs) -> jax.Array:
+        return self.apply(x, **kwargs)
+
+    def apply(self, x: jax.Array, bias_exp: jax.Array | None = None,
+              bias_dw: jax.Array | None = None,
+              bias_pw: jax.Array | None = None,
+              activation: str = "relu6") -> jax.Array:
+        h = x
+        if self.expand is not None:
+            h = self.expand.apply(h, bias=bias_exp, activation=activation)
+        y = self.sep.apply(h, bias_dw=bias_dw, bias_pw=bias_pw,
+                           inner_activation=activation,
+                           activation="none")        # linear bottleneck
+        return x + y if self.residual else y
+
+    @property
+    def mode(self) -> str:
+        return self.sep.mode
+
+    @property
+    def out_shape(self) -> tuple[int, ...]:
+        return self.sep.out_shape
+
+
+def plan_inverted_residual(
+    x_shape: tuple[int, ...],
+    w_exp: jax.Array | None,
+    w_dw: jax.Array,
+    w_pw: jax.Array,
+    *,
+    stride: int | tuple[int, int] = 1,
+    padding: Padding = "SAME",
+    algorithm: Algorithm = "auto",
+    output_tile: int | tuple[int, int] | None = None,
+    dtype=None,
+) -> InvertedResidualPlan:
+    """Plan a MobileNet-v2 inverted residual block as one unit.
+
+    `w_exp` is the (1, 1, C, C*t) expansion filter (None for expand factor
+    1), `w_dw` the (k, k, 1, C*t) depthwise filter, `w_pw` the
+    (1, 1, C*t, M) linear projection. The depthwise+project pair rides
+    plan_separable_block (fused streamed kernel where it applies); the
+    residual connection is planned in when stride is 1 and M == C."""
+    t0 = time.perf_counter()
+    x_shape = tuple(x_shape)
+    stride = (stride, stride) if isinstance(stride, int) else tuple(stride)
+    expand = None
+    inner_shape = x_shape
+    if w_exp is not None:
+        # 1x1 expand: a pure channel GEMM -- "auto" resolves it to the
+        # im2row executor, which for 1x1 is exactly one XLA matmul.
+        expand = plan_conv2d(x_shape, w_exp, stride=1, padding="SAME",
+                             algorithm="auto", dtype=dtype)
+        inner_shape = expand.out_shape
+    sep = plan_separable_block(inner_shape, w_dw, w_pw, stride=stride,
+                               padding=padding, algorithm=algorithm,
+                               output_tile=output_tile, dtype=dtype)
+    residual = stride == (1, 1) and x_shape[3] == tuple(w_pw.shape)[3]
+    return InvertedResidualPlan(
+        x_shape=x_shape, stride=stride, residual=residual, expand=expand,
+        sep=sep, build_time_s=time.perf_counter() - t0)
 
 
 # ---------------------------------------------------------------------------

@@ -19,8 +19,11 @@ arithmetic -- which is a fixed pattern of adds/subs across the *tile* axes --
 vectorizes over channels. On TPU the channel axis maps onto the 128-wide lane
 dimension; all einsums below keep C/M innermost for that reason.
 
-Only stride-1 convolutions are expressible in the Winograd domain; the
-dispatcher (core/dispatch.py) falls back to im2col for anything else, exactly
+Stride-1 convolutions map onto the Winograd domain directly; stride-2
+layers decompose into four stride-1 phase sub-convolutions whose sum also
+happens in the transform domain (winograd_strided_conv2d_pretransformed
+below -- the 2D analogue of the polyphase conv1d path). Anything else
+falls back to im2row per the executor registry (core/registry.py), exactly
 as the paper restricts the fast scheme to "suitable" layers.
 """
 
@@ -109,6 +112,47 @@ def conv2d_geometry(h: int, w: int, kh: int, kw: int, mh: int, mw: int,
     return Conv2DGeometry(lo_h, hi_h, nh, lo_w, hi_w, nw, out_h, out_w)
 
 
+def strided_out_size(size: int, k: int, padding: Padding) -> int:
+    """Output extent of one stride-2 axis (lax conventions) -- the ONE place
+    this formula lives; the strided geometry and the plan-time tile chooser
+    (core/plan.py:_resolve_strided_tile) both consult it."""
+    return -(-size // 2) if padding == "SAME" else (size - k) // 2 + 1
+
+
+def _pad_amounts_strided(size: int, k: int, m: int,
+                         padding: Padding) -> tuple[int, int, int, int]:
+    """(lo, hi, n_tiles, out) padding for one stride-2 phase-decomposed axis.
+
+    The axis is padded to 2*n_tiles*m + k - 1 elements so every phase
+    sub-grid x[p::2] (p in {0, 1}) holds exactly n_tiles*m + r_ph - 1
+    elements, r_ph = (k+1)//2 -- the length the stride-1 phase tiling needs
+    to cover n_tiles*m outputs. lo follows lax's SAME convention for
+    stride 2; surplus outputs are cropped after the inverse transform."""
+    out = strided_out_size(size, k, padding)
+    if padding == "SAME":
+        total = max((out - 1) * 2 + k - size, 0)
+        lo = total // 2
+    else:
+        lo = 0
+    if out <= 0:
+        raise ValueError(
+            f"axis of size {size} too small for filter {k} stride 2 "
+            f"({padding})")
+    n_tiles = -(-out // m)
+    padded = 2 * n_tiles * m + k - 1
+    return lo, padded - size - lo, n_tiles, out
+
+
+def conv2d_strided_geometry(h: int, w: int, kh: int, kw: int, mh: int,
+                            mw: int, padding: Padding) -> Conv2DGeometry:
+    """Padding/tiling decisions for a stride-2 phase-decomposed layer: same
+    shape of record as the stride-1 geometry (tile counts n_h/n_w describe
+    the phase sub-grids; lo/hi pad the full-resolution input)."""
+    lo_h, hi_h, nh, out_h = _pad_amounts_strided(h, kh, mh, padding)
+    lo_w, hi_w, nw, out_w = _pad_amounts_strided(w, kw, mw, padding)
+    return Conv2DGeometry(lo_h, hi_h, nh, lo_w, hi_w, nw, out_h, out_w)
+
+
 class StreamGeometry(NamedTuple):
     """Halo-blocking geometry for the region-streaming Pallas kernel
     (kernels/winograd.py:winograd_streamed), derived once at plan time.
@@ -143,6 +187,7 @@ _STRIP_OVERHEAD_TILES = 16
 
 def stream_geometry(n_h: int, n_w: int, c: int, mout: int,
                     ct_h: CookToom, ct_w: CookToom, *,
+                    phases: int = 1, input_stride: int = 1,
                     vmem_budget_bytes: int = 15 * 2 ** 20) -> StreamGeometry:
     """Choose the halo blocking for one layer, once, at plan time.
 
@@ -153,6 +198,11 @@ def stream_geometry(n_h: int, n_w: int, c: int, mout: int,
     (halo strip + filter block double-buffered, fp32 accumulator,
     transformed-input cache, transform transient, output block) are
     discarded.
+
+    `phases`/`input_stride` describe the stride-2 phase-decomposition
+    kernels: the halo strip spans `input_stride`x more input per axis and
+    the Winograd-domain tensors (filter blocks, transformed-input cache)
+    carry `phases` phase copies, so both scale the VMEM estimate.
     """
     th, tw, mh, mw = ct_h.t, ct_w.t, ct_h.m, ct_w.m
     p = th * tw
@@ -182,12 +232,14 @@ def stream_geometry(n_h: int, n_w: int, c: int, mout: int,
                     br = bh * bw
                     if br > 256:
                         continue
-                    hs, ws = bh * mh + th - mh, bw * mw + tw - mw
+                    hs = input_stride * (bh * mh + th - mh)
+                    ws = input_stride * (bw * mw + tw - mw)
+                    pp = p * phases     # Winograd points across all phases
                     vmem = 4 * (2 * hs * ws * bc    # halo strip (x2 buffer)
-                                + 2 * p * bc * bm   # filter block (x2 buffer)
+                                + 2 * pp * bc * bm  # filter block (x2 buffer)
                                 + p * br * bm       # fp32 accumulator
-                                + p * br * c_pad    # transformed-input cache
-                                + p * br * bc       # transform transient
+                                + pp * br * c_pad   # transformed-input cache
+                                + pp * br * bc      # transform transient
                                 + bh * mh * bw * mw * bm)   # output block
                     if vmem > vmem_budget_bytes:
                         continue
@@ -201,7 +253,12 @@ def stream_geometry(n_h: int, n_w: int, c: int, mout: int,
                     if best is None or score < best[0]:
                         best = (score, (bh, bw, n_hb, n_wb, bc, bm,
                                         c_pad, m_pad))
-    assert best is not None, (n_h, n_w, c, mout)
+    if best is None:
+        raise ValueError(
+            f"no halo blocking of the ({n_h}, {n_w})-tile grid (C={c}, "
+            f"M={mout}, t=({ct_h.t}, {ct_w.t}), phases={phases}) fits the "
+            f"{vmem_budget_bytes >> 20} MiB VMEM budget; use a smaller "
+            f"output_tile")
     bh, bw, n_hb, n_wb, bc, bm, c_pad, m_pad = best[1]
     return StreamGeometry(bh=bh, bw=bw, n_hb=n_hb, n_wb=n_wb,
                           pad_h=(n_hb * bh - n_h) * mh,
@@ -211,6 +268,7 @@ def stream_geometry(n_h: int, n_w: int, c: int, mout: int,
 
 def stream_geometry_depthwise(n_h: int, n_w: int, c: int,
                               ct_h: CookToom, ct_w: CookToom, *,
+                              phases: int = 1, input_stride: int = 1,
                               vmem_budget_bytes: int = 15 * 2 ** 20
                               ) -> StreamGeometry:
     """Halo blocking for the streamed depthwise kernel: reuse the dense
@@ -219,7 +277,8 @@ def stream_geometry_depthwise(n_h: int, n_w: int, c: int,
     which has no filter blocks or cross-C accumulator) with the output
     channel axis collapsed onto the channel axis -- depthwise walks ONE
     channel axis, so block_m is pinned to block_c."""
-    g = stream_geometry(n_h, n_w, c, c, ct_h, ct_w,
+    g = stream_geometry(n_h, n_w, c, c, ct_h, ct_w, phases=phases,
+                        input_stride=input_stride,
                         vmem_budget_bytes=vmem_budget_bytes)
     return g._replace(block_m=g.block_c, m_pad=g.c_pad)
 
@@ -444,6 +503,125 @@ def winograd_grouped_conv2d_pretransformed(
                    preferred_element_type=preferred_element_type)
     y = y.reshape(th * tw, n * nh * nw, mout)           # group-major M
 
+    y = y.transpose(1, 0, 2).reshape(n, nh, nw, th, tw, mout)
+    at_h = jnp.asarray(ct_h.AT, y.dtype)
+    at_w = jnp.asarray(ct_w.AT, y.dtype)
+    out = jnp.einsum("it,nhwtum,ju->nhiwjm", at_h, y, at_w)
+    out = out.reshape(n, nh * mh, nw * mw, mout)
+    return out[:, :geometry.out_h, :geometry.out_w, :].astype(x.dtype)
+
+
+def strided_phase_filters(w: jax.Array, ct_h: CookToom,
+                          ct_w: CookToom) -> jax.Array:
+    """(kh, kw, Cg, M) filter -> (2, 2, th, tw, Cg, M) Winograd-domain phase
+    sub-filters for the stride-2 decomposition.
+
+    The filter is zero-padded to even size (kh+1, kw+1) so all four phase
+    sub-filters w[p::2, q::2] share one size r_ph = (k+1)//2 -- and hence one
+    F(m, r_ph) transform set, which is what lets the phase sum happen in the
+    transform domain (before the single inverse transform). Done once per
+    plan."""
+    kh, kw = w.shape[:2]
+    wp = jnp.pad(w, ((0, 1), (0, 1), (0, 0), (0, 0)))
+    return jnp.stack([
+        jnp.stack([transform_filter_2d(wp[p::2, q::2], ct_h, ct_w)
+                   for q in (0, 1)], 0)
+        for p in (0, 1)], 0)
+
+
+def winograd_strided_conv2d_pretransformed(
+    x: jax.Array,
+    u: jax.Array,
+    ct_h: CookToom,
+    ct_w: CookToom,
+    *,
+    groups: int = 1,
+    geometry: Conv2DGeometry,
+    precision=None,
+    preferred_element_type=jnp.float32,
+) -> jax.Array:
+    """Stride-2 convolution via transform-domain phase decomposition -- the
+    2D analogue of the polyphase conv1d path, with the cross-phase sum moved
+    *into* the Winograd domain.
+
+    A stride-2 conv splits into four stride-1 sub-convolutions over the four
+    input phases x[p::2, q::2] with phase sub-filters w[p::2, q::2] (the
+    filter zero-padded to even size so all phases share one F(m, r_ph)
+    transform set, r_ph = (k+1)//2). Because every phase uses the same A^T,
+    the phase outputs are summed in the transform domain: one accumulated
+    (P, R, .) tensor, ONE inverse transform, one output scatter -- the four
+    phases cost four input transforms and four GEMM banks, not four full
+    pipelines.
+
+    Args:
+      x: (N, H, W, C) input, NHWC.
+      u: (2, 2, th, tw, Cg, M') pre-transformed phase filters
+         (strided_phase_filters); for depthwise Cg = C and M' = the channel
+         multiplier, for grouped Cg = C/groups and M' = M (group-major).
+      groups: feature_group_count; selects the phase-2 contraction (dense
+         GEMM / depthwise Hadamard / grouped block-diagonal), mirroring the
+         stride-1 executor family.
+      geometry: conv2d_strided_geometry record (built once at plan time).
+
+    Returns:
+      (N, H', W', M), matching lax.conv_general_dilated with stride (2, 2).
+    """
+    n, h, wdt, c = x.shape
+    th, tw = ct_h.t, ct_w.t
+    mh, mw = ct_h.m, ct_w.m
+    nh, nw = geometry.n_h, geometry.n_w
+    depthwise = groups > 1 and groups == c
+    xp = jnp.pad(x, ((0, 0), (geometry.lo_h, geometry.hi_h),
+                     (geometry.lo_w, geometry.hi_w), (0, 0)))
+    len_h = nh * mh + ct_h.r - 1          # phase sub-grid extents
+    len_w = nw * mw + ct_w.r - 1
+    dt = jnp.float32 if depthwise else x.dtype
+    bt_h = jnp.asarray(ct_h.BT, dt)
+    bt_w = jnp.asarray(ct_w.BT, dt)
+
+    pp = th * tw
+    r_tot = n * nh * nw
+
+    # phase 1: per-phase tiling + input transform, scattered into ONE
+    # (4P, R, C) tensor (phase-major points) so phase 2 stays a single
+    # batched contraction over all phases and regions -- the strided
+    # analogue of the dense scheme's (P, R, C) scatter.
+    vs = []
+    for p in (0, 1):
+        for q in (0, 1):
+            ph = xp[:, p::2, q::2, :][:, :len_h, :len_w, :]
+            tiles = _extract_tiles_1d(ph, 1, th, mh, nh)
+            tiles = _extract_tiles_1d(tiles, 3, tw, mw, nw)
+            v = jnp.einsum("it,nhtwuc,ju->nhwijc", bt_h, tiles.astype(dt),
+                           bt_w)                    # (N, nh, nw, th, tw, C)
+            vs.append(v.reshape(r_tot, pp, c).transpose(1, 0, 2))
+    v4 = jnp.concatenate(vs, 0)                     # (4P, R, C)
+    u4 = u.astype(dt).reshape(4 * pp, *u.shape[4:])  # (4P, Cg, M')
+
+    # phase 2: 4P batched contractions; the cross-phase sum then happens in
+    # the transform domain (every phase shares A^T), so ONE inverse follows.
+    if groups == 1:
+        y = jnp.einsum("prc,pcm->prm", v4, u4, precision=precision,
+                       preferred_element_type=preferred_element_type)
+        mout = y.shape[-1]
+    elif depthwise:
+        # Hadamard phase 2, batched over the channel multiplier.
+        y = jnp.einsum("prc,pcm->prcm", v4, u4)
+        mout = c * u4.shape[-1]
+        y = y.reshape(4 * pp, r_tot, mout)
+    else:
+        cg = c // groups
+        mg = u4.shape[-1] // groups
+        vg = v4.reshape(4 * pp, r_tot, groups, cg)
+        ug = u4.reshape(4 * pp, cg, groups, mg)
+        y = jnp.einsum("prgc,pcgm->prgm", vg, ug, precision=precision,
+                       preferred_element_type=preferred_element_type)
+        mout = groups * mg
+        y = y.reshape(4 * pp, r_tot, mout)
+    y = y.reshape(4, pp, r_tot, mout).sum(0)        # transform-domain sum
+
+    # phase 3: one gather + inverse transform + NHWC scatter, as in the
+    # stride-1 scheme.
     y = y.transpose(1, 0, 2).reshape(n, nh, nw, th, tw, mout)
     at_h = jnp.asarray(ct_h.AT, y.dtype)
     at_w = jnp.asarray(ct_w.AT, y.dtype)

@@ -17,6 +17,12 @@ by the (P, bC) Winograd-domain taps, inverse-transform (A^T (.) A), run the
 fused bias+activation epilogue, and scatter the NHWC block. The only HBM
 tensors are the padded input and the output.
 
+`depthwise_strided_streamed` -- the stride-2 depthwise kernel (MobileNet
+reduction blocks): same structure with the halo strip covering the
+full-resolution input and four phase tile tensors gathered in VMEM; the
+phase Hadamard products accumulate in the transform domain (shared A^T),
+one inverse transform, one store.
+
 `separable_streamed` -- the fused MobileNet block: depthwise k x k ->
 bias+activation -> pointwise 1x1 -> bias+activation, in ONE kernel. Grid
 (N, nHb, nWb, M/bM, C/bC) with C innermost, mirroring the dense streaming
@@ -145,6 +151,107 @@ def depthwise_streamed(
         out_specs=pl.BlockSpec((1, sh, sw, block_c),
                                lambda n_, i, j, cb: (n_, i, j, cb)),
         out_shape=jax.ShapeDtypeStruct((n, n_hb * sh, n_wb * sw, c),
+                                       xp.dtype),
+        interpret=interpret,
+    )(bt_h, bt_w, at_h, at_w, xp, u, bias)
+
+
+# ---------------------------------------------------------------------------
+# Stride-2 streamed depthwise kernel (transform-domain phase decomposition)
+# ---------------------------------------------------------------------------
+
+def _depthwise_strided_kernel(bt_h_ref, bt_w_ref, at_h_ref, at_w_ref, x_ref,
+                              u_ref, bias_ref, o_ref, *, bh: int, bw: int,
+                              activation: str, has_bias: bool):
+    from repro.kernels.winograd import phase_gather_tiles
+    strip = x_ref[0].astype(jnp.float32)             # (Hs, Ws, bC)
+    mh, th = at_h_ref.shape
+    mw, tw = at_w_ref.shape
+    bc = strip.shape[-1]
+    p = th * tw
+    # Four phase sub-grids from one full-resolution halo strip; each phase's
+    # Hadamard product accumulates in the transform domain (shared A^T), so
+    # there is ONE inverse transform and one store.
+    acc = None
+    for idx, (ph, qh) in enumerate(((0, 0), (0, 1), (1, 0), (1, 1))):
+        xt = phase_gather_tiles(strip, th, tw, mh, mw, bh, bw, ph, qh)
+        v = jnp.tensordot(bt_h_ref[...], xt, axes=(1, 1))
+        v = jnp.tensordot(bt_w_ref[...], v, axes=(1, 1))  # (j, i, bh, bw, bC)
+        u = u_ref[idx * p:(idx + 1) * p].astype(jnp.float32)
+        u = u.reshape(th, tw, bc).transpose(1, 0, 2)
+        y = v * u[:, :, None, None, :]
+        acc = y if acc is None else acc + y
+    out = jnp.tensordot(at_h_ref[...], acc, axes=(1, 1))
+    out = jnp.tensordot(at_w_ref[...], out, axes=(1, 1))  # (mj, mi, bh, bw, bC)
+    if has_bias:
+        out = out + bias_ref[0][None, None, None, None, :]
+    out = apply_activation(out, activation)
+    out = out.transpose(2, 1, 3, 0, 4)               # (bh, mi, bw, mj, bC)
+    o_ref[0] = out.reshape(bh * mh, bw * mw, bc).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "ct_h", "ct_w", "bh", "bw", "block_c", "activation", "interpret"))
+def depthwise_strided_streamed(
+    xp: jax.Array,           # (N, Hp, Wp, Cp) halo-padded full-res input
+    u: jax.Array,            # (4P, Cp) phase-major Winograd-domain taps
+    bias: jax.Array | None,  # (1, Cp) fp32 epilogue bias, or None
+    *,
+    ct_h: CookToom,
+    ct_w: CookToom,
+    bh: int,
+    bw: int,
+    block_c: int = 128,
+    activation: str = "none",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Stride-2 streamed depthwise conv via transform-domain phase
+    decomposition: the MobileNet reduction-block depthwise layer as one
+    halo-streaming kernel (fused epilogue, no phase tensors in HBM).
+
+    `xp` must be padded so Hp = nHb*2*bh*mh + 2*(th - mh) and likewise for
+    Wp (ops.py pads from the plan's StreamGeometry). Returns the stride-2
+    output grid (N, nHb*bh*mh, nWb*bw*mw, Cp); the caller crops.
+    """
+    interpret = resolve_interpret(interpret)
+    n, hp, wp, c = xp.shape
+    p4, c2 = u.shape
+    th, tw, mh, mw = ct_h.t, ct_w.t, ct_h.m, ct_w.m
+    so_h, so_w = bh * mh, bw * mw
+    hs = 2 * (so_h + th - mh)
+    ws = 2 * (so_w + tw - mw)
+    assert p4 == 4 * th * tw and c == c2, (xp.shape, u.shape)
+    assert c % block_c == 0, (xp.shape, block_c)
+    n_hb, rh = divmod(hp - 2 * (th - mh), 2 * so_h)
+    n_wb, rw = divmod(wp - 2 * (tw - mw), 2 * so_w)
+    assert rh == 0 and rw == 0, (xp.shape, (bh, bw), (mh, mw))
+    grid = (n, n_hb, n_wb, c // block_c)
+
+    has_bias = bias is not None
+    if bias is None:
+        bias = jnp.zeros((1, c), jnp.float32)
+    bt_h = jnp.asarray(ct_h.BT, jnp.float32)
+    bt_w = jnp.asarray(ct_w.BT, jnp.float32)
+    at_h = jnp.asarray(ct_h.AT, jnp.float32)
+    at_w = jnp.asarray(ct_w.AT, jnp.float32)
+    whole = lambda arr: pl.BlockSpec(arr.shape,
+                                     lambda n_, i, j, cb: (0,) * arr.ndim)
+    return pl.pallas_call(
+        functools.partial(_depthwise_strided_kernel, bh=bh, bw=bw,
+                          activation=activation, has_bias=has_bias),
+        grid=grid,
+        in_specs=[
+            whole(bt_h), whole(bt_w), whole(at_h), whole(at_w),
+            pl.BlockSpec((1, hs, ws, block_c),
+                         lambda n_, i, j, cb: (n_, i * 2 * so_h,
+                                               j * 2 * so_w, cb * block_c),
+                         indexing_mode=pl.Unblocked()),
+            pl.BlockSpec((p4, block_c), lambda n_, i, j, cb: (0, cb)),
+            pl.BlockSpec((1, block_c), lambda n_, i, j, cb: (0, cb)),
+        ],
+        out_specs=pl.BlockSpec((1, so_h, so_w, block_c),
+                               lambda n_, i, j, cb: (n_, i, j, cb)),
+        out_shape=jax.ShapeDtypeStruct((n, n_hb * so_h, n_wb * so_w, c),
                                        xp.dtype),
         interpret=interpret,
     )(bt_h, bt_w, at_h, at_w, xp, u, bias)

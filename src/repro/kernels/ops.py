@@ -128,6 +128,63 @@ def winograd_conv2d(
         c_out=mout, bias=bias, activation=activation, interpret=interpret)
 
 
+def winograd_strided_conv2d_planned(
+    x: jax.Array,
+    u: jax.Array,
+    *,
+    ct_h,
+    ct_w,
+    geometry: _wg.Conv2DGeometry,
+    stream: _wg.StreamGeometry,
+    c_out: int,
+    bias: jax.Array | None = None,
+    activation: str = "none",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Execute a planned stride-2 streaming Pallas Winograd conv (transform-
+    domain phase decomposition). `u` is the pre-transformed (4P, Cp, Mp)
+    phase-major filter; the halo geometry is in full-resolution input units,
+    so the edge-block padding is 2x the plan's output-tile surplus."""
+    c = x.shape[3]
+    xp = jnp.pad(x, ((0, 0),
+                     (geometry.lo_h, geometry.hi_h + 2 * stream.pad_h),
+                     (geometry.lo_w, geometry.hi_w + 2 * stream.pad_w),
+                     (0, stream.c_pad - c)))
+    y = _k_winograd.winograd_strided_streamed(
+        xp, u, _pad_bias(bias, stream.m_pad), ct_h=ct_h, ct_w=ct_w,
+        bh=stream.bh, bw=stream.bw, block_c=stream.block_c,
+        block_m=stream.block_m, activation=activation, interpret=interpret)
+    return y[:, :geometry.out_h, :geometry.out_w, :c_out]
+
+
+def depthwise_strided_conv2d_planned(
+    x: jax.Array,
+    u: jax.Array,
+    *,
+    ct_h,
+    ct_w,
+    geometry: _wg.Conv2DGeometry,
+    stream: _wg.StreamGeometry,
+    c_out: int,
+    bias: jax.Array | None = None,
+    activation: str = "none",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Execute a planned stride-2 streamed Pallas depthwise conv: `u` is the
+    (4P, Cp) phase-major taps; halo blocking comes from the plan."""
+    from repro.kernels import depthwise as _k_depthwise
+    c = x.shape[3]
+    xp = jnp.pad(x, ((0, 0),
+                     (geometry.lo_h, geometry.hi_h + 2 * stream.pad_h),
+                     (geometry.lo_w, geometry.hi_w + 2 * stream.pad_w),
+                     (0, stream.c_pad - c)))
+    y = _k_depthwise.depthwise_strided_streamed(
+        xp, u, _pad_bias(bias, stream.c_pad), ct_h=ct_h, ct_w=ct_w,
+        bh=stream.bh, bw=stream.bw, block_c=stream.block_c,
+        activation=activation, interpret=interpret)
+    return y[:, :geometry.out_h, :geometry.out_w, :c_out]
+
+
 # ---------------------------------------------------------------------------
 # Winograd conv2d -- pre-streaming (materialized-tiles) baseline
 # ---------------------------------------------------------------------------

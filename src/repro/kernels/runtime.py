@@ -8,8 +8,8 @@ off-TPU (this container is CPU-only), compile on TPU or when the env var
 forces it.
 
 `apply_activation` is the epilogue vocabulary shared by the Winograd and GEMM
-kernels (bias add + none/relu/gelu) and by the pure-JAX executors, so every
-conv backend exposes the same fused-epilogue contract.
+kernels (bias add + none/relu/relu6/gelu) and by the pure-JAX executors, so
+every conv backend exposes the same fused-epilogue contract.
 """
 
 from __future__ import annotations
@@ -19,8 +19,9 @@ import os
 import jax
 import jax.numpy as jnp
 
-#: Epilogue activations the fused kernels support (static compile-time choice).
-ACTIVATIONS = ("none", "relu", "gelu")
+#: Epilogue activations the fused kernels support (static compile-time
+#: choice). relu6 is the MobileNet-v2 nonlinearity (clipped ReLU).
+ACTIVATIONS = ("none", "relu", "relu6", "gelu")
 
 
 def pick_block(dim: int, target: int, quantum: int = 8) -> int:
@@ -48,6 +49,8 @@ def apply_activation(y: jax.Array, activation: str) -> jax.Array:
         return y
     if activation == "relu":
         return jax.nn.relu(y)
+    if activation == "relu6":
+        return jnp.minimum(jax.nn.relu(y), 6.0)
     if activation == "gelu":
         return jax.nn.gelu(y)
     raise ValueError(

@@ -4,7 +4,7 @@ TPU-native adaptation of the paper's three-phase scheme. The paper stages
 (input transform -> scatter to matrices in memory -> GEMMs -> gather -> output
 transform) through L1/L2; on TPU we instead *fuse* all three phases in VMEM.
 
-Two kernels live here:
+Three kernels live here:
 
 `winograd_streamed` -- the halo-aware region-streaming kernel (the planned
 hot path). Nothing but the NHWC input and the NHWC output ever touches HBM:
@@ -29,6 +29,15 @@ hot path). Nothing but the NHWC input and the NHWC output ever touches HBM:
        (bias add + none/relu/gelu), and scatter the (bh*mh, bw*mw, bM)
        spatial block straight into the NHWC output -- no post-kernel
        un-tiling transpose/reshape pass.
+
+`winograd_strided_streamed` -- the stride-2 variant via transform-domain
+phase decomposition: the halo strip covers the full-resolution input (origin
+stride and extent doubled), the VMEM gather extracts FOUR phase tile
+tensors (x[p::2, q::2] sub-grids), each is transformed with the shared
+F(m, (k+1)/2) B^T (the filter was zero-padded to even size at plan time),
+and the four phase GEMM banks accumulate into ONE (P, bR, bM) accumulator
+-- the cross-phase sum happens in the transform domain, so there is a
+single inverse transform and NHWC store with the fused epilogue.
 
 `winograd_fused` -- the pre-streaming kernel over pre-extracted tiles
 (grid (R/bR, M/bM, C/bC)), kept as the A/B baseline the benchmarks measure
@@ -205,6 +214,167 @@ def winograd_streamed(
                         # step of each strip, reused by the rest of the
                         # (M, C) sweep.
                         pltpu.VMEM((n_c, p, bh * bw, block_c), jnp.float32)],
+        interpret=interpret,
+    )(bt_h, bt_w, at_h, at_w, xp, u, bias)
+
+
+# ---------------------------------------------------------------------------
+# Stride-2 halo-streaming kernel (transform-domain phase decomposition)
+# ---------------------------------------------------------------------------
+
+def phase_gather_tiles(strip, th: int, tw: int, mh: int, mw: int, bh: int,
+                       bw: int, ph: int, qh: int, *, stride: int = 2):
+    """VMEM gather of ONE phase's overlapping tiles from a full-resolution
+    halo strip: phase (ph, qh) element (a, b) of output tile (i, j) lives at
+    strip[stride*(i*mh + a) + ph, stride*(j*mw + b) + qh]. Same static
+    strided-slice structure as the stride-1 gather (th + tw slices per
+    phase), so the read-amplified phase tensors never exist in HBM.
+    Returns (tw, th, bh, bw, bC). Shared by the dense and depthwise strided
+    streaming kernels."""
+    rows = jnp.stack(
+        [strip[stride * r + ph:
+               stride * r + ph + (bh - 1) * stride * mh + 1: stride * mh]
+         for r in range(th)], 0)                     # (th, bh, Ws, bC)
+    return jnp.stack(
+        [rows[:, :, stride * q + qh:
+              stride * q + qh + (bw - 1) * stride * mw + 1: stride * mw]
+         for q in range(tw)], 0)                     # (tw, th, bh, bw, bC)
+
+
+def _strided_streamed_kernel(bt_h_ref, bt_w_ref, at_h_ref, at_w_ref, x_ref,
+                             u_ref, bias_ref, o_ref, acc_ref, v_ref, *,
+                             n_c: int, bh: int, bw: int, block_c: int,
+                             activation: str, has_bias: bool):
+    m_step = pl.program_id(3)
+    c_step = pl.program_id(4)
+
+    @pl.when(c_step == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    mh, th = at_h_ref.shape
+    mw, tw = at_w_ref.shape
+    br = bh * bw
+    p = th * tw
+
+    # Four phase sub-grids are gathered from ONE full-resolution halo strip
+    # and transformed with the shared B^T (all phases use the same F(m, r_ph)
+    # set -- the filter was zero-padded to even size at plan time). The
+    # transformed phases stack into a (4P, bR, bC) tensor cached across the
+    # M sweep, exactly like the stride-1 kernel's transformed-input cache.
+    @pl.when(m_step == 0)
+    def _transform():
+        strip = x_ref[0].astype(jnp.float32)         # (Hs, Ws, bC)
+        vs = []
+        for ph in (0, 1):
+            for qh in (0, 1):
+                xt = phase_gather_tiles(strip, th, tw, mh, mw, bh, bw,
+                                        ph, qh)
+                v = jnp.tensordot(bt_h_ref[...], xt, axes=(1, 1))
+                v = jnp.tensordot(bt_w_ref[...], v, axes=(1, 1))
+                vs.append(v.transpose(1, 0, 2, 3, 4).reshape(p, br, block_c))
+        v_ref[c_step] = jnp.concatenate(vs, 0)       # (4P, bR, bC)
+
+    u = u_ref[...]                                   # (4P, bC, bM)
+    # batched phase-GEMMs: 4P point-GEMMs as one dot_general; the phase sum
+    # happens in the transform domain (one shared A^T), so the accumulator
+    # stays (P, bR, bM) -- four GEMM banks, ONE inverse transform.
+    y = jax.lax.dot_general(
+        v_ref[c_step], u.astype(jnp.float32),
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)          # (4P, bR, bM)
+    acc_ref[...] += y.reshape(4, p, br, y.shape[-1]).sum(0)
+
+    @pl.when(c_step == n_c - 1)
+    def _store():
+        bm_ = acc_ref.shape[-1]
+        y = acc_ref[...].reshape(th, tw, bh, bw, bm_)
+        out = jnp.tensordot(at_h_ref[...], y, axes=(1, 0))
+        out = jnp.tensordot(at_w_ref[...], out, axes=(1, 1))
+        if has_bias:
+            out = out + bias_ref[0][None, None, None, None, :]
+        out = apply_activation(out, activation)
+        out = out.transpose(2, 1, 3, 0, 4)           # (bh, mi, bw, mj, bM)
+        o_ref[0] = out.reshape(bh * mh, bw * mw, bm_).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "ct_h", "ct_w", "bh", "bw", "block_c", "block_m", "activation",
+    "interpret"))
+def winograd_strided_streamed(
+    xp: jax.Array,           # (N, Hp, Wp, Cp) halo-padded full-res input
+    u: jax.Array,            # (4P, Cp, Mp) phase-major Winograd-domain filter
+    bias: jax.Array | None,  # (1, Mp) fp32 epilogue bias, or None
+    *,
+    ct_h: CookToom,
+    ct_w: CookToom,
+    bh: int,
+    bw: int,
+    block_c: int = 128,
+    block_m: int = 128,
+    activation: str = "none",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Stride-2 halo-streaming Winograd conv via transform-domain phase
+    decomposition: four phase input-transforms + GEMM banks per strip, one
+    accumulator, one inverse transform, one NHWC store with fused epilogue.
+
+    `xp` must be padded so Hp = nHb*2*bh*mh + 2*(th - mh) and likewise for
+    Wp (ops.py pads from the plan's StreamGeometry; 2*(th - mh) = k - 1 is
+    the stride-2 halo). Returns the (N, nHb*bh*mh, nWb*bw*mw, Mp) stride-2
+    output grid; the caller crops the geometry surplus.
+    """
+    interpret = resolve_interpret(interpret)
+    n, hp, wp, c = xp.shape
+    p4, c2, m = u.shape
+    th, tw, mh, mw = ct_h.t, ct_w.t, ct_h.m, ct_w.m
+    so_h, so_w = bh * mh, bw * mw                    # output strip extents
+    hs = 2 * (so_h + th - mh)                        # input halo strip extents
+    ws = 2 * (so_w + tw - mw)
+    assert p4 == 4 * th * tw and c == c2, (xp.shape, u.shape)
+    assert c % block_c == 0 and m % block_m == 0, (xp.shape, u.shape,
+                                                   (block_c, block_m))
+    n_hb, rh = divmod(hp - 2 * (th - mh), 2 * so_h)
+    n_wb, rw = divmod(wp - 2 * (tw - mw), 2 * so_w)
+    assert rh == 0 and rw == 0, (xp.shape, (bh, bw), (mh, mw))
+    n_c = c // block_c
+    grid = (n, n_hb, n_wb, m // block_m, n_c)
+
+    has_bias = bias is not None
+    if bias is None:
+        bias = jnp.zeros((1, m), jnp.float32)
+    bt_h = jnp.asarray(ct_h.BT, jnp.float32)
+    bt_w = jnp.asarray(ct_w.BT, jnp.float32)
+    at_h = jnp.asarray(ct_h.AT, jnp.float32)
+    at_w = jnp.asarray(ct_w.AT, jnp.float32)
+    whole = lambda arr: pl.BlockSpec(arr.shape,
+                                     lambda n_, i, j, mb, cb: (0,) * arr.ndim)
+    return pl.pallas_call(
+        functools.partial(_strided_streamed_kernel, n_c=n_c, bh=bh, bw=bw,
+                          block_c=block_c, activation=activation,
+                          has_bias=has_bias),
+        grid=grid,
+        in_specs=[
+            whole(bt_h), whole(bt_w), whole(at_h), whole(at_w),
+            # full-resolution halo strips: origin stride doubles (strip
+            # (i, j) starts at (2*i*so_h, 2*j*so_w)), extent k-1 past the
+            # next strip's origin -- same element-offset structure as the
+            # stride-1 kernel, scaled by the input stride.
+            pl.BlockSpec((1, hs, ws, block_c),
+                         lambda n_, i, j, mb, cb: (n_, i * 2 * so_h,
+                                                   j * 2 * so_w,
+                                                   cb * block_c),
+                         indexing_mode=pl.Unblocked()),
+            pl.BlockSpec((p4, block_c, block_m),
+                         lambda n_, i, j, mb, cb: (0, cb, mb)),
+            pl.BlockSpec((1, block_m), lambda n_, i, j, mb, cb: (0, mb)),
+        ],
+        out_specs=pl.BlockSpec((1, so_h, so_w, block_m),
+                               lambda n_, i, j, mb, cb: (n_, i, j, mb)),
+        out_shape=jax.ShapeDtypeStruct((n, n_hb * so_h, n_wb * so_w, m),
+                                       xp.dtype),
+        scratch_shapes=[pltpu.VMEM((th * tw, bh * bw, block_m), jnp.float32),
+                        pltpu.VMEM((n_c, p4, bh * bw, block_c), jnp.float32)],
         interpret=interpret,
     )(bt_h, bt_w, at_h, at_w, xp, u, bias)
 

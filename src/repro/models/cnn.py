@@ -27,8 +27,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.dispatch import Algorithm, winograd_suitable
-from repro.core.plan import (ConvPlan, SeparableBlockPlan,
-                             algorithm_supported, plan_conv2d,
+from repro.core.plan import (ConvPlan, InvertedResidualPlan,
+                             SeparableBlockPlan, algorithm_supported,
+                             plan_conv2d, plan_inverted_residual,
                              plan_separable_block)
 from repro.models.layers import conv2d_layer, init_conv2d
 
@@ -46,6 +47,12 @@ class Conv:
     relu: bool = True
     groups: int = 1                    # feature_group_count (must divide the
                                        # incoming channel count at this spot)
+    activation: str | None = None      # epilogue override ("relu6", ...);
+                                       # None falls back to the relu flag
+
+    @property
+    def act(self) -> str:
+        return self.activation or ("relu" if self.relu else "none")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,6 +67,23 @@ class SeparableConv:
     c_out: int
     stride: int = 1
     padding: str = "SAME"
+
+
+@dataclasses.dataclass(frozen=True)
+class InvertedResidual:
+    """MobileNet-v2 inverted residual unit (Sandler et al. 2018): 1x1
+    expand (xfactor, relu6) -> kxk depthwise (stride s, relu6) -> 1x1
+    linear projection, residual add when stride 1 and C_in == C_out.
+    Planned as ONE unit by plan_cnn (plan_inverted_residual): the
+    depthwise+project pair rides the separable-block machinery, so the
+    Pallas path fuses it into a single streamed kernel; stride-2 blocks
+    route the depthwise half through the strided Winograd executors."""
+
+    name: str
+    c_out: int
+    stride: int = 1
+    expand: int = 6                    # expansion factor t
+    k: int = 3
 
 
 @dataclasses.dataclass(frozen=True)
@@ -122,6 +146,18 @@ def init_cnn(key, specs, c_in: int, dtype=_F32, res: int = 224) -> dict:
                     "pw": init_conv2d(k2, 1, 1, c, spec.c_out, dtype)}
                 h = _out_size(h, spec.k, spec.stride, spec.padding)
                 w = _out_size(w, spec.k, spec.stride, spec.padding)
+                c = spec.c_out
+            elif isinstance(spec, InvertedResidual):
+                key, k1, k2, k3 = jax.random.split(key, 4)
+                ce = c * spec.expand
+                p = {"dw": init_conv2d(k2, spec.k, spec.k, ce, ce, dtype,
+                                       groups=ce),
+                     "pw": init_conv2d(k3, 1, 1, ce, spec.c_out, dtype)}
+                if spec.expand != 1:
+                    p["exp"] = init_conv2d(k1, 1, 1, c, ce, dtype)
+                params[spec.name] = p
+                h = _out_size(h, spec.k, spec.stride, "SAME")
+                w = _out_size(w, spec.k, spec.stride, "SAME")
                 c = spec.c_out
             elif isinstance(spec, Pool):
                 h = _out_size(h, spec.k, spec.stride, spec.padding)
@@ -191,6 +227,15 @@ def plan_cnn(params: dict, specs, *, res: int, c_in: int = 3, batch: int = 1,
                 h = _out_size(h, spec.k, spec.stride, spec.padding)
                 w = _out_size(w, spec.k, spec.stride, spec.padding)
                 c = spec.c_out
+            elif isinstance(spec, InvertedResidual):
+                p = params[spec.name]
+                plans[spec.name] = plan_inverted_residual(
+                    (batch, h, w, c), p.get("exp", {}).get("w"),
+                    p["dw"]["w"], p["pw"]["w"], stride=spec.stride,
+                    algorithm=algorithm)
+                h = _out_size(h, spec.k, spec.stride, "SAME")
+                w = _out_size(w, spec.k, spec.stride, "SAME")
+                c = spec.c_out
             elif isinstance(spec, Pool):
                 h = _out_size(h, spec.k, spec.stride, spec.padding)
                 w = _out_size(w, spec.k, spec.stride, spec.padding)
@@ -239,7 +284,7 @@ def cnn_forward(params: dict, x: jax.Array, specs,
                         stride=spec.stride, groups=spec.groups,
                         suitable=winograd_suitable(spec.kh, spec.kw, spec.stride))
                 x = conv2d_layer(
-                    params[spec.name], x, relu=spec.relu,
+                    params[spec.name], x, activation=spec.act,
                     plan=plans.get(spec.name) if plans else None,
                     stride=spec.stride, padding=spec.padding,
                     groups=spec.groups,
@@ -279,6 +324,38 @@ def cnn_forward(params: dict, x: jax.Array, specs,
                                algorithm=_layer_algorithm(pw_spec, algorithm,
                                                           c),
                                bias=p["pw"]["b"], activation="relu")
+            elif isinstance(spec, InvertedResidual):
+                p = params[spec.name]
+                c = x.shape[-1]
+                ce = c * spec.expand
+                if layer_times is not None:
+                    layer_times[f"{spec.name}_dw"] = dict(
+                        kh=spec.k, kw=spec.k, c_in=ce, c_out=ce,
+                        h=x.shape[1], w=x.shape[2], stride=spec.stride,
+                        groups=ce,
+                        suitable=winograd_suitable(spec.k, spec.k,
+                                                   spec.stride))
+                if plans:
+                    x = plans[spec.name].apply(
+                        x, bias_exp=p["exp"]["b"] if "exp" in p else None,
+                        bias_dw=p["dw"]["b"], bias_pw=p["pw"]["b"])
+                else:
+                    from repro.core.dispatch import conv2d
+                    h = x
+                    if "exp" in p:
+                        h = conv2d(h, p["exp"]["w"], bias=p["exp"]["b"],
+                                   activation="relu6", algorithm="im2col")
+                    dw_spec = Conv(spec.name, spec.k, spec.k, ce,
+                                   stride=spec.stride, groups=ce)
+                    h = conv2d(h, p["dw"]["w"], stride=spec.stride,
+                               groups=ce, bias=p["dw"]["b"],
+                               activation="relu6",
+                               algorithm=_layer_algorithm(dw_spec, algorithm,
+                                                          ce))
+                    h = conv2d(h, p["pw"]["w"], bias=p["pw"]["b"],
+                               activation="none", algorithm="im2col")
+                    x = x + h if (spec.stride == 1
+                                  and c == spec.c_out) else h
             elif isinstance(spec, Pool):
                 x = _pool(x, spec)
             elif isinstance(spec, Concat):
@@ -436,6 +513,17 @@ def inception_v3():
     ]
 
 
+def _make_divisible(c: float, divisor: int = 8) -> int:
+    """The slim/MobileNet channel rounding: nearest multiple of `divisor`
+    (floored at `divisor`), bumped up one step if rounding dropped more
+    than 10% -- the reference convention both MobileNets use, so scaled
+    channel counts match published checkpoints at every width multiplier."""
+    v = max(int(c + divisor / 2) // divisor * divisor, divisor)
+    if v < 0.9 * c:
+        v += divisor
+    return v
+
+
 #: MobileNet-v1 body: (c_out, stride) of each depthwise-separable block
 #: (Howard et al. 2017, Table 1), after the stride-2 3x3 stem.
 _MOBILENET_V1_BLOCKS = (
@@ -448,11 +536,10 @@ def mobilenet_v1(width_mult: float = 1.0):
     """MobileNet-v1: a stride-2 3x3 stem + 13 depthwise-separable blocks.
 
     `width_mult` is the paper's width multiplier alpha: every channel count
-    is scaled and rounded to a multiple of 8 (floored at 8), the standard
-    slim-model convention. Each SeparableConv is planned as one fused unit
-    by plan_cnn."""
+    is scaled through the slim `make_divisible` rounding. Each
+    SeparableConv is planned as one fused unit by plan_cnn."""
     def ch(c: int) -> int:
-        return max(int(c * width_mult + 4) // 8 * 8, 8)
+        return _make_divisible(c * width_mult)
 
     s = [Conv("conv1", 3, 3, ch(32), stride=2)]
     s += [SeparableConv(f"sep{i + 2}", 3, ch(c), stride=st)
@@ -466,6 +553,35 @@ def mobilenet_v1_050():
     return mobilenet_v1(width_mult=0.5)
 
 
+#: MobileNet-v2 body: (expand t, c_out, repeats n, first-stride s) of each
+#: inverted-residual stage (Sandler et al. 2018, Table 2).
+_MOBILENET_V2_STAGES = (
+    (1, 16, 1, 1), (6, 24, 2, 2), (6, 32, 3, 2), (6, 64, 4, 2),
+    (6, 96, 3, 1), (6, 160, 3, 2), (6, 320, 1, 1),
+)
+
+
+def mobilenet_v2(width_mult: float = 1.0):
+    """MobileNet-v2: stride-2 3x3 stem (relu6), 17 inverted-residual blocks,
+    1x1 head conv, classifier. Each InvertedResidual is planned as one
+    fused unit by plan_cnn; the stride-2 reduction blocks route their
+    depthwise half through the strided Winograd executors."""
+    def ch(c: int) -> int:
+        return _make_divisible(c * width_mult)
+
+    s = [Conv("conv1", 3, 3, ch(32), stride=2, activation="relu6")]
+    i = 0
+    for t, c, n, st in _MOBILENET_V2_STAGES:
+        for j in range(n):
+            s.append(InvertedResidual(f"ir{i + 1}", ch(c),
+                                      stride=st if j == 0 else 1, expand=t))
+            i += 1
+    head = ch(1280) if width_mult > 1.0 else 1280
+    s += [Conv("conv_head", 1, 1, head, activation="relu6"),
+          GlobalAvgPool(), Dense("fc", 1000, relu=False)]
+    return s
+
+
 NETWORKS = {
     "vgg16": (vgg16, 224),
     "vgg19": (vgg19, 224),
@@ -474,4 +590,5 @@ NETWORKS = {
     "squeezenet": (squeezenet, 224),
     "mobilenet_v1": (mobilenet_v1, 224),
     "mobilenet_v1_050": (mobilenet_v1_050, 224),
+    "mobilenet_v2": (mobilenet_v2, 224),
 }

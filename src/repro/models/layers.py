@@ -138,14 +138,17 @@ def init_conv2d(key, kh: int, kw: int, c_in: int, c_out: int,
 
 
 def conv2d_layer(p: Params, x: jax.Array, *, plan=None, relu: bool = True,
-                 **conv_kwargs) -> jax.Array:
-    """Conv + bias + optional relu. With `plan` (a repro.core.plan.ConvPlan,
-    built once at init/weight-load time) execution performs no per-call
-    filter transform or geometry work, and the bias+relu epilogue rides the
+                 activation: str | None = None, **conv_kwargs) -> jax.Array:
+    """Conv + bias + epilogue activation. `activation` (any name in
+    kernels.runtime.ACTIVATIONS, e.g. "relu6" for MobileNet-v2) overrides
+    the legacy `relu` flag. With `plan` (a repro.core.plan.ConvPlan, built
+    once at init/weight-load time) execution performs no per-call filter
+    transform or geometry work, and the bias+activation epilogue rides the
     plan's fused path (in-kernel on the Pallas executors -- the conv output
     never revisits HBM for the elementwise work). Without a plan, falls back
     to the per-call dispatcher (conv_kwargs: stride/padding/algorithm/...)."""
-    activation = "relu" if relu else "none"
+    if activation is None:
+        activation = "relu" if relu else "none"
     if plan is not None:
         return plan.apply(x, bias=p["b"], activation=activation)
     from repro.core.dispatch import conv2d

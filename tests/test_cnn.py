@@ -12,7 +12,8 @@ from conftest import rel_err
 
 # reduced resolutions that keep every VALID conv/pool positive-sized
 _RES = {"vgg16": 64, "vgg19": 64, "googlenet": 64, "inception_v3": 96,
-        "squeezenet": 64, "mobilenet_v1": 64, "mobilenet_v1_050": 64}
+        "squeezenet": 64, "mobilenet_v1": 64, "mobilenet_v1_050": 64,
+        "mobilenet_v2": 64}
 
 
 @pytest.mark.parametrize("net", sorted(cnn.NETWORKS))
@@ -60,8 +61,10 @@ def test_layer_inventory_census():
     inv = conv_layer_inventory("squeezenet")
     assert len(inv) == 26                       # 26 convs in SqueezeNet 1.0
     suitable = [l for l in inv if l["suitable"]]
-    assert len(suitable) == 8                   # 8 3x3 expand layers
-    assert all(l["kh"] == 3 for l in suitable)
+    # 8 stride-1 3x3 expand layers + the 7x7 stride-2 stem (covered by the
+    # stride-2 phase-decomposition executor since the registry landed)
+    assert len(suitable) == 9
+    assert sorted(l["kh"] for l in suitable) == [3] * 8 + [7]
     # inception has the paper's 1x7/7x1 layers, all suitable
     inv3 = conv_layer_inventory("inception_v3")
     one_d = [l for l in inv3 if l["suitable"] and 1 in (l["kh"], l["kw"])]

@@ -77,13 +77,17 @@ def test_depthwise_channel_multiplier(rng):
         assert rel_err(p.apply(x), want) < 1e-4
 
 
-@pytest.mark.parametrize("stride", [1, 2])
-def test_grouped_strided_falls_back_to_im2col(rng, stride):
+@pytest.mark.parametrize("stride", [1, 2, 3])
+def test_grouped_stride_routing(rng, stride):
+    """auto routes grouped layers onto the registry's matching executor:
+    the block-diagonal stride-1 executor, the stride-2 phase-decomposition
+    executor, and (stride 3: no winograd capability) the im2row fallback."""
     c, g = 8, 4
     x = jnp.asarray(rng.standard_normal((1, 11, 11, c)), jnp.float32)
     w = jnp.asarray(rng.standard_normal((3, 3, c // g, 8)) / 3, jnp.float32)
     p = plan_conv2d(x.shape, w, groups=g, stride=stride, algorithm="auto")
-    assert p.algorithm == ("winograd_grouped" if stride == 1 else "im2col")
+    assert p.algorithm == {1: "winograd_grouped", 2: "winograd_strided",
+                           3: "im2col"}[stride]
     want = direct_conv2d(x, w, stride=stride, groups=g)
     assert rel_err(p.apply(x), want) < 1e-4
 
@@ -368,16 +372,18 @@ def test_groups_constraint_errors(rng):
     # filter input channels inconsistent with groups
     with pytest.raises(ValueError, match="channel mismatch"):
         plan_conv2d((1, 10, 10, 8), w, groups=4)
-    # grouped (non-depthwise) pallas_winograd: actionable rejection
-    with pytest.raises(ValueError, match="groups == C_in"):
+    # grouped (non-depthwise) pallas_winograd: the registry error names the
+    # executors that do cover the layer (block-diagonal grouped winograd)
+    with pytest.raises(ValueError, match="winograd_grouped"):
         plan_conv2d((1, 10, 10, 8), w, groups=2, algorithm="pallas_winograd")
-    # depthwise with multiplier > 1 on the streamed kernel
-    with pytest.raises(ValueError, match="channel multiplier 1"):
+    # depthwise with multiplier > 1 on the streamed kernel: the family's
+    # constraint (mult 1) is stated and the covering executor suggested
+    with pytest.raises(ValueError, match=r"mult 1.*winograd_depthwise"):
         plan_conv2d((1, 10, 10, 4), jnp.zeros((3, 3, 1, 8)), groups=4,
                     algorithm="pallas_winograd")
-    # grouped pallas baselines: no grouped executor
+    # grouped pallas baselines: no grouped executor registered
     for alg in ("pallas_winograd_materialized", "pallas_im2col"):
-        with pytest.raises(ValueError, match="no grouped executor"):
+        with pytest.raises(ValueError, match="no executor"):
             plan_conv2d((1, 10, 10, 8), jnp.zeros((3, 3, 1, 8)), groups=8,
                         algorithm=alg)
     # unknown algorithm lists the requestable set
@@ -395,7 +401,7 @@ def test_grouped_1xn_has_no_winograd_executor(rng):
     p = plan_conv2d(x.shape, w, groups=c, algorithm="auto")
     assert p.algorithm == "im2col"
     assert rel_err(p.apply(x), direct_conv2d(x, w, groups=c)) < 1e-4
-    with pytest.raises(ValueError, match="unsuitable"):
+    with pytest.raises(ValueError, match="no executor"):
         plan_conv2d(x.shape, w, groups=c, algorithm="winograd")
 
 

@@ -179,16 +179,32 @@ def test_auto_tuned_heuristic_fallback_is_not_cached(rng):
 
 
 def test_auto_tuned_unsuitable_layer_skips_measurement(rng):
+    # stride 3: no winograd-family capability (stride 2 has the strided
+    # phase-decomposition executor now), so auto_tuned must not measure.
     w = jnp.asarray(rng.standard_normal((3, 3, 4, 4)) / 3, jnp.float32)
-    p = plan_conv2d((1, 12, 12, 4), w, stride=2, algorithm="auto_tuned")
+    p = plan_conv2d((1, 12, 12, 4), w, stride=3, algorithm="auto_tuned")
     assert p.algorithm == "im2col"
     assert p.spec.autotune is None
 
 
-def test_forced_winograd_on_unsuitable_layer_raises(rng):
+def test_forced_winograd_on_uncovered_layer_raises(rng):
+    """A forced algorithm with no matching capability raises the registry
+    error, which must enumerate the executors that DO cover the layer."""
     w = jnp.asarray(rng.standard_normal((3, 3, 4, 4)) / 3, jnp.float32)
-    with pytest.raises(ValueError, match="unsuitable"):
-        plan_conv2d((1, 12, 12, 4), w, stride=2, algorithm="winograd")
+    with pytest.raises(ValueError, match="no executor"):
+        plan_conv2d((1, 12, 12, 4), w, stride=3, algorithm="winograd")
+    with pytest.raises(ValueError, match="im2col"):
+        plan_conv2d((1, 12, 12, 4), w, stride=3, algorithm="winograd")
+
+
+def test_stride2_plans_to_winograd_family(rng):
+    """Stride-2 3x3 layers plan onto the phase-decomposition executors."""
+    w = jnp.asarray(rng.standard_normal((3, 3, 4, 4)) / 3, jnp.float32)
+    p = plan_conv2d((1, 12, 12, 4), w, stride=2, algorithm="winograd")
+    assert p.algorithm == "winograd_strided"
+    from repro.core.im2col import direct_conv2d
+    x = jnp.asarray(rng.standard_normal((1, 12, 12, 4)), jnp.float32)
+    assert rel_err(p.apply(x), direct_conv2d(x, w, stride=2)) < 1e-3
 
 
 # ---------------------------------------------------------------------------

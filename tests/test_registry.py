@@ -1,0 +1,137 @@
+"""Capability-declaring executor registry: resolution/coverage invariants,
+error-message contracts (enumerate what DOES match), agreement between the
+registry and the planner, and the doctest that the README algorithm table is
+the registry's own rendering."""
+
+import doctest
+import os
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import registry
+from repro.core.plan import ALGORITHMS, algorithm_supported, plan_conv2d
+
+_README = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "README.md")
+
+
+def q(kh, kw, stride, groups=1, c_in=8, c_out=8):
+    return registry.as_query(kh, kw, stride, groups=groups, c_in=c_in,
+                             c_out=c_out)
+
+
+# ---------------------------------------------------------------------------
+# registry invariants
+# ---------------------------------------------------------------------------
+
+def test_families_are_the_requestable_algorithms():
+    """Every registered family is a requestable algorithm name and every
+    concrete algorithm name has at least one registered capability."""
+    concrete = [a for a in ALGORITHMS if a not in ("auto", "auto_tuned")]
+    assert sorted(registry.FAMILIES) == sorted(concrete)
+    for fam in registry.FAMILIES:
+        assert registry.family(fam), fam
+
+
+def test_resolution_prefers_specialized_executor():
+    assert registry.resolve("winograd", q(3, 3, 1)).executor == "winograd"
+    assert registry.resolve("winograd", q(1, 7, 1)).executor == "winograd_1d"
+    assert registry.resolve("winograd",
+                            q(3, 3, 1, groups=8)).executor == \
+        "winograd_depthwise"
+    assert registry.resolve("winograd",
+                            q(3, 3, 1, groups=4)).executor == \
+        "winograd_grouped"
+    assert registry.resolve("winograd", q(3, 3, 2)).executor == \
+        "winograd_strided"
+    assert registry.resolve("pallas_winograd", q(3, 3, 2)).executor == \
+        "pallas_winograd_strided"
+    assert registry.resolve("pallas_winograd",
+                            q(3, 3, 2, groups=8)).executor == \
+        "pallas_depthwise_strided"
+
+
+def test_auto_selection_matches_paper_policy():
+    assert registry.select_auto(q(3, 3, 1)).executor == "winograd"
+    assert registry.select_auto(q(3, 3, 3)).executor == "im2col"
+    assert registry.select_auto(q(1, 1, 1)).executor == "im2col"
+    assert registry.select_auto(q(4, 4, 2)).executor == "im2col"
+
+
+def test_strided_capability_covers_exactly_odd_sizes():
+    for k in (3, 5, 7):
+        assert registry.supported("winograd", q(k, k, 2))
+    for k in (2, 4, 6, 8):
+        assert not registry.supported("winograd", q(k, k, 2))
+    # strided 1xN has no executor
+    assert not registry.supported("winograd", q(1, 3, 2))
+
+
+def test_error_enumerates_matching_executors():
+    """The resolution error must name the executors that DO cover the layer
+    and never claim a blanket 'need stride (1, 1)' -- the registry has
+    stride-2 capabilities now."""
+    err = registry.resolution_error("pallas_im2col", q(3, 3, 2, groups=8))
+    msg = str(err)
+    assert "winograd_strided" in msg            # what does cover it
+    assert "pallas_depthwise_strided" in msg
+    assert "algorithm='winograd'" in msg        # how to reach it
+    assert "need stride (1, 1)" not in msg
+    err = registry.resolution_error("winograd", q(4, 4, 3))
+    assert "im2col" in str(err)                 # always an escape hatch
+
+
+def test_error_raised_by_planner_matches_registry(rng):
+    w = jnp.zeros((3, 3, 1, 8), jnp.float32)
+    with pytest.raises(ValueError) as ei:
+        plan_conv2d((1, 12, 12, 8), w, stride=2, groups=8,
+                    algorithm="pallas_im2col")
+    assert "pallas_depthwise_strided" in str(ei.value)
+
+
+# ---------------------------------------------------------------------------
+# planner <-> registry agreement (supplements the exhaustive sweep in
+# tests/test_grouped.py::test_algorithm_supported_matches_plan_conv2d)
+# ---------------------------------------------------------------------------
+
+def test_algorithm_supported_is_a_registry_query():
+    for kh, kw, stride, groups, c_in, c_out in [
+            (3, 3, 2, 1, 8, 8), (3, 3, 2, 8, 8, 8), (3, 3, 2, 8, 8, 16),
+            (5, 5, 2, 4, 8, 8), (4, 4, 2, 1, 8, 8)]:
+        for alg in ALGORITHMS:
+            got = algorithm_supported(alg, kh, kw, stride, groups=groups,
+                                      c_in=c_in, c_out=c_out)
+            want = registry.supported(
+                alg, q(kh, kw, stride, groups, c_in, c_out))
+            assert got == want, (alg, kh, kw, stride, groups)
+
+
+def test_resolved_specs_carry_registry_executor_names():
+    executors = {c.executor for c in registry.CAPABILITIES}
+    w = jnp.zeros((3, 3, 8, 8), jnp.float32)
+    for stride, alg in [(1, "auto"), (2, "auto"), (1, "pallas_winograd"),
+                        (2, "pallas_winograd"), (2, "im2col")]:
+        p = plan_conv2d((1, 16, 16, 8), w, stride=stride, algorithm=alg)
+        assert p.algorithm in executors, (stride, alg, p.algorithm)
+
+
+# ---------------------------------------------------------------------------
+# README table: generated from the registry, doctest'd
+# ---------------------------------------------------------------------------
+
+def test_capability_table_doctests():
+    results = doctest.testmod(registry)
+    assert results.attempted > 0 and results.failed == 0
+
+
+def test_readme_table_matches_registry():
+    """The committed README algorithm table IS capability_table()'s output:
+    docs cannot drift from the declared capabilities."""
+    with open(_README) as f:
+        readme = f.read()
+    table = registry.capability_table()
+    assert table in readme, (
+        "README.md capability table is stale; regenerate the block between "
+        "the CAPABILITY TABLE markers with "
+        "repro.core.registry.capability_table()")

@@ -1,0 +1,327 @@
+"""Stride-2 Winograd via transform-domain phase decomposition: parity of
+every strided executor (pure-JAX dense/grouped/depthwise, strided streaming
+Pallas kernels) against lax.conv_general_dilated across paddings and
+asymmetric shapes, a hypothesis sweep, the MobileNet-v2 inverted-residual
+plans (incl. the one-kernel jaxpr regression), and NCHW ingest round trips."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.im2col import direct_conv2d
+from repro.core.plan import (plan_conv2d, plan_inverted_residual,
+                             plan_separable_block)
+
+from conftest import rel_err
+
+
+def _conv_inputs(rng, n, h, w, c_in, kh, kw, c_out, groups=1):
+    x = jnp.asarray(rng.standard_normal((n, h, w, c_in)), jnp.float32)
+    wt = jnp.asarray(rng.standard_normal((kh, kw, c_in // groups, c_out))
+                     / (kh * kw), jnp.float32)
+    return x, wt
+
+
+# ---------------------------------------------------------------------------
+# parity vs the direct oracle, every strided executor
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("padding", ["SAME", "VALID"])
+@pytest.mark.parametrize("kh,kw", [(3, 3), (5, 5), (3, 5), (7, 7)])
+@pytest.mark.parametrize("h,w", [(12, 12), (13, 17)])
+def test_strided_dense_matches_direct(rng, padding, kh, kw, h, w):
+    x, wt = _conv_inputs(rng, 2, h, w, 8, kh, kw, 6)
+    p = plan_conv2d(x.shape, wt, stride=2, padding=padding,
+                    algorithm="winograd")
+    assert p.algorithm == "winograd_strided"
+    got = p.apply(x)
+    want = direct_conv2d(x, wt, stride=2, padding=padding)
+    assert got.shape == want.shape == p.out_shape
+    assert rel_err(got, want) < 2e-3
+
+
+@pytest.mark.parametrize("groups,c_in,c_out", [(8, 8, 8), (8, 8, 16),
+                                               (4, 8, 8)])
+@pytest.mark.parametrize("padding", ["SAME", "VALID"])
+def test_strided_grouped_depthwise_matches_direct(rng, groups, c_in, c_out,
+                                                  padding):
+    x, wt = _conv_inputs(rng, 1, 14, 11, c_in, 3, 3, c_out, groups)
+    p = plan_conv2d(x.shape, wt, stride=2, padding=padding, groups=groups,
+                    algorithm="winograd")
+    assert p.algorithm == "winograd_strided"
+    want = direct_conv2d(x, wt, stride=2, padding=padding, groups=groups)
+    assert rel_err(p.apply(x), want) < 2e-3
+
+
+@pytest.mark.parametrize("padding", ["SAME", "VALID"])
+@pytest.mark.parametrize("h,w", [(14, 14), (13, 18)])
+def test_strided_pallas_dense_matches_direct(rng, padding, h, w):
+    x, wt = _conv_inputs(rng, 1, h, w, 8, 3, 3, 9)
+    p = plan_conv2d(x.shape, wt, stride=2, padding=padding,
+                    algorithm="pallas_winograd")
+    assert p.algorithm == "pallas_winograd_strided"
+    b = jnp.asarray(rng.standard_normal((9,)), jnp.float32)
+    got = p.apply(x, bias=b, activation="relu")
+    want = jax.nn.relu(direct_conv2d(x, wt, stride=2, padding=padding) + b)
+    assert got.shape == want.shape
+    assert rel_err(got, want) < 2e-3
+
+
+@pytest.mark.parametrize("padding", ["SAME", "VALID"])
+def test_strided_pallas_depthwise_matches_direct(rng, padding):
+    c = 9
+    x, wt = _conv_inputs(rng, 2, 13, 16, c, 3, 3, c, groups=c)
+    p = plan_conv2d(x.shape, wt, stride=2, padding=padding, groups=c,
+                    algorithm="pallas_winograd")
+    assert p.algorithm == "pallas_depthwise_strided"
+    b = jnp.asarray(rng.standard_normal((c,)), jnp.float32)
+    got = p.apply(x, bias=b, activation="relu6")
+    want = jnp.minimum(jax.nn.relu(
+        direct_conv2d(x, wt, stride=2, padding=padding, groups=c) + b), 6.0)
+    assert rel_err(got, want) < 2e-3
+
+
+def test_strided_plans_under_jit(rng):
+    x, wt = _conv_inputs(rng, 1, 16, 16, 8, 3, 3, 8)
+    for alg in ("winograd", "pallas_winograd"):
+        p = plan_conv2d(x.shape, wt, stride=2, algorithm=alg)
+        got = jax.jit(p.apply)(x)
+        assert rel_err(got, direct_conv2d(x, wt, stride=2)) < 2e-3
+
+
+def test_strided_filter_transform_is_plan_time(rng, monkeypatch):
+    """The phase filter transform runs once at plan time; apply() reuses the
+    cached transform-domain phase filters."""
+    from repro.core import winograd as wg
+    calls = {"n": 0}
+    real = wg.strided_phase_filters
+
+    def counting(*args, **kwargs):
+        calls["n"] += 1
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(wg, "strided_phase_filters", counting)
+    x, wt = _conv_inputs(rng, 1, 12, 12, 4, 3, 3, 4)
+    p = plan_conv2d(x.shape, wt, stride=2, algorithm="winograd")
+    assert calls["n"] == 1
+    for _ in range(3):
+        p.apply(x)
+    assert calls["n"] == 1
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweep
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(h=st.integers(8, 24), w=st.integers(8, 24),
+           k=st.sampled_from([3, 5]), padding=st.sampled_from(["SAME",
+                                                               "VALID"]),
+           groups_mode=st.sampled_from(["dense", "depthwise", "grouped"]),
+           seed=st.integers(0, 2 ** 31 - 1))
+    def test_strided_sweep_matches_direct(h, w, k, padding, groups_mode,
+                                          seed):
+        if min(h, w) < k:
+            return
+        rng = np.random.default_rng(seed)
+        c = 8
+        groups = {"dense": 1, "depthwise": c, "grouped": 4}[groups_mode]
+        x = jnp.asarray(rng.standard_normal((1, h, w, c)), jnp.float32)
+        wt = jnp.asarray(
+            rng.standard_normal((k, k, c // groups, 8)) / k ** 2,
+            jnp.float32)
+        p = plan_conv2d(x.shape, wt, stride=2, padding=padding,
+                        groups=groups, algorithm="winograd")
+        want = direct_conv2d(x, wt, stride=2, padding=padding, groups=groups)
+        got = p.apply(x)
+        assert got.shape == want.shape
+        assert rel_err(got, want) < 2e-3
+
+
+# ---------------------------------------------------------------------------
+# MobileNet-v2 inverted residual plans
+# ---------------------------------------------------------------------------
+
+def _mbv2_oracle(x, p, stride, expand):
+    r6 = lambda v: jnp.minimum(jax.nn.relu(v), 6.0)
+    h = x
+    if expand != 1:
+        h = r6(direct_conv2d(h, p["exp"]["w"]) + p["exp"]["b"])
+    h = r6(direct_conv2d(h, p["dw"]["w"], stride=stride,
+                         groups=h.shape[-1]) + p["dw"]["b"])
+    y = direct_conv2d(h, p["pw"]["w"]) + p["pw"]["b"]
+    if stride == 1 and x.shape[-1] == y.shape[-1]:
+        y = x + y
+    return y
+
+
+def _mbv2_params(rng, c, expand, c_out, k=3):
+    ce = c * expand
+    p = {"dw": {"w": jnp.asarray(rng.standard_normal((k, k, 1, ce)) / k ** 2,
+                                 jnp.float32),
+                "b": jnp.asarray(rng.standard_normal((ce,)), jnp.float32)},
+         "pw": {"w": jnp.asarray(rng.standard_normal((1, 1, ce, c_out))
+                                 / np.sqrt(ce), jnp.float32),
+                "b": jnp.asarray(rng.standard_normal((c_out,)), jnp.float32)}}
+    if expand != 1:
+        p["exp"] = {"w": jnp.asarray(rng.standard_normal((1, 1, c, ce))
+                                     / np.sqrt(c), jnp.float32),
+                    "b": jnp.asarray(rng.standard_normal((ce,)), jnp.float32)}
+    return p
+
+
+@pytest.mark.parametrize("stride,expand,c_out", [(1, 6, 8), (2, 6, 12),
+                                                 (1, 1, 8)])
+@pytest.mark.parametrize("algorithm", ["auto", "pallas_winograd"])
+def test_inverted_residual_matches_oracle(rng, stride, expand, c_out,
+                                          algorithm):
+    c = 8
+    x = jnp.asarray(rng.standard_normal((1, 16, 16, c)), jnp.float32)
+    p = _mbv2_params(rng, c, expand, c_out)
+    plan = plan_inverted_residual(
+        x.shape, p["exp"]["w"] if expand != 1 else None, p["dw"]["w"],
+        p["pw"]["w"], stride=stride, algorithm=algorithm)
+    assert plan.residual == (stride == 1 and c == c_out)
+    got = plan.apply(x, bias_exp=p.get("exp", {}).get("b"),
+                     bias_dw=p["dw"]["b"], bias_pw=p["pw"]["b"])
+    want = _mbv2_oracle(x, p, stride, expand)
+    assert got.shape == want.shape
+    assert rel_err(got, want) < 2e-3
+
+
+def test_inverted_residual_fused_one_kernel(rng):
+    """jaxpr regression: the planned MBv2 block's depthwise+project pair
+    compiles to ONE pallas_call (the fused separable streamed kernel); the
+    1x1 expand is a plain XLA GEMM, so exactly one kernel appears in the
+    whole block."""
+    c = 8
+    x = jnp.asarray(rng.standard_normal((1, 16, 16, c)), jnp.float32)
+    p = _mbv2_params(rng, c, 6, c)
+    plan = plan_inverted_residual(x.shape, p["exp"]["w"], p["dw"]["w"],
+                                  p["pw"]["w"], stride=1,
+                                  algorithm="pallas_winograd")
+    assert plan.mode == "fused_pallas"
+    jaxpr = jax.make_jaxpr(
+        lambda xx: plan.apply(xx, bias_exp=p["exp"]["b"],
+                              bias_dw=p["dw"]["b"],
+                              bias_pw=p["pw"]["b"]))(x).jaxpr
+
+    def count(jaxpr, name):
+        n = 0
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == name:
+                n += 1
+            for v in eqn.params.values():
+                inner = getattr(v, "jaxpr", None)
+                if inner is not None:
+                    n += count(getattr(inner, "jaxpr", inner), name)
+        return n
+
+    n_kernels = count(jaxpr, "pallas_call")
+    assert n_kernels == 1, f"expected one fused kernel, got {n_kernels}"
+
+
+def test_mobilenet_v2_zoo_planned_forward(rng):
+    """The mobilenet_v2 zoo entry plans (inverted residuals as single units)
+    and the planned forward matches the im2row baseline."""
+    from repro.models import cnn
+    specs = cnn.NETWORKS["mobilenet_v2"][0]()
+    res = 32
+    params = cnn.init_cnn(jax.random.key(0), specs, 3, res=res)
+    plans = cnn.plan_cnn(params, specs, res=res)
+    from repro.core.plan import InvertedResidualPlan
+    ir_plans = [p for p in plans.values()
+                if isinstance(p, InvertedResidualPlan)]
+    assert len(ir_plans) == 17
+    x = jnp.asarray(rng.standard_normal((1, res, res, 3)), jnp.float32)
+    planned = cnn.cnn_forward(params, x, specs, plans=plans)
+    base = cnn.cnn_forward(params, x, specs, algorithm="im2col")
+    assert rel_err(planned, base) < 1e-3
+
+
+def test_mobilenet_reduction_block_routes_winograd(rng):
+    """The MobileNet-v1 stride-2 reduction blocks (the gap this PR closes)
+    now route their depthwise half through winograd-family executors on
+    both backends instead of falling back to im2row."""
+    c = 8
+    x = jnp.asarray(rng.standard_normal((1, 16, 16, c)), jnp.float32)
+    w_dw = jnp.asarray(rng.standard_normal((3, 3, 1, c)) / 9, jnp.float32)
+    w_pw = jnp.asarray(rng.standard_normal((1, 1, c, 2 * c)) / 3, jnp.float32)
+    p = plan_separable_block(x.shape, w_dw, w_pw, stride=2, algorithm="auto")
+    assert p.mode == "composed" and p.dw.algorithm == "winograd_strided"
+    p = plan_separable_block(x.shape, w_dw, w_pw, stride=2,
+                             algorithm="pallas_winograd")
+    assert p.mode == "composed"
+    assert p.dw.algorithm == "pallas_depthwise_strided"
+    got = p.apply(x, bias_dw=jnp.zeros((c,)), bias_pw=jnp.zeros((2 * c,)))
+    h = jax.nn.relu(direct_conv2d(x, w_dw, stride=2, groups=c))
+    want = jax.nn.relu(direct_conv2d(h, w_pw))
+    assert rel_err(got, want) < 2e-3
+
+
+# ---------------------------------------------------------------------------
+# NCHW ingest
+# ---------------------------------------------------------------------------
+
+def _direct_nchw(x, w, stride, padding="SAME", groups=1):
+    stride = (stride, stride) if isinstance(stride, int) else stride
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=stride, padding=padding,
+        feature_group_count=groups,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("algorithm", ["auto", "winograd", "im2col",
+                                       "pallas_winograd"])
+def test_nchw_round_trip_parity(rng, stride, algorithm):
+    """NCHW inputs + OIHW weights in, NCHW out -- parity with lax's native
+    NCHW dimension numbers on both stride-1 and stride-2 layers."""
+    x = jnp.asarray(rng.standard_normal((2, 6, 13, 12)), jnp.float32)  # NCHW
+    w = jnp.asarray(rng.standard_normal((8, 6, 3, 3)) / 9, jnp.float32)  # OIHW
+    p = plan_conv2d(x.shape, w, stride=stride, algorithm=algorithm,
+                    data_format="NCHW")
+    got = p.apply(x)
+    want = _direct_nchw(x, w, stride)
+    assert got.shape == want.shape == p.out_shape
+    assert rel_err(got, want) < 2e-3
+
+
+def test_nchw_weight_transpose_is_plan_time_and_cache_keyed(rng):
+    """The OIHW->HWIO normalization happens at plan time, and NCHW/NHWC
+    plans of the same shape occupy distinct spec-cache entries."""
+    from repro.core.plan import plan_cache_info
+    w_oihw = jnp.asarray(rng.standard_normal((4, 4, 3, 3)) / 9, jnp.float32)
+    w_hwio = jnp.transpose(w_oihw, (2, 3, 1, 0))
+    p_nchw = plan_conv2d((1, 4, 12, 12), w_oihw, data_format="NCHW")
+    p_nhwc = plan_conv2d((1, 12, 12, 4), w_hwio)
+    assert plan_cache_info()["misses"] == 2      # distinct cache entries
+    assert p_nchw.spec.layout == "NCHW" and p_nhwc.spec.layout == "NHWC"
+    # same executor decision and identical bound weights
+    assert p_nchw.algorithm == p_nhwc.algorithm
+    assert rel_err(p_nchw.u, p_nhwc.u) < 1e-6
+    x = jnp.asarray(np.random.default_rng(1).standard_normal((1, 4, 12, 12)),
+                    jnp.float32)
+    assert rel_err(p_nchw.apply(x), _direct_nchw(x, w_oihw, 1)) < 1e-3
+    with pytest.raises(ValueError, match="NCHW"):
+        p_nchw.apply(jnp.zeros((1, 12, 12, 4), jnp.float32))
+
+
+def test_nchw_depthwise_and_bias(rng):
+    c = 8
+    x = jnp.asarray(rng.standard_normal((1, c, 14, 14)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((c, 1, 3, 3)) / 9, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((c,)), jnp.float32)
+    p = plan_conv2d(x.shape, w, stride=2, groups=c, data_format="NCHW")
+    got = p.apply(x, bias=b, activation="relu")
+    want = jax.nn.relu(_direct_nchw(x, w, 2, groups=c)
+                       + b[None, :, None, None])
+    assert rel_err(got, want) < 2e-3

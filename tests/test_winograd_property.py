@@ -152,12 +152,21 @@ def test_im2col_equals_direct(hw, c, mo, k, stride, padding, seed):
 @settings(**_SETTINGS)
 @given(kh=st.integers(1, 8), kw=st.integers(1, 8), stride=st.integers(1, 3))
 def test_dispatch_suitability(kh, kw, stride):
+    """winograd_suitable is a registry query: stride-1 layers follow the
+    paper's rule; stride-2 2D layers with odd supported filters route to
+    the phase-decomposition executor; stride 3 has no fast capability."""
+    from repro.core.registry import STRIDED_FILTER_SIZES
     s = dispatch.winograd_suitable(kh, kw, stride)
-    if stride != 1 or (kh == 1 and kw == 1):
+    if kh == 1 and kw == 1:
+        assert not s                               # 1x1 is a pure GEMM
+    elif stride == 1:
+        assert s == all(k == 1 or k in dispatch.WINOGRAD_FILTER_SIZES
+                        for k in (kh, kw))
+    elif stride == 2:
+        assert s == (kh != 1 and kw != 1
+                     and {kh, kw} <= STRIDED_FILTER_SIZES)
+    else:
         assert not s
-    elif all(k == 1 or k in dispatch.WINOGRAD_FILTER_SIZES for k in (kh, kw)) \
-            and (kh != 1 or kw != 1):
-        assert s
 
 
 @settings(**_SETTINGS)
