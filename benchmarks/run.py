@@ -15,6 +15,12 @@
       # reduction-block ladder, and the fused-vs-composed MobileNet-v2
       # inverted-residual A/B (BENCH_PR3.json / BENCH_PR4.json in the repo
       # root are the committed runs; CI runs the quick variant per PR)
+  PYTHONPATH=src python -m benchmarks.run --json BENCH_PR5.json \
+      --config compile
+      # whole-network startup A/B through the graph compiler: cold
+      # compile() vs warm NetworkPlan.load() artifact, artifact size, a
+      # fresh-process bitwise parity gate, and planned-vs-im2row
+      # steady-state (BENCH_PR5.json is the committed run)
 
 Every emitted BENCH_*.json is stamped with jax version, backend/device
 kind, git SHA and a UTC timestamp (benchmarks.common.bench_metadata), so
@@ -46,28 +52,36 @@ def main(argv=None) -> None:
                          "cold again (--no-plan-cache), next to per-call and "
                          "planned steady-state times")
     ap.add_argument("--json", default=None, metavar="BENCH_<tag>.json",
-                    help="run ONLY the per-layer Pallas A/B benchmark of "
-                         "the chosen --config (quick variant unless "
-                         "--full) and write the per-layer steady-state ms "
-                         "+ bytes-moved artifact, stamped with "
-                         "jax/backend/git-SHA metadata, to this path")
+                    help="run ONLY the benchmark of the chosen --config "
+                         "(quick variant unless --full) and write its "
+                         "artifact, stamped with jax/backend/git-SHA "
+                         "metadata, to this path")
     ap.add_argument("--config", default="vgg_style",
-                    choices=["vgg_style", "mobilenet"],
-                    help="which --json ladder to run: vgg_style (streamed "
-                         "vs materialized dense Winograd) or mobilenet "
-                         "(fused vs unfused separable blocks)")
+                    choices=["vgg_style", "mobilenet", "compile"],
+                    help="which --json benchmark to run: vgg_style "
+                         "(streamed vs materialized dense Winograd), "
+                         "mobilenet (fused vs unfused separable blocks), "
+                         "or compile (whole-network cold-compile vs "
+                         "warm-artifact startup + fresh-process parity "
+                         "via the graph compiler)")
     args = ap.parse_args(argv)
 
     from benchmarks import (amortization, fast_fraction, per_layer, roofline,
-                            whole_network)
+                            startup, whole_network)
 
     t0 = time.time()
 
     if args.json:
-        cfg = args.config if args.full else f"{args.config}_quick"
-        iters = "3" if args.full else "2"
-        per_layer.main(["--config", cfg, "--iters", iters, "--warmup", "1",
-                        "--out", args.json])
+        if args.config == "compile":
+            res = "224" if args.full else "96"
+            iters = "3" if args.full else "2"
+            startup.main(["--res", res, "--iters", iters, "--warmup", "1",
+                          "--out", args.json])
+        else:
+            cfg = args.config if args.full else f"{args.config}_quick"
+            iters = "3" if args.full else "2"
+            per_layer.main(["--config", cfg, "--iters", iters,
+                            "--warmup", "1", "--out", args.json])
         print(f"\nwrote {args.json} in {time.time() - t0:.0f}s")
         return
 

@@ -19,22 +19,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.compile import compile as compile_network
 from repro.models import cnn
 
 from benchmarks.common import time_jitted
 
 NETWORKS = ["vgg16", "vgg19", "googlenet", "inception_v3", "squeezenet",
             "mobilenet_v1"]
-
-
-def _plan_weight_arrays(p) -> list:
-    """The execution-domain weight arrays of a ConvPlan or
-    SeparableBlockPlan (what plan build materializes)."""
-    if hasattr(p, "u"):
-        return [p.u]
-    if p.mode == "fused_pallas":
-        return [p.u_dw, p.u_pw]
-    return [p.dw.u, p.pw.u]
 
 
 def bench_network(net: str, iters: int, warmup: int, res: int | None = None
@@ -52,14 +43,14 @@ def bench_network(net: str, iters: int, warmup: int, res: int | None = None
                                        algorithm=algo))
         fwd[algo] = time_jitted(fn, x, warmup=warmup, iters=iters)
 
-    # plan/execute split: transforms + decisions once, then steady-state.
+    # plan/execute split via the graph compiler: lowering, fusion rewrites,
+    # placement, filter transforms once -- then steady-state NetworkPlan
+    # execution.
     t0 = time.perf_counter()
-    plans = cnn.plan_cnn(params, specs, res=res, algorithm="auto")
-    jax.block_until_ready([a for p in plans.values()
-                           for a in _plan_weight_arrays(p)])
+    net_plan = compile_network(params, specs, res=res, algorithm="auto")
+    jax.block_until_ready(net_plan.weight_arrays())
     plan_build = time.perf_counter() - t0
-    fn_planned = jax.jit(functools.partial(
-        cnn.cnn_forward, params, specs=specs, plans=plans))
+    fn_planned = jax.jit(net_plan.apply)
     fwd["planned"] = time_jitted(fn_planned, x, warmup=warmup, iters=iters)
 
     return {"network": net, "res": res,

@@ -2,21 +2,27 @@
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
 from repro.core import registry
+from repro.core.compile import ArtifactMismatchError, LayerIR, NetworkPlan
+# Exported under an alias: binding the name `compile` on the package would
+# shadow the repro.core.compile SUBMODULE attribute (and the builtin).
+from repro.core.compile import compile as compile_network
 from repro.core.dispatch import ALGORITHMS, Algorithm, conv1d, conv2d
 from repro.core.plan import (Conv1DPlan, ConvPlan, ConvSpec,
                              DepthwiseConv1DPlan, InvertedResidualPlan,
                              SeparableBlockPlan, algorithm_supported,
                              clear_plan_cache, plan_cache_info, plan_conv1d,
                              plan_conv2d, plan_depthwise_conv1d,
-                             plan_inverted_residual, plan_separable_block,
-                             winograd_amortizes, winograd_suitable)
+                             plan_from_artifact, plan_inverted_residual,
+                             plan_separable_block, winograd_amortizes,
+                             winograd_suitable)
 
 __all__ = [
-    "ALGORITHMS", "Algorithm", "Conv1DPlan", "ConvPlan", "ConvSpec",
-    "DepthwiseConv1DPlan", "InvertedResidualPlan", "SeparableBlockPlan",
-    "algorithm_supported", "clear_plan_cache", "conv1d", "conv2d",
-    "plan_cache_info", "plan_conv1d", "plan_conv2d",
-    "plan_depthwise_conv1d", "plan_inverted_residual",
-    "plan_separable_block", "registry", "winograd_amortizes",
-    "winograd_suitable",
+    "ALGORITHMS", "Algorithm", "ArtifactMismatchError", "Conv1DPlan",
+    "ConvPlan", "ConvSpec", "DepthwiseConv1DPlan", "InvertedResidualPlan",
+    "LayerIR", "NetworkPlan", "SeparableBlockPlan", "algorithm_supported",
+    "clear_plan_cache", "compile_network", "conv1d", "conv2d",
+    "plan_cache_info",
+    "plan_conv1d", "plan_conv2d", "plan_depthwise_conv1d",
+    "plan_from_artifact", "plan_inverted_residual", "plan_separable_block",
+    "registry", "winograd_amortizes", "winograd_suitable",
 ]

@@ -8,8 +8,11 @@ but since the plan/execute split it is a compatibility wrapper: each call
 builds (or cache-hits) a ConvPlan via repro.core.plan and applies it.
 Callers that run the same layer many times should plan once at init /
 weight-load time and call `plan.apply(x)` directly -- that path performs no
-per-call filter transform or geometry derivation (models/cnn.py and
-models/audio.py do exactly this).
+per-call filter transform or geometry derivation. Whole networks should go
+one level higher: repro.core.compile.compile (re-exported here as
+`compile_network`) lowers a model description to the layer IR, runs the
+fusion/placement passes, and returns a serializable NetworkPlan
+(models/cnn.py and models/audio.py route through it).
 
 Which executor may run which layer is declared by the executors themselves
 in the capability registry (repro.core.registry): every algorithm choice is
@@ -50,6 +53,7 @@ from __future__ import annotations
 import jax
 
 from repro.core import winograd as _winograd
+from repro.core.compile import NetworkPlan, compile as compile_network
 from repro.core.plan import (ALGORITHMS, AMORTIZE_MIN_C_IN,
                              AMORTIZE_MIN_OUT_PIXELS, WINOGRAD_FILTER_SIZES,
                              Algorithm, algorithm_supported, plan_conv1d,
@@ -58,10 +62,10 @@ from repro.core.plan import (ALGORITHMS, AMORTIZE_MIN_C_IN,
                              winograd_suitable)
 
 __all__ = [
-    "ALGORITHMS", "Algorithm", "algorithm_supported", "conv1d", "conv2d",
-    "plan_depthwise_conv1d", "plan_separable_block", "winograd_amortizes",
-    "winograd_suitable", "WINOGRAD_FILTER_SIZES", "AMORTIZE_MIN_OUT_PIXELS",
-    "AMORTIZE_MIN_C_IN",
+    "ALGORITHMS", "Algorithm", "NetworkPlan", "algorithm_supported",
+    "compile_network", "conv1d", "conv2d", "plan_depthwise_conv1d",
+    "plan_separable_block", "winograd_amortizes", "winograd_suitable",
+    "WINOGRAD_FILTER_SIZES", "AMORTIZE_MIN_OUT_PIXELS", "AMORTIZE_MIN_C_IN",
 ]
 
 

@@ -180,19 +180,40 @@ class ConvSpec:
 _SPEC_CACHE: dict[tuple, ConvSpec] = {}
 _CACHE_HITS = 0
 _CACHE_MISSES = 0
+# Serialized-plan (NetworkPlan artifact) load counters: a hit is a
+# successful NetworkPlan.load / compile(..., artifact=) warm start, a miss
+# is a load that had to fall back to a cold compile (file absent, header
+# mismatch). Maintained by repro.core.compile via record_artifact_load.
+_ARTIFACT_HITS = 0
+_ARTIFACT_MISSES = 0
 
 
 def plan_cache_info() -> dict:
-    """{'hits', 'misses', 'size'} of the process-level spec cache."""
+    """{'hits', 'misses', 'size'} of the process-level spec cache, plus
+    {'artifact_hits', 'artifact_misses'} of serialized-plan loads
+    (repro.core.compile.NetworkPlan.save/load warm starts)."""
     return {"hits": _CACHE_HITS, "misses": _CACHE_MISSES,
-            "size": len(_SPEC_CACHE)}
+            "size": len(_SPEC_CACHE),
+            "artifact_hits": _ARTIFACT_HITS,
+            "artifact_misses": _ARTIFACT_MISSES}
+
+
+def record_artifact_load(hit: bool) -> None:
+    """Count one serialized-plan load attempt (see plan_cache_info)."""
+    global _ARTIFACT_HITS, _ARTIFACT_MISSES
+    if hit:
+        _ARTIFACT_HITS += 1
+    else:
+        _ARTIFACT_MISSES += 1
 
 
 def clear_plan_cache() -> None:
-    global _CACHE_HITS, _CACHE_MISSES
+    global _CACHE_HITS, _CACHE_MISSES, _ARTIFACT_HITS, _ARTIFACT_MISSES
     _SPEC_CACHE.clear()
     _CACHE_HITS = 0
     _CACHE_MISSES = 0
+    _ARTIFACT_HITS = 0
+    _ARTIFACT_MISSES = 0
 
 
 def _cache_enabled() -> bool:
@@ -296,12 +317,13 @@ def _build_spec(x_shape, w_shape, dtype, stride, padding, requested,
     if resolved == "pallas_depthwise":
         # Streamed depthwise: same halo blocking machinery as the dense
         # streaming kernel, channel axes collapsed (no M sweep, no C
-        # reduction).
+        # reduction). A channel multiplier > 1 rides as a trailing taps
+        # axis; the chooser widens its VMEM estimate accordingly.
         mh, mw = _resolve_output_tile(kh, kw, output_tile)
         ct_h, ct_w = cook_toom(mh, kh), cook_toom(mw, kw)
         geom = _wg.conv2d_geometry(h, w, kh, kw, mh, mw, padding)
         stream = _wg.stream_geometry_depthwise(geom.n_h, geom.n_w, c,
-                                               ct_h, ct_w)
+                                               ct_h, ct_w, mult=mout // c)
         return ConvSpec(algorithm="pallas_depthwise", output_tile=(mh, mw),
                         ct_h=ct_h, ct_w=ct_w, geometry=geom, stream=stream,
                         blocks=(stream.bh * stream.bw, stream.block_c),
@@ -406,8 +428,13 @@ def _bind_weights(spec: ConvSpec, w: jax.Array) -> jax.Array:
         u = u.reshape(4 * spec.ct_h.t * spec.ct_w.t, c_in)     # (4P, C)
         return jnp.pad(u, ((0, 0), (0, spec.stream.c_pad - c_in)))
     if spec.algorithm == "pallas_depthwise":
-        return _depthwise_domain_taps(w, spec.ct_h, spec.ct_w,
-                                      spec.x_shape[3], spec.stream.c_pad)
+        # (kh, kw, 1, C*mult) -> (P, Cp, mult): the last HWIO axis is
+        # o = c*mult + j (lax ordering), so the reshape peels the
+        # multiplier off as a trailing taps axis.
+        c_in = spec.x_shape[3]
+        u = _wg.transform_filter_2d(w, spec.ct_h, spec.ct_w)
+        u = u.reshape(spec.ct_h.t * spec.ct_w.t, c_in, mout // c_in)
+        return jnp.pad(u, ((0, 0), (0, spec.stream.c_pad - c_in), (0, 0)))
     if spec.algorithm in ("pallas_winograd", "pallas_winograd_materialized"):
         from repro.kernels import ops
         u = _wg.transform_filter_2d(w, spec.ct_h, spec.ct_w)
@@ -584,6 +611,52 @@ class ConvPlan:
         if spec.layout == "NCHW":
             return (shape[0], shape[3], shape[1], shape[2])
         return shape
+
+    # ---- LayerPlan protocol: describe + artifact (de)serialization -------
+
+    def describe(self) -> dict:
+        spec = self.spec
+        kh, kw = spec.w_shape[:2]
+        return {"kind": "conv2d", "executor": spec.algorithm,
+                "requested": spec.requested, "filter": f"{kh}x{kw}",
+                "stride": f"{spec.stride[0]}x{spec.stride[1]}",
+                "groups": spec.groups,
+                "tile": ("x".join(map(str, spec.output_tile))
+                         if spec.output_tile else "-")}
+
+    def to_artifact(self) -> tuple[dict, dict]:
+        """(meta, arrays): `meta` is the JSON-safe spec record from which
+        _build_spec deterministically re-derives all geometry; `arrays` is
+        the execution-domain filter. Loading re-runs neither the algorithm
+        decision nor the filter transform."""
+        spec = self.spec
+        meta = {"kind": "conv2d", "x_shape": list(spec.x_shape),
+                "w_shape": list(spec.w_shape), "dtype": spec.dtype,
+                "stride": list(spec.stride), "padding": spec.padding,
+                "requested": spec.requested, "algorithm": spec.algorithm,
+                "groups": spec.groups, "layout": spec.layout,
+                "output_tile": (list(spec.output_tile)
+                                if spec.output_tile else None),
+                "autotune": ([list(kv) for kv in spec.autotune]
+                             if spec.autotune else None)}
+        return meta, {"u": np.asarray(self.u)}
+
+    @classmethod
+    def from_artifact(cls, meta: dict, arrays: dict) -> "ConvPlan":
+        """Rebuild the plan from a saved artifact: the spec geometry is
+        re-derived from the *saved* resolved algorithm (deterministic, no
+        measurement), and the execution-domain filter is taken verbatim --
+        _bind_weights never runs, so no filter-transform op executes."""
+        ot = meta["output_tile"]
+        spec = _build_spec(tuple(meta["x_shape"]), tuple(meta["w_shape"]),
+                           meta["dtype"], tuple(meta["stride"]),
+                           meta["padding"], meta["requested"],
+                           meta["algorithm"], tuple(ot) if ot else None,
+                           meta["groups"], meta["layout"])
+        if meta.get("autotune"):
+            spec = dataclasses.replace(
+                spec, autotune=tuple((k, v) for k, v in meta["autotune"]))
+        return cls(spec=spec, u=jnp.asarray(arrays["u"]))
 
 
 # ---------------------------------------------------------------------------
@@ -833,6 +906,91 @@ class SeparableBlockPlan:
                     self.spec.w_pw_shape[3])
         return self.pw.out_shape
 
+    # ---- LayerPlan protocol: describe + artifact (de)serialization -------
+
+    def describe(self) -> dict:
+        spec = self.spec
+        if spec.mode == "fused_pallas":
+            executor = "separable_streamed"
+        else:
+            executor = f"{self.dw.algorithm}+{self.pw.algorithm}"
+        return {"kind": "separable", "executor": executor,
+                "requested": spec.requested, "mode": spec.mode,
+                "filter": f"{spec.w_dw_shape[0]}x{spec.w_dw_shape[1]}+1x1",
+                "stride": f"{spec.stride[0]}x{spec.stride[1]}",
+                "groups": spec.x_shape[3],
+                "tile": ("x".join(map(str, spec.output_tile))
+                         if spec.output_tile else "-")}
+
+    def to_artifact(self) -> tuple[dict, dict]:
+        spec = self.spec
+        meta = {"kind": "separable", "mode": spec.mode,
+                "x_shape": list(spec.x_shape),
+                "w_dw_shape": list(spec.w_dw_shape),
+                "w_pw_shape": list(spec.w_pw_shape), "dtype": spec.dtype,
+                "stride": list(spec.stride), "padding": spec.padding,
+                "requested": spec.requested,
+                "output_tile": (list(spec.output_tile)
+                                if spec.output_tile else None)}
+        if spec.mode == "fused_pallas":
+            return meta, {"u_dw": np.asarray(self.u_dw),
+                          "u_pw": np.asarray(self.u_pw)}
+        meta["dw"], dw_arrays = self.dw.to_artifact()
+        meta["pw"], pw_arrays = self.pw.to_artifact()
+        arrays = {f"dw.{k}": v for k, v in dw_arrays.items()}
+        arrays.update({f"pw.{k}": v for k, v in pw_arrays.items()})
+        return meta, arrays
+
+    @classmethod
+    def from_artifact(cls, meta: dict, arrays: dict) -> "SeparableBlockPlan":
+        ot = meta["output_tile"]
+        if meta["mode"] == "fused_pallas":
+            spec = _build_separable_fused_spec(
+                tuple(meta["x_shape"]), tuple(meta["w_dw_shape"]),
+                tuple(meta["w_pw_shape"]), meta["dtype"],
+                tuple(meta["stride"]), meta["padding"], meta["requested"],
+                tuple(ot) if ot else None)
+            return cls(spec=spec, u_dw=jnp.asarray(arrays["u_dw"]),
+                       u_pw=jnp.asarray(arrays["u_pw"]))
+        spec = SeparableSpec(
+            x_shape=tuple(meta["x_shape"]),
+            w_dw_shape=tuple(meta["w_dw_shape"]),
+            w_pw_shape=tuple(meta["w_pw_shape"]), dtype=meta["dtype"],
+            stride=tuple(meta["stride"]), padding=meta["padding"],
+            requested=meta["requested"], mode="composed",
+            output_tile=tuple(ot) if ot else None)
+        return cls(spec=spec,
+                   dw=ConvPlan.from_artifact(meta["dw"],
+                                             _sub_arrays(arrays, "dw.")),
+                   pw=ConvPlan.from_artifact(meta["pw"],
+                                             _sub_arrays(arrays, "pw.")))
+
+
+def _sub_arrays(arrays: dict, prefix: str) -> dict:
+    """Select the `prefix`-namespaced entries of a nested artifact's array
+    dict, prefix stripped."""
+    return {k[len(prefix):]: v for k, v in arrays.items()
+            if k.startswith(prefix)}
+
+
+def _build_separable_fused_spec(x_shape, dw_shape, pw_shape, dtype_str,
+                                stride, padding, requested,
+                                output_tile) -> SeparableSpec:
+    """Derive the fused-mode SeparableSpec (transform set, conv geometry,
+    halo blocking) -- shared by plan_separable_block and artifact reload."""
+    n, h, wdt, c = x_shape
+    kh, kw = dw_shape[:2]
+    mh, mw = _resolve_output_tile(kh, kw, output_tile)
+    ct_h, ct_w = cook_toom(mh, kh), cook_toom(mw, kw)
+    geom = _wg.conv2d_geometry(h, wdt, kh, kw, mh, mw, padding)
+    stream = _wg.stream_geometry(geom.n_h, geom.n_w, c, pw_shape[3],
+                                 ct_h, ct_w)
+    return SeparableSpec(
+        x_shape=x_shape, w_dw_shape=dw_shape, w_pw_shape=pw_shape,
+        dtype=dtype_str, stride=stride, padding=padding,
+        requested=requested, mode="fused_pallas", output_tile=(mh, mw),
+        ct_h=ct_h, ct_w=ct_w, geometry=geom, stream=stream)
+
 
 def plan_separable_block(
     x_shape: tuple[int, ...],
@@ -899,17 +1057,9 @@ def plan_separable_block(
             _CACHE_HITS += 1
         else:
             _CACHE_MISSES += 1
-            mh, mw = _resolve_output_tile(kh, kw, output_tile)
-            ct_h, ct_w = cook_toom(mh, kh), cook_toom(mw, kw)
-            geom = _wg.conv2d_geometry(h, wdt, kh, kw, mh, mw, padding)
-            stream = _wg.stream_geometry(geom.n_h, geom.n_w, c, pw_shape[3],
-                                         ct_h, ct_w)
-            spec = SeparableSpec(
-                x_shape=x_shape, w_dw_shape=dw_shape, w_pw_shape=pw_shape,
-                dtype=dtype_str, stride=stride, padding=padding,
-                requested=algorithm, mode="fused_pallas",
-                output_tile=(mh, mw), ct_h=ct_h, ct_w=ct_w, geometry=geom,
-                stream=stream)
+            spec = _build_separable_fused_spec(
+                x_shape, dw_shape, pw_shape, dtype_str, stride, padding,
+                algorithm, output_tile)
             if _cache_enabled():
                 _SPEC_CACHE[key] = spec
         u_dw = _depthwise_domain_taps(w_dw, spec.ct_h, spec.ct_w, c,
@@ -999,6 +1149,47 @@ class InvertedResidualPlan:
     def out_shape(self) -> tuple[int, ...]:
         return self.sep.out_shape
 
+    # ---- LayerPlan protocol: describe + artifact (de)serialization -------
+
+    def describe(self) -> dict:
+        d = self.sep.describe()
+        executor = d["executor"]
+        if self.expand is not None:
+            executor = f"{self.expand.algorithm}+{executor}"
+        return {"kind": "inverted_residual", "executor": executor,
+                "requested": d["requested"], "mode": self.mode,
+                "filter": ("1x1+" if self.expand is not None else "")
+                + d["filter"],
+                "stride": f"{self.stride[0]}x{self.stride[1]}",
+                "groups": self.sep.spec.x_shape[3],
+                "tile": d["tile"],
+                "residual": self.residual}
+
+    def to_artifact(self) -> tuple[dict, dict]:
+        meta = {"kind": "inverted_residual", "x_shape": list(self.x_shape),
+                "stride": list(self.stride), "residual": self.residual,
+                "expand": None}
+        arrays = {}
+        if self.expand is not None:
+            meta["expand"], exp_arrays = self.expand.to_artifact()
+            arrays.update({f"exp.{k}": v for k, v in exp_arrays.items()})
+        meta["sep"], sep_arrays = self.sep.to_artifact()
+        arrays.update({f"sep.{k}": v for k, v in sep_arrays.items()})
+        return meta, arrays
+
+    @classmethod
+    def from_artifact(cls, meta: dict,
+                      arrays: dict) -> "InvertedResidualPlan":
+        expand = None
+        if meta["expand"] is not None:
+            expand = ConvPlan.from_artifact(meta["expand"],
+                                            _sub_arrays(arrays, "exp."))
+        sep = SeparableBlockPlan.from_artifact(meta["sep"],
+                                               _sub_arrays(arrays, "sep."))
+        return cls(x_shape=tuple(meta["x_shape"]),
+                   stride=tuple(meta["stride"]), residual=meta["residual"],
+                   expand=expand, sep=sep)
+
 
 def plan_inverted_residual(
     x_shape: tuple[int, ...],
@@ -1084,6 +1275,53 @@ class Conv1DPlan:
             y = sub.apply(sub_x)[:, :self.out_len, 0, :]
             acc = y if acc is None else acc + y
         return _epilogue_jnp(acc, bias, activation)
+
+    # ---- LayerPlan protocol: describe + artifact (de)serialization -------
+
+    def describe(self) -> dict:
+        if self.mode == "polyphase":
+            executor = (f"polyphase[{'+'.join(s.algorithm for s in self.subplans)}]")
+        else:
+            executor = self.inner.algorithm
+        return {"kind": "conv1d", "executor": executor,
+                "requested": self.requested, "mode": self.mode,
+                "filter": f"k={self.w_shape[0]}", "stride": str(self.stride),
+                "groups": 1, "tile": "-"}
+
+    def to_artifact(self) -> tuple[dict, dict]:
+        meta = {"kind": "conv1d", "mode": self.mode,
+                "x_shape": list(self.x_shape), "w_shape": list(self.w_shape),
+                "stride": self.stride, "padding": self.padding,
+                "requested": self.requested, "pad": list(self.pad),
+                "out_len": self.out_len}
+        arrays = {}
+        if self.mode in ("as2d", "im2col"):
+            meta["inner"], inner_arrays = self.inner.to_artifact()
+            arrays.update({f"inner.{k}": v for k, v in inner_arrays.items()})
+        else:
+            subs = []
+            for i, sub in enumerate(self.subplans):
+                sm, sa = sub.to_artifact()
+                subs.append(sm)
+                arrays.update({f"sub{i}.{k}": v for k, v in sa.items()})
+            meta["subplans"] = subs
+        return meta, arrays
+
+    @classmethod
+    def from_artifact(cls, meta: dict, arrays: dict) -> "Conv1DPlan":
+        base = dict(x_shape=tuple(meta["x_shape"]),
+                    w_shape=tuple(meta["w_shape"]), stride=meta["stride"],
+                    padding=meta["padding"], requested=meta["requested"],
+                    mode=meta["mode"], pad=tuple(meta["pad"]),
+                    out_len=meta["out_len"])
+        if meta["mode"] in ("as2d", "im2col"):
+            inner = ConvPlan.from_artifact(meta["inner"],
+                                           _sub_arrays(arrays, "inner."))
+            return cls(inner=inner, **base)
+        subplans = tuple(
+            ConvPlan.from_artifact(sm, _sub_arrays(arrays, f"sub{i}."))
+            for i, sm in enumerate(meta["subplans"]))
+        return cls(subplans=subplans, **base)
 
 
 def plan_conv1d(
@@ -1184,6 +1422,41 @@ class DepthwiseConv1DPlan:
         return _wg.ct_depthwise_causal_conv1d_pretransformed(
             x, self.u, spec.ct, n_tiles=spec.n_tiles, pad_hi=spec.pad_hi)
 
+    # ---- LayerPlan protocol: describe + artifact (de)serialization -------
+
+    def describe(self) -> dict:
+        spec = self.spec
+        return {"kind": "conv1d_depthwise",
+                "executor": f"ct_causal_{spec.backend}",
+                "requested": spec.backend, "filter": f"k={spec.w_shape[0]}",
+                "stride": "1", "groups": spec.w_shape[1],
+                "tile": str(spec.output_tile)}
+
+    def to_artifact(self) -> tuple[dict, dict]:
+        spec = self.spec
+        meta = {"kind": "conv1d_depthwise", "x_shape": list(spec.x_shape),
+                "w_shape": list(spec.w_shape), "dtype": spec.dtype,
+                "output_tile": spec.output_tile, "backend": spec.backend}
+        return meta, {"u": np.asarray(self.u)}
+
+    @classmethod
+    def from_artifact(cls, meta: dict,
+                      arrays: dict) -> "DepthwiseConv1DPlan":
+        r = meta["w_shape"][0]
+        length = meta["x_shape"][1]
+        ct = cook_toom(meta["output_tile"], r)
+        nt = -(-length // ct.m)
+        blocks = None
+        if meta["backend"] == "pallas":
+            from repro.kernels import ops
+            blocks = ops.conv1d_ct_blocks(nt, meta["w_shape"][1])
+        spec = DepthwiseConv1DSpec(
+            x_shape=tuple(meta["x_shape"]), w_shape=tuple(meta["w_shape"]),
+            dtype=meta["dtype"], output_tile=meta["output_tile"],
+            backend=meta["backend"], ct=ct, n_tiles=nt,
+            pad_hi=nt * ct.m - length, blocks=blocks)
+        return cls(spec=spec, u=jnp.asarray(arrays["u"]))
+
 
 def plan_depthwise_conv1d(
     x_shape: tuple[int, ...],
@@ -1240,3 +1513,31 @@ def plan_depthwise_conv1d(
             u = jnp.pad(u, ((0, 0), (0, pad_c)))
     return DepthwiseConv1DPlan(spec=spec, u=u,
                                build_time_s=time.perf_counter() - t0)
+
+
+# ---------------------------------------------------------------------------
+# LayerPlan protocol dispatcher (artifact reload)
+# ---------------------------------------------------------------------------
+
+#: kind tag (to_artifact meta["kind"]) -> plan class. Every class conforms
+#: to the LayerPlan protocol: apply(x, ...), describe(), to_artifact(),
+#: from_artifact(meta, arrays).
+PLAN_KINDS = {
+    "conv2d": ConvPlan,
+    "separable": SeparableBlockPlan,
+    "inverted_residual": InvertedResidualPlan,
+    "conv1d": Conv1DPlan,
+    "conv1d_depthwise": DepthwiseConv1DPlan,
+}
+
+
+def plan_from_artifact(meta: dict, arrays: dict):
+    """Rebuild any LayerPlan from its (meta, arrays) artifact pair. The
+    inverse of .to_artifact(): geometry is re-derived deterministically from
+    the saved decisions; the execution-domain weights are taken verbatim
+    (no filter transform runs)."""
+    kind = meta.get("kind")
+    if kind not in PLAN_KINDS:
+        raise ValueError(f"unknown plan artifact kind {kind!r}; expected one "
+                         f"of {sorted(PLAN_KINDS)}")
+    return PLAN_KINDS[kind].from_artifact(meta, arrays)

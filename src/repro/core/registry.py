@@ -28,7 +28,8 @@ executor is planned; the registry owns *whether* and *which*.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable
+import hashlib
+from typing import Iterable, Sequence
 
 #: Filter sizes the exact Cook-Toom generator covers per non-unit axis
 #: (2D NxN and 1D 1xN / Nx1) -- the paper's "suitable" filter sizes.
@@ -208,8 +209,9 @@ CAPABILITIES: tuple[Capability, ...] = (
          note="1xN routes to the XLA 1D executor (its GEMM is one matmul)"),
     _cap("pallas_depthwise", "pallas_winograd", strides=_S1,
          filter_sizes=_WFS, axis_kinds=("two_d",), group_kinds=("depthwise",),
-         unit_multiplier_only=True, fused_epilogue=True,
-         note="streamed depthwise kernel (Hadamard phase 2 in VMEM)"),
+         fused_epilogue=True,
+         note="streamed depthwise kernel (Hadamard phase 2 in VMEM, any "
+              "channel multiplier)"),
     _cap("pallas_winograd_strided", "pallas_winograd", strides=_S2,
          filter_sizes=_SFS, axis_kinds=("two_d",), group_kinds=("dense",),
          fused_epilogue=True, cost_hint=1.5,
@@ -318,8 +320,48 @@ def resolution_error(algorithm: str, q: LayerQuery) -> ValueError:
 
 
 # ---------------------------------------------------------------------------
-# README table generation (doctest'd against the committed README)
+# Registry fingerprint (artifact cache key)
 # ---------------------------------------------------------------------------
+
+def fingerprint() -> str:
+    """Stable digest of the declared capability records. Serialized network
+    plans (repro.core.compile.NetworkPlan.save) stamp this into the artifact
+    header: a saved plan's per-layer executor decisions are only valid
+    against the registry that made them, so load() refuses an artifact whose
+    fingerprint no longer matches (executors added/removed/re-constrained)
+    and tells the caller to recompile. Frozenset fields are canonicalized
+    (sorted) so the digest is stable across processes regardless of hash
+    randomization."""
+    def canon(v):
+        if isinstance(v, frozenset):
+            return "{" + ",".join(sorted(map(repr, v))) + "}"
+        return repr(v)
+
+    body = "\n".join(
+        ";".join(f"{f.name}={canon(getattr(c, f.name))}"
+                 for f in dataclasses.fields(c))
+        for c in CAPABILITIES)
+    return hashlib.sha256(body.encode()).hexdigest()[:16]
+
+
+# ---------------------------------------------------------------------------
+# Markdown table generation (README capability table AND the per-layer
+# NetworkPlan.describe() table render through the same generator, so the two
+# docs surfaces cannot drift apart in format)
+# ---------------------------------------------------------------------------
+
+def markdown_table(header: Sequence[str], rows: Iterable[Sequence]) -> str:
+    """Render a GitHub-flavored markdown table: the ONE table generator.
+    `capability_table()` (the README algorithm table) and
+    `repro.core.compile.NetworkPlan.describe()` (the per-layer algorithm
+    table) both route through here -- drift-tested in tests/test_compile.py.
+    """
+    out = ["| " + " | ".join(str(h) for h in header) + " |",
+           "| " + " | ".join("---" for _ in header) + " |"]
+    for row in rows:
+        out.append("| " + " | ".join(str(v) for v in row) + " |")
+    return "\n".join(out)
+
 
 def capability_table() -> str:
     """The registry rendered as the README's algorithm table -- one row per
@@ -329,13 +371,10 @@ def capability_table() -> str:
     >>> print(capability_table().splitlines()[2].split("|")[1].strip())
     `winograd`
     """
-    rows = ["| executor | `algorithm=` | filters | strides | groups | "
-            "layouts | fused epilogue |",
-            "| --- | --- | --- | --- | --- | --- | --- |"]
-    for c in CAPABILITIES:
-        rows.append(
-            f"| `{c.executor}` | `{c.algorithm}` | {c.filters_str} | "
-            f"{c.strides_str} | {c.groups_str} | "
-            f"{', '.join(sorted(c.layouts))} | "
-            f"{'in-kernel' if c.fused_epilogue else 'XLA'} |")
-    return "\n".join(rows)
+    rows = [(f"`{c.executor}`", f"`{c.algorithm}`", c.filters_str,
+             c.strides_str, c.groups_str, ", ".join(sorted(c.layouts)),
+             "in-kernel" if c.fused_epilogue else "XLA")
+            for c in CAPABILITIES]
+    return markdown_table(
+        ["executor", "`algorithm=`", "filters", "strides", "groups",
+         "layouts", "fused epilogue"], rows)

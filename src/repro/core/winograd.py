@@ -269,6 +269,7 @@ def stream_geometry(n_h: int, n_w: int, c: int, mout: int,
 def stream_geometry_depthwise(n_h: int, n_w: int, c: int,
                               ct_h: CookToom, ct_w: CookToom, *,
                               phases: int = 1, input_stride: int = 1,
+                              mult: int = 1,
                               vmem_budget_bytes: int = 15 * 2 ** 20
                               ) -> StreamGeometry:
     """Halo blocking for the streamed depthwise kernel: reuse the dense
@@ -276,8 +277,11 @@ def stream_geometry_depthwise(n_h: int, n_w: int, c: int,
     its dense VMEM estimate upper-bounds the depthwise kernel's working set,
     which has no filter blocks or cross-C accumulator) with the output
     channel axis collapsed onto the channel axis -- depthwise walks ONE
-    channel axis, so block_m is pinned to block_c."""
-    g = stream_geometry(n_h, n_w, c, c, ct_h, ct_w, phases=phases,
+    channel axis, so block_m is pinned to block_c. A channel multiplier > 1
+    widens the taps and output block by `mult`; folding it into the phase
+    count keeps the VMEM estimate an upper bound without a second model."""
+    g = stream_geometry(n_h, n_w, c, c, ct_h, ct_w,
+                        phases=phases * mult,
                         input_stride=input_stride,
                         vmem_budget_bytes=vmem_budget_bytes)
     return g._replace(block_m=g.block_c, m_pad=g.c_pad)

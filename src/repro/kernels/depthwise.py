@@ -52,11 +52,17 @@ from repro.kernels.runtime import apply_activation, resolve_interpret
 def _depthwise_block(bt_h_ref, bt_w_ref, at_h_ref, at_w_ref, strip, taps,
                      bias, *, bh: int, bw: int, activation: str):
     """Shared depthwise compute: halo strip (Hs, Ws, bC) -> spatial block
-    (bh*mh, bw*mw, bC), all in VMEM/registers. `taps` is the (P, bC)
-    Winograd-domain filter slice; `bias` the (bC,) epilogue bias or None."""
+    (bh*mh, bw*mw, bC*mult), all in VMEM/registers. `taps` is the (P, bC)
+    or (P, bC, mult) Winograd-domain filter slice (channel multiplier > 1
+    fans each input channel out to `mult` outputs, o = c*mult + j -- the
+    lax feature_group_count ordering); `bias` the (bC*mult,) epilogue bias
+    or None."""
     mh, th = at_h_ref.shape
     mw, tw = at_w_ref.shape
     bc = strip.shape[-1]
+    if taps.ndim == 2:                                  # mult-1 callers
+        taps = taps[:, :, None]
+    mult = taps.shape[-1]
     # VMEM gather: halo strip -> (tw, th, bh, bw, bC) overlapping tiles,
     # offset-major (th + tw static strided slices, as in the dense kernel).
     rows = jnp.stack([strip[r:r + (bh - 1) * mh + 1:mh]
@@ -67,18 +73,21 @@ def _depthwise_block(bt_h_ref, bt_w_ref, at_h_ref, at_w_ref, strip, taps,
     v = jnp.tensordot(bt_h_ref[...], xt, axes=(1, 1))   # (i, tw, bh, bw, bC)
     v = jnp.tensordot(bt_w_ref[...], v, axes=(1, 1))    # (j, i, bh, bw, bC)
     # depthwise phase 2: Hadamard over channels -- the channel GEMM of the
-    # dense kernel degenerates to an elementwise multiply per Winograd point.
-    u = taps.astype(jnp.float32).reshape(th, tw, bc).transpose(1, 0, 2)
-    y = v * u[:, :, None, None, :]                      # (j, i, bh, bw, bC)
+    # dense kernel degenerates to an elementwise multiply per Winograd
+    # point; the transformed input broadcasts over the multiplier axis.
+    u = taps.astype(jnp.float32).reshape(th, tw, bc, mult)
+    u = u.transpose(1, 0, 2, 3)                         # (tw, th, bC, mult)
+    y = v[..., None] * u[:, :, None, None, :, :]        # (j, i, bh, bw, bC, m)
     # output transform A^T (.) A.
-    out = jnp.tensordot(at_h_ref[...], y, axes=(1, 1))  # (mi, j, bh, bw, bC)
-    out = jnp.tensordot(at_w_ref[...], out, axes=(1, 1))  # (mj, mi, bh, bw, bC)
+    out = jnp.tensordot(at_h_ref[...], y, axes=(1, 1))  # (mi, j, bh, bw, bC, m)
+    out = jnp.tensordot(at_w_ref[...], out,
+                        axes=(1, 1))                    # (mj, mi, bh, bw, bC, m)
     if bias is not None:
-        out = out + bias[None, None, None, None, :]
+        out = out + bias.reshape(bc, mult)[None, None, None, None]
     out = apply_activation(out, activation)
-    # un-tile to the (bh*mh, bw*mw, bC) NHWC spatial block, in VMEM.
-    out = out.transpose(2, 1, 3, 0, 4)                  # (bh, mi, bw, mj, bC)
-    return out.reshape(bh * mh, bw * mw, bc)
+    # un-tile to the (bh*mh, bw*mw, bC*mult) NHWC spatial block, in VMEM.
+    out = out.transpose(2, 1, 3, 0, 4, 5)               # (bh, mi, bw, mj, bC, m)
+    return out.reshape(bh * mh, bw * mw, bc * mult)
 
 
 def _depthwise_kernel(bt_h_ref, bt_w_ref, at_h_ref, at_w_ref, x_ref, u_ref,
@@ -95,8 +104,8 @@ def _depthwise_kernel(bt_h_ref, bt_w_ref, at_h_ref, at_w_ref, x_ref, u_ref,
     "ct_h", "ct_w", "bh", "bw", "block_c", "activation", "interpret"))
 def depthwise_streamed(
     xp: jax.Array,           # (N, Hp, Wp, Cp) halo-padded NHWC input
-    u: jax.Array,            # (P, Cp) Winograd-domain depthwise taps
-    bias: jax.Array | None,  # (1, Cp) fp32 epilogue bias, or None
+    u: jax.Array,            # (P, Cp, mult) Winograd-domain depthwise taps
+    bias: jax.Array | None,  # (1, Cp*mult) fp32 epilogue bias, or None
     *,
     ct_h: CookToom,
     ct_w: CookToom,
@@ -110,12 +119,15 @@ def depthwise_streamed(
 
     `xp` must be padded so Hp = nHb*bh*mh + (th - mh) and
     Wp = nWb*bw*mw + (tw - mw) for integer strip counts (ops.py pads from
-    the plan's StreamGeometry). Returns (N, nHb*bh*mh, nWb*bw*mw, Cp); the
-    caller crops the geometry surplus.
+    the plan's StreamGeometry). The taps carry the channel multiplier as a
+    trailing axis; output channel o = c*mult + j (the lax
+    feature_group_count ordering). Returns
+    (N, nHb*bh*mh, nWb*bw*mw, Cp*mult); the caller crops the geometry
+    surplus.
     """
     interpret = resolve_interpret(interpret)
     n, hp, wp, c = xp.shape
-    p, c2 = u.shape
+    p, c2, mult = u.shape
     th, tw, mh, mw = ct_h.t, ct_w.t, ct_h.m, ct_w.m
     sh, sw = bh * mh, bw * mw
     hs, ws = sh + th - mh, sw + tw - mw
@@ -128,7 +140,7 @@ def depthwise_streamed(
 
     has_bias = bias is not None
     if bias is None:
-        bias = jnp.zeros((1, c), jnp.float32)
+        bias = jnp.zeros((1, c * mult), jnp.float32)
     bt_h = jnp.asarray(ct_h.BT, jnp.float32)
     bt_w = jnp.asarray(ct_w.BT, jnp.float32)
     at_h = jnp.asarray(ct_h.AT, jnp.float32)
@@ -145,12 +157,12 @@ def depthwise_streamed(
                          lambda n_, i, j, cb: (n_, i * sh, j * sw,
                                                cb * block_c),
                          indexing_mode=pl.Unblocked()),
-            pl.BlockSpec((p, block_c), lambda n_, i, j, cb: (0, cb)),
-            pl.BlockSpec((1, block_c), lambda n_, i, j, cb: (0, cb)),
+            pl.BlockSpec((p, block_c, mult), lambda n_, i, j, cb: (0, cb, 0)),
+            pl.BlockSpec((1, block_c * mult), lambda n_, i, j, cb: (0, cb)),
         ],
-        out_specs=pl.BlockSpec((1, sh, sw, block_c),
+        out_specs=pl.BlockSpec((1, sh, sw, block_c * mult),
                                lambda n_, i, j, cb: (n_, i, j, cb)),
-        out_shape=jax.ShapeDtypeStruct((n, n_hb * sh, n_wb * sw, c),
+        out_shape=jax.ShapeDtypeStruct((n, n_hb * sh, n_wb * sw, c * mult),
                                        xp.dtype),
         interpret=interpret,
     )(bt_h, bt_w, at_h, at_w, xp, u, bias)

@@ -262,17 +262,19 @@ def depthwise_conv2d_planned(
     interpret: bool | None = None,
 ) -> jax.Array:
     """Execute a planned streaming Pallas depthwise conv: `u` is the
-    pre-transformed, pre-padded (P, Cp) taps; conv padding, halo blocking
-    and channel blocks come from the plan. Per-call work is one NHWC pad,
-    the kernel, one crop."""
+    pre-transformed, pre-padded (P, Cp, mult) taps (mult = channel
+    multiplier; output channel o = c*mult + j, the lax ordering); conv
+    padding, halo blocking and channel blocks come from the plan. Per-call
+    work is one NHWC pad, the kernel, one crop."""
     from repro.kernels import depthwise as _k_depthwise
     c = x.shape[3]
+    mult = u.shape[2]
     xp = jnp.pad(x, ((0, 0),
                      (geometry.lo_h, geometry.hi_h + stream.pad_h),
                      (geometry.lo_w, geometry.hi_w + stream.pad_w),
                      (0, stream.c_pad - c)))
     y = _k_depthwise.depthwise_streamed(
-        xp, u, _pad_bias(bias, stream.c_pad), ct_h=ct_h, ct_w=ct_w,
+        xp, u, _pad_bias(bias, stream.c_pad * mult), ct_h=ct_h, ct_w=ct_w,
         bh=stream.bh, bw=stream.bw, block_c=stream.block_c,
         activation=activation, interpret=interpret)
     return y[:, :geometry.out_h, :geometry.out_w, :c_out]

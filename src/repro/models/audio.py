@@ -5,6 +5,12 @@ embeddings; this module is the actual stem for smoke tests and examples, and
 it is where the paper's 1D algorithm meets the audio arch: conv1 (k=3, s=1)
 runs the Cook-Toom F(m,3) path, conv2 (k=3, s=2) runs the polyphase
 decomposition into stride-1 Cook-Toom convolutions (core.dispatch.conv1d).
+
+Deployment path: `stem_graph()` expresses the stem as layer IR, so the stem
+routes through the same graph compiler as the CNN zoo --
+`repro.core.compile.compile(params, stem_graph(d), input_shape=(B, T,
+n_mels))` -- including NetworkPlan.save/load artifacts. The legacy
+`plan_stem` is a deprecation shim over that compiler.
 """
 
 from __future__ import annotations
@@ -13,7 +19,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.dispatch import conv1d
-from repro.core.plan import Conv1DPlan, plan_conv1d
 from repro.models.config import ArchConfig
 from repro.models.layers import truncated_normal_init
 
@@ -30,27 +35,52 @@ def init_stem(key, cfg: ArchConfig, n_mels: int = 80, dtype=jnp.float32) -> dict
     }
 
 
+def stem_graph(d_model: int):
+    """The stem as layer IR: two conv1d nodes (k=3 stride 1, k=3 stride 2),
+    each with a fused bias+gelu epilogue. Feed this to
+    repro.core.compile.compile(params, stem_graph(d), input_shape=...) --
+    the audio stem and the CNN zoo share one compiler."""
+    from repro.core.compile import LayerIR
+    return (
+        LayerIR(id="input", op="input"),
+        LayerIR(id="conv1", op="conv1d", inputs=("input",),
+                attrs=dict(k=3, c_out=d_model, stride=1, padding="SAME",
+                           activation="gelu", w_path=("conv1_w",),
+                           b_path=("conv1_b",))),
+        LayerIR(id="conv2", op="conv1d", inputs=("conv1",),
+                attrs=dict(k=3, c_out=d_model, stride=2, padding="SAME",
+                           activation="gelu", w_path=("conv2_w",),
+                           b_path=("conv2_b",))),
+    )
+
+
 def plan_stem(params: dict, mel_shape: tuple[int, ...],
-              algorithm: str = "auto") -> dict[str, Conv1DPlan]:
-    """Plan both stem convolutions for a fixed (B, T, n_mels) input shape:
-    filter transforms (incl. the per-phase polyphase sub-filters of conv2)
-    and all tiling geometry happen here, once, at weight-load time."""
-    b, t, n_mels = mel_shape
-    p1 = plan_conv1d((b, t, n_mels), params["conv1_w"], stride=1,
-                     padding="SAME", algorithm=algorithm)
-    p2 = plan_conv1d((b, t, params["conv2_w"].shape[1]), params["conv2_w"],
-                     stride=2, padding="SAME", algorithm=algorithm)
-    return {"conv1": p1, "conv2": p2}
+              algorithm: str = "auto"):
+    """DEPRECATED shim over the graph compiler: returns
+    repro.core.compile.compile(params, stem_graph(d), input_shape=
+    mel_shape) -- a NetworkPlan keeping the old dict interface
+    (plans["conv1"], plans["conv2"]). New code should call compile()
+    directly and use NetworkPlan.apply/save/load."""
+    from repro.core.compile import compile as _compile, warn_deprecated
+    warn_deprecated(
+        "models.audio.plan_stem",
+        "repro.core.compile.compile(params, audio.stem_graph(d), "
+        "input_shape=mel_shape)")
+    d_model = params["conv1_w"].shape[2]
+    return _compile(params, stem_graph(d_model),
+                    input_shape=mel_shape, algorithm=algorithm)
 
 
 def stem(params: dict, mel: jax.Array, algorithm: str = "auto",
-         plans: dict[str, Conv1DPlan] | None = None) -> jax.Array:
+         plans=None) -> jax.Array:
     """mel: (B, T, n_mels) -> frame embeddings (B, T // 2, d_model).
 
-    With `plans` (from plan_stem) both convolutions run their pre-built
-    Conv1DPlans -- no per-call filter transform or geometry work -- and the
-    bias+gelu epilogue goes through the plan's fused path (in-kernel on the
-    Pallas executors, one XLA op otherwise)."""
+    With `plans` (a NetworkPlan from plan_stem / compile, or a legacy dict
+    of Conv1DPlans -- both support ["conv1"]/["conv2"] indexing) the
+    convolutions run pre-planned with fused bias+gelu epilogues and no
+    per-call filter transform or geometry work. Biases come from the
+    `params` passed to THIS call, preserving the legacy contract; callers
+    on the compile() API use NetworkPlan.apply directly."""
     if plans is not None:
         x = plans["conv1"].apply(mel, bias=params["conv1_b"],
                                  activation="gelu")

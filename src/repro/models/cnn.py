@@ -11,11 +11,13 @@ layers, im2row elsewhere vs im2row everywhere).
 Networks are expressed as layer-spec lists; `init_cnn` / `cnn_forward`
 interpret them. Inference-only (the paper measures single-batch latency).
 
-Deployment path (the paper's section-4 insight): `plan_cnn` builds one
-ConvPlan per conv layer at init/weight-load time -- algorithm decisions,
-tiling geometry and the Winograd-domain filter transform all happen once --
-and `cnn_forward(..., plans=...)` executes them with zero per-call filter or
-geometry work.
+Deployment path (the paper's section-4 insight): the spec lists lower into
+the graph compiler -- `repro.core.compile.compile(params, specs, res=...)`
+-- whose fusion passes reconstitute the separable / inverted-residual
+execution units and whose NetworkPlan executes with zero per-call filter or
+geometry work and serializes to a deployment artifact (save/load). The
+legacy `plan_cnn` / `cnn_forward(plans=...)` entry points are deprecation
+shims over that compiler.
 """
 
 from __future__ import annotations
@@ -27,11 +29,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.dispatch import Algorithm, winograd_suitable
-from repro.core.plan import (ConvPlan, InvertedResidualPlan,
-                             SeparableBlockPlan, algorithm_supported,
-                             plan_conv2d, plan_inverted_residual,
-                             plan_separable_block)
-from repro.models.layers import conv2d_layer, init_conv2d
+from repro.core.plan import ConvPlan, algorithm_supported
+from repro.models.layers import (conv2d_layer, dense_head, init_conv2d,
+                                 pool2d)
 
 _F32 = jnp.float32
 
@@ -59,7 +59,8 @@ class Conv:
 class SeparableConv:
     """MobileNet depthwise-separable unit: k x k depthwise conv (groups =
     C_in, channel multiplier 1) + 1x1 pointwise conv, bias+ReLU after each.
-    Planned as ONE unit by plan_cnn (plan_separable_block), so the Pallas
+    Lowers to the unfused dw -> pw conv chain; the compiler's fuse pass
+    (repro.core.compile) rewrites it to ONE separable node, so the Pallas
     path fuses the whole block into a single streamed kernel."""
 
     name: str
@@ -74,7 +75,8 @@ class InvertedResidual:
     """MobileNet-v2 inverted residual unit (Sandler et al. 2018): 1x1
     expand (xfactor, relu6) -> kxk depthwise (stride s, relu6) -> 1x1
     linear projection, residual add when stride 1 and C_in == C_out.
-    Planned as ONE unit by plan_cnn (plan_inverted_residual): the
+    Lowers to the unfused expand -> dw -> project [-> add] chain; the
+    compiler's fuse pass rewrites it to ONE inverted-residual node whose
     depthwise+project pair rides the separable-block machinery, so the
     Pallas path fuses it into a single streamed kernel; stride-2 blocks
     route the depthwise half through the strided Winograd executors."""
@@ -198,71 +200,25 @@ def _layer_algorithm(spec: Conv, algorithm: Algorithm,
 
 
 def plan_cnn(params: dict, specs, *, res: int, c_in: int = 3, batch: int = 1,
-             algorithm: Algorithm = "auto"
-             ) -> dict[str, ConvPlan | SeparableBlockPlan]:
-    """Build one ConvPlan per conv layer -- and one SeparableBlockPlan per
-    separable block -- walking the spec list with the same shape tracking as
-    init_cnn. All algorithm decisions (including measured auto_tuned
-    choices) and every filter transform happen here, once; the returned
-    dict feeds cnn_forward(plans=...) for transform-free inference.
-    """
-    plans: dict[str, ConvPlan | SeparableBlockPlan] = {}
-
-    def walk(specs, h, w, c):
-        for spec in specs:
-            if isinstance(spec, Conv):
-                plans[spec.name] = plan_conv2d(
-                    (batch, h, w, c), params[spec.name]["w"],
-                    stride=spec.stride, padding=spec.padding,
-                    groups=spec.groups,
-                    algorithm=_layer_algorithm(spec, algorithm, c))
-                h = _out_size(h, spec.kh, spec.stride, spec.padding)
-                w = _out_size(w, spec.kw, spec.stride, spec.padding)
-                c = spec.c_out
-            elif isinstance(spec, SeparableConv):
-                plans[spec.name] = plan_separable_block(
-                    (batch, h, w, c), params[spec.name]["dw"]["w"],
-                    params[spec.name]["pw"]["w"], stride=spec.stride,
-                    padding=spec.padding, algorithm=algorithm)
-                h = _out_size(h, spec.k, spec.stride, spec.padding)
-                w = _out_size(w, spec.k, spec.stride, spec.padding)
-                c = spec.c_out
-            elif isinstance(spec, InvertedResidual):
-                p = params[spec.name]
-                plans[spec.name] = plan_inverted_residual(
-                    (batch, h, w, c), p.get("exp", {}).get("w"),
-                    p["dw"]["w"], p["pw"]["w"], stride=spec.stride,
+             algorithm: Algorithm = "auto"):
+    """DEPRECATED shim over the graph compiler: returns
+    repro.core.compile.compile(params, specs, res=...), a NetworkPlan. The
+    NetworkPlan keeps the old dict interface (plans[name], .values(), ...)
+    over its per-layer plans, and cnn_forward(plans=...) delegates to
+    NetworkPlan.apply -- but new code should call compile() directly and
+    use NetworkPlan.apply/save/load. All fusion decisions (separable
+    blocks, inverted residuals) now live in the compiler's pattern-rewrite
+    passes, not here."""
+    from repro.core.compile import compile as _compile, warn_deprecated
+    warn_deprecated(
+        "models.cnn.plan_cnn",
+        "repro.core.compile.compile(params, specs, res=...)")
+    return _compile(params, specs, res=res, c_in=c_in, batch=batch,
                     algorithm=algorithm)
-                h = _out_size(h, spec.k, spec.stride, "SAME")
-                w = _out_size(w, spec.k, spec.stride, "SAME")
-                c = spec.c_out
-            elif isinstance(spec, Pool):
-                h = _out_size(h, spec.k, spec.stride, spec.padding)
-                w = _out_size(w, spec.k, spec.stride, spec.padding)
-            elif isinstance(spec, Concat):
-                outs = [walk(br, h, w, c) for br in spec.branches]
-                h, w = outs[0][0], outs[0][1]
-                c = sum(o[2] for o in outs)
-            elif isinstance(spec, GlobalAvgPool):
-                h = w = 1
-            elif isinstance(spec, Dense):
-                h = w = 1
-                c = spec.n_out
-        return h, w, c
-
-    walk(specs, res, res, c_in)
-    return plans
 
 
 def _pool(x, spec: Pool):
-    init = -jnp.inf if spec.kind == "max" else 0.0
-    op = jax.lax.max if spec.kind == "max" else jax.lax.add
-    y = jax.lax.reduce_window(
-        x, init, op, (1, spec.k, spec.k, 1), (1, spec.stride, spec.stride, 1),
-        spec.padding)
-    if spec.kind == "avg":
-        y = y / (spec.k * spec.k)
-    return y
+    return pool2d(x, spec.kind, spec.k, spec.stride, spec.padding)
 
 
 def cnn_forward(params: dict, x: jax.Array, specs,
@@ -270,10 +226,19 @@ def cnn_forward(params: dict, x: jax.Array, specs,
                 layer_times: dict | None = None,
                 plans: dict[str, ConvPlan] | None = None) -> jax.Array:
     """Run the network. `algorithm` selects the conv scheme globally ("auto"
-    = the paper's mixed policy). With `plans` (from plan_cnn) convolutions
-    execute their pre-built ConvPlans: no per-call filter transform or
-    geometry derivation. layer_times: optional dict to collect per-layer
-    conv descriptors for the benchmark harness."""
+    = the paper's mixed policy). `plans` is DEPRECATED: compile the network
+    with repro.core.compile.compile and call net.apply(x) directly instead.
+    The shim keeps the exact legacy contract -- the spec walk below executes
+    each pre-built plan by name (a NetworkPlan from plan_cnn supports the
+    old dict interface) while biases and dense-head weights come from the
+    `params` passed to THIS call, not from compile-time constants.
+    layer_times: optional dict to collect per-layer conv descriptors for
+    the benchmark harness (unplanned path)."""
+    if plans is not None:
+        from repro.core.compile import warn_deprecated
+        warn_deprecated("models.cnn.cnn_forward(plans=...)",
+                        "repro.core.compile.compile(...).apply(x)")
+
     def walk(x, specs):
         for spec in specs:
             if isinstance(spec, Conv):
@@ -364,10 +329,7 @@ def cnn_forward(params: dict, x: jax.Array, specs,
             elif isinstance(spec, GlobalAvgPool):
                 x = jnp.mean(x, axis=(1, 2))
             elif isinstance(spec, Dense):
-                x = x.reshape(x.shape[0], -1)
-                x = x @ params[spec.name]["w"]
-                if spec.relu:
-                    x = jax.nn.relu(x)
+                x = dense_head(x, params[spec.name]["w"], spec.relu)
         return x
     return walk(x, specs)
 

@@ -141,12 +141,13 @@ def conv2d_layer(p: Params, x: jax.Array, *, plan=None, relu: bool = True,
                  activation: str | None = None, **conv_kwargs) -> jax.Array:
     """Conv + bias + epilogue activation. `activation` (any name in
     kernels.runtime.ACTIVATIONS, e.g. "relu6" for MobileNet-v2) overrides
-    the legacy `relu` flag. With `plan` (a repro.core.plan.ConvPlan, built
-    once at init/weight-load time) execution performs no per-call filter
-    transform or geometry work, and the bias+activation epilogue rides the
-    plan's fused path (in-kernel on the Pallas executors -- the conv output
-    never revisits HBM for the elementwise work). Without a plan, falls back
-    to the per-call dispatcher (conv_kwargs: stride/padding/algorithm/...)."""
+    the legacy `relu` flag. With `plan` (any LayerPlan with the ConvPlan
+    apply contract, built once at init/weight-load/compile time) execution
+    performs no per-call filter transform or geometry work, and the
+    bias+activation epilogue rides the plan's fused path (in-kernel on the
+    Pallas executors -- the conv output never revisits HBM for the
+    elementwise work). Without a plan, falls back to the per-call
+    dispatcher (conv_kwargs: stride/padding/algorithm/...)."""
     if activation is None:
         activation = "relu" if relu else "none"
     if plan is not None:
@@ -154,6 +155,31 @@ def conv2d_layer(p: Params, x: jax.Array, *, plan=None, relu: bool = True,
     from repro.core.dispatch import conv2d
     return conv2d(x, p["w"], bias=p["b"], activation=activation,
                   **conv_kwargs)
+
+
+def dense_head(x: jax.Array, w: jax.Array, relu: bool = True) -> jax.Array:
+    """Classifier head: flatten all non-batch axes, matmul, optional ReLU.
+    The one implementation behind both the spec-walk interpreter
+    (models.cnn.cnn_forward) and the compiled graph executor
+    (repro.core.compile.NetworkPlan.apply), so their Dense semantics cannot
+    diverge."""
+    y = x.reshape(x.shape[0], -1) @ w
+    return jax.nn.relu(y) if relu else y
+
+
+def pool2d(x: jax.Array, kind: str, k: int, stride: int,
+           padding: str) -> jax.Array:
+    """Max/avg spatial pooling over NHWC (avg divides by the full window,
+    matching lax's SAME-padding convention). Like dense_head, this is the
+    ONE pooling implementation shared by the spec-walk interpreter and the
+    compiled graph executor."""
+    init = -jnp.inf if kind == "max" else 0.0
+    op = jax.lax.max if kind == "max" else jax.lax.add
+    y = jax.lax.reduce_window(x, init, op, (1, k, k, 1),
+                              (1, stride, stride, 1), padding)
+    if kind == "avg":
+        y = y / (k * k)
+    return y
 
 
 # ---------------------------------------------------------------------------

@@ -67,14 +67,51 @@ def test_grouped_plan_matches_direct(rng, algorithm, resolved, groups):
 
 def test_depthwise_channel_multiplier(rng):
     """Depthwise with channel multiplier > 1 (output channel o = c*mult+j,
-    the lax ordering) through the pure-JAX executors."""
+    the lax ordering) through the pure-JAX executors AND the streamed
+    Pallas depthwise kernel (widened in PR 5)."""
     c, mult = 6, 3
     x = jnp.asarray(rng.standard_normal((1, 12, 12, c)), jnp.float32)
     w = jnp.asarray(rng.standard_normal((3, 3, 1, c * mult)) / 3, jnp.float32)
     want = direct_conv2d(x, w, groups=c)
-    for algorithm in ("winograd", "im2col"):
+    for algorithm in ("winograd", "im2col", "pallas_winograd"):
         p = plan_conv2d(x.shape, w, groups=c, algorithm=algorithm)
         assert rel_err(p.apply(x), want) < 1e-4
+
+
+@pytest.mark.parametrize("mult", [2, 4])
+@pytest.mark.parametrize("padding", ["SAME", "VALID"])
+def test_depthwise_pallas_channel_multiplier(rng, mult, padding):
+    """The streamed depthwise kernel with channel multiplier > 1: parity
+    with the lax oracle, asymmetric spatial shape, fused bias+activation
+    epilogue, and the registry routing that the compiler's place pass
+    relies on."""
+    c = 5
+    x = jnp.asarray(rng.standard_normal((2, 13, 9, c)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 3, 1, c * mult)) / 3, jnp.float32)
+    p = plan_conv2d(x.shape, w, groups=c, padding=padding,
+                    algorithm="pallas_winograd")
+    assert p.algorithm == "pallas_depthwise"     # no im2col fallback
+    assert p.u.shape[2] == mult                  # (P, Cp, mult) taps
+    want = direct_conv2d(x, w, padding=padding, groups=c)
+    assert p.out_shape == want.shape
+    assert rel_err(p.apply(x), want) < 1e-4
+    b = jnp.asarray(rng.standard_normal((c * mult,)), jnp.float32)
+    got = p.apply(x, bias=b, activation="relu")
+    assert rel_err(got, jax.nn.relu(want + b)) < 1e-4
+
+
+def test_depthwise_pallas_multiplier_parity_with_pure_jax(rng):
+    """Streamed-vs-pure-JAX executor parity on the widened multiplier
+    coverage (the ROADMAP gap this PR closes)."""
+    c, mult = 7, 3
+    x = jnp.asarray(rng.standard_normal((1, 16, 16, c)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((5, 5, 1, c * mult)) / 25,
+                    jnp.float32)
+    p_pallas = plan_conv2d(x.shape, w, groups=c, algorithm="pallas_winograd")
+    p_jax = plan_conv2d(x.shape, w, groups=c, algorithm="winograd")
+    assert p_pallas.algorithm == "pallas_depthwise"
+    assert p_jax.algorithm == "winograd_depthwise"
+    assert rel_err(p_pallas.apply(x), p_jax.apply(x)) < 1e-4
 
 
 @pytest.mark.parametrize("stride", [1, 2, 3])
@@ -376,11 +413,13 @@ def test_groups_constraint_errors(rng):
     # executors that do cover the layer (block-diagonal grouped winograd)
     with pytest.raises(ValueError, match="winograd_grouped"):
         plan_conv2d((1, 10, 10, 8), w, groups=2, algorithm="pallas_winograd")
-    # depthwise with multiplier > 1 on the streamed kernel: the family's
-    # constraint (mult 1) is stated and the covering executor suggested
-    with pytest.raises(ValueError, match=r"mult 1.*winograd_depthwise"):
-        plan_conv2d((1, 10, 10, 4), jnp.zeros((3, 3, 1, 8)), groups=4,
-                    algorithm="pallas_winograd")
+    # stride-2 depthwise with multiplier > 1 on the streamed kernel: the
+    # strided executor's constraint (mult 1) is stated and the covering
+    # executor suggested (the stride-1 streamed kernel handles any
+    # multiplier since the widened capability landed)
+    with pytest.raises(ValueError, match=r"mult 1.*winograd_strided"):
+        plan_conv2d((1, 10, 10, 4), jnp.zeros((3, 3, 1, 8)), stride=2,
+                    groups=4, algorithm="pallas_winograd")
     # grouped pallas baselines: no grouped executor registered
     for alg in ("pallas_winograd_materialized", "pallas_im2col"):
         with pytest.raises(ValueError, match="no executor"):
