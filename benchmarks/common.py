@@ -3,6 +3,7 @@ layer-shape inventories of the paper's five networks."""
 
 from __future__ import annotations
 
+import math
 import subprocess
 import time
 from typing import Callable
@@ -217,6 +218,91 @@ def pallas_im2row_hbm_bytes(spec, batch: int = 1) -> int:
     read_u = (mm_pad // bm_) * k_pad * n_pad * 4
     write_y = mm_pad * n_pad * 4
     return read_x + patches + read_patches + read_u + write_y
+
+
+def fft_hbm_bytes(spec, batch: int = 1) -> int:
+    """Analytic HBM bytes per call of the rfft2 executor (core.fft, spec a
+    plan.ConvSpec with algorithm='fft'): padded input read, real tile tensor
+    write + re-read by rfft2, forward spectrum write + re-read by the
+    complex pointwise GEMM (complex64 = 8 B), conjugated filter-spectrum
+    read, product spectrum write + re-read by irfft2, real inverse write,
+    and the cropped NHWC output write. XLA fuses some of these round trips;
+    the model is the fusion-free dataflow upper bound, the analogue of
+    materialized_hbm_bytes for the Winograd baseline."""
+    g, f = spec.geometry, spec.fft
+    c_in, c_out = spec.w_shape[2], spec.w_shape[3]
+    n_tiles = batch * g.n_h * g.n_w
+    half_w = f.fft_w // 2 + 1
+    read_x = batch * (g.n_h * f.m_h + f.fft_h - f.m_h) \
+        * (g.n_w * f.m_w + f.fft_w - f.m_w) * c_in * 4
+    tiles = n_tiles * f.fft_h * f.fft_w * c_in * 4
+    spec_in = n_tiles * f.fft_h * half_w * c_in * 8
+    read_u = f.fft_h * half_w * c_in * c_out * 8
+    spec_out = n_tiles * f.fft_h * half_w * c_out * 8
+    inverse = n_tiles * f.fft_h * f.fft_w * c_out * 4
+    write_y = batch * g.out_h * g.out_w * c_out * 4
+    return (read_x + 2 * tiles + 2 * spec_in + read_u + 2 * spec_out
+            + inverse + write_y)
+
+
+def fft_flops(spec, batch: int = 1) -> int:
+    """Analytic real FLOPs per call of the rfft2 executor: forward rfft2
+    per input channel + inverse per output channel (split-radix estimate
+    2.5 * N * log2(N) for a real transform of N points) plus the complex
+    pointwise channel GEMM (8 real flops per complex MAC). The transform
+    term is independent of the filter size -- the reason FFT wins on large
+    filters."""
+    g, f = spec.geometry, spec.fft
+    c_in, c_out = spec.w_shape[2], spec.w_shape[3]
+    n_tiles = batch * g.n_h * g.n_w
+    nf = f.fft_h * f.fft_w
+    transform = 2.5 * nf * math.log2(nf)
+    gemm = n_tiles * f.fft_h * (f.fft_w // 2 + 1) * c_in * c_out * 8
+    return int(n_tiles * (c_in + c_out) * transform + gemm)
+
+
+def winograd_domain_hbm_bytes(spec, batch: int = 1) -> int:
+    """Analytic HBM bytes per call of a pure-JAX Winograd-domain executor
+    (spec a plan.ConvSpec with algorithm='winograd'/'winograd_f63'),
+    parameterized by the plan's tile size t = spec.ct_h.t so one model
+    covers F(2,3)/F(4,3)/F(6,3): padded input read, (t, t) tile tensor
+    write + re-read by the input transform, transformed-tile write +
+    re-read by the pointwise GEMM, Winograd-domain filter read, point
+    product write + re-read by the output transform, inverse write, and
+    the cropped NHWC output write (fusion-free dataflow upper bound)."""
+    g = spec.geometry
+    th, tw = spec.ct_h.t, spec.ct_w.t
+    mh, mw = spec.ct_h.m, spec.ct_w.m
+    c_in, c_out = spec.w_shape[2], spec.w_shape[3]
+    n_tiles = batch * g.n_h * g.n_w
+    read_x = batch * (g.n_h * mh + th - mh) * (g.n_w * mw + tw - mw) \
+        * c_in * 4
+    tiles = n_tiles * th * tw * c_in * 4
+    transformed = n_tiles * th * tw * c_in * 4
+    read_u = th * tw * c_in * c_out * 4
+    product = n_tiles * th * tw * c_out * 4
+    inverse = n_tiles * mh * mw * c_out * 4
+    write_y = batch * g.out_h * g.out_w * c_out * 4
+    return (read_x + 2 * tiles + 2 * transformed + read_u + 2 * product
+            + inverse + write_y)
+
+
+def winograd_domain_flops(spec, batch: int = 1) -> int:
+    """Analytic real FLOPs per call of a pure-JAX Winograd-domain executor:
+    the two-sided input transform (B^T d B) per input channel, the (t*t)
+    pointwise channel GEMMs, and the two-sided output transform (A^T z A)
+    per output channel. With t = spec.ct_h.t this exposes the F(6,3) vs
+    F(4,3) trade: 2.25x fewer GEMM flops per output, more transform flops
+    per tile."""
+    g = spec.geometry
+    th, tw = spec.ct_h.t, spec.ct_w.t
+    mh, mw = spec.ct_h.m, spec.ct_w.m
+    c_in, c_out = spec.w_shape[2], spec.w_shape[3]
+    n_tiles = batch * g.n_h * g.n_w
+    in_tr = 2 * (th * th * tw + th * tw * tw)          # B^T d, then (.) B
+    out_tr = 2 * (mh * th * tw + mh * mw * tw)         # A^T z, then (.) A
+    gemm = n_tiles * th * tw * c_in * c_out * 2
+    return int(n_tiles * (c_in * in_tr + c_out * out_tr) + gemm)
 
 
 def conv_layer_inventory(network: str) -> list[dict]:

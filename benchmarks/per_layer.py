@@ -109,6 +109,94 @@ def scaled(layers: list[dict], scale: int) -> list[dict]:
             for l in layers]
 
 
+def crossover_layers(scale: int = 1) -> list[dict]:
+    """The N-way auto_tuned crossover ladder (BENCH_PR6.json): a filter-size
+    x resolution x channel grid where the im2row / F(2,3)/F(4,3) / F(6,3) /
+    FFT crossovers live, plus the VGG 3x3 ladder and the MobileNet-v2
+    inverted-residual depthwise convs (groups = C, where the race is
+    winograd_depthwise vs grouped im2row)."""
+    grid = [dict(name=f"g{k}x{k}_{r}_{c}", kh=k, kw=k, h=r, w=r,
+                 c_in=c, c_out=c, stride=1)
+            for k in (3, 5, 7) for r in (14, 28, 56) for c in (32, 128)]
+    vgg = [dict(l, stride=1) for l in VGG_STYLE_LAYERS]
+    mbv2 = []
+    for l in MOBILENET_V2_LAYERS:
+        ce = l["c_in"] * l["expand"]
+        mbv2.append(dict(name=f"{l['name']}_dw", kh=3, kw=3, h=l["h"],
+                         w=l["w"], c_in=ce, c_out=ce, stride=1, groups=ce))
+    return scaled(grid + vgg + mbv2, scale)
+
+
+def bench_layer_crossover(layer: dict, iters: int, warmup: int) -> dict:
+    """Plan the layer with algorithm='auto_tuned' (the plan-time N-way
+    measured race runs here, once), then re-time the chosen plan end to end.
+    The per-contender evidence is read back from the plan's autotune report
+    -- the same record persisted into NetworkPlan artifacts."""
+    rng = np.random.default_rng(0)
+    groups = layer.get("groups", 1)
+    x = jnp.asarray(rng.standard_normal(
+        (1, layer["h"], layer["w"], layer["c_in"])), jnp.float32)
+    wt = jnp.asarray(rng.standard_normal(
+        (layer["kh"], layer["kw"], layer["c_in"] // groups,
+         layer["c_out"])) / (layer["kh"] * layer["kw"]), jnp.float32)
+    p = planlib.plan_conv2d(x.shape, wt, stride=layer["stride"],
+                            algorithm="auto_tuned", groups=groups)
+    report = p.spec.autotune_report or {}
+    evidence = {k: v for k, v in report.items() if k.startswith("t_")}
+    best_single = min(evidence.values()) if evidence else None
+    t_winner = evidence.get(_winner_evidence_key(report, evidence))
+    t_policy = time_jitted(jax.jit(p.apply), x, warmup=warmup, iters=iters)
+    return {"algorithm": p.spec.algorithm,
+            "tile": list(p.spec.output_tile) if p.spec.output_tile else None,
+            "decision": p.describe()["decision"],
+            "t_policy_s": t_policy, "evidence": evidence,
+            "t_best_single_s": best_single, "t_winner_s": t_winner,
+            "policy_matches_best": (best_single is None
+                                    or t_winner <= best_single)}
+
+
+def _winner_evidence_key(report: dict, evidence: dict) -> str | None:
+    """Evidence key of the winning contender (winner_label names the
+    contender; the winner field names the resolved executor)."""
+    lbl = report.get("winner_label")
+    if lbl is None or not evidence:
+        return None
+    return f"t_{lbl}_s"
+
+
+def run_crossover(args) -> tuple[list, list]:
+    scale = 2 if args.config.endswith("_quick") else 1
+    rows = []
+    print(f"== N-way auto_tuned crossover ladder ({args.config}) ==")
+    for l in crossover_layers(scale):
+        r = bench_layer_crossover(l, args.iters, args.warmup)
+        r.update(layer=l["name"], ltype=_layer_type(l["kh"], l["kw"]),
+                 shape=f"{l['h']}x{l['w']}x{l['c_in']}->{l['c_out']}"
+                       + (f"/g{l['groups']}" if l.get("groups", 1) > 1
+                          else ""))
+        rows.append(r)
+        print(f"{l['name']:14s} {r['ltype']:4s} {r['shape']:24s} "
+              f"-> {r['algorithm']:22s} "
+              f"policy={r['t_policy_s']*1e3:8.2f}ms "
+              f"best_single={r['t_best_single_s']*1e3 if r['t_best_single_s'] else 0:8.2f}ms "
+              f"({r['decision']})", flush=True)
+    winners = defaultdict(int)
+    for r in rows:
+        winners[r["algorithm"]] += 1
+    summary = [{
+        "config": args.config, "n_layers": len(rows),
+        "winners": dict(winners),
+        "n_measured": sum(r["decision"] == "measured" for r in rows),
+        "policy_matches_best_all": bool(all(r["policy_matches_best"]
+                                            for r in rows)),
+    }]
+    print(f"\n== crossover summary ==")
+    print(f"winners: {dict(winners)}  measured: {summary[0]['n_measured']}"
+          f"/{len(rows)}  policy matches best single algorithm on all "
+          f"layers: {summary[0]['policy_matches_best_all']}")
+    return rows, summary
+
+
 def bench_layer_pallas(layer: dict, iters: int, warmup: int) -> dict:
     """Streamed (halo-streaming kernel, fused bias+relu epilogue) vs the
     pre-streaming planned Pallas path (materialized tiles + un-tiling pass +
@@ -522,18 +610,25 @@ def main(argv=None):
                     help="0 = all unique suitable layers")
     ap.add_argument("--config", default="paper",
                     choices=["paper", "vgg_style", "vgg_style_quick",
-                             "mobilenet", "mobilenet_quick"],
+                             "mobilenet", "mobilenet_quick",
+                             "crossover", "crossover_quick"],
                     help="paper: Table-2 sweep over the five networks; "
                          "vgg_style[_quick]: streamed-vs-materialized "
                          "Pallas A/B on the VGG 3x3 stride-1 ladder; "
                          "mobilenet[_quick]: fused-vs-unfused separable-"
-                         "block A/B on the MobileNet-v1 stride-1 ladder")
+                         "block A/B on the MobileNet-v1 stride-1 ladder; "
+                         "crossover[_quick]: the N-way measured auto_tuned "
+                         "race (im2row/F(2,3)/F(4,3)/F(6,3)/FFT) over the "
+                         "filter-size x resolution x channel grid plus the "
+                         "VGG and MobileNet-v2 ladders (BENCH_PR6.json)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
 
     if args.config != "paper":
         if args.config.startswith("mobilenet"):
             rows, summary = run_mobilenet(args)
+        elif args.config.startswith("crossover"):
+            rows, summary = run_crossover(args)
         else:
             rows, summary = run_vgg_style(args)
         if args.out:

@@ -65,6 +65,56 @@ def row(r: dict) -> dict:
     }
 
 
+def conv_executor_rows(network: str = "vgg_style") -> list[dict]:
+    """Analytic roofline of the transform-domain conv executors over one
+    paper network: per suitable conv layer, the HBM-bytes/FLOPs models of
+    benchmarks.common for the F(4,3) Winograd, F(6,3) and rfft2 executors,
+    reduced to t_compute / t_memory / bottleneck under the v5e constants.
+    Pure analysis -- builds plan specs, runs nothing."""
+    from benchmarks import common
+    from repro.core import plan as planlib
+
+    models = {
+        "winograd": (common.winograd_domain_flops,
+                     common.winograd_domain_hbm_bytes),
+        "winograd_f63": (common.winograd_domain_flops,
+                         common.winograd_domain_hbm_bytes),
+        "fft": (common.fft_flops, common.fft_hbm_bytes),
+    }
+    rows = []
+    for layer in common.conv_layer_inventory(network):
+        if not layer["suitable"] or layer["kh"] == 1:
+            continue
+        x_shape = (1, layer["h"], layer["w"], layer["c_in"])
+        w_shape = (layer["kh"], layer["kw"], layer["c_in"], layer["c_out"])
+        for alg, (flops_fn, bytes_fn) in models.items():
+            try:
+                spec = planlib._build_spec(x_shape, w_shape, "float32",
+                                           (1, 1), "SAME", alg, alg, None, 1)
+            except Exception:
+                continue  # executor does not cover this layer (e.g. 5x5 f63)
+            fl, by = flops_fn(spec), bytes_fn(spec)
+            t_c, t_m = fl / PEAK_FLOPS, by / HBM_BW
+            rows.append({"layer": layer["name"], "algorithm": alg,
+                         "flops": fl, "hbm_bytes": by,
+                         "intensity": fl / by,
+                         "t_compute_s": t_c, "t_memory_s": t_m,
+                         "bottleneck": "compute" if t_c >= t_m else "memory"})
+    return rows
+
+
+def print_conv_executor_table(network: str) -> list[dict]:
+    rows = conv_executor_rows(network)
+    print(f"== Conv-executor analytic roofline ({network}, v5e constants) ==")
+    print(f"{'layer':16s} {'algorithm':14s} {'GFLOP':>8s} {'MB':>8s} "
+          f"{'flop/B':>7s} {'bound':>8s}")
+    for d in rows:
+        print(f"{d['layer']:16s} {d['algorithm']:14s} "
+              f"{d['flops']/1e9:8.2f} {d['hbm_bytes']/1e6:8.1f} "
+              f"{d['intensity']:7.1f} {d['bottleneck']:>8s}")
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--results-dir", default="results")
@@ -72,7 +122,18 @@ def main(argv=None):
     ap.add_argument("--phase", default="baseline",
                     choices=["baseline", "optimized"])
     ap.add_argument("--out", default=None)
+    ap.add_argument("--conv-network", default=None,
+                    help="print the conv-executor analytic roofline for this "
+                         "paper network (e.g. vgg16) instead of the "
+                         "dry-run table")
     args = ap.parse_args(argv)
+
+    if args.conv_network:
+        rows = print_conv_executor_table(args.conv_network)
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(rows, f, indent=1)
+        return rows
 
     recs = load(args.results_dir, args.mesh, args.phase)
     rows = []

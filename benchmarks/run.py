@@ -21,6 +21,13 @@
       # compile() vs warm NetworkPlan.load() artifact, artifact size, a
       # fresh-process bitwise parity gate, and planned-vs-im2row
       # steady-state (BENCH_PR5.json is the committed run)
+  PYTHONPATH=src python -m benchmarks.run --json BENCH_PR6.json \
+      --config crossover
+      # the N-way measured auto_tuned race (im2row / F(2,3) / F(4,3) /
+      # F(6,3) / FFT) over the filter-size x resolution x channel
+      # crossover grid plus the VGG and MobileNet-v2 ladders, with the
+      # per-contender plan-time evidence and the end-to-end time of the
+      # chosen policy per layer (BENCH_PR6.json is the committed run)
 
 Every emitted BENCH_*.json is stamped with jax version, backend/device
 kind, git SHA and a UTC timestamp (benchmarks.common.bench_metadata), so
@@ -57,13 +64,17 @@ def main(argv=None) -> None:
                          "artifact, stamped with jax/backend/git-SHA "
                          "metadata, to this path")
     ap.add_argument("--config", default="vgg_style",
-                    choices=["vgg_style", "mobilenet", "compile"],
+                    choices=["vgg_style", "mobilenet", "compile",
+                             "crossover"],
                     help="which --json benchmark to run: vgg_style "
                          "(streamed vs materialized dense Winograd), "
                          "mobilenet (fused vs unfused separable blocks), "
-                         "or compile (whole-network cold-compile vs "
+                         "compile (whole-network cold-compile vs "
                          "warm-artifact startup + fresh-process parity "
-                         "via the graph compiler)")
+                         "via the graph compiler), or crossover (the "
+                         "N-way measured auto_tuned race over the "
+                         "filter x resolution x channel grid + VGG/MBv2 "
+                         "ladders -- BENCH_PR6.json)")
     args = ap.parse_args(argv)
 
     from benchmarks import (amortization, fast_fraction, per_layer, roofline,

@@ -59,7 +59,10 @@ from repro.core import plan as _plan
 from repro.core import registry
 
 ARTIFACT_FORMAT = "repro.network_plan"
-ARTIFACT_VERSION = 1
+# v2: conv layer metas gained the fft/winograd_f63 algorithms plus N-way
+# autotune evidence (winner/winner_tile and per-contender timings); v1
+# readers would mis-plan those layers, so the version gates them out.
+ARTIFACT_VERSION = 2
 
 #: IR ops that bind to a LayerPlan (everything else is structural/XLA-only).
 PLAN_OPS = ("conv2d", "conv1d", "separable", "inverted_residual")
@@ -717,10 +720,11 @@ class NetworkPlan:
             d = self.plans[node.id].describe()
             rows.append((node.id, d["kind"], f"`{d['executor']}`",
                          d["filter"], d["stride"], d["groups"], d["tile"],
+                         d.get("decision", "static"),
                          "x".join(map(str, shapes[node.id]))))
         return registry.markdown_table(
             ["layer", "kind", "executor", "filter", "stride", "groups",
-             "tile", "output"], rows)
+             "tile", "decision", "output"], rows)
 
     # ---- serialization ---------------------------------------------------
 

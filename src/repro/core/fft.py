@@ -1,0 +1,127 @@
+"""Tiled FFT (rfft2) convolution executor.
+
+"FFT Convolutions are Faster than Winograd on Modern CPUs" (PAPERS.md)
+shows the Winograd/FFT crossover is real and shape-dependent: FFT's
+transform cost per output point is O(log t) and *independent of the filter
+size*, so it wins on large filters and large spatial extents where
+F(4, 3)-class tiles amortize poorly. This module is that contender as a
+pure registry citizen: it declares a Capability in core/registry.py and
+plugs into plan/compile with zero compiler changes.
+
+The executor reuses the Winograd overlap tiling verbatim (the math is the
+same scheme with the polynomial transform swapped for the DFT -- see
+winograd.conv2d_fft_geometry): the input is cut into t x t tiles whose
+origins advance by m = t - k + 1, each tile is sent through rfft2, the
+channel reduction happens as a complex pointwise GEMM against the
+pre-transformed (conjugated) filter spectrum, and irfft2 brings each tile
+back to m x m valid outputs. Because the filter spectrum is conjugated,
+the circular theorem yields cross-correlation,
+
+    irfft2(rfft2(x_tile) * conj(rfft2(pad(w))))[i] = sum_n x[n + i] w[n],
+
+and the first m outputs per axis are wraparound-free (n + i <= t - 1 for
+i < m), so no overlap-add scatter is needed -- tiles write disjoint output
+blocks, the overlap-save dual of the textbook overlap-add formulation.
+
+The filter transform U = conj(rfft2(zero-padded w)) runs once at plan time
+(plan._bind_weights) and is persisted complex64 in NetworkPlan artifacts,
+exactly like the Winograd-domain filters.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import winograd as _wg
+
+
+class FFTGeometry(NamedTuple):
+    """Plan-time decisions of the FFT executor for one layer: the rfft2
+    transform length per axis and the valid outputs per tile
+    (m = fft - k + 1). Derived deterministically from the layer shape
+    (choose_fft_geometry), so artifacts only need to persist the output
+    tile to rebuild it."""
+
+    fft_h: int
+    fft_w: int
+    m_h: int
+    m_w: int
+
+
+#: Candidate transform lengths. Powers of two keep rfft2 on its fastest
+#: path and make the plan-time choice reproducible from the output tile
+#: alone (fft = m + k - 1 lands back on the same power of two).
+FFT_SIZES = (8, 16, 32)
+
+
+def _pick_axis(size: int, k: int) -> int:
+    """Transform length for one spatial axis: the smallest candidate that
+    covers the axis in a single tile (m = f - k + 1 >= size), else the
+    largest candidate with m >= 1. Single-tile when possible bounds edge
+    waste on small axes; otherwise the biggest tile amortizes the
+    O(f log f) transforms over the most outputs."""
+    for f in FFT_SIZES:
+        if f - k + 1 >= size:
+            return f
+    for f in reversed(FFT_SIZES):
+        if f - k + 1 >= 1:
+            return f
+    raise ValueError(f"filter size {k} exceeds every FFT candidate "
+                     f"length {FFT_SIZES}")
+
+
+def choose_fft_geometry(h: int, w: int, kh: int, kw: int,
+                        output_tile: tuple[int, int] | None = None
+                        ) -> FFTGeometry:
+    """Pick the per-axis transform lengths for an (h, w) layer with a
+    (kh, kw) filter. With `output_tile` given (artifact reload, or an
+    explicit request), the lengths are m + k - 1 -- the inverse of the
+    default choice, so saved plans rebuild bit-identically."""
+    if output_tile is not None:
+        m_h, m_w = output_tile
+        return FFTGeometry(m_h + kh - 1, m_w + kw - 1, m_h, m_w)
+    fh, fw = _pick_axis(h, kh), _pick_axis(w, kw)
+    return FFTGeometry(fh, fw, fh - kh + 1, fw - kw + 1)
+
+
+def fft_transform_filter(w: jax.Array, fft_h: int, fft_w: int) -> jax.Array:
+    """(kh, kw, C, M) -> (fft_h, fft_w//2+1, C, M) complex64: the conjugated
+    rfft2 spectrum of the zero-padded filter. The FFT analogue of
+    winograd.transform_filter_2d; runs once at plan time."""
+    kh, kw = w.shape[0], w.shape[1]
+    wp = jnp.pad(w.astype(jnp.float32),
+                 ((0, fft_h - kh), (0, fft_w - kw), (0, 0), (0, 0)))
+    return jnp.conj(jnp.fft.rfft2(wp, axes=(0, 1)))
+
+
+def fft_conv2d_pretransformed(x: jax.Array, u: jax.Array, fft: FFTGeometry,
+                              *, padding: _wg.Padding = "SAME",
+                              geometry: _wg.Conv2DGeometry | None = None,
+                              precision=None) -> jax.Array:
+    """NHWC conv with a plan-time pre-transformed filter spectrum `u`.
+
+    Same three phases as the Winograd executor: overlap tiling -> forward
+    transform (rfft2) -> complex channel GEMM -> inverse transform (irfft2)
+    -> crop. The per-tile valid region is [:m_h, :m_w]; tiles write
+    disjoint output blocks (overlap-save)."""
+    n, h, w, c = x.shape
+    kh = fft.fft_h - fft.m_h + 1
+    kw = fft.fft_w - fft.m_w + 1
+    if geometry is None:
+        geometry = _wg.conv2d_fft_geometry(h, w, kh, kw, fft.fft_h,
+                                           fft.fft_w, padding)
+    g = geometry
+    xp = jnp.pad(x.astype(jnp.float32),
+                 ((0, 0), (g.lo_h, g.hi_h), (g.lo_w, g.hi_w), (0, 0)))
+    tiles = _wg._extract_tiles_1d(xp, 1, fft.fft_h, fft.m_h, g.n_h)
+    tiles = _wg._extract_tiles_1d(tiles, 3, fft.fft_w, fft.m_w, g.n_w)
+    # (N, n_h, fft_h, n_w, fft_w, C) -> spectrum over the tile axes
+    v = jnp.fft.rfft2(tiles, axes=(2, 4))
+    y = jnp.einsum("nhawbc,abcm->nhawbm", v, u, precision=precision)
+    y = jnp.fft.irfft2(y, s=(fft.fft_h, fft.fft_w), axes=(2, 4))
+    y = y[:, :, :fft.m_h, :, :fft.m_w, :]
+    y = y.reshape(n, g.n_h * fft.m_h, g.n_w * fft.m_w, u.shape[-1])
+    return y[:, :g.out_h, :g.out_w, :].astype(x.dtype)

@@ -42,11 +42,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import fft as _fft
 from repro.core import im2col as _im2col
 from repro.core import registry
 from repro.core import winograd as _wg
 from repro.core.registry import LayerQuery
-from repro.core.transforms import DEFAULT_OUTPUT_TILE, CookToom, cook_toom
+from repro.core.transforms import (DEFAULT_OUTPUT_TILE, CookToom, cook_toom,
+                                   scaled_cook_toom)
 # Shared epilogue vocabulary, dependency-free (the heavy Pallas kernels in
 # repro.kernels stay optional, imported locally where needed).
 # EPILOGUE_ACTIVATIONS: the activations plan.apply(..., activation=) accepts
@@ -56,9 +58,9 @@ from repro.core.transforms import DEFAULT_OUTPUT_TILE, CookToom, cook_toom
 from repro.kernels.runtime import ACTIVATIONS as EPILOGUE_ACTIVATIONS
 from repro.kernels.runtime import epilogue_jnp as _epilogue_jnp
 
-Algorithm = Literal["auto", "auto_tuned", "winograd", "im2col",
-                    "pallas_winograd", "pallas_winograd_materialized",
-                    "pallas_im2col"]
+Algorithm = Literal["auto", "auto_tuned", "winograd", "winograd_f63", "fft",
+                    "im2col", "pallas_winograd",
+                    "pallas_winograd_materialized", "pallas_im2col"]
 #: The requestable algorithm names, derived from the Literal so the type,
 #: the resolver checks, and every unknown-algorithm error message agree.
 ALGORITHMS: tuple[str, ...] = typing.get_args(Algorithm)
@@ -144,8 +146,8 @@ class ConvSpec:
                                       # Capability.executor name): winograd |
                                       # winograd_1d | winograd_depthwise |
                                       # winograd_grouped | winograd_strided |
-                                      # im2col | pallas_winograd |
-                                      # pallas_depthwise |
+                                      # winograd_f63 | fft | im2col |
+                                      # pallas_winograd | pallas_depthwise |
                                       # pallas_winograd_strided |
                                       # pallas_depthwise_strided |
                                       # pallas_winograd_materialized |
@@ -165,6 +167,9 @@ class ConvSpec:
     blocks: tuple[int, ...] | None = None        # Pallas block sizes
     stream: Any = None                # StreamGeometry (halo blocking) of the
                                       # streaming pallas_winograd executor
+    fft: Any = None                   # fft.FFTGeometry of the rfft2 executor
+                                      # (re-derived from output_tile on
+                                      # artifact reload)
     autotune: tuple | None = None     # (("t_winograd_s", ...), ...) measured
                                       # evidence behind an auto_tuned choice
 
@@ -186,16 +191,35 @@ _CACHE_MISSES = 0
 # mismatch). Maintained by repro.core.compile via record_artifact_load.
 _ARTIFACT_HITS = 0
 _ARTIFACT_MISSES = 0
+# auto_tuned resolution accounting: 'measured' counts decisions backed by a
+# plan-time N-way timing race, 'fallback' counts auto_tuned resolutions made
+# WITHOUT measurement (heuristic under a jit trace / REPRO_PLAN_NO_MEASURE,
+# or the sole-candidate im2col case). Plans rebuilt from a NetworkPlan
+# artifact increment neither -- the zero-re-measurement contract of warm
+# loads is asserted against these counters in tests.
+_MEASURED = 0
+_FALLBACK = 0
 
 
 def plan_cache_info() -> dict:
     """{'hits', 'misses', 'size'} of the process-level spec cache, plus
     {'artifact_hits', 'artifact_misses'} of serialized-plan loads
-    (repro.core.compile.NetworkPlan.save/load warm starts)."""
+    (repro.core.compile.NetworkPlan.save/load warm starts) and
+    {'measured', 'fallback'} auto_tuned resolution counts (measured timing
+    race vs the no-measurement fallback path)."""
     return {"hits": _CACHE_HITS, "misses": _CACHE_MISSES,
             "size": len(_SPEC_CACHE),
             "artifact_hits": _ARTIFACT_HITS,
-            "artifact_misses": _ARTIFACT_MISSES}
+            "artifact_misses": _ARTIFACT_MISSES,
+            "measured": _MEASURED, "fallback": _FALLBACK}
+
+
+def _record_autotune_resolution(measured: bool) -> None:
+    global _MEASURED, _FALLBACK
+    if measured:
+        _MEASURED += 1
+    else:
+        _FALLBACK += 1
 
 
 def record_artifact_load(hit: bool) -> None:
@@ -208,12 +232,15 @@ def record_artifact_load(hit: bool) -> None:
 
 
 def clear_plan_cache() -> None:
-    global _CACHE_HITS, _CACHE_MISSES, _ARTIFACT_HITS, _ARTIFACT_MISSES
+    global _CACHE_HITS, _CACHE_MISSES, _ARTIFACT_HITS, _ARTIFACT_MISSES, \
+        _MEASURED, _FALLBACK
     _SPEC_CACHE.clear()
     _CACHE_HITS = 0
     _CACHE_MISSES = 0
     _ARTIFACT_HITS = 0
     _ARTIFACT_MISSES = 0
+    _MEASURED = 0
+    _FALLBACK = 0
 
 
 def _cache_enabled() -> bool:
@@ -349,6 +376,30 @@ def _build_spec(x_shape, w_shape, dtype, stride, padding, requested,
         return ConvSpec(algorithm="winograd", output_tile=(mh, mw),
                         ct_h=ct_h, ct_w=ct_w, geometry=geom, **base)
 
+    if resolved == "winograd_f63":
+        # Large-tile F(6x6, 3x3): same executor as "winograd" with the
+        # row-scaled transform set (transforms.scaled_cook_toom) that holds
+        # the fp32 error budget at t = 8.
+        ct_h, ct_w = scaled_cook_toom(6, kh), scaled_cook_toom(6, kw)
+        geom = _wg.conv2d_geometry(h, w, kh, kw, 6, 6, padding)
+        return ConvSpec(algorithm="winograd_f63", output_tile=(6, 6),
+                        ct_h=ct_h, ct_w=ct_w, geometry=geom, **base)
+
+    if resolved == "fft":
+        # rfft2 overlap-tiled executor: the transform lengths are the one
+        # plan-time decision; output_tile persists them (fft = m + k - 1),
+        # so artifact reloads rebuild the identical FFTGeometry.
+        fftg = _fft.choose_fft_geometry(
+            h, w, kh, kw,
+            output_tile=(tuple(output_tile)
+                         if isinstance(output_tile, (tuple, list))
+                         else ((output_tile, output_tile)
+                               if output_tile else None)))
+        geom = _wg.conv2d_fft_geometry(h, w, kh, kw, fftg.fft_h, fftg.fft_w,
+                                       padding)
+        return ConvSpec(algorithm="fft", output_tile=(fftg.m_h, fftg.m_w),
+                        geometry=geom, fft=fftg, **base)
+
     if resolved == "pallas_winograd":
         # Streaming executor: halo-blocking geometry (strip origins,
         # edge-block padding, VMEM budget -> block sizes) derived here, once.
@@ -399,8 +450,10 @@ def _bind_weights(spec: ConvSpec, w: jax.Array) -> jax.Array:
     """Transform the filter into the spec's execution domain. This is the
     once-per-plan weight work; ConvPlan.apply never touches it again."""
     kh, kw, c, mout = spec.w_shape     # c = C/groups (HWIO grouped filter)
-    if spec.algorithm == "winograd":
+    if spec.algorithm in ("winograd", "winograd_f63"):
         return _wg.transform_filter_2d(w, spec.ct_h, spec.ct_w)
+    if spec.algorithm == "fft":
+        return _fft.fft_transform_filter(w, spec.fft.fft_h, spec.fft.fft_w)
     if spec.algorithm == "winograd_1d":
         return _wg.transform_filter_1d(w.reshape(max(kh, kw), c, mout),
                                        spec.ct_w)
@@ -503,9 +556,14 @@ class ConvPlan:
             raise ValueError(f"unknown activation {activation!r}; "
                              f"expected one of {EPILOGUE_ACTIVATIONS}")
         alg = spec.algorithm
-        if alg == "winograd":
+        if alg in ("winograd", "winograd_f63"):
             y = _wg.winograd_conv2d_pretransformed(
                 x, self.u, spec.ct_h, spec.ct_w, padding=spec.padding,
+                geometry=spec.geometry, precision=self.precision)
+            return _epilogue_jnp(y, bias, activation)
+        if alg == "fft":
+            y = _fft.fft_conv2d_pretransformed(
+                x, self.u, spec.fft, padding=spec.padding,
                 geometry=spec.geometry, precision=self.precision)
             return _epilogue_jnp(y, bias, activation)
         if alg == "winograd_1d":
@@ -595,7 +653,8 @@ class ConvPlan:
         spec, g = self.spec, self.spec.geometry
         mout = spec.w_shape[-1]
         n = spec.x_shape[0]
-        if spec.algorithm in ("winograd", "winograd_depthwise",
+        if spec.algorithm in ("winograd", "winograd_f63", "fft",
+                              "winograd_depthwise",
                               "winograd_grouped", "winograd_strided",
                               "pallas_winograd", "pallas_depthwise",
                               "pallas_winograd_strided",
@@ -617,12 +676,22 @@ class ConvPlan:
     def describe(self) -> dict:
         spec = self.spec
         kh, kw = spec.w_shape[:2]
+        if spec.requested == "auto_tuned":
+            # an auto_tuned plan says HOW it was decided: "measured" carries
+            # the timing-race evidence (spec.autotune_report), "heuristic"
+            # means the static fallback decided (planning inside a jit
+            # trace, REPRO_PLAN_NO_MEASURE, or a sole-candidate layer).
+            decision = "measured" if spec.autotune is not None else \
+                "heuristic"
+        else:
+            decision = "static"
         return {"kind": "conv2d", "executor": spec.algorithm,
                 "requested": spec.requested, "filter": f"{kh}x{kw}",
                 "stride": f"{spec.stride[0]}x{spec.stride[1]}",
                 "groups": spec.groups,
                 "tile": ("x".join(map(str, spec.output_tile))
-                         if spec.output_tile else "-")}
+                         if spec.output_tile else "-"),
+                "decision": decision}
 
     def to_artifact(self) -> tuple[dict, dict]:
         """(meta, arrays): `meta` is the JSON-safe spec record from which
@@ -655,7 +724,9 @@ class ConvPlan:
                            meta["groups"], meta["layout"])
         if meta.get("autotune"):
             spec = dataclasses.replace(
-                spec, autotune=tuple((k, v) for k, v in meta["autotune"]))
+                spec, autotune=tuple(
+                    (k, tuple(v) if isinstance(v, list) else v)
+                    for k, v in meta["autotune"]))
         return cls(spec=spec, u=jnp.asarray(arrays["u"]))
 
 
@@ -675,29 +746,66 @@ def _time_apply(plan: ConvPlan, x, warmup: int = 1, iters: int = 3) -> float:
     return best
 
 
+def _autotune_contenders(x_shape, w_shape, stride, groups,
+                         output_tile, fast: str) -> list[tuple]:
+    """(label, executor, output_tile) contenders of the N-way auto_tuned
+    race: the registry-matched winograd-family executor at its default tile
+    (F(4,3) for dense 3x3), its small-tile F(2,3) variant, the large-tile
+    F(6,3) executor, the rfft2 executor, and the im2row baseline -- each
+    only where its Capability record covers the layer. Labels key the
+    persisted evidence (t_<label>_s)."""
+    kh, kw = w_shape[:2]
+    q = LayerQuery(kh=kh, kw=kw, stride=stride, groups=groups,
+                   c_in=x_shape[3], c_out=w_shape[3])
+    entries = [("winograd", fast, output_tile)]
+    if fast == "winograd" and output_tile is None and (kh, kw) == (3, 3):
+        entries.append(("winograd_f2", "winograd", 2))
+    if registry.supported("winograd_f63", q):
+        entries.append(("f63", "winograd_f63", None))
+    if registry.supported("fft", q):
+        entries.append(("fft", "fft", None))
+    entries.append(("im2col", "im2col", None))
+    return entries
+
+
 def _measure_autotune(x_shape, w_shape, dtype, stride, padding,
                       output_tile, groups: int = 1,
-                      fast: str = "winograd") -> tuple[str, tuple]:
-    """Time the fast-scheme contender vs im2col on the real shape; return
-    (winner, evidence). Runs once per shape per process (the spec cache
-    holds the result). `fast` is the winograd-family executor the registry
-    matched for this layer (grouped/depthwise/strided variants included);
-    the baseline is the (grouped) im2row GEMM."""
+                      fast: str = "winograd") -> tuple[str, Any, tuple]:
+    """Time every registry-eligible contender on the real layer shape;
+    return (winner executor, winner output_tile, evidence). Runs once per
+    shape per process (the spec cache holds the result) and the evidence
+    tuple is persisted into NetworkPlan artifacts, so warm loads never
+    re-measure. `fast` is the winograd-family executor the registry matched
+    for this layer (grouped/depthwise/strided variants included); the
+    legacy evidence keys t_winograd_s / t_im2col_s name that contender and
+    the (grouped) im2row baseline."""
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.standard_normal(x_shape), dtype)
     w = jnp.asarray(rng.standard_normal(w_shape)
                     / (w_shape[0] * w_shape[1]), dtype)
-    wino = fast
-    times = {}
-    for alg in (wino, "im2col"):
-        spec = _build_spec(x_shape, w_shape, str(jnp.dtype(dtype)), stride,
-                           padding, alg, alg, output_tile, groups)
-        times[alg] = _time_apply(ConvPlan(spec=spec, u=_bind_weights(spec, w)),
-                                 x)
-    winner = min(times, key=times.get)
-    evidence = (("t_winograd_s", times[wino]),
-                ("t_im2col_s", times["im2col"]), ("winner", winner))
-    return winner, evidence
+    times: dict[str, tuple[float, str, Any]] = {}
+    for label, alg, ot in _autotune_contenders(x_shape, w_shape, stride,
+                                               groups, output_tile, fast):
+        try:
+            spec = _build_spec(x_shape, w_shape, str(jnp.dtype(dtype)), stride,
+                               padding, alg, alg, ot, groups)
+            t = _time_apply(ConvPlan(spec=spec, u=_bind_weights(spec, w)), x)
+        except Exception:
+            if label in ("winograd", "im2col"):
+                raise  # the two contenders every eligible layer must have
+            continue
+        times[label] = (t, spec.algorithm, spec.output_tile)
+    win = min(times, key=lambda k: times[k][0])
+    _, winner, winner_tile = times[win]
+    evidence = [(f"t_{label}_s", times[label][0]) for label in times]
+    # winner: resolved executor; winner_label: the contender that won the
+    # race (the two differ when e.g. the F(2,3) tile variant of the same
+    # winograd executor wins).
+    evidence.append(("winner_label", win))
+    evidence.append(("winner", winner))
+    if winner_tile is not None:
+        evidence.append(("winner_tile", tuple(winner_tile)))
+    return winner, winner_tile, tuple(evidence)
 
 
 # ---------------------------------------------------------------------------
@@ -790,24 +898,30 @@ def plan_conv2d(
         _CACHE_MISSES += 1
         fast = registry.best_fast(query)
         autotune = None
+        build_tile = output_tile
         if algorithm == "auto":
             resolved = registry.select_auto(query).executor
         elif algorithm == "auto_tuned":
             if fast is None:
                 resolved = "im2col"
+                _record_autotune_resolution(measured=False)
             elif _measure_allowed():
-                resolved, autotune = _measure_autotune(
+                resolved, tuned_tile, autotune = _measure_autotune(
                     x_shape, w_shape, dtype_str, stride, padding, output_tile,
                     groups, fast=fast.executor)
+                if tuned_tile is not None:
+                    build_tile = tuned_tile
+                _record_autotune_resolution(measured=True)
             else:
                 resolved = fast.executor if winograd_amortizes(
                     h, wdt, kh, kw, c, padding, groups, stride) else "im2col"
+                _record_autotune_resolution(measured=False)
         else:
             # concrete algorithm families: the registry either yields the
             # declared executor or raises the capability-enumerating error.
             resolved = registry.resolve(algorithm, query).executor
         spec = _build_spec(x_shape, w_shape, dtype_str, stride, padding,
-                           algorithm, resolved, output_tile, groups,
+                           algorithm, resolved, build_tile, groups,
                            data_format)
         if autotune is not None:
             spec = dataclasses.replace(spec, autotune=autotune)

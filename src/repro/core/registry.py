@@ -195,6 +195,20 @@ CAPABILITIES: tuple[Capability, ...] = (
          group_kinds=("dense", "grouped", "depthwise"), cost_hint=1.5,
          note="stride-2 via transform-domain phase decomposition (4 phase "
               "sub-convolutions sharing one inverse transform)"),
+    # -- large-tile F(6,3) winograd (own family: a distinct accuracy/speed
+    #    point the measured auto_tuned policy races against F(2,3)/F(4,3)) --
+    _cap("winograd_f63", "winograd_f63", strides=_S1,
+         filter_sizes=frozenset({3}), axis_kinds=("two_d",),
+         group_kinds=("dense",), cost_hint=0.9,
+         note="F(6x6, 3x3) with power-of-two row-scaled transforms: 2.25x "
+              "fewer point-GEMM flops than F(4,3), fp32 error held to "
+              "transforms.F63_FP32_ERROR_BUDGET"),
+    # -- tiled FFT (rfft2) family ------------------------------------------
+    _cap("fft", "fft", strides=_S1, filter_sizes=None,
+         axis_kinds=("two_d",), group_kinds=("dense",), cost_hint=3.0,
+         note="overlap-tiled rfft2 executor; transform cost per output is "
+              "O(log t), independent of filter size (plan-time conjugated "
+              "filter spectrum)"),
     # -- im2row GEMM baseline ----------------------------------------------
     _cap("im2col", "im2col", strides=None, filter_sizes=None,
          axis_kinds=("pointwise", "single_axis", "two_d"),

@@ -27,6 +27,7 @@ every variant used by the system (no hand-copied literature matrices).
 from __future__ import annotations
 
 import functools
+import math
 from fractions import Fraction
 from typing import NamedTuple, Sequence
 
@@ -132,6 +133,40 @@ def cook_toom(m: int, r: int) -> CookToom:
     AT = [[E_m[j][i] for j in range(t)] for i in range(m)]   # E_m^T
     return CookToom(m=m, r=r, t=t, at_rows=_to_rows(AT), g_rows=_to_rows(E_r),
                     bt_rows=_to_rows(BT))
+
+
+@functools.lru_cache(maxsize=None)
+def scaled_cook_toom(m: int, r: int) -> CookToom:
+    """F(m, r) with per-evaluation-point row scaling (Barabasz et al.).
+
+    Large variants such as F(6, 3) mix very small and very large entries in
+    B^T, so the fp32 input transform loses relative precision on the rows
+    with large dynamic range. Scaling each B^T row p by the power of two
+    nearest its max-abs entry -- and compensating exactly by the inverse
+    scale on the matching G row -- leaves the bilinear identity unchanged
+    (the pointwise product (G g)_p * (B^T d)_p is scale-invariant) while
+    equalizing row magnitudes. Power-of-two scales only shift the exponent,
+    so the stored matrices stay correctly rounded and the compensation is
+    bit-exact in floating point.
+    """
+    base = cook_toom(m, r)
+    bt, g = [list(r_) for r_ in base.bt_rows], [list(r_) for r_ in base.g_rows]
+    for p in range(base.t):
+        amax = max(abs(v) for v in bt[p])
+        if amax == 0:
+            continue
+        s = 2.0 ** round(math.log2(amax))
+        bt[p] = [v / s for v in bt[p]]
+        g[p] = [v * s for v in g[p]]
+    return CookToom(m=base.m, r=base.r, t=base.t, at_rows=base.at_rows,
+                    g_rows=tuple(tuple(row) for row in g),
+                    bt_rows=tuple(tuple(row) for row in bt))
+
+
+#: fp32 relative-error budget (max-norm, vs a float64 direct oracle) the
+#: scaled F(6, 3) executor must hold, including on adversarial
+#: large-magnitude filters. Asserted in tests/test_fft_f63.py.
+F63_FP32_ERROR_BUDGET = 5e-4
 
 
 def transform_filter_1d(ct: CookToom, g: np.ndarray) -> np.ndarray:

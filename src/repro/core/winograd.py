@@ -112,6 +112,21 @@ def conv2d_geometry(h: int, w: int, kh: int, kw: int, mh: int, mw: int,
     return Conv2DGeometry(lo_h, hi_h, nh, lo_w, hi_w, nw, out_h, out_w)
 
 
+def conv2d_fft_geometry(h: int, w: int, kh: int, kw: int, fft_h: int,
+                        fft_w: int, padding: Padding) -> Conv2DGeometry:
+    """Tiling geometry for the FFT executor (core/fft.py).
+
+    The overlap tiling of the FFT path is the *same* scheme as Winograd's:
+    a transform length t yields m = t - k + 1 valid outputs per tile, and
+    consecutive tile origins advance by m. So the FFT geometry is exactly
+    conv2d_geometry with the output tile set to fft - k + 1 per axis; the
+    padded extent n_tiles * m + k - 1 matches the last tile's fft window and
+    the surplus outputs are cropped after the inverse transform, identically
+    to the Winograd path."""
+    return conv2d_geometry(h, w, kh, kw, fft_h - kh + 1, fft_w - kw + 1,
+                           padding)
+
+
 def strided_out_size(size: int, k: int, padding: Padding) -> int:
     """Output extent of one stride-2 axis (lax conventions) -- the ONE place
     this formula lives; the strided geometry and the plan-time tile chooser

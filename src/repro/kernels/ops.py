@@ -389,6 +389,57 @@ def im2col_conv2d(
 
 
 # ---------------------------------------------------------------------------
+# Transform-domain contenders of the measured auto_tuned race
+# ---------------------------------------------------------------------------
+
+def fft_conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    padding: _wg.Padding = "SAME",
+    bias: jax.Array | None = None,
+    activation: str = "none",
+) -> jax.Array:
+    """Overlap-tiled rfft2 convolution (unplanned compatibility path).
+
+    Derives the tile geometry and the conjugated filter spectrum inline,
+    then runs the planned executor (core.fft.fft_conv2d_pretransformed).
+    Plan once with plan_conv2d(algorithm="fft") to pre-transform the filter
+    and skip the derivation on every call.
+    """
+    from repro.core import fft as _fft
+    n, h, wdt, c = x.shape
+    kh, kw = w.shape[0], w.shape[1]
+    fftg = _fft.choose_fft_geometry(h, wdt, kh, kw)
+    u = _fft.fft_transform_filter(w, fftg.fft_h, fftg.fft_w)
+    y = _fft.fft_conv2d_pretransformed(x, u, fftg, padding=padding)
+    return _epilogue_jnp(y, bias, activation)
+
+
+def winograd_f63_conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    padding: _wg.Padding = "SAME",
+    bias: jax.Array | None = None,
+    activation: str = "none",
+) -> jax.Array:
+    """Large-tile F(6x6, 3x3) convolution with the power-of-two row-scaled
+    transforms (unplanned compatibility path; 3x3 stride-1 only). Plan once
+    with plan_conv2d(algorithm="winograd_f63") to pre-transform the filter.
+    """
+    from repro.core.transforms import scaled_cook_toom
+    kh, kw = w.shape[0], w.shape[1]
+    if (kh, kw) != (3, 3):
+        raise ValueError(f"winograd_f63 covers 3x3 filters only, got "
+                         f"{kh}x{kw}")
+    ct_h, ct_w = scaled_cook_toom(6, 3), scaled_cook_toom(6, 3)
+    u = _wg.transform_filter_2d(w, ct_h, ct_w)
+    y = _wg.winograd_conv2d_pretransformed(x, u, ct_h, ct_w, padding=padding)
+    return _epilogue_jnp(y, bias, activation)
+
+
+# ---------------------------------------------------------------------------
 # Depthwise causal Cook-Toom conv1d (Mamba short conv)
 # ---------------------------------------------------------------------------
 

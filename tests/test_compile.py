@@ -363,6 +363,51 @@ def test_loaded_plan_performs_zero_filter_transform_ops(rng, tmp_path,
         assert not (len(shape) == 4 and shape[0] == shape[1] == 3), shape
 
 
+def test_fresh_process_warm_load_performs_zero_measurements(rng, tmp_path):
+    """Acceptance gate for the measured auto_tuned policy: a saved
+    auto_tuned NetworkPlan reloads in a FRESH python process with every
+    measured per-layer winner intact and ZERO re-measurement -- the
+    measured/fallback resolution counters stay at 0 after load()."""
+    import subprocess
+    import sys
+
+    specs = [cnn.Conv("a", 3, 3, 8), cnn.Conv("b", 3, 3, 16)]
+    params = cnn.init_cnn(jax.random.key(0), specs, 3, res=24)
+    net = compile_network(params, specs, res=24, algorithm="auto_tuned")
+    path = str(tmp_path / "net.npz")
+    net.save(path)
+    tuned = {k: p.spec for k, p in net.items()
+             if getattr(getattr(p, "spec", None), "requested", None)
+             == "auto_tuned"}
+    assert tuned and all(s.autotune is not None for s in tuned.values())
+    winners = {k: s.algorithm for k, s in tuned.items()}
+
+    script = (
+        "import json\n"
+        "from repro.core.compile import NetworkPlan\n"
+        "from repro.core.plan import plan_cache_info\n"
+        f"net = NetworkPlan.load({path!r})\n"
+        "info = plan_cache_info()\n"
+        "tuned = {k: p for k, p in net.items()\n"
+        "         if getattr(getattr(p, 'spec', None), 'requested', None)\n"
+        "         == 'auto_tuned'}\n"
+        "print(json.dumps({\n"
+        "    'measured': info['measured'], 'fallback': info['fallback'],\n"
+        "    'winners': {k: p.spec.algorithm for k, p in tuned.items()},\n"
+        "    'decisions': {k: p.describe()['decision']\n"
+        "                  for k, p in tuned.items()}}))\n")
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env = dict(os.environ, PYTHONPATH=src)
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr
+    got = json.loads(out.stdout.strip().splitlines()[-1])
+    assert got["measured"] == 0 and got["fallback"] == 0
+    assert got["winners"] == winners
+    assert all(d == "measured" for d in got["decisions"].values())
+
+
 # ---------------------------------------------------------------------------
 # describe(): the per-layer table, same generator as the README table
 # ---------------------------------------------------------------------------

@@ -1,0 +1,292 @@
+"""PR 6 executors and policy: the rfft2 (FFT) and large-tile F(6,3)
+executors vs the lax oracle, the F(6,3) fp32 error budget on adversarial
+filters, and the N-way measured auto_tuned race (evidence keys, decision
+provenance, measured/fallback counters)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fft as fftlib
+from repro.core import plan as planlib
+from repro.core import registry
+from repro.core.transforms import (F63_FP32_ERROR_BUDGET, cook_toom,
+                                   scaled_cook_toom)
+from repro.kernels import ops
+
+from conftest import rel_err
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+
+
+def lax_conv(x, w, padding="SAME", stride=(1, 1)):
+    return jax.lax.conv_general_dilated(
+        x, w, stride, padding, dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+# ---------------------------------------------------------------------------
+# transform construction
+# ---------------------------------------------------------------------------
+
+def test_scaled_cook_toom_preserves_bilinear_identity():
+    """Row scaling compensates exactly: scaled and unscaled F(6,3) compute
+    the same correlation in float64."""
+    base, sc = cook_toom(6, 3), scaled_cook_toom(6, 3)
+    rng = np.random.default_rng(0)
+    d, g = rng.standard_normal(base.t), rng.standard_normal(3)
+    want = base.AT @ ((base.G @ g) * (base.BT @ d))
+    got = sc.AT @ ((sc.G @ g) * (sc.BT @ d))
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+def test_scaled_cook_toom_equalizes_bt_row_magnitudes():
+    """Every scaled B^T row has max-abs in [1/sqrt(2), sqrt(2)) -- the
+    power-of-two scale nearest the original row max."""
+    sc = scaled_cook_toom(6, 3)
+    for row in sc.BT:
+        amax = np.max(np.abs(row))
+        assert 2 ** -0.5 <= amax < 2 ** 0.5 + 1e-12
+
+
+def test_fft_geometry_round_trips_through_output_tile():
+    """Artifact reload rebuilds the identical FFTGeometry from the output
+    tile alone (fft = m + k - 1 lands back on the same power of two)."""
+    for h, w, k in [(14, 14, 3), (56, 56, 3), (28, 20, 5), (17, 13, 7)]:
+        g = fftlib.choose_fft_geometry(h, w, k, k)
+        assert g.fft_h in fftlib.FFT_SIZES and g.fft_w in fftlib.FFT_SIZES
+        re = fftlib.choose_fft_geometry(h, w, k, k,
+                                        output_tile=(g.m_h, g.m_w))
+        assert re == g
+
+
+# ---------------------------------------------------------------------------
+# parity vs the lax oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("h,w", [(7, 7), (13, 9), (21, 17), (33, 33)])
+@pytest.mark.parametrize("k", [3, 5])
+@pytest.mark.parametrize("padding", ["SAME", "VALID"])
+def test_fft_matches_lax_odd_sizes(rng, h, w, k, padding):
+    if padding == "VALID" and (h < k or w < k):
+        return
+    x = jnp.asarray(rng.standard_normal((2, h, w, 5)), jnp.float32)
+    wt = jnp.asarray(rng.standard_normal((k, k, 5, 7)) / k, jnp.float32)
+    got = planlib.plan_conv2d(x.shape, wt, algorithm="fft",
+                              padding=padding)(x)
+    want = lax_conv(x, wt, padding)
+    assert got.shape == want.shape
+    assert rel_err(got, want) < 1e-5
+
+
+@pytest.mark.parametrize("h,w", [(7, 7), (13, 9), (21, 17), (33, 33)])
+@pytest.mark.parametrize("padding", ["SAME", "VALID"])
+def test_f63_matches_lax_odd_sizes(rng, h, w, padding):
+    x = jnp.asarray(rng.standard_normal((2, h, w, 5)), jnp.float32)
+    wt = jnp.asarray(rng.standard_normal((3, 3, 5, 7)) / 3, jnp.float32)
+    p = planlib.plan_conv2d(x.shape, wt, algorithm="winograd_f63",
+                            padding=padding)
+    assert p.spec.output_tile == (6, 6)
+    got = p(x)
+    want = lax_conv(x, wt, padding)
+    assert got.shape == want.shape
+    assert rel_err(got, want) < 1e-4
+
+
+@pytest.mark.parametrize("alg", ["fft", "winograd_f63"])
+@pytest.mark.parametrize("activation", ["relu", "gelu", "relu6"])
+def test_new_executors_fuse_bias_and_activation(rng, alg, activation):
+    x = jnp.asarray(rng.standard_normal((1, 15, 11, 4)), jnp.float32)
+    wt = jnp.asarray(rng.standard_normal((3, 3, 4, 6)) / 3, jnp.float32)
+    b = jnp.asarray(rng.standard_normal(6), jnp.float32)
+    got = planlib.plan_conv2d(x.shape, wt, algorithm=alg)(
+        x, bias=b, activation=activation)
+    want = lax_conv(x, wt) + b
+    want = {"relu": jax.nn.relu, "gelu": jax.nn.gelu,
+            "relu6": lambda v: jnp.clip(v, 0, 6)}[activation](want)
+    assert rel_err(got, want) < 1e-4
+
+
+@pytest.mark.parametrize("fn", [ops.fft_conv2d, ops.winograd_f63_conv2d])
+def test_unplanned_ops_wrappers_match_lax(rng, fn):
+    x = jnp.asarray(rng.standard_normal((1, 19, 14, 3)), jnp.float32)
+    wt = jnp.asarray(rng.standard_normal((3, 3, 3, 5)) / 3, jnp.float32)
+    b = jnp.asarray(rng.standard_normal(5), jnp.float32)
+    got = fn(x, wt, bias=b, activation="relu")
+    want = jax.nn.relu(lax_conv(x, wt) + b)
+    assert rel_err(got, want) < 1e-4
+
+
+def test_f63_ops_wrapper_rejects_non_3x3(rng):
+    x = jnp.zeros((1, 8, 8, 2), jnp.float32)
+    wt = jnp.zeros((5, 5, 2, 2), jnp.float32)
+    with pytest.raises(ValueError, match="3x3"):
+        ops.winograd_f63_conv2d(x, wt)
+
+
+if _HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(h=st.integers(5, 24).filter(lambda v: v % 2 == 1),
+           w=st.integers(5, 24).filter(lambda v: v % 2 == 1),
+           c=st.integers(1, 6), mo=st.integers(1, 6),
+           k=st.sampled_from([3, 5]),
+           padding=st.sampled_from(["SAME", "VALID"]),
+           seed=st.integers(0, 2**31 - 1))
+    def test_fft_property_sweep(h, w, c, mo, k, padding, seed):
+        if padding == "VALID" and (h < k or w < k):
+            return
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((1, h, w, c)), jnp.float32)
+        wt = jnp.asarray(rng.standard_normal((k, k, c, mo)) / k, jnp.float32)
+        got = ops.fft_conv2d(x, wt, padding=padding)
+        assert rel_err(got, lax_conv(x, wt, padding)) < 1e-5
+
+    @settings(max_examples=25, deadline=None)
+    @given(h=st.integers(5, 24).filter(lambda v: v % 2 == 1),
+           w=st.integers(5, 24).filter(lambda v: v % 2 == 1),
+           c=st.integers(1, 6), mo=st.integers(1, 6),
+           padding=st.sampled_from(["SAME", "VALID"]),
+           seed=st.integers(0, 2**31 - 1))
+    def test_f63_property_sweep(h, w, c, mo, padding, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((1, h, w, c)), jnp.float32)
+        wt = jnp.asarray(rng.standard_normal((3, 3, c, mo)) / 3, jnp.float32)
+        got = ops.winograd_f63_conv2d(x, wt, padding=padding)
+        assert rel_err(got, lax_conv(x, wt, padding)) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# F(6,3) fp32 error budget on adversarial filters
+# ---------------------------------------------------------------------------
+
+def _direct_conv_f64(x, w):
+    """float64 SAME-padding direct conv oracle (numpy)."""
+    n, h, wd, c = x.shape
+    kh, kw, _, m = w.shape
+    xp = np.pad(x.astype(np.float64),
+                ((0, 0), (kh // 2, kh // 2), (kw // 2, kw // 2), (0, 0)))
+    y = np.zeros((n, h, wd, m))
+    for i in range(kh):
+        for j in range(kw):
+            y += np.einsum("nhwc,cm->nhwm",
+                           xp[:, i:i + h, j:j + wd, :],
+                           w[i, j].astype(np.float64))
+    return y
+
+
+def test_f63_fp32_error_budget_on_adversarial_filters(rng):
+    """The scaled F(6,3) executor holds the declared fp32 budget on filters
+    with large magnitude and high dynamic range -- the inputs that stress
+    the wide-range B^T rows of large-tile Cook-Toom variants."""
+    x = jnp.asarray(rng.standard_normal((1, 24, 24, 8)), jnp.float32)
+    w = rng.standard_normal((3, 3, 8, 8))
+    w *= 10.0 ** rng.uniform(0, 3, size=w.shape)    # magnitudes 1..1000
+    wt = jnp.asarray(w, jnp.float32)
+    got = np.asarray(planlib.plan_conv2d(x.shape, wt,
+                                         algorithm="winograd_f63")(x))
+    want = _direct_conv_f64(np.asarray(x), np.asarray(wt))
+    err = np.max(np.abs(got - want)) / np.max(np.abs(want))
+    assert err < F63_FP32_ERROR_BUDGET, err
+
+
+# ---------------------------------------------------------------------------
+# N-way measured auto_tuned race
+# ---------------------------------------------------------------------------
+
+def test_registry_declares_the_new_families():
+    for fam in ("winograd_f63", "fft"):
+        assert fam in registry.FAMILIES
+        q = registry.as_query(3, 3, (1, 1), c_in=8, c_out=8)
+        assert registry.supported(fam, q)
+        # dense stride-1 only
+        assert not registry.supported(fam, registry.as_query(3, 3, (2, 2)))
+        assert not registry.supported(
+            fam, registry.as_query(3, 3, (1, 1), groups=8, c_in=8, c_out=8))
+
+
+def test_auto_tuned_races_all_eligible_contenders(rng):
+    x_shape = (1, 18, 18, 8)
+    wt = jnp.asarray(rng.standard_normal((3, 3, 8, 8)) / 3, jnp.float32)
+    p = planlib.plan_conv2d(x_shape, wt, algorithm="auto_tuned")
+    report = p.spec.autotune_report
+    assert report is not None
+    for key in ("t_winograd_s", "t_winograd_f2_s", "t_f63_s", "t_fft_s",
+                "t_im2col_s"):
+        assert report[key] > 0, key
+    assert report["winner"] == p.spec.algorithm
+    label_times = {k: v for k, v in report.items() if k.startswith("t_")}
+    assert report[f"t_{report['winner_label']}_s"] == min(label_times.values())
+    assert p.describe()["decision"] == "measured"
+
+
+def test_auto_tuned_five_filter_race_skips_f63(rng):
+    """5x5 layers have no F(6,3) contender (filter_sizes={3}) but do race
+    the FFT executor."""
+    x_shape = (1, 16, 16, 4)
+    wt = jnp.asarray(rng.standard_normal((5, 5, 4, 4)) / 5, jnp.float32)
+    p = planlib.plan_conv2d(x_shape, wt, algorithm="auto_tuned")
+    report = p.spec.autotune_report
+    assert "t_f63_s" not in report
+    assert report["t_fft_s"] > 0
+
+
+def test_measured_and_fallback_counters(rng):
+    x_shape = (1, 12, 12, 4)
+    wt = jnp.asarray(rng.standard_normal((3, 3, 4, 4)) / 3, jnp.float32)
+    base = planlib.plan_cache_info()
+    assert base["measured"] == 0 and base["fallback"] == 0
+    planlib.plan_conv2d(x_shape, wt, algorithm="auto_tuned")
+    assert planlib.plan_cache_info()["measured"] == 1
+
+    traced_shape = (1, 14, 14, 4)    # not in the spec cache yet
+
+    @jax.jit
+    def fwd(x, w):
+        return planlib.plan_conv2d(traced_shape, w, algorithm="auto_tuned")(x)
+
+    fwd(jnp.zeros(traced_shape, jnp.float32),
+        jnp.asarray(rng.standard_normal((3, 3, 4, 4)) / 3, jnp.float32))
+    info = planlib.plan_cache_info()
+    assert info["fallback"] >= 1     # planning under trace cannot measure
+    assert info["measured"] == 1     # ...and did not re-measure
+    planlib.clear_plan_cache()
+    info = planlib.plan_cache_info()
+    assert info["measured"] == 0 and info["fallback"] == 0
+
+
+def test_static_algorithms_report_static_decision(rng):
+    wt = jnp.asarray(rng.standard_normal((3, 3, 4, 4)) / 3, jnp.float32)
+    for alg in ("winograd", "fft", "winograd_f63", "im2col"):
+        p = planlib.plan_conv2d((1, 12, 12, 4), wt, algorithm=alg)
+        assert p.describe()["decision"] == "static"
+        assert planlib.plan_cache_info()["measured"] == 0
+
+
+def test_auto_tuned_winner_tile_rebuilds_from_artifact(rng, tmp_path,
+                                                       monkeypatch):
+    """A measured plan round-trips through the ConvPlan artifact hooks with
+    the winner, its tile and the evidence intact, and without re-running
+    the filter transform or any measurement."""
+    x_shape = (1, 18, 18, 8)
+    x = jnp.asarray(rng.standard_normal(x_shape), jnp.float32)
+    wt = jnp.asarray(rng.standard_normal((3, 3, 8, 8)) / 3, jnp.float32)
+    p = planlib.plan_conv2d(x_shape, wt, algorithm="auto_tuned")
+    meta, arrays = p.to_artifact()
+    want = p(x)
+
+    def boom(*a, **k):
+        raise AssertionError("warm load must not measure or re-transform")
+
+    monkeypatch.setattr(planlib, "_measure_autotune", boom)
+    monkeypatch.setattr(planlib, "_bind_weights", boom)
+    p2 = planlib.ConvPlan.from_artifact(meta, arrays)
+    assert p2.spec.algorithm == p.spec.algorithm
+    assert p2.spec.output_tile == p.spec.output_tile
+    assert p2.spec.autotune_report == p.spec.autotune_report
+    assert p2.describe()["decision"] == "measured"
+    np.testing.assert_array_equal(np.asarray(p2(x)), np.asarray(want))

@@ -150,7 +150,7 @@ def test_auto_tuned_measures_once_and_caches_winner(rng):
     x_shape = (1, 20, 20, 8)
     w = jnp.asarray(rng.standard_normal((3, 3, 8, 8)) / 3, jnp.float32)
     p = plan_conv2d(x_shape, w, algorithm="auto_tuned")
-    assert p.algorithm in ("winograd", "im2col")
+    assert p.algorithm in ("winograd", "winograd_f63", "fft", "im2col")
     report = p.spec.autotune_report
     assert report is not None
     assert report["winner"] == p.algorithm
