@@ -28,6 +28,14 @@
       # crossover grid plus the VGG and MobileNet-v2 ladders, with the
       # per-contender plan-time evidence and the end-to-end time of the
       # chosen policy per layer (BENCH_PR6.json is the committed run)
+  PYTHONPATH=src python -m benchmarks.run --json BENCH_PR7.json \
+      --config serving
+      # the serving runtime under Poisson arrivals: p50/p99 latency +
+      # throughput per arrival rate over the bucketed batch plans, then
+      # one drill per injected fault class (executor raise, latency
+      # spike, corrupt artifact, queue overload) gated on zero dropped
+      # requests and zero incorrect responses vs the im2row oracle
+      # (BENCH_PR7.json is the committed run)
 
 Every emitted BENCH_*.json is stamped with jax version, backend/device
 kind, git SHA and a UTC timestamp (benchmarks.common.bench_metadata), so
@@ -65,25 +73,31 @@ def main(argv=None) -> None:
                          "metadata, to this path")
     ap.add_argument("--config", default="vgg_style",
                     choices=["vgg_style", "mobilenet", "compile",
-                             "crossover"],
+                             "crossover", "serving"],
                     help="which --json benchmark to run: vgg_style "
                          "(streamed vs materialized dense Winograd), "
                          "mobilenet (fused vs unfused separable blocks), "
                          "compile (whole-network cold-compile vs "
                          "warm-artifact startup + fresh-process parity "
-                         "via the graph compiler), or crossover (the "
+                         "via the graph compiler), crossover (the "
                          "N-way measured auto_tuned race over the "
                          "filter x resolution x channel grid + VGG/MBv2 "
-                         "ladders -- BENCH_PR6.json)")
+                         "ladders -- BENCH_PR6.json), or serving (the "
+                         "fault-tolerant batched serving runtime under "
+                         "Poisson arrivals + per-fault-class drills -- "
+                         "BENCH_PR7.json)")
     args = ap.parse_args(argv)
 
     from benchmarks import (amortization, fast_fraction, per_layer, roofline,
-                            startup, whole_network)
+                            serving, startup, whole_network)
 
     t0 = time.time()
 
     if args.json:
-        if args.config == "compile":
+        if args.config == "serving":
+            serving.main(["--out", args.json]
+                         + ([] if args.full else ["--smoke"]))
+        elif args.config == "compile":
             res = "224" if args.full else "96"
             iters = "3" if args.full else "2"
             startup.main(["--res", res, "--iters", iters, "--warmup", "1",

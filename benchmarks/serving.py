@@ -1,0 +1,294 @@
+"""Serving-runtime benchmark: latency/throughput under Poisson arrivals,
+with and without injected faults.
+
+Drives repro.runtime.serve.Server (bounded admission, bucketed dynamic
+batching, EDF deadlines, the supervisor degrade ladder) with a seeded
+Poisson open-loop client at several arrival rates, then repeats a run per
+deterministic fault class (repro.runtime.inject):
+
+  * clean sweep -- p50/p99 latency, throughput, and the bucket-batch
+    histogram at each arrival rate (low/medium/overload), so the artifact
+    records >= 3 exercised batch buckets;
+  * executor_raise -- a permanently failing layer executor: the ladder must
+    re-place it onto the im2row fallback with zero dropped requests and
+    every response matching the im2row oracle;
+  * latency_spike -- a straggling layer: StepTimer must flag it and the
+    supervisor evict it onto the fallback;
+  * corrupt_artifact -- a bit-flipped on-disk NetworkPlan: the per-array
+    sha256 digests must catch it at startup and recompile in place;
+  * overload -- a burst past queue_capacity: bounded rejection with a
+    retry_after hint, and every rejected request completes on resubmit.
+
+Every fault run asserts ZERO dropped in-flight requests (stats.in_flight
+== 0 after drain) and ZERO incorrect responses (parity vs the im2row
+oracle); the emitted JSON records both gates. BENCH_PR7.json in the repo
+root is the committed run; CI uploads BENCH_PR7_ci_<sha>.json per PR.
+
+  PYTHONPATH=src python -m benchmarks.serving --smoke --out BENCH_PR7.json
+  PYTHONPATH=src python -m benchmarks.run --json BENCH_PR7.json \
+      --config serving
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import bench_metadata
+from repro.core import compile as C
+from repro.models import cnn
+from repro.runtime import inject
+from repro.runtime.serve import QueueFullError, ServeConfig, Server
+
+TOL = 2e-3
+
+
+def specs_for(res: int):
+    return [cnn.Conv("c1", 3, 3, 16),
+            cnn.Conv("c2", 3, 3, 16),
+            cnn.Conv("c3", 3, 3, 32, stride=2),
+            cnn.Conv("c4", 3, 3, 32, relu=False)]
+
+
+def make_cfg(**kw) -> ServeConfig:
+    base = dict(buckets=(1, 2, 4, 8), queue_capacity=64, verbose=False,
+                backoff_base_s=0.002, backoff_cap_s=0.02)
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+def oracle_outputs(params, specs, res, inputs):
+    import jax.numpy as jnp
+    net = C.compile(params, specs, res=res, batch=1, algorithm="im2col")
+    return [np.asarray(net.apply(jnp.asarray(x[None])))[0] for x in inputs]
+
+
+def parity(results, oracle):
+    """(max_rel_err, n_incorrect) of answered (idx, y) pairs vs oracle."""
+    worst, bad = 0.0, 0
+    for idx, y in results:
+        ref = oracle[idx]
+        err = float(np.max(np.abs(y - ref)) / (np.max(np.abs(ref)) + 1e-9))
+        worst = max(worst, err)
+        bad += err >= TOL
+    return worst, bad
+
+
+def poisson_run(srv, inputs, *, rate: float, n: int, seed: int,
+                resubmit: bool = False, deadline_s: float | None = None):
+    """Open-loop Poisson client: n submissions at `rate` req/s (seeded
+    exponential inter-arrivals) drawing inputs from the oracle pool.
+    On QueueFullError: count the rejection and either drop the arrival
+    (clean sweep -- that's what bounded admission means) or honor
+    retry_after_s and resubmit until admitted (overload drill)."""
+    rng = np.random.default_rng(seed)
+    tickets, rejected, resubmits = [], 0, 0
+    t0 = time.perf_counter()
+    for _ in range(n):
+        time.sleep(rng.exponential(1.0 / rate))
+        idx = int(rng.integers(len(inputs)))
+        while True:
+            try:
+                tickets.append((idx, srv.submit(inputs[idx],
+                                                deadline_s=deadline_s)))
+                break
+            except QueueFullError as e:
+                rejected += 1
+                if not resubmit:
+                    break
+                time.sleep(max(e.retry_after_s, 1e-3))
+                resubmits += 1
+    results, lat = [], []
+    for idx, t in tickets:
+        try:
+            results.append((idx, t.result(timeout=300)))
+            lat.append(t.latency_s)
+        except (TimeoutError, RuntimeError):
+            pass                      # deadline-expired / cancelled tickets
+    span = time.perf_counter() - t0
+    row = {"rate_rps": rate, "offered": n, "admitted": len(tickets),
+           "rejected": rejected, "resubmits": resubmits,
+           "completed": len(results), "span_s": round(span, 3),
+           "throughput_rps": round(len(results) / span, 1)}
+    if lat:
+        row.update(
+            p50_ms=round(float(np.percentile(lat, 50)) * 1e3, 3),
+            p99_ms=round(float(np.percentile(lat, 99)) * 1e3, 3),
+            mean_ms=round(float(np.mean(lat)) * 1e3, 3))
+    return row, results
+
+
+def run_clean_sweep(params, specs, res, inputs, oracle, rates, n, seed):
+    rows = []
+    for rate in rates:
+        srv = Server(params, specs, res=res, algorithm="auto",
+                     config=make_cfg())
+        with srv:
+            row, results = poisson_run(srv, inputs, rate=rate, n=n,
+                                       seed=seed)
+        err, bad = parity(results, oracle)
+        s = srv.stats
+        row.update(bucket_batches=s.snapshot()["bucket_batches"],
+                   batches=s.batches, dropped=s.in_flight,
+                   parity_max_rel_err=round(err, 6), incorrect=bad)
+        rows.append(row)
+        print(f"  rate {rate:>6.0f}/s: p50 {row.get('p50_ms', 0):7.2f} ms  "
+              f"p99 {row.get('p99_ms', 0):7.2f} ms  "
+              f"tput {row['throughput_rps']:7.1f}/s  "
+              f"buckets {row['bucket_batches']}", flush=True)
+    return rows
+
+
+def fault_row(name, srv, row, results, oracle, extra=()):
+    err, bad = parity(results, oracle)
+    s = srv.stats.snapshot()
+    out = {"fault": name, **row, "parity_max_rel_err": round(err, 6),
+           "incorrect": bad, "dropped": s["in_flight"],
+           **{k: s[k] for k in ("retries", "replacements", "evictions",
+                                "stragglers", "recompiles",
+                                "executor_failures", "corrupt_artifacts",
+                                "corrupt_arrays", "failed", "timed_out")},
+           **dict(extra)}
+    print(f"  {name:>16}: completed {row['completed']}/{row['offered']}  "
+          f"dropped {out['dropped']}  incorrect {bad}  "
+          f"ladder(retries={out['retries']}, repl={out['replacements']}, "
+          f"evict={out['evictions']}, recompile={out['recompiles']})",
+          flush=True)
+    return out
+
+
+def run_faults(params, specs, res, inputs, oracle, rate, n, seed):
+    rows = []
+
+    # -- executor raise: permanent kernel failure mid-traffic -------------
+    srv = Server(params, specs, res=res, algorithm="auto", config=make_cfg())
+    with srv:
+        inject.install_on_server(srv, inject.ExecutorRaise("c2"))
+        row, results = poisson_run(srv, inputs, rate=rate, n=n, seed=seed)
+    rows.append(fault_row("executor_raise", srv, row, results, oracle))
+
+    # -- latency spike: straggling layer -> eviction ----------------------
+    srv = Server(params, specs, res=res, algorithm="auto",
+                 config=make_cfg(straggler_window=16,
+                                 straggler_min_baseline=5,
+                                 straggler_evict_after=2))
+    with srv:
+        warm, _ = poisson_run(srv, inputs, rate=rate, n=n, seed=seed)
+        inject.install_on_server(
+            srv, inject.LatencySpike("c3", delay_s=0.25))
+        row, results = poisson_run(srv, inputs, rate=rate, n=n,
+                                   seed=seed + 1)
+    row["offered"] += warm["offered"]
+    row["completed"] += warm["completed"]
+    rows.append(fault_row("latency_spike", srv, row, results, oracle))
+
+    # -- corrupt artifact: bit-flip caught by sha256 at startup -----------
+    with tempfile.TemporaryDirectory() as art:
+        cfg = make_cfg()
+        Server(params, specs, res=res, algorithm="auto", config=cfg,
+               artifact_dir=art)                   # compile + save artifacts
+        flipped = inject.flip_bit(
+            os.path.join(art, f"plan_b{max(cfg.buckets)}.npz"))
+        srv = Server(params, specs, res=res, algorithm="auto", config=cfg,
+                     artifact_dir=art)
+        with srv:
+            row, results = poisson_run(srv, inputs, rate=rate, n=n,
+                                       seed=seed)
+        rows.append(fault_row(
+            "corrupt_artifact", srv, row, results, oracle,
+            extra=[("flipped_array", flipped),
+                   ("warm_starts", srv.stats.artifact_warm_starts),
+                   ("cold_starts", srv.stats.artifact_cold_starts)]))
+
+    # -- overload: burst past capacity -> bounded rejection + resubmit ----
+    srv = Server(params, specs, res=res, algorithm="auto",
+                 config=make_cfg(queue_capacity=8))
+    with srv:
+        row, results = poisson_run(srv, inputs, rate=rate * 20, n=n,
+                                   seed=seed, resubmit=True)
+    rows.append(fault_row("overload", srv, row, results, oracle,
+                          extra=[("queue_capacity", 8)]))
+    return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_PR7.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: fewer requests per rate")
+    ap.add_argument("--res", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=None,
+                    help="submissions per clean-sweep rate "
+                         "(default 60 smoke / 200 full)")
+    ap.add_argument("--rates", type=float, nargs="*", default=None,
+                    help="Poisson arrival rates, req/s (default: low / "
+                         "medium / overload)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    n = args.requests or (60 if args.smoke else 200)
+    rates = args.rates or [50.0, 200.0, 1000.0]
+    res = args.res
+    specs = specs_for(res)
+    params = cnn.init_cnn(jax.random.key(args.seed), specs, 3, res=res)
+    rng = np.random.default_rng(args.seed)
+    inputs = [rng.standard_normal((res, res, 3)).astype(np.float32)
+              for _ in range(8)]
+    print(f"serving benchmark: res={res}, {len(specs)} layers, "
+          f"{n} requests/rate, rates={rates}", flush=True)
+    oracle = oracle_outputs(params, specs, res, inputs)
+
+    t0 = time.time()
+    print("clean Poisson sweep:", flush=True)
+    clean = run_clean_sweep(params, specs, res, inputs, oracle, rates, n,
+                            args.seed)
+    buckets_hit = sorted({int(b) for row in clean
+                          for b in row["bucket_batches"]})
+    print("fault drills:", flush=True)
+    faults = run_faults(params, specs, res, inputs, oracle,
+                        rate=rates[len(rates) // 2], n=n, seed=args.seed)
+
+    zero_dropped = (all(r["dropped"] == 0 for r in clean)
+                    and all(r["dropped"] == 0 for r in faults))
+    zero_incorrect = (all(r["incorrect"] == 0 for r in clean)
+                      and all(r["incorrect"] == 0 for r in faults))
+    survived = {r["fault"]: bool(
+        r["replacements"] if r["fault"] == "executor_raise"
+        else r["evictions"] if r["fault"] == "latency_spike"
+        else r["corrupt_artifacts"] if r["fault"] == "corrupt_artifact"
+        else r["rejected"] and r["completed"] == r["offered"])
+        for r in faults}
+
+    out = {"meta": bench_metadata(),
+           "benchmark": "serving",
+           "config": {"res": res, "layers": [s.name for s in specs],
+                      "requests_per_rate": n, "rates_rps": rates,
+                      "buckets": list(make_cfg().buckets),
+                      "seed": args.seed, "smoke": args.smoke,
+                      "parity_tol": TOL},
+           "clean": clean,
+           "buckets_exercised": buckets_hit,
+           "faults": faults,
+           "fault_survived": survived,
+           "zero_dropped": zero_dropped,
+           "zero_incorrect": zero_incorrect}
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"\nbuckets exercised: {buckets_hit}; "
+          f"faults survived: {survived}; "
+          f"zero_dropped={zero_dropped} zero_incorrect={zero_incorrect}; "
+          f"wrote {args.out} in {time.time() - t0:.0f}s", flush=True)
+    if not (zero_dropped and zero_incorrect and all(survived.values())
+            and len(buckets_hit) >= 3):
+        raise SystemExit("serving fault gate FAILED (see JSON)")
+
+
+if __name__ == "__main__":
+    main()

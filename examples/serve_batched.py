@@ -1,5 +1,11 @@
-"""Batched serving example: continuous-batching decode over a smoke-size
-model with mixed-length requests.
+"""Batched TRANSFORMER-decode serving example: continuous batching over a
+smoke-size autoregressive model with mixed-length requests
+(repro.launch.serve -- slot-based decode ticks, not the conv runtime).
+
+For the conv side of the repo -- batched inference over compiled
+NetworkPlan artifacts with bounded admission, deadlines, and the
+fault-tolerant degrade ladder (repro.runtime.serve) -- see
+examples/serve_conv.py.
 
   PYTHONPATH=src python examples/serve_batched.py [--arch qwen2_5_3b]
 """

@@ -62,7 +62,12 @@ ARTIFACT_FORMAT = "repro.network_plan"
 # v2: conv layer metas gained the fft/winograd_f63 algorithms plus N-way
 # autotune evidence (winner/winner_tile and per-contender timings); v1
 # readers would mis-plan those layers, so the version gates them out.
-ARTIFACT_VERSION = 2
+# v3: the header carries per-array sha256 digests and load() verifies every
+# array against them, so silent storage corruption (bit rot, truncated
+# copies) raises ArtifactMismatchError -- and triggers the serving layer's
+# recompile-in-place path -- instead of producing wrong outputs. A v2
+# artifact has no digests to verify, so the version gates it out.
+ARTIFACT_VERSION = 3
 
 #: IR ops that bind to a LayerPlan (everything else is structural/XLA-only).
 PLAN_OPS = ("conv2d", "conv1d", "separable", "inverted_residual")
@@ -88,8 +93,31 @@ def warn_deprecated(api: str, replacement: str) -> None:
 
 class ArtifactMismatchError(ValueError):
     """A saved NetworkPlan artifact cannot be loaded by this build: wrong
-    format/version, stale capability registry, or dtype/layout mismatch.
-    The message states the mismatch and the fix (recompile + save)."""
+    format/version, stale capability registry, dtype/layout mismatch, or an
+    array that fails its recorded sha256 integrity digest (storage
+    corruption). The message states the mismatch and the fix (recompile +
+    save)."""
+
+
+class LayerExecutionError(RuntimeError):
+    """One graph node's executor raised during NetworkPlan.apply. Carries
+    `node_id` so a supervisor (repro.runtime.serve) can re-place exactly the
+    failing layer onto a fallback executor; the original exception is
+    chained as __cause__. Only raised when apply(annotate_errors=True)."""
+
+    def __init__(self, node_id: str, cause: BaseException):
+        super().__init__(f"layer {node_id!r} failed: {cause!r}")
+        self.node_id = node_id
+
+
+def _array_digest(a: np.ndarray) -> str:
+    """sha256 over dtype + shape + raw bytes of one artifact array -- the
+    per-array integrity record save() writes and load() verifies."""
+    a = np.ascontiguousarray(a)
+    h = hashlib.sha256()
+    h.update(f"{a.dtype}:{a.shape}".encode())
+    h.update(a.tobytes())
+    return h.hexdigest()
 
 
 # ---------------------------------------------------------------------------
@@ -617,7 +645,14 @@ class NetworkPlan:
     def __call__(self, x: jax.Array) -> jax.Array:
         return self.apply(x)
 
-    def apply(self, x: jax.Array) -> jax.Array:
+    def apply(self, x: jax.Array, *, layer_hook=None,
+              annotate_errors: bool = False) -> jax.Array:
+        """Execute the graph. `layer_hook(node_id, seconds)` is called after
+        every plan-bearing node with its synchronous wall time (the result
+        is block_until_ready'd first -- eager-mode only; do not jit an apply
+        with a hook installed). `annotate_errors=True` wraps any exception a
+        node raises in LayerExecutionError carrying the node id, so a
+        serving supervisor can re-place exactly the failing layer."""
         # Liveness: drop each activation after its last consumer runs, so
         # eager execution holds only the live frontier (as the spec-walk
         # interpreter did), not every feature map of the whole network.
@@ -628,6 +663,26 @@ class NetworkPlan:
         for node in self.graph[1:]:
             a = node.attrs
             v = env[node.inputs[0]] if node.inputs else None
+            t0 = (time.perf_counter()
+                  if layer_hook is not None and node.id in self.plans
+                  else None)
+            try:
+                y = self._eval_node(node, a, v, env, c)
+            except Exception as e:
+                if annotate_errors and not isinstance(e, LayerExecutionError):
+                    raise LayerExecutionError(node.id, e) from e
+                raise
+            if t0 is not None:
+                jax.block_until_ready(y)
+                layer_hook(node.id, time.perf_counter() - t0)
+            env[node.id] = y
+            for i in node.inputs:
+                remaining[i] -= 1
+                if remaining[i] == 0:
+                    del env[i]
+        return env[self.graph[-1].id]
+
+    def _eval_node(self, node, a, v, env, c):
             if node.op == "conv2d":
                 y = self.plans[node.id].apply(
                     v, bias=c.get(f"{node.id}.b"),
@@ -661,12 +716,7 @@ class NetworkPlan:
                 y = dense_head(v, c[f"{node.id}.w"], a["relu"])
             else:
                 raise ValueError(f"unknown IR op {node.op!r} ({node.id})")
-            env[node.id] = y
-            for i in node.inputs:
-                remaining[i] -= 1
-                if remaining[i] == 0:
-                    del env[i]
-        return env[self.graph[-1].id]
+            return y
 
     @property
     def out_shape(self) -> tuple[int, ...]:
@@ -679,6 +729,47 @@ class NetworkPlan:
         out = [a for p in self.plans.values()
                for a in _plan_weight_arrays(p)]
         return out + list(self.consts.values())
+
+    def replace_layer(self, node_id: str, params, *,
+                      algorithm: str = "im2col") -> Any:
+        """Re-place ONE plan-bearing node onto a different algorithm family
+        and re-bind its plan (and epilogue constants) from the raw params --
+        the serving supervisor's degrade path when a layer's executor
+        misbehaves. The replacement is a capability-registry placement,
+        exactly like compile-time place(): an algorithm the registry does
+        not cover for this layer raises the registry's resolution error.
+        Returns the freshly bound plan. `params` must be the pytree the
+        network was compiled from (checked against params_digest when the
+        plan carries one)."""
+        by_id = {n.id: n for n in self.graph}
+        node = by_id.get(node_id)
+        if node is None or node.op not in PLAN_OPS:
+            raise ValueError(
+                f"{node_id!r} is not a plan-bearing node; replaceable "
+                f"layers: {sorted(self.plans)}")
+        if self.params_digest is not None \
+                and params_digest(params) != self.params_digest:
+            raise ValueError(
+                "params do not match the weights this NetworkPlan was "
+                "compiled from (params_digest mismatch); re-placement from "
+                "foreign weights would silently change the served model")
+        shapes = infer_shapes(self.graph, self.input_shape)
+        a = node.attrs
+        if node.op == "conv2d":
+            c_in = shapes[node.inputs[0]][-1]
+            groups = c_in if a.get("depthwise") else a["groups"]
+            q = registry.as_query(a["kh"], a["kw"], tuple(a["stride"]),
+                                  groups=groups, c_in=c_in, c_out=a["c_out"])
+            if not registry.supported(algorithm, q):
+                raise registry.resolution_error(algorithm, q)
+            placement = {"algorithm": algorithm, "groups": groups}
+        else:
+            placement = {"algorithm": algorithm}
+        plans, consts = bind((node,), shapes, {node_id: placement}, params,
+                             dtype=self.dtype)
+        self.plans.update(plans)
+        self.consts.update(consts)
+        return self.plans[node_id]
 
     # ---- mapping compatibility (the old plan_cnn dict interface) ---------
 
@@ -755,6 +846,10 @@ class NetworkPlan:
                 arrays[f"plan:{nid}:{k}"] = v
         for k, v in self.consts.items():
             arrays[f"const:{k}"] = np.asarray(v)
+        # Per-array integrity digests: load() re-hashes every array against
+        # these, so silent corruption between save and load is detected
+        # instead of silently serving wrong outputs.
+        header["checksums"] = {k: _array_digest(v) for k, v in arrays.items()}
         arrays["__header__"] = np.array(json.dumps(header))
         # atomic emit: a crash mid-write must never leave a truncated file
         # at the final path (a corrupt artifact would poison every later
@@ -818,6 +913,20 @@ class NetworkPlan:
                 raise refuse(
                     f"{path} uses layout {header.get('layout')!r}, "
                     f"expected {expect_layout or '/'.join(registry.LAYOUTS)}")
+            checksums = header.get("checksums", {})
+            payload = [k for k in data.files if k != "__header__"]
+            missing = sorted(set(checksums) - set(payload))
+            if missing:
+                raise refuse(
+                    f"{path} is missing array(s) {missing} recorded in its "
+                    f"integrity header -- the artifact is truncated or "
+                    f"corrupt")
+            for k in payload:
+                expect = checksums.get(k)
+                if expect is None or _array_digest(data[k]) != expect:
+                    raise refuse(
+                        f"{path} array {k!r} fails its sha256 integrity "
+                        f"digest -- the artifact is corrupt on disk")
             graph = tuple(_node_from_json(d) for d in header["graph"])
             plans = {}
             for nid, meta in header["plans"].items():
@@ -832,6 +941,33 @@ class NetworkPlan:
                    input_shape=tuple(header["input_shape"]),
                    algorithm=header["algorithm"], dtype=header["dtype"],
                    params_digest=header.get("params_digest"))
+
+
+def verify_artifact(path: str) -> list[str]:
+    """Integrity-check a saved NetworkPlan artifact against its per-array
+    sha256 digests WITHOUT loading it as a plan. Returns the names of the
+    offending arrays (missing from the file, or failing their digest), or
+    `["__header__"]` when the file itself is unreadable / has no integrity
+    header -- an empty list means the artifact is intact. The serving
+    supervisor runs this to decide between 'executor bug' (artifact intact,
+    re-place the layer) and 'corrupt artifact' (recompile in place)."""
+    try:
+        with np.load(path, allow_pickle=False) as data:
+            if "__header__" not in data:
+                return ["__header__"]
+            header = json.loads(str(data["__header__"][()]))
+            checksums = header.get("checksums")
+            if not isinstance(checksums, dict):
+                return ["__header__"]
+            payload = [k for k in data.files if k != "__header__"]
+            bad = sorted(set(checksums) - set(payload))
+            for k in payload:
+                expect = checksums.get(k)
+                if expect is None or _array_digest(data[k]) != expect:
+                    bad.append(k)
+            return bad
+    except _ARTIFACT_FALLBACK_ERRORS:
+        return ["__header__"]
 
 
 # ---------------------------------------------------------------------------

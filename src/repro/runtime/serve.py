@@ -1,0 +1,563 @@
+"""Fault-tolerant batched serving runtime over compiled NetworkPlan artifacts.
+
+The deployment story PR 5/6 built -- compile once, ship the transformed
+weights as a versioned artifact, warm-start with zero filter transforms --
+stops at process startup. This module is the layer that drives those
+artifacts under load, the production path the paper's
+resource-constrained-CPU setting implies:
+
+  * **Admission with backpressure.** A bounded queue; `submit()` on a full
+    queue raises `QueueFullError` carrying `retry_after_s` (queue depth over
+    the measured batch service rate), so overload degrades into bounded
+    rejection instead of unbounded latency.
+  * **Dynamic batch formation into bucketed batch sizes.** Plan geometry is
+    batch-shape-specific, so the server compiles ONE NetworkPlan per bucket
+    (each warm-started from its own artifact when `artifact_dir` is given)
+    and pre-warms every bucket's executables before traffic arrives.
+    Arrivals coalesce for `batch_wait_s`, are dispatched
+    earliest-deadline-first, and are padded up to the smallest covering
+    bucket.
+  * **Deadlines.** Per-request deadlines; requests that expire while queued
+    are timeout-cancelled before dispatch (never executed), and responses
+    that land past their deadline are flagged `deadline_missed`.
+  * **The degrade ladder.** A supervisor wraps every batch execution:
+      1. in-place retries paced by exponential backoff with jitter
+         (`fault.Backoff`);
+      2. re-place the failing layer (identified via
+         `compile.LayerExecutionError.node_id`) onto the im2row fallback
+         through the capability registry -- across every bucket plan;
+      3. recompile in place from raw params when the rung above does not
+         cure it, counting per-array checksum findings against the on-disk
+         artifacts (`compile.verify_artifact`) -- the corrupt-artifact path.
+    The failing batch is retried after each rung, so in-flight requests
+    survive every recoverable fault; only a fully exhausted ladder answers
+    tickets with the error (failed, but never silently dropped).
+  * **Straggler eviction.** A `fault.StepTimer` per bucket flags outlier
+    batches; per-layer times (NetworkPlan.apply's layer_hook) attribute the
+    spike, and a layer that stragglers `straggler_evict_after` times is
+    evicted onto the fallback executor.
+
+Deterministic fault injection for all of this lives in
+`repro.runtime.inject`; the latency/throughput benchmark under Poisson
+arrivals (with and without injected faults) is `benchmarks/serving.py`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+import os
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compile as _compile
+from repro.core import plan as _plan
+from repro.runtime.fault import Backoff, StepTimer
+
+
+class QueueFullError(RuntimeError):
+    """Admission rejected: the bounded queue is full. `retry_after_s` is the
+    server's estimate of when capacity frees (queue depth over the measured
+    batch service rate) -- the client-visible backpressure signal."""
+
+    def __init__(self, retry_after_s: float, capacity: int):
+        super().__init__(
+            f"admission queue full (capacity {capacity}); retry in "
+            f"{retry_after_s:.3f}s")
+        self.retry_after_s = retry_after_s
+        self.capacity = capacity
+
+
+@dataclass
+class ServeConfig:
+    """Serving-runtime knobs (batching, admission, supervision)."""
+
+    buckets: Sequence[int] = (1, 2, 4, 8)
+    queue_capacity: int = 64
+    #: dynamic batch formation window: how long the scheduler lets a
+    #: non-full queue coalesce before dispatching what it has.
+    batch_wait_s: float = 0.002
+    default_deadline_s: float | None = None
+    #: supervisor rung 1: in-place retries before degrading.
+    max_retries: int = 2
+    backoff_base_s: float = 0.01
+    backoff_cap_s: float = 0.25
+    #: straggler detection (per-bucket StepTimer) + eviction policy.
+    straggler_sigma: float = 3.0
+    straggler_window: int = 32
+    straggler_min_baseline: int = 8
+    straggler_evict_after: int = 3
+    #: a layer is blamed for a straggler batch only when its time exceeds
+    #: this multiple of its own non-straggler EWMA baseline.
+    straggler_layer_ratio: float = 2.0
+    fallback_algorithm: str = "im2col"
+    ewma_alpha: float = 0.3
+    verbose: bool = True
+
+
+class Ticket:
+    """One admitted request: the Future-ish handle the client waits on.
+
+    Terminal states: 'ok' (result ready), 'timeout' (deadline expired while
+    queued), 'cancelled', 'error' (the supervisor's degrade ladder was
+    exhausted). Exactly one terminal transition wins; every admitted ticket
+    reaches one -- the zero-drop contract."""
+
+    def __init__(self, rid: int, x: np.ndarray, deadline: float | None,
+                 submitted_at: float):
+        self.rid = rid
+        self.x = x
+        self.deadline = deadline          # absolute perf_counter time
+        self.submitted_at = submitted_at
+        self.finished_at: float | None = None
+        self.deadline_missed = False
+        self.status = "pending"
+        self._value = None
+        self._error: BaseException | None = None
+        self._done = threading.Event()
+        self._once = threading.Lock()
+
+    def _finish(self, status: str, value=None,
+                error: BaseException | None = None) -> bool:
+        with self._once:
+            if self._done.is_set():
+                return False
+            self.status = status
+            self._value = value
+            self._error = error
+            self.finished_at = time.perf_counter()
+            self._done.set()
+            return True
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def cancel(self) -> bool:
+        """Best-effort cancel; wins only if the request was not already
+        dispatched into a batch."""
+        return self._finish("cancelled",
+                            error=RuntimeError(f"request {self.rid} "
+                                               f"cancelled"))
+
+    def result(self, timeout: float | None = None):
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"request {self.rid} still pending")
+        if self._error is not None:
+            raise self._error
+        return self._value
+
+    @property
+    def latency_s(self) -> float | None:
+        if self.finished_at is None:
+            return None
+        return self.finished_at - self.submitted_at
+
+
+@dataclass
+class ServerStats:
+    """Serving counters; `snapshot()` is the JSON-safe view benchmarks and
+    the CI gate read. `in_flight` is admitted minus every terminal state --
+    zero after a drained stop, or requests were dropped."""
+
+    admitted: int = 0
+    rejected: int = 0
+    completed: int = 0
+    timed_out: int = 0
+    cancelled: int = 0
+    failed: int = 0
+    deadline_missed: int = 0
+    batches: int = 0
+    bucket_batches: dict = field(default_factory=dict)
+    executor_failures: int = 0
+    retries: int = 0
+    replacements: int = 0
+    evictions: int = 0
+    stragglers: int = 0
+    recompiles: int = 0
+    corrupt_artifacts: int = 0
+    corrupt_arrays: int = 0
+    artifact_warm_starts: int = 0
+    artifact_cold_starts: int = 0
+
+    @property
+    def in_flight(self) -> int:
+        return (self.admitted - self.completed - self.timed_out
+                - self.cancelled - self.failed)
+
+    def snapshot(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["bucket_batches"] = {str(k): v
+                               for k, v in self.bucket_batches.items()}
+        d["in_flight"] = self.in_flight
+        return d
+
+
+class Server:
+    """Batched inference server over per-bucket compiled NetworkPlans.
+
+    `params` + `graph` describe the network exactly as for
+    `repro.core.compile.compile()`; the server compiles (or warm-starts
+    from `artifact_dir`) one plan per batch bucket. `start()` launches the
+    scheduler thread; `submit()` admits single examples of shape
+    `example_shape`; `stop()` drains. Usable as a context manager."""
+
+    def __init__(self, params, graph, *, res: int | None = None,
+                 c_in: int = 3, input_shape: Sequence[int] | None = None,
+                 algorithm: str = "auto", dtype=None,
+                 config: ServeConfig | None = None,
+                 artifact_dir: str | None = None):
+        self.config = cfg = config or ServeConfig()
+        self.params = params
+        self._graph_desc = graph
+        self._algorithm = algorithm
+        self._dtype = dtype
+        self._artifact_dir = artifact_dir
+        if artifact_dir is not None:
+            os.makedirs(artifact_dir, exist_ok=True)
+        if input_shape is not None:
+            self.example_shape = tuple(input_shape)[1:]
+        elif res is not None:
+            self.example_shape = (res, res, c_in)
+        else:
+            raise ValueError("Server needs res= (image networks) or "
+                             "input_shape= (leading dim is the batch)")
+        self.buckets = tuple(sorted(set(int(b) for b in cfg.buckets)))
+        if not self.buckets or self.buckets[0] < 1:
+            raise ValueError(f"buckets must be positive ints, got "
+                             f"{cfg.buckets}")
+        self.stats = ServerStats()
+        self.nets: dict[int, _compile.NetworkPlan] = {
+            b: self._compile_bucket(b) for b in self.buckets}
+        self.np_dtype = np.dtype(self.nets[self.buckets[0]].dtype)
+        # scheduling state
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._queue: list[Ticket] = []
+        self._rid = itertools.count()
+        self._stop = False
+        self._draining = True
+        self._thread: threading.Thread | None = None
+        # supervision state
+        self._batch_timer = {
+            b: StepTimer(window=cfg.straggler_window,
+                         sigma=cfg.straggler_sigma,
+                         min_baseline=cfg.straggler_min_baseline)
+            for b in self.buckets}
+        self._layer_ewma: dict[tuple[int, str], float] = {}
+        self._straggler_counts: dict[str, int] = {}
+        self._replaced: set[str] = set()
+        self._recompiled = False
+        self._service_ewma: float | None = None
+
+    # ---- plan lifecycle --------------------------------------------------
+
+    def _log(self, msg: str) -> None:
+        if self.config.verbose:
+            print(f"[serve] {msg}", flush=True)
+
+    def _artifact_path(self, bucket: int) -> str | None:
+        if self._artifact_dir is None:
+            return None
+        return os.path.join(self._artifact_dir, f"plan_b{bucket}.npz")
+
+    def _compile_bucket(self, bucket: int,
+                        force_cold: bool = False) -> _compile.NetworkPlan:
+        art = self._artifact_path(bucket)
+        if art is not None and os.path.exists(art):
+            if force_cold:
+                os.remove(art)
+            else:
+                bad = _compile.verify_artifact(art)
+                if bad:
+                    # detected by the per-array checksums: count it, then
+                    # let compile()'s load fallback recompile in place.
+                    self.stats.corrupt_artifacts += 1
+                    self.stats.corrupt_arrays += len(bad)
+                    self._log(f"bucket {bucket} artifact fails integrity "
+                              f"check ({len(bad)} arrays, e.g. {bad[0]!r}); "
+                              f"recompiling in place")
+        before = _plan.plan_cache_info()["artifact_hits"]
+        net = _compile.compile(self.params, self._graph_desc,
+                               input_shape=(bucket,) + self.example_shape,
+                               algorithm=self._algorithm, dtype=self._dtype,
+                               artifact=art)
+        if art is not None:
+            if _plan.plan_cache_info()["artifact_hits"] > before:
+                self.stats.artifact_warm_starts += 1
+            else:
+                self.stats.artifact_cold_starts += 1
+        return net
+
+    def warmup(self) -> None:
+        """Pre-warm every bucket: one zero batch per bucket plan, so every
+        per-layer executable is compiled and cached before traffic. Runs
+        under the same supervisor as live batches -- a faulty executor
+        discovered at warmup degrades instead of failing startup."""
+        for b in self.buckets:
+            x = jnp.zeros((b,) + self.example_shape, self.np_dtype)
+            y, _ = self._supervised_apply(b, jnp.asarray(x))
+            jax.block_until_ready(y)
+
+    # ---- lifecycle -------------------------------------------------------
+
+    def start(self, warmup: bool = True) -> "Server":
+        if self._thread is not None:
+            raise RuntimeError("server already started")
+        if warmup:
+            self.warmup()
+        self._stop = False
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="repro-serve-scheduler")
+        self._thread.start()
+        return self
+
+    def stop(self, drain: bool = True) -> None:
+        """Stop the scheduler. `drain=True` (default) serves everything
+        already admitted first; `drain=False` cancels the queue."""
+        with self._cv:
+            self._stop = True
+            self._draining = drain
+            if not drain:
+                for t in self._queue:
+                    if t.cancel():
+                        self.stats.cancelled += 1
+                self._queue.clear()
+            self._cv.notify_all()
+        if self._thread is not None:
+            self._thread.join(timeout=120)
+            self._thread = None
+
+    def __enter__(self) -> "Server":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # ---- admission -------------------------------------------------------
+
+    def submit(self, x, *, deadline_s: float | None = None) -> Ticket:
+        """Admit one example (shape `example_shape`). Raises QueueFullError
+        (with retry_after_s) when the bounded queue is full."""
+        x = np.asarray(x, self.np_dtype)
+        if x.shape != self.example_shape:
+            raise ValueError(f"expected example of shape "
+                             f"{self.example_shape}, got {x.shape}")
+        now = time.perf_counter()
+        dl = (deadline_s if deadline_s is not None
+              else self.config.default_deadline_s)
+        deadline = now + dl if dl is not None else None
+        with self._cv:
+            if self._stop:
+                raise RuntimeError("server is stopped")
+            if len(self._queue) >= self.config.queue_capacity:
+                self.stats.rejected += 1
+                raise QueueFullError(self._retry_after_locked(),
+                                     self.config.queue_capacity)
+            t = Ticket(next(self._rid), x, deadline, now)
+            self._queue.append(t)
+            self.stats.admitted += 1
+            self._cv.notify()
+        return t
+
+    def _retry_after_locked(self) -> float:
+        est = self._service_ewma if self._service_ewma else 0.05
+        waves = math.ceil((len(self._queue) + 1) / self.buckets[-1])
+        return waves * est
+
+    # ---- scheduling ------------------------------------------------------
+
+    def _bucket_for(self, n: int) -> int:
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return self.buckets[-1]
+
+    def _loop(self) -> None:
+        cfg = self.config
+        while True:
+            with self._cv:
+                while not self._queue and not self._stop:
+                    self._cv.wait(0.1)
+                if self._stop and (not self._queue or not self._draining):
+                    return
+                # dynamic batch formation: let a burst coalesce into a
+                # fuller bucket instead of dispatching singles.
+                if (0 < len(self._queue) < self.buckets[-1]
+                        and not self._stop and cfg.batch_wait_s > 0):
+                    self._cv.wait(cfg.batch_wait_s)
+                now = time.perf_counter()
+                live = []
+                for t in self._queue:
+                    if t.done():                    # client-side cancel
+                        self.stats.cancelled += 1
+                    elif t.deadline is not None and t.deadline <= now:
+                        # timeout-cancel while queued: never executed
+                        t._finish("timeout", error=TimeoutError(
+                            f"request {t.rid} deadline expired "
+                            f"{now - t.deadline:.3f}s before dispatch"))
+                        self.stats.timed_out += 1
+                    else:
+                        live.append(t)
+                # EDF: earliest deadline first, FIFO among deadline-less.
+                live.sort(key=lambda t: (
+                    t.deadline if t.deadline is not None else math.inf,
+                    t.rid))
+                take = min(len(live), self.buckets[-1])
+                batch, self._queue = live[:take], live[take:]
+            if batch:
+                self._run_batch(batch)
+
+    def _run_batch(self, batch: list[Ticket]) -> None:
+        b = self._bucket_for(len(batch))
+        X = np.zeros((b,) + self.example_shape, self.np_dtype)
+        for i, t in enumerate(batch):
+            X[i] = t.x
+        t0 = time.perf_counter()
+        try:
+            y, layer_times = self._supervised_apply(b, jnp.asarray(X))
+        except Exception as e:
+            # ladder exhausted: answer every ticket with the error --
+            # failed, but never silently dropped.
+            for t in batch:
+                if t._finish("error", error=e):
+                    self.stats.failed += 1
+            self.stats.batches += 1
+            return
+        dt = time.perf_counter() - t0
+        a = self.config.ewma_alpha
+        self._service_ewma = (dt if self._service_ewma is None
+                              else (1 - a) * self._service_ewma + a * dt)
+        self._observe_stragglers(b, dt, layer_times)
+        y = np.asarray(y)
+        now = time.perf_counter()
+        for i, t in enumerate(batch):
+            if t.deadline is not None and t.deadline < now:
+                t.deadline_missed = True
+                self.stats.deadline_missed += 1
+            if t._finish("ok", value=y[i]):
+                self.stats.completed += 1
+        self.stats.batches += 1
+        self.stats.bucket_batches[b] = self.stats.bucket_batches.get(b, 0) + 1
+
+    # ---- supervision: the degrade ladder ---------------------------------
+
+    def _supervised_apply(self, bucket: int, X) -> tuple[Any, dict]:
+        """Retry with backoff -> re-place the failing layer -> recompile in
+        place. The batch re-runs after every rung, so in-flight requests
+        survive each recoverable fault; raises only when the whole ladder
+        is exhausted."""
+        cfg = self.config
+        backoff = Backoff(base=cfg.backoff_base_s, cap=cfg.backoff_cap_s,
+                          seed=self.stats.batches)
+        failures = 0
+        while True:
+            layer_times: dict[str, float] = {}
+            try:
+                y = self.nets[bucket].apply(
+                    X, layer_hook=layer_times.__setitem__,
+                    annotate_errors=True)
+                return y, layer_times
+            except Exception as e:
+                failures += 1
+                self.stats.executor_failures += 1
+                if failures <= cfg.max_retries:
+                    self.stats.retries += 1
+                    time.sleep(backoff.next())
+                    continue
+                node = getattr(e, "node_id", None)
+                if (node is not None and node not in self._replaced
+                        and node in self.nets[bucket].plans
+                        and self._replace_layer(
+                            node, reason=f"executor failure: "
+                                         f"{e.__cause__ or e!r}")):
+                    failures = 0
+                    backoff.reset()
+                    continue
+                if self._recompile_in_place():
+                    failures = 0
+                    backoff.reset()
+                    continue
+                raise
+
+    def _replace_layer(self, node_id: str, *, reason: str = "",
+                       count_eviction: bool = False) -> bool:
+        """Rung 2: re-place one layer onto the fallback executor across
+        EVERY bucket plan (a bad executor is bad at every batch size)."""
+        alg = self.config.fallback_algorithm
+        try:
+            for net in self.nets.values():
+                net.replace_layer(node_id, self.params, algorithm=alg)
+        except Exception as e:
+            self._log(f"could not re-place layer {node_id!r} onto "
+                      f"{alg!r}: {e!r}")
+            return False
+        self._replaced.add(node_id)
+        self.stats.replacements += 1
+        if count_eviction:
+            self.stats.evictions += 1
+        self._log(f"re-placed layer {node_id!r} onto {alg!r} ({reason})")
+        return True
+
+    def _recompile_in_place(self) -> bool:
+        """Rung 3: rebuild every bucket plan from raw params, recording the
+        per-array integrity findings of the on-disk artifacts (the
+        corrupt-artifact fault class) and overwriting them with fresh
+        ones. One shot per server lifetime -- a fault that survives a full
+        recompile is not recoverable here."""
+        if self._recompiled:
+            return False
+        self._recompiled = True
+        corrupt = []
+        for b in self.buckets:
+            art = self._artifact_path(b)
+            if art and os.path.exists(art):
+                corrupt += [f"b{b}:{k}"
+                            for k in _compile.verify_artifact(art)]
+        if corrupt:
+            self.stats.corrupt_artifacts += 1
+            self.stats.corrupt_arrays += len(corrupt)
+        for b in self.buckets:
+            self.nets[b] = self._compile_bucket(b, force_cold=True)
+        self._replaced.clear()
+        self._straggler_counts.clear()
+        self.stats.recompiles += 1
+        self._log(f"recompiled all bucket plans in place "
+                  f"({len(corrupt)} corrupt artifact arrays"
+                  + (f", e.g. {corrupt[0]!r}" if corrupt else "") + ")")
+        return True
+
+    def _observe_stragglers(self, bucket: int, dt: float,
+                            layer_times: dict[str, float]) -> None:
+        cfg = self.config
+        if self._batch_timer[bucket].record(dt):
+            self.stats.stragglers += 1
+            worst, ratio = None, cfg.straggler_layer_ratio
+            for nid, t in layer_times.items():
+                base = self._layer_ewma.get((bucket, nid))
+                if base and t / base >= ratio:
+                    worst, ratio = nid, t / base
+            if worst is not None:
+                n = self._straggler_counts.get(worst, 0) + 1
+                self._straggler_counts[worst] = n
+                if (n >= cfg.straggler_evict_after
+                        and worst not in self._replaced):
+                    self._replace_layer(
+                        worst, count_eviction=True,
+                        reason=f"straggler x{n}, {ratio:.1f}x baseline")
+            return
+        # only non-straggler batches update the per-layer baselines
+        # (mirrors StepTimer: outliers never pollute the window that
+        # judges the next sample).
+        a = cfg.ewma_alpha
+        for nid, t in layer_times.items():
+            k = (bucket, nid)
+            old = self._layer_ewma.get(k)
+            self._layer_ewma[k] = t if old is None else \
+                (1 - a) * old + a * t

@@ -15,7 +15,7 @@ from repro import configs as cfglib
 from repro.checkpoint.manager import CheckpointManager
 from repro.data.pipeline import Prefetcher, SyntheticLM
 from repro.launch.train import train
-from repro.runtime.fault import StepTimer, run_with_retries
+from repro.runtime.fault import Backoff, StepTimer, run_with_retries
 
 
 # ---------------------------------------------------------------------------
@@ -170,6 +170,41 @@ def test_run_with_retries_gives_up():
         run_with_retries(body, max_failures=2)
 
 
+def test_run_with_retries_paces_with_exponential_backoff():
+    sleeps = []
+
+    def body(start):
+        raise RuntimeError("permanent failure")
+
+    with pytest.raises(RuntimeError):
+        run_with_retries(body, max_failures=3, base_delay_s=1.0,
+                         max_delay_s=16.0, jitter=0.5, sleep=sleeps.append)
+    # three paced retries; delay k is 2**k jittered into [0.5, 1.0] of itself
+    assert len(sleeps) == 3
+    for k, d in enumerate(sleeps):
+        assert 0.5 * 2**k <= d <= 2**k
+    assert sleeps[0] < sleeps[1] < sleeps[2]
+
+
+def test_run_with_retries_lets_systemexit_escape():
+    calls = []
+
+    def body(start):
+        calls.append(start)
+        raise SystemExit(3)           # preemption: do NOT burn retries
+
+    with pytest.raises(SystemExit):
+        run_with_retries(body, max_failures=5, sleep=lambda s: None)
+    assert len(calls) == 1
+
+
+def test_backoff_caps_and_resets():
+    b = Backoff(base=0.1, factor=2.0, cap=0.3, jitter=0.0)
+    assert [b.next() for _ in range(4)] == [0.1, 0.2, 0.3, 0.3]
+    b.reset()
+    assert b.next() == 0.1
+
+
 def test_step_timer_flags_stragglers():
     t = StepTimer(window=50, sigma=3.0)
     rng = np.random.default_rng(0)
@@ -177,6 +212,18 @@ def test_step_timer_flags_stragglers():
         assert not t.record(0.10 + rng.uniform(0, 0.001))
     assert t.record(1.0)              # 10x outlier
     assert t.stragglers == 1
+
+
+def test_step_timer_excludes_outliers_from_baseline():
+    """A flagged straggler must not inflate the baseline window, or it
+    would mask the next straggler of the same magnitude."""
+    t = StepTimer(window=50, sigma=3.0)
+    for _ in range(20):
+        t.record(0.10)
+    assert t.record(1.0)
+    assert 1.0 not in t.baseline and 1.0 in t.times
+    assert t.record(1.0)              # still flagged: baseline is clean
+    assert t.stragglers == 2
 
 
 # ---------------------------------------------------------------------------
