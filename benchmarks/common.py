@@ -67,14 +67,33 @@ def pairwise_min_times(fa: Callable, fb: Callable, x, warmup: int = 2,
     return min(ta), min(tb)
 
 
-def streamed_hbm_bytes(spec, batch: int = 1) -> int:
+#: storage bytes per element of each transform-domain compute dtype --
+#: feeds the filter_elem_bytes parameter of the HBM-bytes models below, so
+#: the paper's figure of merit (bytes moved on a bandwidth-bound mobile
+#: CPU) reflects bf16/int8 filter payloads.
+COMPUTE_DTYPE_BYTES = {"float32": 4, "bfloat16": 2, "int8": 1}
+
+
+def dtype_bytes(compute_dtype: str) -> int:
+    """Storage bytes per element of a transform-domain compute dtype."""
+    return COMPUTE_DTYPE_BYTES[str(compute_dtype)]
+
+
+def streamed_hbm_bytes(spec, batch: int = 1, elem_bytes: int = 4,
+                       filter_elem_bytes: int | None = None) -> int:
     """Analytic HBM bytes moved per call by the streaming Winograd executor
     (kernels.winograd.winograd_streamed): halo strip reads (each strip is
     DMA'd once per (M sweep, C block) because the input block index carries
     the channel slice, and adjacent strips re-read their k-1 halo rows/cols)
     + filter block reads (re-fetched per strip) + NHWC output write. No tile
-    tensor, no separate epilogue round trips. fp32 accounting; the full
+    tensor, no separate epilogue round trips. `elem_bytes` is the
+    activation element size (fp32 default); `filter_elem_bytes` the
+    transform-domain filter element size (defaults to elem_bytes; pass
+    dtype_bytes(compute_dtype) for bf16/int8 plans -- their O(M) dequant
+    scale rows are ignored, O(P*C*M) filter traffic dominates). The full
     derivation is in EXPERIMENTS.md section Perf."""
+    if filter_elem_bytes is None:
+        filter_elem_bytes = elem_bytes
     s = spec.stream
     th, tw = spec.ct_h.t, spec.ct_w.t
     mh, mw = spec.ct_h.m, spec.ct_w.m
@@ -83,19 +102,23 @@ def streamed_hbm_bytes(spec, batch: int = 1) -> int:
     ws = s.bw * mw + tw - mw
     n_strips = batch * s.n_hb * s.n_wb
     n_mb = s.m_pad // s.block_m
-    read_x = n_strips * hs * ws * s.c_pad * n_mb * 4
-    read_u = n_strips * p * s.c_pad * s.m_pad * 4
+    read_x = n_strips * hs * ws * s.c_pad * n_mb * elem_bytes
+    read_u = n_strips * p * s.c_pad * s.m_pad * filter_elem_bytes
     write_y = batch * (s.n_hb * s.bh * mh) * (s.n_wb * s.bw * mw) \
-        * s.m_pad * 4
+        * s.m_pad * elem_bytes
     return read_x + read_u + write_y
 
 
-def materialized_hbm_bytes(spec, batch: int = 1) -> int:
+def materialized_hbm_bytes(spec, batch: int = 1, elem_bytes: int = 4,
+                           filter_elem_bytes: int | None = None) -> int:
     """Analytic HBM bytes moved per call by the pre-streaming executor
     (ops.winograd_conv2d_planned_materialized + XLA epilogue): padded input
     read, (R, th, tw, C) tile tensor write + per-M-block re-read, filter
     reads, kernel output write, un-tiling read+write, and the bias+relu
-    round trips. fp32 accounting; see EXPERIMENTS.md section Perf."""
+    round trips. Element sizes as in streamed_hbm_bytes; see EXPERIMENTS.md
+    section Perf."""
+    if filter_elem_bytes is None:
+        filter_elem_bytes = elem_bytes
     g = spec.geometry
     br, bc, bm = spec.blocks
     th, tw = spec.ct_h.t, spec.ct_w.t
@@ -108,26 +131,30 @@ def materialized_hbm_bytes(spec, batch: int = 1) -> int:
     m_pad = -(-c_out // bm) * bm
     n_mb, n_cb = m_pad // bm, c_pad // bc
     read_x = batch * (g.n_h * mh + th - mh) * (g.n_w * mw + tw - mw) \
-        * c_in * 4
-    tiles = r_pad * p * c_pad * 4
+        * c_in * elem_bytes
+    tiles = r_pad * p * c_pad * elem_bytes
     write_tiles = tiles
     read_tiles = tiles * n_mb                 # re-read per M block
-    read_u = (r_pad // br) * n_mb * n_cb * p * bc * bm * 4
-    write_kernel_out = r_pad * mh * mw * m_pad * 4
-    out_nhwc = batch * g.out_h * g.out_w * c_out * 4
+    read_u = (r_pad // br) * n_mb * n_cb * p * bc * bm * filter_elem_bytes
+    write_kernel_out = r_pad * mh * mw * m_pad * elem_bytes
+    out_nhwc = batch * g.out_h * g.out_w * c_out * elem_bytes
     untile = write_kernel_out + out_nhwc      # transpose/reshape pass
     epilogue = 4 * out_nhwc                   # bias add + relu, each r+w
     return (read_x + write_tiles + read_tiles + read_u + write_kernel_out
             + untile + epilogue)
 
 
-def separable_fused_hbm_bytes(spec, batch: int = 1) -> int:
+def separable_fused_hbm_bytes(spec, batch: int = 1, elem_bytes: int = 4,
+                              filter_elem_bytes: int | None = None) -> int:
     """Analytic HBM bytes per call of the FUSED separable-block kernel
     (kernels.depthwise.separable_streamed, spec a plan.SeparableSpec): halo
     strip reads (the input block index carries the channel slice and recurs
     per pointwise M block), depthwise-tap and pointwise-filter block reads,
     and the NHWC output write. The depthwise -> pointwise intermediate
-    moves ZERO bytes -- it lives in the kernel's VMEM z-cache."""
+    moves ZERO bytes -- it lives in the kernel's VMEM z-cache. Element
+    sizes as in streamed_hbm_bytes."""
+    if filter_elem_bytes is None:
+        filter_elem_bytes = elem_bytes
     s = spec.stream
     th, tw = spec.ct_h.t, spec.ct_w.t
     mh, mw = spec.ct_h.m, spec.ct_w.m
@@ -136,23 +163,27 @@ def separable_fused_hbm_bytes(spec, batch: int = 1) -> int:
     ws = s.bw * mw + tw - mw
     n_strips = batch * s.n_hb * s.n_wb
     n_mb = s.m_pad // s.block_m
-    read_x = n_strips * hs * ws * s.c_pad * n_mb * 4
-    read_u_dw = n_strips * p * s.c_pad * n_mb * 4
-    read_u_pw = n_strips * s.c_pad * s.m_pad * 4
+    read_x = n_strips * hs * ws * s.c_pad * n_mb * elem_bytes
+    read_u_dw = n_strips * p * s.c_pad * n_mb * filter_elem_bytes
+    read_u_pw = n_strips * s.c_pad * s.m_pad * filter_elem_bytes
     write_y = batch * (s.n_hb * s.bh * mh) * (s.n_wb * s.bw * mw) \
-        * s.m_pad * 4
+        * s.m_pad * elem_bytes
     return read_x + read_u_dw + read_u_pw + write_y
 
 
 def separable_unfused_hbm_bytes(dw_spec, pw_mm: int, pw_k: int, pw_n: int,
                                 blocks: tuple[int, int, int],
-                                batch: int = 1) -> int:
+                                batch: int = 1, elem_bytes: int = 4,
+                                filter_elem_bytes: int | None = None) -> int:
     """Analytic HBM bytes per call of the UNFUSED Pallas separable pipeline:
     the streamed depthwise kernel (one C sweep of halo strips + taps +
     intermediate write), then the pointwise GEMM kernel re-reading the
     intermediate once per output-channel block plus its filter blocks and
     output write. `dw_spec` is the pallas_depthwise ConvSpec; (pw_mm, pw_k,
-    pw_n) the pointwise GEMM dims; `blocks` its (bm, bk, bn)."""
+    pw_n) the pointwise GEMM dims; `blocks` its (bm, bk, bn). Element sizes
+    as in streamed_hbm_bytes."""
+    if filter_elem_bytes is None:
+        filter_elem_bytes = elem_bytes
     s = dw_spec.stream
     th, tw = dw_spec.ct_h.t, dw_spec.ct_w.t
     mh, mw = dw_spec.ct_h.m, dw_spec.ct_w.m
@@ -160,28 +191,31 @@ def separable_unfused_hbm_bytes(dw_spec, pw_mm: int, pw_k: int, pw_n: int,
     hs = s.bh * mh + th - mh
     ws = s.bw * mw + tw - mw
     n_strips = batch * s.n_hb * s.n_wb
-    read_x = n_strips * hs * ws * s.c_pad * 4
-    read_u_dw = n_strips * p * s.c_pad * 4
+    read_x = n_strips * hs * ws * s.c_pad * elem_bytes
+    read_u_dw = n_strips * p * s.c_pad * filter_elem_bytes
     write_z = batch * (s.n_hb * s.bh * mh) * (s.n_wb * s.bw * mw) \
-        * s.c_pad * 4
+        * s.c_pad * elem_bytes
     bm_, bk_, bn_ = blocks
     mm_pad = -(-pw_mm // bm_) * bm_
     k_pad = -(-pw_k // bk_) * bk_
     n_pad = -(-pw_n // bn_) * bn_
     n_nb = n_pad // bn_
-    read_z = mm_pad * k_pad * n_nb * 4          # A re-read per N block
-    read_u_pw = (mm_pad // bm_) * k_pad * n_pad * 4
-    write_y = mm_pad * n_pad * 4
+    read_z = mm_pad * k_pad * n_nb * elem_bytes  # A re-read per N block
+    read_u_pw = (mm_pad // bm_) * k_pad * n_pad * filter_elem_bytes
+    write_y = mm_pad * n_pad * elem_bytes
     return read_x + read_u_dw + write_z + read_z + read_u_pw + write_y
 
 
-def strided_streamed_hbm_bytes(spec, batch: int = 1) -> int:
+def strided_streamed_hbm_bytes(spec, batch: int = 1, elem_bytes: int = 4,
+                               filter_elem_bytes: int | None = None) -> int:
     """Analytic HBM bytes per call of the stride-2 streaming Winograd kernel
     (kernels.winograd.winograd_strided_streamed): full-resolution halo strip
     reads (2x extent per axis, re-DMA'd per (M sweep, C block)), phase-major
     filter block reads (4P points), and the stride-2 NHWC output write. The
     four phase tile tensors never exist in HBM -- they are gathered in VMEM
     from the one strip."""
+    if filter_elem_bytes is None:
+        filter_elem_bytes = elem_bytes
     s = spec.stream
     th, tw = spec.ct_h.t, spec.ct_w.t
     mh, mw = spec.ct_h.m, spec.ct_w.m
@@ -190,19 +224,22 @@ def strided_streamed_hbm_bytes(spec, batch: int = 1) -> int:
     ws = 2 * (s.bw * mw + tw - mw)
     n_strips = batch * s.n_hb * s.n_wb
     n_mb = s.m_pad // s.block_m
-    read_x = n_strips * hs * ws * s.c_pad * n_mb * 4
-    read_u = n_strips * p4 * s.c_pad * s.m_pad * 4
+    read_x = n_strips * hs * ws * s.c_pad * n_mb * elem_bytes
+    read_u = n_strips * p4 * s.c_pad * s.m_pad * filter_elem_bytes
     write_y = batch * (s.n_hb * s.bh * mh) * (s.n_wb * s.bw * mw) \
-        * s.m_pad * 4
+        * s.m_pad * elem_bytes
     return read_x + read_u + write_y
 
 
-def pallas_im2row_hbm_bytes(spec, batch: int = 1) -> int:
+def pallas_im2row_hbm_bytes(spec, batch: int = 1, elem_bytes: int = 4,
+                            filter_elem_bytes: int | None = None) -> int:
     """Analytic HBM bytes per call of the planned Pallas im2row baseline
     (ops.im2col_conv2d_planned): input read, patch-matrix write (the
     kh*kw/(sh*sw) read-amplified copy of the input at stride (sh, sw)),
     per-N-block patch re-reads by the GEMM kernel, filter block reads, and
     the output write (epilogue fused in-kernel)."""
+    if filter_elem_bytes is None:
+        filter_elem_bytes = elem_bytes
     g = spec.geometry
     bm_, bk_, bn_ = spec.blocks
     kh, kw, cg, c_out = spec.w_shape
@@ -212,15 +249,17 @@ def pallas_im2row_hbm_bytes(spec, batch: int = 1) -> int:
     k_pad = -(-(kh * kw * c_in) // bk_) * bk_
     n_pad = -(-c_out // bn_) * bn_
     h_in, w_in = spec.x_shape[1:3]
-    read_x = batch * (h_in + sum(g.ph)) * (w_in + sum(g.pw)) * c_in * 4
-    patches = mm_pad * k_pad * 4
+    read_x = batch * (h_in + sum(g.ph)) * (w_in + sum(g.pw)) * c_in \
+        * elem_bytes
+    patches = mm_pad * k_pad * elem_bytes
     read_patches = patches * (n_pad // bn_)       # A re-read per N block
-    read_u = (mm_pad // bm_) * k_pad * n_pad * 4
-    write_y = mm_pad * n_pad * 4
+    read_u = (mm_pad // bm_) * k_pad * n_pad * filter_elem_bytes
+    write_y = mm_pad * n_pad * elem_bytes
     return read_x + patches + read_patches + read_u + write_y
 
 
-def fft_hbm_bytes(spec, batch: int = 1) -> int:
+def fft_hbm_bytes(spec, batch: int = 1, elem_bytes: int = 4,
+                  filter_elem_bytes: int | None = None) -> int:
     """Analytic HBM bytes per call of the rfft2 executor (core.fft, spec a
     plan.ConvSpec with algorithm='fft'): padded input read, real tile tensor
     write + re-read by rfft2, forward spectrum write + re-read by the
@@ -228,19 +267,24 @@ def fft_hbm_bytes(spec, batch: int = 1) -> int:
     read, product spectrum write + re-read by irfft2, real inverse write,
     and the cropped NHWC output write. XLA fuses some of these round trips;
     the model is the fusion-free dataflow upper bound, the analogue of
-    materialized_hbm_bytes for the Winograd baseline."""
+    materialized_hbm_bytes for the Winograd baseline. Spectra are complex
+    (2 * elem_bytes per point); the filter spectrum uses filter_elem_bytes
+    per real component (the executor itself is fp32-only today, but the
+    model stays parametric for symmetry with the Winograd models)."""
+    if filter_elem_bytes is None:
+        filter_elem_bytes = elem_bytes
     g, f = spec.geometry, spec.fft
     c_in, c_out = spec.w_shape[2], spec.w_shape[3]
     n_tiles = batch * g.n_h * g.n_w
     half_w = f.fft_w // 2 + 1
     read_x = batch * (g.n_h * f.m_h + f.fft_h - f.m_h) \
-        * (g.n_w * f.m_w + f.fft_w - f.m_w) * c_in * 4
-    tiles = n_tiles * f.fft_h * f.fft_w * c_in * 4
-    spec_in = n_tiles * f.fft_h * half_w * c_in * 8
-    read_u = f.fft_h * half_w * c_in * c_out * 8
-    spec_out = n_tiles * f.fft_h * half_w * c_out * 8
-    inverse = n_tiles * f.fft_h * f.fft_w * c_out * 4
-    write_y = batch * g.out_h * g.out_w * c_out * 4
+        * (g.n_w * f.m_w + f.fft_w - f.m_w) * c_in * elem_bytes
+    tiles = n_tiles * f.fft_h * f.fft_w * c_in * elem_bytes
+    spec_in = n_tiles * f.fft_h * half_w * c_in * 2 * elem_bytes
+    read_u = f.fft_h * half_w * c_in * c_out * 2 * filter_elem_bytes
+    spec_out = n_tiles * f.fft_h * half_w * c_out * 2 * elem_bytes
+    inverse = n_tiles * f.fft_h * f.fft_w * c_out * elem_bytes
+    write_y = batch * g.out_h * g.out_w * c_out * elem_bytes
     return (read_x + 2 * tiles + 2 * spec_in + read_u + 2 * spec_out
             + inverse + write_y)
 
@@ -261,7 +305,8 @@ def fft_flops(spec, batch: int = 1) -> int:
     return int(n_tiles * (c_in + c_out) * transform + gemm)
 
 
-def winograd_domain_hbm_bytes(spec, batch: int = 1) -> int:
+def winograd_domain_hbm_bytes(spec, batch: int = 1, elem_bytes: int = 4,
+                              filter_elem_bytes: int | None = None) -> int:
     """Analytic HBM bytes per call of a pure-JAX Winograd-domain executor
     (spec a plan.ConvSpec with algorithm='winograd'/'winograd_f63'),
     parameterized by the plan's tile size t = spec.ct_h.t so one model
@@ -270,19 +315,21 @@ def winograd_domain_hbm_bytes(spec, batch: int = 1) -> int:
     re-read by the pointwise GEMM, Winograd-domain filter read, point
     product write + re-read by the output transform, inverse write, and
     the cropped NHWC output write (fusion-free dataflow upper bound)."""
+    if filter_elem_bytes is None:
+        filter_elem_bytes = elem_bytes
     g = spec.geometry
     th, tw = spec.ct_h.t, spec.ct_w.t
     mh, mw = spec.ct_h.m, spec.ct_w.m
     c_in, c_out = spec.w_shape[2], spec.w_shape[3]
     n_tiles = batch * g.n_h * g.n_w
     read_x = batch * (g.n_h * mh + th - mh) * (g.n_w * mw + tw - mw) \
-        * c_in * 4
-    tiles = n_tiles * th * tw * c_in * 4
-    transformed = n_tiles * th * tw * c_in * 4
-    read_u = th * tw * c_in * c_out * 4
-    product = n_tiles * th * tw * c_out * 4
-    inverse = n_tiles * mh * mw * c_out * 4
-    write_y = batch * g.out_h * g.out_w * c_out * 4
+        * c_in * elem_bytes
+    tiles = n_tiles * th * tw * c_in * elem_bytes
+    transformed = n_tiles * th * tw * c_in * elem_bytes
+    read_u = th * tw * c_in * c_out * filter_elem_bytes
+    product = n_tiles * th * tw * c_out * elem_bytes
+    inverse = n_tiles * mh * mw * c_out * elem_bytes
+    write_y = batch * g.out_h * g.out_w * c_out * elem_bytes
     return (read_x + 2 * tiles + 2 * transformed + read_u + 2 * product
             + inverse + write_y)
 

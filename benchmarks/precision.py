@@ -1,0 +1,323 @@
+"""Mixed-precision A/B: fp32 vs bf16 vs int8 transform-domain execution.
+
+Per-layer pass over the deep, filter-dominated slices of the VGG-16 ladder
+and the MobileNet-v1 separable ladder (depthwise + pointwise halves): each
+layer is planned three times with compute_dtype pinned to
+float32 / bfloat16 / int8, timed end to end (jitted, batch 1), scored on
+accuracy against its own fp32 plan (max relative error + top-1 agreement
+over the channel axis), and priced by the analytic HBM-bytes model of
+whichever executor the plan resolved to, with the filter payload at the
+plan's storage dtype (benchmarks.common dtype_bytes). On a machine without
+reduced-precision GEMM instructions the *measured* times are reported
+honestly (wins_by_time); the paper-relevant figure of merit on a
+bandwidth-bound mobile CPU is the bytes model (wins_by_hbm_model) -- see
+EXPERIMENTS.md section PR 8 for the crossover analysis.
+
+Each layer also runs the unpinned measured auto_tuned race once and records
+the full per-contender evidence (t_* timings + err_* accuracy probes vs the
+fp32 oracle), demonstrating that the policy selects a reduced dtype only
+where it measured faster AND passed the plan-time accuracy budget.
+
+Whole-network pass: MobileNet-v2 (width 0.5) compiled through the graph
+API at each policy dtype -- steady-state apply time, serialized artifact
+size, count of layers actually lowered to the reduced dtype, and logits
+top-1 agreement vs the fp32 network over a pool of random inputs. The int8
+top-1 agreement is the CI accuracy gate: the run exits non-zero when it
+falls below --top1-threshold.
+
+  PYTHONPATH=src python -m benchmarks.precision --out BENCH_PR8.json
+  PYTHONPATH=src python -m benchmarks.run --json BENCH_PR8.json \
+      --config precision          # quick variant unless --full
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (bench_metadata, dtype_bytes, fft_hbm_bytes,
+                               materialized_hbm_bytes,
+                               pallas_im2row_hbm_bytes, streamed_hbm_bytes,
+                               strided_streamed_hbm_bytes, time_jitted,
+                               winograd_domain_hbm_bytes)
+from benchmarks.per_layer import MOBILENET_LAYERS, VGG_STYLE_LAYERS, scaled
+from repro.core import compile as C
+from repro.core import plan as planlib
+from repro.models import cnn
+
+DTYPES = ("float32", "bfloat16", "int8")
+
+
+def precision_layers(scale: int = 1) -> list[dict]:
+    """The mixed-precision ladder: the deep VGG-16 3x3 layers (where the
+    transformed-filter tensor, O(P * C * M), dominates HBM traffic and a
+    bf16/int8 payload halves/quarters the bound) plus the deep MobileNet-v1
+    separable blocks split into their depthwise and pointwise halves."""
+    vgg = [dict(l, stride=1) for l in VGG_STYLE_LAYERS
+           if l["c_in"] >= 128]
+    mb = []
+    for l in MOBILENET_LAYERS:
+        if l["c_in"] < 256:
+            continue
+        mb.append(dict(name=f"{l['name']}_dw", kh=l["k"], kw=l["k"],
+                       h=l["h"], w=l["w"], c_in=l["c_in"], c_out=l["c_in"],
+                       stride=1, groups=l["c_in"]))
+        mb.append(dict(name=f"{l['name']}_pw", kh=1, kw=1, h=l["h"],
+                       w=l["w"], c_in=l["c_in"], c_out=l["c_out"],
+                       stride=1))
+    return scaled(vgg + mb, scale)
+
+
+def plan_hbm_bytes(p, batch: int = 1) -> int:
+    """Analytic HBM bytes of a ConvPlan under the bytes model of whichever
+    executor it resolved to, with the transform-domain filter payload at
+    the plan's storage dtype (fp32/bf16/int8)."""
+    spec = p.spec
+    fb = dtype_bytes(spec.compute_dtype)
+    ex = spec.algorithm
+    if ex == "fft":
+        return fft_hbm_bytes(spec, batch, filter_elem_bytes=fb)
+    if ex == "pallas_im2col":
+        return pallas_im2row_hbm_bytes(spec, batch, filter_elem_bytes=fb)
+    if ex == "pallas_winograd":
+        return streamed_hbm_bytes(spec, batch, filter_elem_bytes=fb)
+    if ex == "pallas_winograd_strided":
+        return strided_streamed_hbm_bytes(spec, batch, filter_elem_bytes=fb)
+    if ex == "pallas_winograd_materialized":
+        return materialized_hbm_bytes(spec, batch, filter_elem_bytes=fb)
+    if ex.startswith("winograd"):
+        return winograd_domain_hbm_bytes(spec, batch, filter_elem_bytes=fb)
+    # XLA im2col: padded input read, filter read at storage dtype, output
+    # write (the implicit patch matrix stays in registers/cache under XLA).
+    kh, kw, cg, c_out = spec.w_shape
+    g = spec.geometry
+    _, h, w, c_in = spec.x_shape
+    read_x = batch * (h + sum(g.ph)) * (w + sum(g.pw)) * c_in * 4
+    read_u = kh * kw * cg * c_out * fb
+    write_y = batch * g.oh * g.ow * c_out * 4
+    return read_x + read_u + write_y
+
+
+def accuracy(y: np.ndarray, ref: np.ndarray) -> tuple[float, float]:
+    """(max relative error, channel-axis top-1 agreement) vs the fp32
+    reference -- the per-layer analogue of the logits top-1 gate."""
+    rel = float(np.max(np.abs(y - ref)) / (np.max(np.abs(ref)) + 1e-9))
+    top1 = float(np.mean(np.argmax(y, axis=-1) == np.argmax(ref, axis=-1)))
+    return rel, top1
+
+
+def bench_layer(layer: dict, iters: int, warmup: int) -> dict:
+    rng = np.random.default_rng(0)
+    groups = layer.get("groups", 1)
+    x = jnp.asarray(rng.standard_normal(
+        (1, layer["h"], layer["w"], layer["c_in"])), jnp.float32)
+    wt = jnp.asarray(rng.standard_normal(
+        (layer["kh"], layer["kw"], layer["c_in"] // groups,
+         layer["c_out"])) / (layer["kh"] * layer["kw"]), jnp.float32)
+    row = {"layer": layer["name"], "groups": groups,
+           "shape": f"{layer['h']}x{layer['w']}x{layer['c_in']}"
+                    f"->{layer['c_out']}"
+                    f"{f'/g{groups}' if groups > 1 else ''}",
+           "filter": f"{layer['kh']}x{layer['kw']}"}
+    ref = None
+    for cd in DTYPES:
+        p = planlib.plan_conv2d(x.shape, wt, stride=layer["stride"],
+                                groups=groups, algorithm="auto",
+                                compute_dtype=cd)
+        fn = jax.jit(p.apply)
+        t = time_jitted(fn, x, warmup=warmup, iters=iters)
+        y = np.asarray(fn(x), np.float32)
+        if ref is None:
+            ref = y
+        rel, top1 = accuracy(y, ref)
+        row[cd] = {"executor": p.spec.algorithm,
+                   "tile": (list(p.spec.output_tile)
+                            if p.spec.output_tile else None),
+                   "t_s": t, "hbm_model_bytes": plan_hbm_bytes(p),
+                   "rel_err": round(rel, 6), "top1_agreement": top1}
+    # The dtype-opted measured race (compute_dtype="auto"): fp32
+    # contenders plus the gated bf16/int8 variants, with accuracy
+    # evidence recorded next to the timings.
+    pt = planlib.plan_conv2d(x.shape, wt, stride=layer["stride"],
+                             groups=groups, algorithm="auto_tuned",
+                             compute_dtype="auto")
+    report = pt.spec.autotune_report or {}
+    row["auto_tuned"] = {
+        "winner": pt.spec.algorithm,
+        "winner_label": report.get("winner_label"),
+        "compute_dtype": pt.spec.compute_dtype,
+        "decision": pt.describe()["decision"],
+        "evidence": {k: v for k, v in report.items()
+                     if k.startswith("t_")},
+        "accuracy": {k: v for k, v in report.items()
+                     if k.startswith("err_")}}
+    return row
+
+
+def run_layers(scale: int, iters: int, warmup: int) -> tuple[list, dict]:
+    rows = []
+    print(f"== per-layer fp32/bf16/int8 A/B (scale 1/{scale}) ==",
+          flush=True)
+    for l in precision_layers(scale):
+        r = bench_layer(l, iters, warmup)
+        rows.append(r)
+        f32, bf, i8 = r["float32"], r["bfloat16"], r["int8"]
+        print(f"{r['layer']:12s} {r['shape']:22s} "
+              f"fp32 {f32['t_s']*1e3:7.2f}ms/{f32['hbm_model_bytes']>>10:6d}KiB  "
+              f"bf16 {bf['t_s']*1e3:7.2f}ms/{bf['hbm_model_bytes']>>10:6d}KiB  "
+              f"int8 {i8['t_s']*1e3:7.2f}ms/{i8['hbm_model_bytes']>>10:6d}KiB "
+              f"err={i8['rel_err']:.3f} "
+              f"tuned={r['auto_tuned']['winner_label']}",
+              flush=True)
+
+    def wins(metric):
+        return {cd: sum(r[cd][metric] < r["float32"][metric] for r in rows)
+                for cd in DTYPES[1:]} | {
+            "any_reduced": sum(min(r[cd][metric] for cd in DTYPES[1:])
+                               < r["float32"][metric] for r in rows)}
+
+    # "reduced only where it wins": every auto_tuned race that crowned a
+    # bf16/int8 variant must show that variant measuring faster than every
+    # fp32 contender AND passing the plan-time accuracy budget.
+    tuned_ok = True
+    n_tuned_reduced = 0
+    for r in rows:
+        at = r["auto_tuned"]
+        if at["compute_dtype"] == "float32":
+            continue
+        n_tuned_reduced += 1
+        ev, lbl = at["evidence"], at["winner_label"]
+        t_win = ev.get(f"t_{lbl}_s")
+        fp32_ts = [v for k, v in ev.items()
+                   if not k[2:-2].endswith(("_bf16", "_int8"))]
+        err = at["accuracy"].get(f"err_{lbl}")
+        budget = planlib.AUTOTUNE_ACCURACY_BUDGET[at["compute_dtype"]]
+        tuned_ok &= (t_win is not None and t_win <= min(fp32_ts)
+                     and err is not None and err <= budget)
+    summary = {"n_layers": len(rows),
+               "wins_by_hbm_model": wins("hbm_model_bytes"),
+               "wins_by_time": wins("t_s"),
+               "max_rel_err": {cd: max(r[cd]["rel_err"] for r in rows)
+                               for cd in DTYPES[1:]},
+               "min_top1_agreement": {cd: min(r[cd]["top1_agreement"]
+                                              for r in rows)
+                                      for cd in DTYPES[1:]},
+               "auto_tuned_reduced_selected": n_tuned_reduced,
+               "auto_tuned_reduced_only_where_wins": bool(tuned_ok)}
+    print(f"\nwins_by_hbm_model: {summary['wins_by_hbm_model']}  "
+          f"wins_by_time: {summary['wins_by_time']}\n"
+          f"auto_tuned picked reduced on {n_tuned_reduced}/{len(rows)} "
+          f"layers, only-where-wins={tuned_ok}", flush=True)
+    return rows, summary
+
+
+def run_network(res: int, n_inputs: int, iters: int, warmup: int,
+                seed: int) -> dict:
+    specs = cnn.mobilenet_v2(0.5)
+    params = cnn.init_cnn(jax.random.PRNGKey(seed), specs, 3, res=res)
+    rng = np.random.default_rng(seed)
+    xs = [jnp.asarray(rng.standard_normal((1, res, res, 3)), jnp.float32)
+          for _ in range(n_inputs)]
+    print(f"\n== MobileNet-v2 (width 0.5, res {res}) network policy A/B ==",
+          flush=True)
+    out, ref = {}, None
+    for cd in DTYPES:
+        t0 = time.time()
+        net = C.compile(params, specs, res=res, batch=1, algorithm="auto",
+                        compute_dtype=cd)
+        build_s = time.time() - t0
+        t = time_jitted(net.apply, xs[0], warmup=warmup, iters=iters)
+        ys = np.stack([np.asarray(net.apply(x), np.float32)[0]
+                       for x in xs])
+        if ref is None:
+            ref = ys
+        rel = float(np.max(np.abs(ys - ref))
+                    / (np.max(np.abs(ref)) + 1e-9))
+        top1 = float(np.mean(np.argmax(ys, -1) == np.argmax(ref, -1)))
+        dtypes = [p.describe().get("compute_dtype", "float32")
+                  for p in net.plans.values()]
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "plan.npz")
+            net.save(path)
+            artifact_bytes = os.path.getsize(path)
+        out[cd] = {"build_s": round(build_s, 3), "t_apply_s": t,
+                   "artifact_bytes": artifact_bytes,
+                   "n_layers": len(dtypes),
+                   "n_reduced_layers": (0 if cd == "float32" else
+                                        sum(cd in d_ for d_ in dtypes)),
+                   "rel_err_vs_fp32": round(rel, 6),
+                   "top1_agreement": top1}
+        print(f"  {cd:8s}: apply {t*1e3:7.2f}ms  artifact "
+              f"{artifact_bytes>>10:6d}KiB  reduced layers "
+              f"{out[cd]['n_reduced_layers']}/{len(dtypes)}  "
+              f"top1 {top1:.3f}  rel_err {rel:.4f}", flush=True)
+    return out
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_PR8.json")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized run: half-resolution ladder, res-32 "
+                         "network, fewer iters")
+    ap.add_argument("--iters", type=int, default=None)
+    ap.add_argument("--warmup", type=int, default=1)
+    ap.add_argument("--res", type=int, default=None,
+                    help="network-pass input resolution "
+                         "(default 32 quick / 96 full)")
+    ap.add_argument("--inputs", type=int, default=16,
+                    help="random inputs for the logits top-1 gate")
+    ap.add_argument("--top1-threshold", type=float, default=0.75,
+                    help="accuracy gate: exit non-zero when the int8 "
+                         "network's top-1 agreement vs fp32 is below this "
+                         "(the network is random-init, so logit margins "
+                         "are near-noise -- trained networks agree far "
+                         "more often at the same quantization error)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    scale = 2 if args.quick else 1
+    iters = args.iters or (2 if args.quick else 3)
+    res = args.res or (32 if args.quick else 96)
+
+    t0 = time.time()
+    layers, summary = run_layers(scale, iters, args.warmup)
+    network = run_network(res, args.inputs, iters, args.warmup, args.seed)
+
+    gate = {"int8_top1_agreement": network["int8"]["top1_agreement"],
+            "threshold": args.top1_threshold,
+            "passed": network["int8"]["top1_agreement"]
+            >= args.top1_threshold}
+    out = {"meta": bench_metadata(),
+           "benchmark": "precision",
+           "config": {"scale": scale, "iters": iters,
+                      "warmup": args.warmup, "network_res": res,
+                      "network_inputs": args.inputs,
+                      "quick": args.quick, "seed": args.seed,
+                      "accuracy_budget": dict(
+                          planlib.AUTOTUNE_ACCURACY_BUDGET)},
+           "layers": layers,
+           "summary": summary,
+           "network": network,
+           "accuracy_gate": gate}
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"\naccuracy gate: int8 top-1 agreement "
+          f"{gate['int8_top1_agreement']:.3f} "
+          f"(threshold {gate['threshold']}) "
+          f"{'PASSED' if gate['passed'] else 'FAILED'}; "
+          f"wrote {args.out} in {time.time() - t0:.0f}s", flush=True)
+    if not gate["passed"]:
+        raise SystemExit("precision accuracy gate FAILED (see JSON)")
+
+
+if __name__ == "__main__":
+    main()

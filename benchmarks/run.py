@@ -36,6 +36,14 @@
       # spike, corrupt artifact, queue overload) gated on zero dropped
       # requests and zero incorrect responses vs the im2row oracle
       # (BENCH_PR7.json is the committed run)
+  PYTHONPATH=src python -m benchmarks.run --json BENCH_PR8.json \
+      --config precision
+      # the mixed-precision A/B: per-layer fp32/bf16/int8 plans over the
+      # deep VGG + MobileNet ladders (measured times, analytic HBM bytes
+      # with reduced filter payloads, per-layer accuracy), the unpinned
+      # auto_tuned race evidence, and the MobileNet-v2 whole-network
+      # policy A/B gated on int8 logits top-1 agreement vs fp32
+      # (BENCH_PR8.json is the committed run)
 
 Every emitted BENCH_*.json is stamped with jax version, backend/device
 kind, git SHA and a UTC timestamp (benchmarks.common.bench_metadata), so
@@ -73,7 +81,7 @@ def main(argv=None) -> None:
                          "metadata, to this path")
     ap.add_argument("--config", default="vgg_style",
                     choices=["vgg_style", "mobilenet", "compile",
-                             "crossover", "serving"],
+                             "crossover", "serving", "precision"],
                     help="which --json benchmark to run: vgg_style "
                          "(streamed vs materialized dense Winograd), "
                          "mobilenet (fused vs unfused separable blocks), "
@@ -85,7 +93,9 @@ def main(argv=None) -> None:
                          "ladders -- BENCH_PR6.json), or serving (the "
                          "fault-tolerant batched serving runtime under "
                          "Poisson arrivals + per-fault-class drills -- "
-                         "BENCH_PR7.json)")
+                         "BENCH_PR7.json), or precision (the per-layer "
+                         "and whole-network fp32/bf16/int8 A/B with the "
+                         "int8 top-1 accuracy gate -- BENCH_PR8.json)")
     args = ap.parse_args(argv)
 
     from benchmarks import (amortization, fast_fraction, per_layer, roofline,
@@ -97,6 +107,10 @@ def main(argv=None) -> None:
         if args.config == "serving":
             serving.main(["--out", args.json]
                          + ([] if args.full else ["--smoke"]))
+        elif args.config == "precision":
+            from benchmarks import precision
+            precision.main(["--out", args.json]
+                           + ([] if args.full else ["--quick"]))
         elif args.config == "compile":
             res = "224" if args.full else "96"
             iters = "3" if args.full else "2"

@@ -67,7 +67,12 @@ ARTIFACT_FORMAT = "repro.network_plan"
 # copies) raises ArtifactMismatchError -- and triggers the serving layer's
 # recompile-in-place path -- instead of producing wrong outputs. A v2
 # artifact has no digests to verify, so the version gates it out.
-ARTIFACT_VERSION = 3
+# v4: the header carries the network-level compute_dtype policy and conv
+# plan metas may store reduced-precision (bf16/int8) transform-domain
+# filters plus their per-output-channel dequantization scale arrays. A v3
+# reader would drop the scales and serve un-dequantized int8 outputs, so
+# the version gates it out.
+ARTIFACT_VERSION = 4
 
 #: IR ops that bind to a LayerPlan (everything else is structural/XLA-only).
 PLAN_OPS = ("conv2d", "conv1d", "separable", "inverted_residual")
@@ -108,6 +113,46 @@ class LayerExecutionError(RuntimeError):
     def __init__(self, node_id: str, cause: BaseException):
         super().__init__(f"layer {node_id!r} failed: {cause!r}")
         self.node_id = node_id
+
+
+def _meta_compute_dtypes(meta: dict) -> tuple[tuple[str, str], ...]:
+    """(executor, compute_dtype) leaves of one plan meta, recursing through
+    the block kinds (separable / inverted residual hold nested conv metas).
+    Feeds the dtype-mismatch refusal's per-layer enumeration."""
+    kind = meta.get("kind")
+    if kind == "conv2d":
+        return ((meta.get("algorithm", "?"),
+                 meta.get("compute_dtype", "float32")),)
+    if kind == "separable":
+        if meta.get("mode") == "fused_pallas":
+            return (("separable_streamed", "float32"),)
+        return (_meta_compute_dtypes(meta["dw"])
+                + _meta_compute_dtypes(meta["pw"]))
+    if kind == "inverted_residual":
+        out = ()
+        if meta.get("expand") is not None:
+            out += _meta_compute_dtypes(meta["expand"])
+        return out + _meta_compute_dtypes(meta["sep"])
+    return ()
+
+
+def _artifact_dtype_report(header: dict) -> str:
+    """Per-layer enumeration for dtype-mismatch refusals: each layer's
+    on-disk transform-domain compute dtype(s) next to what THIS build's
+    capability registry declares its executor(s) can run -- so the caller
+    sees at a glance which layers a recompile at the expected precision
+    would actually change."""
+    lines = []
+    for nid, meta in header.get("plans", {}).items():
+        leaves = _meta_compute_dtypes(meta)
+        if not leaves:
+            continue
+        part = ", ".join(
+            f"{ex}={cd}"
+            f"(registry: {'/'.join(registry.compute_dtypes_for(ex))})"
+            for ex, cd in leaves)
+        lines.append(f"{nid}[{part}]")
+    return "; ".join(lines)
 
 
 def _array_digest(a: np.ndarray) -> str:
@@ -469,14 +514,18 @@ def fuse(graph: Sequence[LayerIR]) -> tuple[LayerIR, ...]:
 # ---------------------------------------------------------------------------
 
 def place(graph: Sequence[LayerIR], shapes: dict[str, tuple[int, ...]],
-          algorithm: str = "auto") -> dict[str, dict]:
+          algorithm: str = "auto",
+          compute_dtype: str = "float32") -> dict[str, dict]:
     """Map the global algorithm request onto each plan-bearing node. A
     forced family falls back to im2col on layers its executors do not cover
     (the paper's mixed policy applied to a forced setting) -- a capability-
     registry query, exactly like the legacy models/cnn.py:_layer_algorithm.
-    Block nodes (separable / inverted residual) keep the family request:
-    their plan builders run their own capability-aware internal placement
-    (fused streamed kernel vs composed sub-plans)."""
+    The same per-layer fallback applies to a reduced compute_dtype: a conv
+    layer none of whose covering executors declare the dtype is placed back
+    at fp32 instead of refusing the whole network. Block nodes (separable /
+    inverted residual) keep the family request: their plan builders run
+    their own capability-aware internal placement (fused streamed kernel vs
+    composed sub-plans)."""
     placements: dict[str, dict] = {}
     for node in graph:
         if node.op not in PLAN_OPS:
@@ -489,9 +538,17 @@ def place(graph: Sequence[LayerIR], shapes: dict[str, tuple[int, ...]],
                                   groups=groups, c_in=c_in, c_out=a["c_out"])
             alg = (algorithm if registry.supported(algorithm, q)
                    else "im2col")
-            placements[node.id] = {"algorithm": alg, "groups": groups}
+            cd = compute_dtype
+            if cd != "float32":
+                fam = None if alg in ("auto", "auto_tuned") else alg
+                if not any(cd in cap.compute_dtypes
+                           for cap in registry.matching(q, fam)):
+                    cd = "float32"
+            placements[node.id] = {"algorithm": alg, "groups": groups,
+                                   "compute_dtype": cd}
         else:
-            placements[node.id] = {"algorithm": algorithm}
+            placements[node.id] = {"algorithm": algorithm,
+                                   "compute_dtype": compute_dtype}
     return placements
 
 
@@ -527,23 +584,28 @@ def bind(graph: Sequence[LayerIR], shapes: dict[str, tuple[int, ...]],
             plans[node.id] = _plan.plan_conv2d(
                 in_shape, _param(params, a["w_path"]),
                 stride=tuple(a["stride"]), padding=a["padding"],
-                groups=pl["groups"], algorithm=pl["algorithm"], dtype=dtype)
+                groups=pl["groups"], algorithm=pl["algorithm"], dtype=dtype,
+                compute_dtype=pl.get("compute_dtype", "float32"))
             const(node.id, "b", a.get("b_path"))
         elif node.op == "separable":
+            pl = placements[node.id]
             plans[node.id] = _plan.plan_separable_block(
                 in_shape, _param(params, a["dw_w"]),
                 _param(params, a["pw_w"]), stride=tuple(a["stride"]),
                 padding=a["padding"],
-                algorithm=placements[node.id]["algorithm"], dtype=dtype)
+                algorithm=pl["algorithm"], dtype=dtype,
+                compute_dtype=pl.get("compute_dtype", "float32"))
             const(node.id, "b_dw", a.get("dw_b"))
             const(node.id, "b_pw", a.get("pw_b"))
         elif node.op == "inverted_residual":
+            pl = placements[node.id]
             p = _plan.plan_inverted_residual(
                 in_shape,
                 _param(params, a["exp_w"]) if a.get("exp_w") else None,
                 _param(params, a["dw_w"]), _param(params, a["pw_w"]),
                 stride=tuple(a["stride"]), padding=a["padding"],
-                algorithm=placements[node.id]["algorithm"], dtype=dtype)
+                algorithm=pl["algorithm"], dtype=dtype,
+                compute_dtype=pl.get("compute_dtype", "float32"))
             if p.residual != a["residual"]:
                 # the graph is the source of truth for the skip edge (a
                 # hand-built IR may omit the add even where shapes allow it)
@@ -598,7 +660,8 @@ def _plan_weight_arrays(p) -> list[jax.Array]:
     plan build materializes; benchmarks block_until_ready on these)."""
     if isinstance(p, _plan.ConvPlan) or isinstance(
             p, _plan.DepthwiseConv1DPlan):
-        return [p.u]
+        scale = getattr(p, "scale", None)
+        return [p.u] if scale is None else [p.u, scale]
     if isinstance(p, _plan.SeparableBlockPlan):
         if p.mode == "fused_pallas":
             return [p.u_dw, p.u_pw]
@@ -634,6 +697,10 @@ class NetworkPlan:
     input_shape: tuple[int, ...]
     algorithm: str
     dtype: str
+    compute_dtype: str = "float32"     # requested transform-domain policy;
+                                       # per-layer outcomes (fallbacks, the
+                                       # auto_tuned race) live in each
+                                       # plan's describe()
     build_time_s: float = 0.0
     params_digest: str | None = None   # digest of the raw params the plan
                                        # was compiled from; compile(artifact=)
@@ -731,16 +798,20 @@ class NetworkPlan:
         return out + list(self.consts.values())
 
     def replace_layer(self, node_id: str, params, *,
-                      algorithm: str = "im2col") -> Any:
+                      algorithm: str = "im2col",
+                      compute_dtype: str = "float32") -> Any:
         """Re-place ONE plan-bearing node onto a different algorithm family
-        and re-bind its plan (and epilogue constants) from the raw params --
-        the serving supervisor's degrade path when a layer's executor
-        misbehaves. The replacement is a capability-registry placement,
-        exactly like compile-time place(): an algorithm the registry does
-        not cover for this layer raises the registry's resolution error.
-        Returns the freshly bound plan. `params` must be the pytree the
-        network was compiled from (checked against params_digest when the
-        plan carries one)."""
+        (and/or transform-domain compute dtype) and re-bind its plan (and
+        epilogue constants) from the raw params -- the serving supervisor's
+        degrade path when a layer's executor misbehaves, and its precision
+        promotion path when a reduced-precision layer trips the accuracy
+        probe (compute_dtype="float32" is the always-safe landing spot).
+        The replacement is a capability-registry placement, exactly like
+        compile-time place(): an algorithm the registry does not cover for
+        this layer raises the registry's resolution error. Returns the
+        freshly bound plan. `params` must be the pytree the network was
+        compiled from (checked against params_digest when the plan carries
+        one)."""
         by_id = {n.id: n for n in self.graph}
         node = by_id.get(node_id)
         if node is None or node.op not in PLAN_OPS:
@@ -762,9 +833,11 @@ class NetworkPlan:
                                   groups=groups, c_in=c_in, c_out=a["c_out"])
             if not registry.supported(algorithm, q):
                 raise registry.resolution_error(algorithm, q)
-            placement = {"algorithm": algorithm, "groups": groups}
+            placement = {"algorithm": algorithm, "groups": groups,
+                         "compute_dtype": compute_dtype}
         else:
-            placement = {"algorithm": algorithm}
+            placement = {"algorithm": algorithm,
+                         "compute_dtype": compute_dtype}
         plans, consts = bind((node,), shapes, {node_id: placement}, params,
                              dtype=self.dtype)
         self.plans.update(plans)
@@ -811,11 +884,12 @@ class NetworkPlan:
             d = self.plans[node.id].describe()
             rows.append((node.id, d["kind"], f"`{d['executor']}`",
                          d["filter"], d["stride"], d["groups"], d["tile"],
+                         d.get("compute_dtype", "float32"),
                          d.get("decision", "static"),
                          "x".join(map(str, shapes[node.id]))))
         return registry.markdown_table(
             ["layer", "kind", "executor", "filter", "stride", "groups",
-             "tile", "decision", "output"], rows)
+             "tile", "compute", "decision", "output"], rows)
 
     # ---- serialization ---------------------------------------------------
 
@@ -831,6 +905,7 @@ class NetworkPlan:
             "registry_fingerprint": registry.fingerprint(),
             "jax_version": jax.__version__,
             "dtype": self.dtype,
+            "compute_dtype": self.compute_dtype,
             "layout": "NHWC",
             "input_shape": list(self.input_shape),
             "algorithm": self.algorithm,
@@ -904,9 +979,12 @@ class NetworkPlan:
                     f"saved per-layer executor decisions may be stale")
             if expect_dtype is not None and str(
                     jnp.dtype(expect_dtype)) != header.get("dtype"):
+                report = _artifact_dtype_report(header)
                 raise refuse(
                     f"{path} holds {header.get('dtype')} weights, caller "
-                    f"expects {jnp.dtype(expect_dtype)}")
+                    f"expects {jnp.dtype(expect_dtype)}"
+                    + (f"; per-layer transform-domain compute dtypes on "
+                       f"disk vs this registry: {report}" if report else ""))
             if header.get("layout") not in registry.LAYOUTS or (
                     expect_layout is not None
                     and expect_layout != header.get("layout")):
@@ -940,6 +1018,7 @@ class NetworkPlan:
         return cls(graph=graph, plans=plans, consts=consts,
                    input_shape=tuple(header["input_shape"]),
                    algorithm=header["algorithm"], dtype=header["dtype"],
+                   compute_dtype=header.get("compute_dtype", "float32"),
                    params_digest=header.get("params_digest"))
 
 
@@ -1004,14 +1083,17 @@ _ARTIFACT_FALLBACK_ERRORS = (ArtifactMismatchError, OSError, EOFError,
 
 
 def _try_load_artifact(path: str, *, input_shape, algorithm, digest: str,
-                       dtype=None) -> "NetworkPlan | None":
+                       dtype=None,
+                       compute_dtype: str = "float32"
+                       ) -> "NetworkPlan | None":
     """The compile(artifact=) warm-start attempt: load without counting,
     then validate the artifact against THIS call's arguments -- input
-    shape, algorithm request, params digest, and (when explicitly
-    requested) dtype -- so a stale artifact (different resolution,
-    different policy, retrained weights, other precision) recompiles
-    instead of silently serving old decisions. Returns None when the
-    artifact is unusable; the caller does the one-miss accounting."""
+    shape, algorithm request, params digest, compute_dtype policy, and
+    (when explicitly requested) dtype -- so a stale artifact (different
+    resolution, different policy, retrained weights, other precision)
+    recompiles instead of silently serving old decisions. Returns None
+    when the artifact is unusable; the caller does the one-miss
+    accounting."""
     try:
         loaded = NetworkPlan.load(path, _record=False)
     except _ARTIFACT_FALLBACK_ERRORS:
@@ -1019,6 +1101,7 @@ def _try_load_artifact(path: str, *, input_shape, algorithm, digest: str,
     if (loaded.input_shape != tuple(input_shape)
             or loaded.algorithm != algorithm
             or loaded.params_digest != digest
+            or loaded.compute_dtype != compute_dtype
             or (dtype is not None
                 and loaded.dtype != str(jnp.dtype(dtype)))):
         return None
@@ -1042,6 +1125,7 @@ def _plans_dtype(plans: dict) -> str:
 def compile(params, graph, *, res: int | None = None, c_in: int = 3,
             batch: int = 1, algorithm: str = "auto",
             input_shape: Sequence[int] | None = None, dtype=None,
+            compute_dtype: str = "float32",
             artifact: str | None = None) -> NetworkPlan:
     """Compile a network description into one NetworkPlan.
 
@@ -1058,6 +1142,14 @@ def compile(params, graph, *, res: int | None = None, c_in: int = 3,
     sequence networks pass `input_shape` instead. `algorithm` is the global
     request (plan.ALGORITHMS); uncovered layers fall back to im2col, the
     paper's mixed policy.
+
+    `compute_dtype` is the network-level transform-domain precision policy
+    ("float32" / "bfloat16" / "int8"): reduced dtypes quantize/cast each
+    conv layer's transform-domain filter at bind time (per-output-channel
+    scales folded into the epilogue); layers whose covering executors do
+    not declare the dtype are placed back at fp32, the same per-layer
+    fallback shape as the algorithm request. The policy is persisted in
+    the artifact header, and a warm start requires it to match.
 
     With `artifact=path`, compile() first tries NetworkPlan.load(path) and
     validates the artifact against THIS call (input shape, algorithm,
@@ -1077,11 +1169,15 @@ def compile(params, graph, *, res: int | None = None, c_in: int = 3,
     if algorithm not in _plan.ALGORITHMS:
         raise ValueError(f"unknown algorithm {algorithm!r}; expected one "
                          f"of {_plan.ALGORITHMS}")
+    compute_dtype = str(jnp.dtype(compute_dtype))
+    if compute_dtype not in registry.COMPUTE_DTYPES:
+        raise ValueError(f"unknown compute_dtype {compute_dtype!r}; "
+                         f"expected one of {registry.COMPUTE_DTYPES}")
     digest = params_digest(params) if artifact is not None else None
     if artifact is not None and os.path.exists(artifact):
         loaded = _try_load_artifact(artifact, input_shape=input_shape,
                                     algorithm=algorithm, digest=digest,
-                                    dtype=dtype)
+                                    dtype=dtype, compute_dtype=compute_dtype)
         if loaded is not None:
             _plan.record_artifact_load(True)
             return loaded
@@ -1089,12 +1185,13 @@ def compile(params, graph, *, res: int | None = None, c_in: int = 3,
                                                   c_in=input_shape[-1])
     ir = fuse(ir)
     shapes = infer_shapes(ir, input_shape)
-    placements = place(ir, shapes, algorithm)
+    placements = place(ir, shapes, algorithm, compute_dtype)
     plans, consts = bind(ir, shapes, placements, params, dtype=dtype)
     net = NetworkPlan(
         graph=ir, plans=plans, consts=consts, input_shape=input_shape,
         algorithm=algorithm,
         dtype=str(jnp.dtype(dtype)) if dtype else _plans_dtype(plans),
+        compute_dtype=compute_dtype,
         build_time_s=time.perf_counter() - t0, params_digest=digest)
     if artifact is not None:
         _plan.record_artifact_load(False)

@@ -158,6 +158,13 @@ class ConvSpec:
                                       # plans transpose weights once at plan
                                       # time and apply() transposes x/y at
                                       # the boundary
+    compute_dtype: str = "float32"    # transform-domain GEMM/Hadamard dtype
+                                      # (registry.COMPUTE_DTYPES). Input and
+                                      # inverse transforms always run fp32;
+                                      # bf16/int8 only change the cached
+                                      # filter operand -- int8 carries
+                                      # per-output-channel scales folded
+                                      # into the epilogue (ConvPlan.scale)
     output_tile: tuple[int, int] | None = None
     ct_h: CookToom | None = None
     ct_w: CookToom | None = None      # also the single CT of the 1D variant
@@ -199,19 +206,26 @@ _ARTIFACT_MISSES = 0
 # loads is asserted against these counters in tests.
 _MEASURED = 0
 _FALLBACK = 0
+# Plan-time weight-quantization accounting: one count per int8
+# _bind_weights pass (bf16 casts are free and not counted). Warm artifact
+# loads take the quantized payload verbatim, so the zero-re-quantization
+# contract of NetworkPlan.load is asserted against this counter in tests.
+_QUANTIZED = 0
 
 
 def plan_cache_info() -> dict:
     """{'hits', 'misses', 'size'} of the process-level spec cache, plus
     {'artifact_hits', 'artifact_misses'} of serialized-plan loads
-    (repro.core.compile.NetworkPlan.save/load warm starts) and
+    (repro.core.compile.NetworkPlan.save/load warm starts),
     {'measured', 'fallback'} auto_tuned resolution counts (measured timing
-    race vs the no-measurement fallback path)."""
+    race vs the no-measurement fallback path), and {'quantized'} plan-time
+    int8 weight-quantization passes."""
     return {"hits": _CACHE_HITS, "misses": _CACHE_MISSES,
             "size": len(_SPEC_CACHE),
             "artifact_hits": _ARTIFACT_HITS,
             "artifact_misses": _ARTIFACT_MISSES,
-            "measured": _MEASURED, "fallback": _FALLBACK}
+            "measured": _MEASURED, "fallback": _FALLBACK,
+            "quantized": _QUANTIZED}
 
 
 def _record_autotune_resolution(measured: bool) -> None:
@@ -233,7 +247,7 @@ def record_artifact_load(hit: bool) -> None:
 
 def clear_plan_cache() -> None:
     global _CACHE_HITS, _CACHE_MISSES, _ARTIFACT_HITS, _ARTIFACT_MISSES, \
-        _MEASURED, _FALLBACK
+        _MEASURED, _FALLBACK, _QUANTIZED
     _SPEC_CACHE.clear()
     _CACHE_HITS = 0
     _CACHE_MISSES = 0
@@ -241,6 +255,7 @@ def clear_plan_cache() -> None:
     _ARTIFACT_MISSES = 0
     _MEASURED = 0
     _FALLBACK = 0
+    _QUANTIZED = 0
 
 
 def _cache_enabled() -> bool:
@@ -298,14 +313,25 @@ def _resolve_strided_tile(h: int, w: int, kh: int, kw: int, padding,
 
 def _build_spec(x_shape, w_shape, dtype, stride, padding, requested,
                 resolved, output_tile, groups: int = 1,
-                layout: str = "NHWC") -> ConvSpec:
+                layout: str = "NHWC",
+                compute_dtype: str = "float32") -> ConvSpec:
     """Materialize geometry/transform/blocking decisions for one resolved
     algorithm."""
     n, h, w, c = x_shape
     kh, kw, _, mout = w_shape
     base = dict(x_shape=tuple(x_shape), w_shape=tuple(w_shape), dtype=dtype,
                 stride=stride, padding=padding, requested=requested,
-                groups=groups, layout=layout)
+                groups=groups, layout=layout, compute_dtype=compute_dtype)
+
+    if (compute_dtype != "float32" and output_tile is None
+            and resolved not in ("winograd_f63", "fft", "im2col",
+                                 "pallas_im2col")):
+        # Low-precision grids pair with the small tile: the transform-domain
+        # dynamic range grows with tile size, and F(4,3)'s inverse transform
+        # amplifies the bf16/int8 quantization grid past any useful budget
+        # (measured ~1.4 rel max-abs err for int8 at F(4,3) vs ~0.02 at
+        # F(2,3)). An explicit output_tile still wins.
+        output_tile = 2
 
     if resolved in ("winograd_strided", "pallas_winograd_strided",
                     "pallas_depthwise_strided"):
@@ -446,9 +472,9 @@ def _depthwise_domain_taps(w: jax.Array, ct_h: CookToom, ct_w: CookToom,
     return jnp.pad(u, ((0, 0), (0, c_pad - c_in)))
 
 
-def _bind_weights(spec: ConvSpec, w: jax.Array) -> jax.Array:
-    """Transform the filter into the spec's execution domain. This is the
-    once-per-plan weight work; ConvPlan.apply never touches it again."""
+def _domain_filter(spec: ConvSpec, w: jax.Array) -> jax.Array:
+    """Transform the filter into the spec's execution domain (fp32). This is
+    the once-per-plan weight work; ConvPlan.apply never touches it again."""
     kh, kw, c, mout = spec.w_shape     # c = C/groups (HWIO grouped filter)
     if spec.algorithm in ("winograd", "winograd_f63"):
         return _wg.transform_filter_2d(w, spec.ct_h, spec.ct_w)
@@ -504,6 +530,63 @@ def _bind_weights(spec: ConvSpec, w: jax.Array) -> jax.Array:
     raise ValueError(spec.algorithm)
 
 
+def _quantize_axes(spec: ConvSpec) -> tuple[tuple[int, ...], str]:
+    """(channel_axes, scale_form) of the int8 per-output-channel quantizer
+    for one executor's execution-domain filter layout. `channel_axes` are
+    the axes that together enumerate output channels (depthwise layouts
+    split them into (C, mult)); scale_form says how ConvPlan.scale is
+    shaped for the executor's epilogue -- 'flat' (pure-JAX: one f32 per
+    NHWC output channel, broadcast in _dequantize) or 'row' (Pallas: a
+    (1, M_padded) operand mirroring the bias blockspec)."""
+    alg = spec.algorithm
+    depthwise = spec.groups > 1 and spec.groups == spec.x_shape[3]
+    if alg in ("winograd", "winograd_1d", "winograd_grouped"):
+        return (-1,), "flat"
+    if alg == "winograd_depthwise":
+        return (-2, -1), "flat"
+    if alg == "winograd_strided":
+        return ((-2, -1) if depthwise else (-1,)), "flat"
+    if alg == "im2col":
+        return ((0, 2) if spec.groups > 1 else (-1,)), "flat"
+    if alg in ("pallas_winograd", "pallas_winograd_materialized",
+               "pallas_winograd_strided", "pallas_im2col",
+               "pallas_depthwise_strided"):
+        return (-1,), "row"
+    if alg == "pallas_depthwise":
+        return (-2, -1), "row"
+    raise ValueError(
+        f"executor {alg!r} has no int8 transform-domain path")
+
+
+def _bind_weights(spec: ConvSpec,
+                  w: jax.Array) -> tuple[jax.Array, jax.Array | None]:
+    """Filter -> (execution-domain filter, dequantization scale). fp32
+    plans get (fp32 u, None); bf16 plans downcast the transformed filter
+    (dequantization is implicit -- bf16 is a truncated fp32); int8 plans
+    quantize per output channel AFTER the transform and padding, so
+    `u_int8 * scale` reproduces the fp32 transformed filter up to rounding
+    and the hot path dequantizes with ONE per-channel multiply folded into
+    the bias+activation epilogue. All of this is once-per-plan weight work;
+    warm artifact loads bypass it entirely."""
+    global _QUANTIZED
+    u = _domain_filter(spec, w)
+    cd = spec.compute_dtype
+    if cd == "float32":
+        return u, None
+    if cd == "bfloat16":
+        return u.astype(jnp.bfloat16), None
+    if cd == "int8":
+        from repro.optim import compression as _comp
+        axes, form = _quantize_axes(spec)
+        q, scale = _comp.quantize_channelwise(u, channel_axes=axes)
+        _QUANTIZED += 1
+        scale = (scale.reshape(1, -1) if form == "row"
+                 else scale.reshape(-1))
+        return q, scale
+    raise ValueError(f"unknown compute_dtype {cd!r}; expected one of "
+                     f"{registry.COMPUTE_DTYPES}")
+
+
 # ---------------------------------------------------------------------------
 # ConvPlan: spec + weights in the execution domain
 # ---------------------------------------------------------------------------
@@ -522,8 +605,15 @@ class ConvPlan:
 
     spec: ConvSpec
     u: jax.Array                       # filter in the execution domain
+                                       # (fp32 / bf16 / int8 per
+                                       # spec.compute_dtype)
     build_time_s: float = 0.0
     precision: Any = None
+    scale: jax.Array | None = None     # int8 per-output-channel dequant
+                                       # scales (None for fp32/bf16): flat
+                                       # (M,) on pure-JAX executors, (1, Mp)
+                                       # on Pallas executors (a kernel
+                                       # operand mirroring the bias)
 
     def __call__(self, x: jax.Array, **kwargs) -> jax.Array:
         return self.apply(x, **kwargs)
@@ -545,6 +635,15 @@ class ConvPlan:
             return jnp.transpose(y, (0, 3, 1, 2))
         return self._apply_nhwc(x, bias, activation)
 
+    def _dequantize(self, y: jax.Array) -> jax.Array:
+        """Fold the int8 per-output-channel scales back in (pure-JAX
+        executors only -- the Pallas kernels take `scale` as an operand and
+        multiply in the store epilogue). One elementwise multiply, fused by
+        XLA into the bias/activation epilogue that follows."""
+        if self.scale is None:
+            return y
+        return y * self.scale.reshape(-1).astype(y.dtype)
+
     def _apply_nhwc(self, x: jax.Array, bias: jax.Array | None,
                     activation: str) -> jax.Array:
         spec = self.spec
@@ -560,7 +659,7 @@ class ConvPlan:
             y = _wg.winograd_conv2d_pretransformed(
                 x, self.u, spec.ct_h, spec.ct_w, padding=spec.padding,
                 geometry=spec.geometry, precision=self.precision)
-            return _epilogue_jnp(y, bias, activation)
+            return _epilogue_jnp(self._dequantize(y), bias, activation)
         if alg == "fft":
             y = _fft.fft_conv2d_pretransformed(
                 x, self.u, spec.fft, padding=spec.padding,
@@ -569,63 +668,74 @@ class ConvPlan:
         if alg == "winograd_1d":
             y = _wg.winograd_conv1d_axis_pretransformed(
                 x, self.u, spec.ct_w, spec.geometry, precision=self.precision)
-            return _epilogue_jnp(y, bias, activation)
+            return _epilogue_jnp(self._dequantize(y), bias, activation)
         if alg == "winograd_depthwise":
             y = _wg.winograd_depthwise_conv2d_pretransformed(
                 x, self.u, spec.ct_h, spec.ct_w, padding=spec.padding,
                 geometry=spec.geometry)
-            return _epilogue_jnp(y, bias, activation)
+            return _epilogue_jnp(self._dequantize(y), bias, activation)
         if alg == "winograd_grouped":
             y = _wg.winograd_grouped_conv2d_pretransformed(
                 x, self.u, spec.ct_h, spec.ct_w, spec.groups,
                 padding=spec.padding, geometry=spec.geometry,
                 precision=self.precision)
-            return _epilogue_jnp(y, bias, activation)
+            return _epilogue_jnp(self._dequantize(y), bias, activation)
         if alg == "winograd_strided":
             y = _wg.winograd_strided_conv2d_pretransformed(
                 x, self.u, spec.ct_h, spec.ct_w, groups=spec.groups,
                 geometry=spec.geometry, precision=self.precision)
-            return _epilogue_jnp(y, bias, activation)
+            return _epilogue_jnp(self._dequantize(y), bias, activation)
         if alg == "pallas_winograd_strided":
             from repro.kernels import ops
             return ops.winograd_strided_conv2d_planned(
                 x, self.u, ct_h=spec.ct_h, ct_w=spec.ct_w,
                 geometry=spec.geometry, stream=spec.stream,
-                c_out=spec.w_shape[3], bias=bias, activation=activation)
+                c_out=spec.w_shape[3], bias=bias, activation=activation,
+                scale=self.scale)
         if alg == "pallas_depthwise_strided":
             from repro.kernels import ops
             return ops.depthwise_strided_conv2d_planned(
                 x, self.u, ct_h=spec.ct_h, ct_w=spec.ct_w,
                 geometry=spec.geometry, stream=spec.stream,
-                c_out=spec.w_shape[3], bias=bias, activation=activation)
+                c_out=spec.w_shape[3], bias=bias, activation=activation,
+                scale=self.scale)
         if alg == "im2col":
             geom = spec.geometry
             kh, kw, _, mout = spec.w_shape
+            b = self.u
+            if b.dtype == jnp.bfloat16:
+                cast = lambda a: a.astype(jnp.bfloat16)   # noqa: E731
+            elif b.dtype != x.dtype:
+                b, cast = b.astype(x.dtype), (lambda a: a)  # int8 -> f32
+            else:
+                cast = lambda a: a                        # noqa: E731
             if spec.groups > 1:
                 a, _ = _im2col.grouped_im2row(x, kh, kw, spec.stride,
                                               spec.padding, spec.groups, geom)
-                y = jnp.einsum("rgk,gkm->rgm", a, self.u,
+                y = jnp.einsum("rgk,gkm->rgm", cast(a), b,
                                precision=self.precision,
                                preferred_element_type=jnp.float32)
             else:
                 a, _ = _im2col.im2row(x, kh, kw, spec.stride, spec.padding,
                                       geom)
-                y = jnp.matmul(a, self.u, precision=self.precision,
+                y = jnp.matmul(cast(a), b, precision=self.precision,
                                preferred_element_type=jnp.float32)
             y = y.reshape(x.shape[0], geom.oh, geom.ow, mout).astype(x.dtype)
-            return _epilogue_jnp(y, bias, activation)
+            return _epilogue_jnp(self._dequantize(y), bias, activation)
         if alg == "pallas_depthwise":
             from repro.kernels import ops
             return ops.depthwise_conv2d_planned(
                 x, self.u, ct_h=spec.ct_h, ct_w=spec.ct_w,
                 geometry=spec.geometry, stream=spec.stream,
-                c_out=spec.w_shape[3], bias=bias, activation=activation)
+                c_out=spec.w_shape[3], bias=bias, activation=activation,
+                scale=self.scale)
         if alg == "pallas_winograd":
             from repro.kernels import ops
             return ops.winograd_conv2d_planned(
                 x, self.u, ct_h=spec.ct_h, ct_w=spec.ct_w,
                 geometry=spec.geometry, stream=spec.stream,
-                c_out=spec.w_shape[3], bias=bias, activation=activation)
+                c_out=spec.w_shape[3], bias=bias, activation=activation,
+                scale=self.scale)
         if alg == "pallas_winograd_materialized":
             from repro.kernels import ops
             _, _, c, mout = spec.w_shape
@@ -641,7 +751,7 @@ class ConvPlan:
                 x, self.u, kh=kh, kw=kw, stride=spec.stride,
                 padding=spec.padding, geometry=spec.geometry,
                 blocks=spec.blocks, c_out=mout, bias=bias,
-                activation=activation)
+                activation=activation, scale=self.scale)
         raise ValueError(alg)
 
     @property
@@ -691,7 +801,8 @@ class ConvPlan:
                 "groups": spec.groups,
                 "tile": ("x".join(map(str, spec.output_tile))
                          if spec.output_tile else "-"),
-                "decision": decision}
+                "decision": decision,
+                "compute_dtype": spec.compute_dtype}
 
     def to_artifact(self) -> tuple[dict, dict]:
         """(meta, arrays): `meta` is the JSON-safe spec record from which
@@ -704,11 +815,15 @@ class ConvPlan:
                 "stride": list(spec.stride), "padding": spec.padding,
                 "requested": spec.requested, "algorithm": spec.algorithm,
                 "groups": spec.groups, "layout": spec.layout,
+                "compute_dtype": spec.compute_dtype,
                 "output_tile": (list(spec.output_tile)
                                 if spec.output_tile else None),
                 "autotune": ([list(kv) for kv in spec.autotune]
                              if spec.autotune else None)}
-        return meta, {"u": np.asarray(self.u)}
+        arrays = {"u": np.asarray(self.u)}
+        if self.scale is not None:
+            arrays["scale"] = np.asarray(self.scale)
+        return meta, arrays
 
     @classmethod
     def from_artifact(cls, meta: dict, arrays: dict) -> "ConvPlan":
@@ -721,13 +836,16 @@ class ConvPlan:
                            meta["dtype"], tuple(meta["stride"]),
                            meta["padding"], meta["requested"],
                            meta["algorithm"], tuple(ot) if ot else None,
-                           meta["groups"], meta["layout"])
+                           meta["groups"], meta["layout"],
+                           meta.get("compute_dtype", "float32"))
         if meta.get("autotune"):
             spec = dataclasses.replace(
                 spec, autotune=tuple(
                     (k, tuple(v) if isinstance(v, list) else v)
                     for k, v in meta["autotune"]))
-        return cls(spec=spec, u=jnp.asarray(arrays["u"]))
+        scale = (jnp.asarray(arrays["scale"]) if "scale" in arrays
+                 else None)
+        return cls(spec=spec, u=jnp.asarray(arrays["u"]), scale=scale)
 
 
 # ---------------------------------------------------------------------------
@@ -746,66 +864,129 @@ def _time_apply(plan: ConvPlan, x, warmup: int = 1, iters: int = 3) -> float:
     return best
 
 
+#: Accuracy budgets of the auto_tuned dtype race: a reduced-precision
+#: contender may only win when its relative max-abs error vs the fp32
+#: reference output stays under budget. bf16 has ~3 decimal digits of
+#: mantissa; int8's budget also absorbs the per-channel quantization grid.
+AUTOTUNE_ACCURACY_BUDGET = {"bfloat16": 3e-2, "int8": 6e-2}
+
+_DTYPE_LABEL = {"bfloat16": "bf16", "int8": "int8"}
+
+
 def _autotune_contenders(x_shape, w_shape, stride, groups,
-                         output_tile, fast: str) -> list[tuple]:
-    """(label, executor, output_tile) contenders of the N-way auto_tuned
-    race: the registry-matched winograd-family executor at its default tile
-    (F(4,3) for dense 3x3), its small-tile F(2,3) variant, the large-tile
-    F(6,3) executor, the rfft2 executor, and the im2row baseline -- each
-    only where its Capability record covers the layer. Labels key the
-    persisted evidence (t_<label>_s)."""
+                         output_tile, fast: str,
+                         pin_dtype: str = "float32",
+                         dtype_race: bool = False) -> list[tuple]:
+    """(label, executor, output_tile, compute_dtype) contenders of the
+    N-way auto_tuned race: the registry-matched winograd-family executor at
+    its default tile (F(4,3) for dense 3x3), its small-tile F(2,3) variant,
+    the large-tile F(6,3) executor, the rfft2 executor, the im2row
+    baseline, and the fast executor's reduced-precision (bf16/int8)
+    transform-domain variants where its Capability declares them -- each
+    only where the record covers the layer. Labels key the persisted
+    evidence (t_<label>_s; dtype contenders also persist err_<label>)."""
     kh, kw = w_shape[:2]
     q = LayerQuery(kh=kh, kw=kw, stride=stride, groups=groups,
                    c_in=x_shape[3], c_out=w_shape[3])
-    entries = [("winograd", fast, output_tile)]
+    entries = [("winograd", fast, output_tile, "float32")]
     if fast == "winograd" and output_tile is None and (kh, kw) == (3, 3):
-        entries.append(("winograd_f2", "winograd", 2))
+        entries.append(("winograd_f2", "winograd", 2, "float32"))
     if registry.supported("winograd_f63", q):
-        entries.append(("f63", "winograd_f63", None))
+        entries.append(("f63", "winograd_f63", None, "float32"))
     if registry.supported("fft", q):
-        entries.append(("fft", "fft", None))
-    entries.append(("im2col", "im2col", None))
+        entries.append(("fft", "fft", None, "float32"))
+    entries.append(("im2col", "im2col", None, "float32"))
+    if dtype_race or pin_dtype != "float32":
+        # Reduced-precision contenders are strictly opt-in: the default
+        # fp32 race must keep fp32 numerics (a crowned int8 winner would
+        # silently change auto_tuned outputs by up to its accuracy
+        # budget). compute_dtype="auto" opts the unpinned race in; a
+        # pinned reduced dtype fields its own variant so the race times
+        # what the pinned build will actually run.
+        fast_dts = registry.compute_dtypes_for(fast)
+        for dt in ("bfloat16", "int8"):
+            if dt in fast_dts:
+                entries.append((f"winograd_{_DTYPE_LABEL[dt]}", fast,
+                                output_tile, dt))
+    if pin_dtype != "float32":
+        # A pinned reduced dtype drops contenders whose executor cannot run
+        # it -- the race must not crown an fp32-only executor (fft, f63)
+        # that the pinned build would then refuse.
+        entries = [e for e in entries
+                   if pin_dtype in registry.compute_dtypes_for(e[1])]
     return entries
 
 
 def _measure_autotune(x_shape, w_shape, dtype, stride, padding,
                       output_tile, groups: int = 1,
-                      fast: str = "winograd") -> tuple[str, Any, tuple]:
+                      fast: str = "winograd",
+                      pin_dtype: str = "float32",
+                      dtype_race: bool = False
+                      ) -> tuple[str, Any, str, tuple]:
     """Time every registry-eligible contender on the real layer shape;
-    return (winner executor, winner output_tile, evidence). Runs once per
-    shape per process (the spec cache holds the result) and the evidence
-    tuple is persisted into NetworkPlan artifacts, so warm loads never
-    re-measure. `fast` is the winograd-family executor the registry matched
-    for this layer (grouped/depthwise/strided variants included); the
-    legacy evidence keys t_winograd_s / t_im2col_s name that contender and
-    the (grouped) im2row baseline."""
+    return (winner executor, winner output_tile, winner compute_dtype,
+    evidence). Runs once per shape per process (the spec cache holds the
+    result) and the evidence tuple is persisted into NetworkPlan artifacts,
+    so warm loads never re-measure. `fast` is the winograd-family executor
+    the registry matched for this layer (grouped/depthwise/strided variants
+    included); the legacy evidence keys t_winograd_s / t_im2col_s name that
+    contender and the (grouped) im2row baseline.
+
+    Reduced-precision contenders (winograd_bf16 / winograd_int8) enter the
+    race only when the caller opted in (compute_dtype="auto" sets
+    `dtype_race`, or a pinned reduced dtype fields its own variant) and
+    are gated on accuracy BEFORE they may win: each is compared against the fp32 fast
+    contender's output and dropped from the race (its err_<label> evidence
+    still persisted) when its relative max-abs error exceeds
+    AUTOTUNE_ACCURACY_BUDGET -- a quantized executor never wins on speed at
+    the cost of a busted output."""
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.standard_normal(x_shape), dtype)
     w = jnp.asarray(rng.standard_normal(w_shape)
                     / (w_shape[0] * w_shape[1]), dtype)
-    times: dict[str, tuple[float, str, Any]] = {}
-    for label, alg, ot in _autotune_contenders(x_shape, w_shape, stride,
-                                               groups, output_tile, fast):
+    times: dict[str, tuple[float, str, Any, str]] = {}
+    errs: list[tuple[str, float]] = []
+    y_ref = None   # fp32 fast-contender output, the dtype-gate oracle
+    for label, alg, ot, cd in _autotune_contenders(x_shape, w_shape, stride,
+                                                   groups, output_tile,
+                                                   fast, pin_dtype,
+                                                   dtype_race):
         try:
-            spec = _build_spec(x_shape, w_shape, str(jnp.dtype(dtype)), stride,
-                               padding, alg, alg, ot, groups)
-            t = _time_apply(ConvPlan(spec=spec, u=_bind_weights(spec, w)), x)
+            spec = _build_spec(x_shape, w_shape, str(jnp.dtype(dtype)),
+                               stride, padding, alg, alg, ot, groups,
+                               compute_dtype=cd)
+            u, scale = _bind_weights(spec, w)
+            plan = ConvPlan(spec=spec, u=u, scale=scale)
+            if cd != "float32":
+                if y_ref is None:
+                    continue   # no fp32 oracle -> no gated contender
+                y = np.asarray(jax.jit(plan.apply)(x), np.float32)
+                err = float(np.max(np.abs(y - y_ref))
+                            / (np.max(np.abs(y_ref)) or 1.0))
+                errs.append((f"err_{label}", err))
+                if err > AUTOTUNE_ACCURACY_BUDGET[cd]:
+                    continue   # accuracy gate: may not win the race
+            t = _time_apply(plan, x)
+            if label == "winograd":
+                y_ref = np.asarray(jax.jit(plan.apply)(x), np.float32)
         except Exception:
             if label in ("winograd", "im2col"):
                 raise  # the two contenders every eligible layer must have
             continue
-        times[label] = (t, spec.algorithm, spec.output_tile)
+        times[label] = (t, spec.algorithm, spec.output_tile, cd)
     win = min(times, key=lambda k: times[k][0])
-    _, winner, winner_tile = times[win]
+    _, winner, winner_tile, winner_dtype = times[win]
     evidence = [(f"t_{label}_s", times[label][0]) for label in times]
+    evidence.extend(errs)
     # winner: resolved executor; winner_label: the contender that won the
     # race (the two differ when e.g. the F(2,3) tile variant of the same
-    # winograd executor wins).
+    # winograd executor wins, or a reduced-precision variant of it does).
     evidence.append(("winner_label", win))
     evidence.append(("winner", winner))
+    evidence.append(("winner_dtype", winner_dtype))
     if winner_tile is not None:
         evidence.append(("winner_tile", tuple(winner_tile)))
-    return winner, winner_tile, tuple(evidence)
+    return winner, winner_tile, winner_dtype, tuple(evidence)
 
 
 # ---------------------------------------------------------------------------
@@ -824,6 +1005,7 @@ def plan_conv2d(
     precision=None,
     dtype=None,
     data_format: str = "NHWC",
+    compute_dtype: str = "float32",
 ) -> ConvPlan:
     """Build a ConvPlan for a (N, H, W, C) x (kh, kw, C/groups, M) conv.
 
@@ -851,6 +1033,17 @@ def plan_conv2d(
     `data_format="NCHW"` ingests NCHW inputs with an OIHW (M, C/groups, kh,
     kw) filter -- checkpoint compatibility: the filter is transposed to HWIO
     once, here, and apply() transposes x/y at the call boundary.
+
+    `compute_dtype` selects the transform-domain GEMM/Hadamard dtype:
+    "float32" (default), "bfloat16" (filter cast once at bind time), or
+    "int8" (per-output-channel symmetric weight quantization at bind time;
+    dequantization folds into the bias+activation epilogue). The input and
+    inverse transforms always run fp32. An explicit reduced dtype pins the
+    choice. `compute_dtype="auto"` (requires `algorithm="auto_tuned"`)
+    additionally fields bf16/int8 contenders in the measured race, gated
+    by AUTOTUNE_ACCURACY_BUDGET, and adopts the winner's dtype; the
+    default "float32" race never lowers precision, so plain auto_tuned
+    keeps fp32 numerics.
     """
     global _CACHE_HITS, _CACHE_MISSES
     t0 = time.perf_counter()
@@ -883,6 +1076,21 @@ def plan_conv2d(
     stride = (stride, stride) if isinstance(stride, int) else tuple(stride)
     dtype = dtype or w.dtype
     dtype_str = str(jnp.dtype(dtype))
+    dtype_race = compute_dtype == "auto"
+    if dtype_race:
+        if algorithm != "auto_tuned":
+            raise ValueError(
+                "compute_dtype='auto' races bf16/int8 against fp32 and "
+                "needs measured evidence -- it requires "
+                "algorithm='auto_tuned' (got algorithm="
+                f"{algorithm!r}); pin a concrete dtype otherwise")
+        compute_dtype = "float32"   # race baseline; winner may lower it
+    else:
+        compute_dtype = str(jnp.dtype(compute_dtype))
+    if compute_dtype not in registry.COMPUTE_DTYPES:
+        raise ValueError(
+            f"unknown compute_dtype {compute_dtype!r}; expected one of "
+            f"{registry.COMPUTE_DTYPES}")
     kh, kw = w_shape[:2]
     n, h, wdt, c = x_shape
     query = LayerQuery(kh=kh, kw=kw, stride=stride, groups=groups, c_in=c,
@@ -890,7 +1098,8 @@ def plan_conv2d(
 
     key = (x_shape, w_shape, dtype_str, stride, padding, algorithm,
            output_tile if not isinstance(output_tile, list) else
-           tuple(output_tile), precision, groups, data_format)
+           tuple(output_tile), precision, groups, data_format,
+           "auto" if dtype_race else compute_dtype)
     spec = _SPEC_CACHE.get(key) if _cache_enabled() else None
     if spec is not None:
         _CACHE_HITS += 1
@@ -899,6 +1108,7 @@ def plan_conv2d(
         fast = registry.best_fast(query)
         autotune = None
         build_tile = output_tile
+        build_dtype = compute_dtype
         if algorithm == "auto":
             resolved = registry.select_auto(query).executor
         elif algorithm == "auto_tuned":
@@ -906,11 +1116,24 @@ def plan_conv2d(
                 resolved = "im2col"
                 _record_autotune_resolution(measured=False)
             elif _measure_allowed():
-                resolved, tuned_tile, autotune = _measure_autotune(
-                    x_shape, w_shape, dtype_str, stride, padding, output_tile,
-                    groups, fast=fast.executor)
+                resolved, tuned_tile, tuned_dtype, autotune = \
+                    _measure_autotune(
+                        x_shape, w_shape, dtype_str, stride, padding,
+                        output_tile, groups, fast=fast.executor,
+                        pin_dtype=compute_dtype, dtype_race=dtype_race)
                 if tuned_tile is not None:
                     build_tile = tuned_tile
+                # Only compute_dtype="auto" fields reduced contenders, so
+                # an un-opted race always returns tuned_dtype="float32"
+                # and default numerics are untouched; an explicit reduced
+                # dtype pins the choice (the race still picked the
+                # executor). A pinned reduced dtype must not inherit an
+                # fp32 winner's tile -- the low-precision grid needs the
+                # small-tile default.
+                if compute_dtype == "float32":
+                    build_dtype = tuned_dtype
+                elif tuned_dtype != compute_dtype:
+                    build_tile = output_tile
                 _record_autotune_resolution(measured=True)
             else:
                 resolved = fast.executor if winograd_amortizes(
@@ -920,9 +1143,20 @@ def plan_conv2d(
             # concrete algorithm families: the registry either yields the
             # declared executor or raises the capability-enumerating error.
             resolved = registry.resolve(algorithm, query).executor
+        if build_dtype != "float32":
+            supported = registry.compute_dtypes_for(resolved)
+            if build_dtype not in supported:
+                supporting = sorted({
+                    cap.executor for cap in registry.CAPABILITIES
+                    if build_dtype in cap.compute_dtypes})
+                raise ValueError(
+                    f"executor {resolved!r} does not support "
+                    f"compute_dtype={build_dtype!r} (it supports "
+                    f"{'/'.join(supported)}); executors with a "
+                    f"{build_dtype} transform-domain path: {supporting}")
         spec = _build_spec(x_shape, w_shape, dtype_str, stride, padding,
                            algorithm, resolved, build_tile, groups,
-                           data_format)
+                           data_format, compute_dtype=build_dtype)
         if autotune is not None:
             spec = dataclasses.replace(spec, autotune=autotune)
         # An auto_tuned decision made via the heuristic fallback (planning
@@ -934,8 +1168,8 @@ def plan_conv2d(
         if _cache_enabled() and durable:
             _SPEC_CACHE[key] = spec
 
-    u = _bind_weights(spec, w)
-    return ConvPlan(spec=spec, u=u, precision=precision,
+    u, scale = _bind_weights(spec, w)
+    return ConvPlan(spec=spec, u=u, scale=scale, precision=precision,
                     build_time_s=time.perf_counter() - t0)
 
 
@@ -1026,9 +1260,13 @@ class SeparableBlockPlan:
         spec = self.spec
         if spec.mode == "fused_pallas":
             executor = "separable_streamed"
+            cd = "float32"
         else:
             executor = f"{self.dw.algorithm}+{self.pw.algorithm}"
+            cds = [self.dw.spec.compute_dtype, self.pw.spec.compute_dtype]
+            cd = cds[0] if cds[0] == cds[1] else "+".join(cds)
         return {"kind": "separable", "executor": executor,
+                "compute_dtype": cd,
                 "requested": spec.requested, "mode": spec.mode,
                 "filter": f"{spec.w_dw_shape[0]}x{spec.w_dw_shape[1]}+1x1",
                 "stride": f"{spec.stride[0]}x{spec.stride[1]}",
@@ -1116,6 +1354,7 @@ def plan_separable_block(
     algorithm: Algorithm = "auto",
     output_tile: int | tuple[int, int] | None = None,
     dtype=None,
+    compute_dtype: str = "float32",
 ) -> SeparableBlockPlan:
     """Plan a depthwise kxk conv and its following 1x1 pointwise conv as one
     unit (the MobileNet separable block).
@@ -1127,6 +1366,10 @@ def plan_separable_block(
     in-kernel. Every other configuration composes two ConvPlans (the
     depthwise one falling back per the usual suitability rules), so this
     entry point never rejects a block shape.
+
+    A reduced `compute_dtype` (bfloat16 / int8) always composes: the fused
+    separable kernel is fp32-only, and the composed sub-plans each carry
+    their own quantized transform-domain filter + epilogue scales.
     """
     global _CACHE_HITS, _CACHE_MISSES
     t0 = time.perf_counter()
@@ -1161,6 +1404,7 @@ def plan_separable_block(
     # strided depthwise plan with a pointwise plan below.
     fusable = (algorithm == "pallas_winograd" and mult == 1
                and stride == (1, 1)
+               and str(jnp.dtype(compute_dtype)) == "float32"
                and registry.supported("pallas_winograd", dw_query))
 
     if fusable:
@@ -1205,9 +1449,10 @@ def plan_separable_block(
         pw_alg = "im2col" if algorithm == "im2col" else "auto"
     dw = plan_conv2d(x_shape, w_dw, stride=stride, padding=padding,
                      algorithm=dw_alg, groups=c, output_tile=output_tile,
-                     dtype=dtype)
+                     dtype=dtype, compute_dtype=compute_dtype)
     pw = plan_conv2d(dw.out_shape, w_pw, stride=1, padding="SAME",
-                     algorithm=pw_alg, dtype=dtype)
+                     algorithm=pw_alg, dtype=dtype,
+                     compute_dtype=compute_dtype)
     spec = SeparableSpec(x_shape=x_shape, w_dw_shape=dw_shape,
                          w_pw_shape=pw_shape, dtype=dtype_str, stride=stride,
                          padding=padding, requested=algorithm,
@@ -1268,9 +1513,14 @@ class InvertedResidualPlan:
     def describe(self) -> dict:
         d = self.sep.describe()
         executor = d["executor"]
+        cd = d.get("compute_dtype", "float32")
         if self.expand is not None:
             executor = f"{self.expand.algorithm}+{executor}"
+            exp_cd = self.expand.spec.compute_dtype
+            if exp_cd != cd:
+                cd = f"{exp_cd}+{cd}"
         return {"kind": "inverted_residual", "executor": executor,
+                "compute_dtype": cd,
                 "requested": d["requested"], "mode": self.mode,
                 "filter": ("1x1+" if self.expand is not None else "")
                 + d["filter"],
@@ -1316,6 +1566,7 @@ def plan_inverted_residual(
     algorithm: Algorithm = "auto",
     output_tile: int | tuple[int, int] | None = None,
     dtype=None,
+    compute_dtype: str = "float32",
 ) -> InvertedResidualPlan:
     """Plan a MobileNet-v2 inverted residual block as one unit.
 
@@ -1333,11 +1584,13 @@ def plan_inverted_residual(
         # 1x1 expand: a pure channel GEMM -- "auto" resolves it to the
         # im2row executor, which for 1x1 is exactly one XLA matmul.
         expand = plan_conv2d(x_shape, w_exp, stride=1, padding="SAME",
-                             algorithm="auto", dtype=dtype)
+                             algorithm="auto", dtype=dtype,
+                             compute_dtype=compute_dtype)
         inner_shape = expand.out_shape
     sep = plan_separable_block(inner_shape, w_dw, w_pw, stride=stride,
                                padding=padding, algorithm=algorithm,
-                               output_tile=output_tile, dtype=dtype)
+                               output_tile=output_tile, dtype=dtype,
+                               compute_dtype=compute_dtype)
     residual = stride == (1, 1) and x_shape[3] == tuple(w_pw.shape)[3]
     return InvertedResidualPlan(
         x_shape=x_shape, stride=stride, residual=residual, expand=expand,

@@ -47,6 +47,18 @@ LAYOUTS = ("NHWC", "NCHW")
 
 _KINDS = ("dense", "grouped", "depthwise")
 
+#: Transform-domain compute dtypes an executor may declare, in preference
+#: order for display. Input/inverse transforms always run fp32 (the
+#: numerically fragile part); a reduced dtype only changes the
+#: transform-domain GEMM/Hadamard operand and its plan-time-quantized
+#: filter (per-output-channel scales fold into the epilogue).
+COMPUTE_DTYPES = ("float32", "bfloat16", "int8")
+
+_DTYPE_SHORT = {"float32": "fp32", "bfloat16": "bf16", "int8": "int8"}
+
+_F32_ONLY = frozenset({"float32"})
+_LOW_PRECISION = frozenset(COMPUTE_DTYPES)
+
 
 @dataclasses.dataclass(frozen=True)
 class LayerQuery:
@@ -110,6 +122,8 @@ class Capability:
     cost_hint: float = 1.0               # relative per-output cost rank;
                                          # lower wins within a family and in
                                          # select_auto
+    compute_dtypes: frozenset = _F32_ONLY  # transform-domain GEMM/Hadamard
+                                           # dtypes (transforms stay fp32)
     note: str = ""
 
     def matches(self, q: LayerQuery) -> bool:
@@ -158,6 +172,11 @@ class Capability:
                                else "G=C")}
         return ", ".join(names[k] for k in _KINDS if k in self.group_kinds)
 
+    @property
+    def dtypes_str(self) -> str:
+        return "/".join(_DTYPE_SHORT[d] for d in COMPUTE_DTYPES
+                        if d in self.compute_dtypes)
+
 
 _WFS = WINOGRAD_FILTER_SIZES
 _SFS = STRIDED_FILTER_SIZES
@@ -180,19 +199,24 @@ CAPABILITIES: tuple[Capability, ...] = (
     # -- pure-JAX (XLA) winograd family ------------------------------------
     _cap("winograd", "winograd", strides=_S1, filter_sizes=_WFS,
          axis_kinds=("two_d",), group_kinds=("dense",),
+         compute_dtypes=_LOW_PRECISION,
          note="region-wise multi-channel 2D scheme (paper Fig. 2)"),
     _cap("winograd_1d", "winograd", strides=_S1, filter_sizes=_WFS,
          axis_kinds=("single_axis",), group_kinds=("dense",),
+         compute_dtypes=_LOW_PRECISION,
          note="single-axis Cook-Toom (paper's Inception 1xN/Nx1 case)"),
     _cap("winograd_depthwise", "winograd", strides=_S1, filter_sizes=_WFS,
          axis_kinds=("two_d",), group_kinds=("depthwise",),
+         compute_dtypes=_LOW_PRECISION,
          note="transform-domain Hadamard phase 2, any channel multiplier"),
     _cap("winograd_grouped", "winograd", strides=_S1, filter_sizes=_WFS,
          axis_kinds=("two_d",), group_kinds=("grouped",),
+         compute_dtypes=_LOW_PRECISION,
          note="block-diagonal transform-domain reduction"),
     _cap("winograd_strided", "winograd", strides=_S2, filter_sizes=_SFS,
          axis_kinds=("two_d",),
          group_kinds=("dense", "grouped", "depthwise"), cost_hint=1.5,
+         compute_dtypes=_LOW_PRECISION,
          note="stride-2 via transform-domain phase decomposition (4 phase "
               "sub-convolutions sharing one inverse transform)"),
     # -- large-tile F(6,3) winograd (own family: a distinct accuracy/speed
@@ -202,7 +226,9 @@ CAPABILITIES: tuple[Capability, ...] = (
          group_kinds=("dense",), cost_hint=0.9,
          note="F(6x6, 3x3) with power-of-two row-scaled transforms: 2.25x "
               "fewer point-GEMM flops than F(4,3), fp32 error held to "
-              "transforms.F63_FP32_ERROR_BUDGET"),
+              "transforms.F63_FP32_ERROR_BUDGET (fp32-only: the large "
+              "tile's transform dynamic range amplifies the bf16/int8 "
+              "grid ~8e-2 rel err, past any useful budget)"),
     # -- tiled FFT (rfft2) family ------------------------------------------
     _cap("fft", "fft", strides=_S1, filter_sizes=None,
          axis_kinds=("two_d",), group_kinds=("dense",), cost_hint=3.0,
@@ -213,26 +239,30 @@ CAPABILITIES: tuple[Capability, ...] = (
     _cap("im2col", "im2col", strides=None, filter_sizes=None,
          axis_kinds=("pointwise", "single_axis", "two_d"),
          group_kinds=("dense", "grouped", "depthwise"), cost_hint=9.0,
+         compute_dtypes=_LOW_PRECISION,
          note="the paper's baseline; per-group lowering for G>1"),
     # -- streamed Pallas winograd family -----------------------------------
     _cap("pallas_winograd", "pallas_winograd", strides=_S1, filter_sizes=_WFS,
          axis_kinds=("two_d",), group_kinds=("dense",), fused_epilogue=True,
+         compute_dtypes=_LOW_PRECISION,
          note="halo-streaming kernel; input/output are the only HBM tensors"),
     _cap("winograd_1d", "pallas_winograd", strides=_S1, filter_sizes=_WFS,
          axis_kinds=("single_axis",), group_kinds=("dense",), cost_hint=1.1,
+         compute_dtypes=_LOW_PRECISION,
          note="1xN routes to the XLA 1D executor (its GEMM is one matmul)"),
     _cap("pallas_depthwise", "pallas_winograd", strides=_S1,
          filter_sizes=_WFS, axis_kinds=("two_d",), group_kinds=("depthwise",),
-         fused_epilogue=True,
+         fused_epilogue=True, compute_dtypes=_LOW_PRECISION,
          note="streamed depthwise kernel (Hadamard phase 2 in VMEM, any "
               "channel multiplier)"),
     _cap("pallas_winograd_strided", "pallas_winograd", strides=_S2,
          filter_sizes=_SFS, axis_kinds=("two_d",), group_kinds=("dense",),
-         fused_epilogue=True, cost_hint=1.5,
+         fused_epilogue=True, cost_hint=1.5, compute_dtypes=_LOW_PRECISION,
          note="stride-2 phase decomposition inside the streaming kernel"),
     _cap("pallas_depthwise_strided", "pallas_winograd", strides=_S2,
          filter_sizes=_SFS, axis_kinds=("two_d",), group_kinds=("depthwise",),
          unit_multiplier_only=True, fused_epilogue=True, cost_hint=1.5,
+         compute_dtypes=_LOW_PRECISION,
          note="stride-2 streamed depthwise kernel"),
     # -- Pallas A/B baselines ----------------------------------------------
     _cap("pallas_winograd_materialized", "pallas_winograd_materialized",
@@ -246,6 +276,7 @@ CAPABILITIES: tuple[Capability, ...] = (
     _cap("pallas_im2col", "pallas_im2col", strides=None, filter_sizes=None,
          axis_kinds=("pointwise", "single_axis", "two_d"),
          group_kinds=("dense",), fused_epilogue=True, cost_hint=9.0,
+         compute_dtypes=_LOW_PRECISION,
          note="blocked Pallas im2row GEMM baseline"),
 )
 
@@ -272,6 +303,20 @@ def supported(algorithm: str, q: LayerQuery) -> bool:
     if algorithm in ("auto", "auto_tuned"):
         return True
     return bool(matching(q, algorithm))
+
+
+def compute_dtypes_for(executor: str) -> tuple[str, ...]:
+    """The transform-domain compute dtypes an executor supports, in
+    COMPUTE_DTYPES display order (union over every capability record the
+    executor is reachable from). Unknown executors get fp32 only -- the
+    always-safe answer."""
+    found = set()
+    for c in CAPABILITIES:
+        if c.executor == executor:
+            found |= c.compute_dtypes
+    if not found:
+        found = {"float32"}
+    return tuple(d for d in COMPUTE_DTYPES if d in found)
 
 
 def best_fast(q: LayerQuery) -> Capability | None:
@@ -387,8 +432,8 @@ def capability_table() -> str:
     """
     rows = [(f"`{c.executor}`", f"`{c.algorithm}`", c.filters_str,
              c.strides_str, c.groups_str, ", ".join(sorted(c.layouts)),
-             "in-kernel" if c.fused_epilogue else "XLA")
+             c.dtypes_str, "in-kernel" if c.fused_epilogue else "XLA")
             for c in CAPABILITIES]
     return markdown_table(
         ["executor", "`algorithm=`", "filters", "strides", "groups",
-         "layouts", "fused epilogue"], rows)
+         "layouts", "compute dtypes", "fused epilogue"], rows)

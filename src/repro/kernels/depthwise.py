@@ -50,13 +50,14 @@ from repro.kernels.runtime import apply_activation, resolve_interpret
 
 
 def _depthwise_block(bt_h_ref, bt_w_ref, at_h_ref, at_w_ref, strip, taps,
-                     bias, *, bh: int, bw: int, activation: str):
+                     bias, *, bh: int, bw: int, activation: str, scale=None):
     """Shared depthwise compute: halo strip (Hs, Ws, bC) -> spatial block
     (bh*mh, bw*mw, bC*mult), all in VMEM/registers. `taps` is the (P, bC)
     or (P, bC, mult) Winograd-domain filter slice (channel multiplier > 1
     fans each input channel out to `mult` outputs, o = c*mult + j -- the
     lax feature_group_count ordering); `bias` the (bC*mult,) epilogue bias
-    or None."""
+    or None; `scale` the (bC*mult,) int8-dequant scale (applied before the
+    bias, after the inverse transform) or None."""
     mh, th = at_h_ref.shape
     mw, tw = at_w_ref.shape
     bc = strip.shape[-1]
@@ -82,6 +83,8 @@ def _depthwise_block(bt_h_ref, bt_w_ref, at_h_ref, at_w_ref, strip, taps,
     out = jnp.tensordot(at_h_ref[...], y, axes=(1, 1))  # (mi, j, bh, bw, bC, m)
     out = jnp.tensordot(at_w_ref[...], out,
                         axes=(1, 1))                    # (mj, mi, bh, bw, bC, m)
+    if scale is not None:
+        out = out * scale.reshape(bc, mult)[None, None, None, None]
     if bias is not None:
         out = out + bias.reshape(bc, mult)[None, None, None, None]
     out = apply_activation(out, activation)
@@ -91,13 +94,14 @@ def _depthwise_block(bt_h_ref, bt_w_ref, at_h_ref, at_w_ref, strip, taps,
 
 
 def _depthwise_kernel(bt_h_ref, bt_w_ref, at_h_ref, at_w_ref, x_ref, u_ref,
-                      bias_ref, o_ref, *, bh: int, bw: int, activation: str,
-                      has_bias: bool):
+                      bias_ref, scale_ref, o_ref, *, bh: int, bw: int,
+                      activation: str, has_bias: bool, has_scale: bool):
     strip = x_ref[0].astype(jnp.float32)                # (Hs, Ws, bC)
     bias = bias_ref[0] if has_bias else None
+    scale = scale_ref[0] if has_scale else None
     o_ref[0] = _depthwise_block(
         bt_h_ref, bt_w_ref, at_h_ref, at_w_ref, strip, u_ref[...], bias,
-        bh=bh, bw=bw, activation=activation).astype(o_ref.dtype)
+        bh=bh, bw=bw, activation=activation, scale=scale).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -106,6 +110,7 @@ def depthwise_streamed(
     xp: jax.Array,           # (N, Hp, Wp, Cp) halo-padded NHWC input
     u: jax.Array,            # (P, Cp, mult) Winograd-domain depthwise taps
     bias: jax.Array | None,  # (1, Cp*mult) fp32 epilogue bias, or None
+    scale: jax.Array | None = None,  # (1, Cp*mult) int8-dequant scale, or None
     *,
     ct_h: CookToom,
     ct_w: CookToom,
@@ -141,6 +146,9 @@ def depthwise_streamed(
     has_bias = bias is not None
     if bias is None:
         bias = jnp.zeros((1, c * mult), jnp.float32)
+    has_scale = scale is not None
+    if scale is None:
+        scale = jnp.ones((1, c * mult), jnp.float32)
     bt_h = jnp.asarray(ct_h.BT, jnp.float32)
     bt_w = jnp.asarray(ct_w.BT, jnp.float32)
     at_h = jnp.asarray(ct_h.AT, jnp.float32)
@@ -149,7 +157,8 @@ def depthwise_streamed(
                                      lambda n_, i, j, cb: (0,) * arr.ndim)
     return pl.pallas_call(
         functools.partial(_depthwise_kernel, bh=bh, bw=bw,
-                          activation=activation, has_bias=has_bias),
+                          activation=activation, has_bias=has_bias,
+                          has_scale=has_scale),
         grid=grid,
         in_specs=[
             whole(bt_h), whole(bt_w), whole(at_h), whole(at_w),
@@ -159,13 +168,14 @@ def depthwise_streamed(
                          indexing_mode=pl.Unblocked()),
             pl.BlockSpec((p, block_c, mult), lambda n_, i, j, cb: (0, cb, 0)),
             pl.BlockSpec((1, block_c * mult), lambda n_, i, j, cb: (0, cb)),
+            pl.BlockSpec((1, block_c * mult), lambda n_, i, j, cb: (0, cb)),
         ],
         out_specs=pl.BlockSpec((1, sh, sw, block_c * mult),
                                lambda n_, i, j, cb: (n_, i, j, cb)),
         out_shape=jax.ShapeDtypeStruct((n, n_hb * sh, n_wb * sw, c * mult),
                                        xp.dtype),
         interpret=interpret,
-    )(bt_h, bt_w, at_h, at_w, xp, u, bias)
+    )(bt_h, bt_w, at_h, at_w, xp, u, bias, scale)
 
 
 # ---------------------------------------------------------------------------
@@ -173,8 +183,9 @@ def depthwise_streamed(
 # ---------------------------------------------------------------------------
 
 def _depthwise_strided_kernel(bt_h_ref, bt_w_ref, at_h_ref, at_w_ref, x_ref,
-                              u_ref, bias_ref, o_ref, *, bh: int, bw: int,
-                              activation: str, has_bias: bool):
+                              u_ref, bias_ref, scale_ref, o_ref, *, bh: int,
+                              bw: int, activation: str, has_bias: bool,
+                              has_scale: bool):
     from repro.kernels.winograd import phase_gather_tiles
     strip = x_ref[0].astype(jnp.float32)             # (Hs, Ws, bC)
     mh, th = at_h_ref.shape
@@ -195,6 +206,8 @@ def _depthwise_strided_kernel(bt_h_ref, bt_w_ref, at_h_ref, at_w_ref, x_ref,
         acc = y if acc is None else acc + y
     out = jnp.tensordot(at_h_ref[...], acc, axes=(1, 1))
     out = jnp.tensordot(at_w_ref[...], out, axes=(1, 1))  # (mj, mi, bh, bw, bC)
+    if has_scale:
+        out = out * scale_ref[0][None, None, None, None, :]
     if has_bias:
         out = out + bias_ref[0][None, None, None, None, :]
     out = apply_activation(out, activation)
@@ -208,6 +221,7 @@ def depthwise_strided_streamed(
     xp: jax.Array,           # (N, Hp, Wp, Cp) halo-padded full-res input
     u: jax.Array,            # (4P, Cp) phase-major Winograd-domain taps
     bias: jax.Array | None,  # (1, Cp) fp32 epilogue bias, or None
+    scale: jax.Array | None = None,  # (1, Cp) fp32 int8-dequant scale, or None
     *,
     ct_h: CookToom,
     ct_w: CookToom,
@@ -242,6 +256,9 @@ def depthwise_strided_streamed(
     has_bias = bias is not None
     if bias is None:
         bias = jnp.zeros((1, c), jnp.float32)
+    has_scale = scale is not None
+    if scale is None:
+        scale = jnp.ones((1, c), jnp.float32)
     bt_h = jnp.asarray(ct_h.BT, jnp.float32)
     bt_w = jnp.asarray(ct_w.BT, jnp.float32)
     at_h = jnp.asarray(ct_h.AT, jnp.float32)
@@ -250,7 +267,8 @@ def depthwise_strided_streamed(
                                      lambda n_, i, j, cb: (0,) * arr.ndim)
     return pl.pallas_call(
         functools.partial(_depthwise_strided_kernel, bh=bh, bw=bw,
-                          activation=activation, has_bias=has_bias),
+                          activation=activation, has_bias=has_bias,
+                          has_scale=has_scale),
         grid=grid,
         in_specs=[
             whole(bt_h), whole(bt_w), whole(at_h), whole(at_w),
@@ -260,13 +278,14 @@ def depthwise_strided_streamed(
                          indexing_mode=pl.Unblocked()),
             pl.BlockSpec((p4, block_c), lambda n_, i, j, cb: (0, cb)),
             pl.BlockSpec((1, block_c), lambda n_, i, j, cb: (0, cb)),
+            pl.BlockSpec((1, block_c), lambda n_, i, j, cb: (0, cb)),
         ],
         out_specs=pl.BlockSpec((1, so_h, so_w, block_c),
                                lambda n_, i, j, cb: (n_, i, j, cb)),
         out_shape=jax.ShapeDtypeStruct((n, n_hb * so_h, n_wb * so_w, c),
                                        xp.dtype),
         interpret=interpret,
-    )(bt_h, bt_w, at_h, at_w, xp, u, bias)
+    )(bt_h, bt_w, at_h, at_w, xp, u, bias, scale)
 
 
 # ---------------------------------------------------------------------------

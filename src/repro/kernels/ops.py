@@ -67,16 +67,20 @@ def winograd_conv2d_planned(
     stream: _wg.StreamGeometry,
     c_out: int,
     bias: jax.Array | None = None,
+    scale: jax.Array | None = None,
     activation: str = "none",
     interpret: bool | None = None,
 ) -> jax.Array:
     """Execute a planned streaming Pallas Winograd conv.
 
-    `u` is the pre-transformed, pre-padded (P, Cp, Mp) filter; all geometry
-    (conv padding, halo strip origins, edge-block padding, VMEM-budgeted
-    block sizes) was derived once at plan time. The per-call work is one
-    NHWC pad, the kernel, and one crop -- no tile materialization, no
-    post-kernel un-tiling, no separate bias/activation passes.
+    `u` is the pre-transformed, pre-padded (P, Cp, Mp) filter (fp32, or a
+    bf16/int8 reduced-precision copy -- the kernel widens at the dot);
+    `scale` is the plan's (1, Mp) int8 dequantization row or None. All
+    geometry (conv padding, halo strip origins, edge-block padding,
+    VMEM-budgeted block sizes) was derived once at plan time. The per-call
+    work is one NHWC pad, the kernel, and one crop -- no tile
+    materialization, no post-kernel un-tiling, no separate bias/activation
+    passes.
     """
     c = x.shape[3]
     xp = jnp.pad(x, ((0, 0),
@@ -84,7 +88,7 @@ def winograd_conv2d_planned(
                      (geometry.lo_w, geometry.hi_w + stream.pad_w),
                      (0, stream.c_pad - c)))
     y = _k_winograd.winograd_streamed(
-        xp, u, _pad_bias(bias, stream.m_pad), ct_h=ct_h, ct_w=ct_w,
+        xp, u, _pad_bias(bias, stream.m_pad), scale, ct_h=ct_h, ct_w=ct_w,
         bh=stream.bh, bw=stream.bw, block_c=stream.block_c,
         block_m=stream.block_m, activation=activation, interpret=interpret)
     return y[:, :geometry.out_h, :geometry.out_w, :c_out]
@@ -138,20 +142,22 @@ def winograd_strided_conv2d_planned(
     stream: _wg.StreamGeometry,
     c_out: int,
     bias: jax.Array | None = None,
+    scale: jax.Array | None = None,
     activation: str = "none",
     interpret: bool | None = None,
 ) -> jax.Array:
     """Execute a planned stride-2 streaming Pallas Winograd conv (transform-
     domain phase decomposition). `u` is the pre-transformed (4P, Cp, Mp)
-    phase-major filter; the halo geometry is in full-resolution input units,
-    so the edge-block padding is 2x the plan's output-tile surplus."""
+    phase-major filter (fp32/bf16/int8); `scale` the (1, Mp) int8 dequant
+    row or None; the halo geometry is in full-resolution input units, so
+    the edge-block padding is 2x the plan's output-tile surplus."""
     c = x.shape[3]
     xp = jnp.pad(x, ((0, 0),
                      (geometry.lo_h, geometry.hi_h + 2 * stream.pad_h),
                      (geometry.lo_w, geometry.hi_w + 2 * stream.pad_w),
                      (0, stream.c_pad - c)))
     y = _k_winograd.winograd_strided_streamed(
-        xp, u, _pad_bias(bias, stream.m_pad), ct_h=ct_h, ct_w=ct_w,
+        xp, u, _pad_bias(bias, stream.m_pad), scale, ct_h=ct_h, ct_w=ct_w,
         bh=stream.bh, bw=stream.bw, block_c=stream.block_c,
         block_m=stream.block_m, activation=activation, interpret=interpret)
     return y[:, :geometry.out_h, :geometry.out_w, :c_out]
@@ -167,11 +173,13 @@ def depthwise_strided_conv2d_planned(
     stream: _wg.StreamGeometry,
     c_out: int,
     bias: jax.Array | None = None,
+    scale: jax.Array | None = None,
     activation: str = "none",
     interpret: bool | None = None,
 ) -> jax.Array:
     """Execute a planned stride-2 streamed Pallas depthwise conv: `u` is the
-    (4P, Cp) phase-major taps; halo blocking comes from the plan."""
+    (4P, Cp) phase-major taps (fp32/bf16/int8); `scale` the (1, Cp) int8
+    dequant row or None; halo blocking comes from the plan."""
     from repro.kernels import depthwise as _k_depthwise
     c = x.shape[3]
     xp = jnp.pad(x, ((0, 0),
@@ -179,7 +187,7 @@ def depthwise_strided_conv2d_planned(
                      (geometry.lo_w, geometry.hi_w + 2 * stream.pad_w),
                      (0, stream.c_pad - c)))
     y = _k_depthwise.depthwise_strided_streamed(
-        xp, u, _pad_bias(bias, stream.c_pad), ct_h=ct_h, ct_w=ct_w,
+        xp, u, _pad_bias(bias, stream.c_pad), scale, ct_h=ct_h, ct_w=ct_w,
         bh=stream.bh, bw=stream.bw, block_c=stream.block_c,
         activation=activation, interpret=interpret)
     return y[:, :geometry.out_h, :geometry.out_w, :c_out]
@@ -258,14 +266,16 @@ def depthwise_conv2d_planned(
     stream: _wg.StreamGeometry,
     c_out: int,
     bias: jax.Array | None = None,
+    scale: jax.Array | None = None,
     activation: str = "none",
     interpret: bool | None = None,
 ) -> jax.Array:
     """Execute a planned streaming Pallas depthwise conv: `u` is the
-    pre-transformed, pre-padded (P, Cp, mult) taps (mult = channel
-    multiplier; output channel o = c*mult + j, the lax ordering); conv
-    padding, halo blocking and channel blocks come from the plan. Per-call
-    work is one NHWC pad, the kernel, one crop."""
+    pre-transformed, pre-padded (P, Cp, mult) taps (fp32/bf16/int8; mult =
+    channel multiplier; output channel o = c*mult + j, the lax ordering);
+    `scale` the (1, Cp*mult) int8 dequant row or None; conv padding, halo
+    blocking and channel blocks come from the plan. Per-call work is one
+    NHWC pad, the kernel, one crop."""
     from repro.kernels import depthwise as _k_depthwise
     c = x.shape[3]
     mult = u.shape[2]
@@ -274,8 +284,8 @@ def depthwise_conv2d_planned(
                      (geometry.lo_w, geometry.hi_w + stream.pad_w),
                      (0, stream.c_pad - c)))
     y = _k_depthwise.depthwise_streamed(
-        xp, u, _pad_bias(bias, stream.c_pad * mult), ct_h=ct_h, ct_w=ct_w,
-        bh=stream.bh, bw=stream.bw, block_c=stream.block_c,
+        xp, u, _pad_bias(bias, stream.c_pad * mult), scale, ct_h=ct_h,
+        ct_w=ct_w, bh=stream.bh, bw=stream.bw, block_c=stream.block_c,
         activation=activation, interpret=interpret)
     return y[:, :geometry.out_h, :geometry.out_w, :c_out]
 
@@ -344,13 +354,15 @@ def im2col_conv2d_planned(
     blocks: tuple[int, int, int],
     c_out: int,
     bias: jax.Array | None = None,
+    scale: jax.Array | None = None,
     activation: str = "none",
     interpret: bool | None = None,
 ) -> jax.Array:
     """Execute a planned Pallas im2row conv: `b` is the pre-reshaped,
-    pre-padded (Kp, Np) filter matrix; geometry and block sizes come from
-    the plan. The bias+activation epilogue is fused into the GEMM kernel's
-    store step."""
+    pre-padded (Kp, Np) filter matrix (fp32/bf16/int8); `scale` the (1, Np)
+    int8 dequant row or None; geometry and block sizes come from the plan.
+    The bias+activation epilogue (and the dequant multiply) is fused into
+    the GEMM kernel's store step."""
     interpret = _resolve_interpret(interpret)
     n = x.shape[0]
     bm_, bk_, bn_ = blocks
@@ -358,7 +370,7 @@ def im2col_conv2d_planned(
     mm, kk = a.shape
     a = _pad_axis(_pad_axis(a, 0, _round_up(mm, bm_)), 1, _round_up(kk, bk_))
     y = _k_matmul.matmul(a, b, bm=bm_, bn=bn_, bk=bk_,
-                         bias=_pad_bias(bias, b.shape[1]),
+                         bias=_pad_bias(bias, b.shape[1]), scale=scale,
                          activation=activation, interpret=interpret)
     return y[:mm, :c_out].reshape(n, oh, ow, c_out).astype(x.dtype)
 

@@ -81,8 +81,9 @@ def _apply_pair(mat_h, mat_w, x):
 # ---------------------------------------------------------------------------
 
 def _streamed_kernel(bt_h_ref, bt_w_ref, at_h_ref, at_w_ref, x_ref, u_ref,
-                     bias_ref, o_ref, acc_ref, v_ref, *, n_c: int, bh: int,
-                     bw: int, block_c: int, activation: str, has_bias: bool):
+                     bias_ref, scale_ref, o_ref, acc_ref, v_ref, *, n_c: int,
+                     bh: int, bw: int, block_c: int, activation: str,
+                     has_bias: bool, has_scale: bool):
     m_step = pl.program_id(3)
     c_step = pl.program_id(4)
 
@@ -131,7 +132,11 @@ def _streamed_kernel(bt_h_ref, bt_w_ref, at_h_ref, at_w_ref, x_ref, u_ref,
         # output transform A^T (.) A, same contraction pattern.
         out = jnp.tensordot(at_h_ref[...], y, axes=(1, 0))   # (mi, tw, bh, bw, bM)
         out = jnp.tensordot(at_w_ref[...], out, axes=(1, 1)) # (mj, mi, bh, bw, bM)
-        # fused epilogue: bias + activation on the fp32 accumulator, in VMEM.
+        # fused epilogue: int8 dequantization (per-output-channel scale,
+        # commutes with the inverse transform) + bias + activation on the
+        # fp32 accumulator, in VMEM.
+        if has_scale:
+            out = out * scale_ref[0][None, None, None, None, :]
         if has_bias:
             out = out + bias_ref[0][None, None, None, None, :]
         out = apply_activation(out, activation)
@@ -148,6 +153,7 @@ def winograd_streamed(
     xp: jax.Array,           # (N, Hp, Wp, Cp) halo-padded NHWC input
     u: jax.Array,            # (P, Cp, Mp) Winograd-domain filter (P = th*tw)
     bias: jax.Array | None,  # (1, Mp) fp32 epilogue bias, or None
+    scale: jax.Array | None = None,  # (1, Mp) fp32 int8-dequant scale, or None
     *,
     ct_h: CookToom,
     ct_w: CookToom,
@@ -183,6 +189,9 @@ def winograd_streamed(
     has_bias = bias is not None
     if bias is None:
         bias = jnp.zeros((1, m), jnp.float32)
+    has_scale = scale is not None
+    if scale is None:
+        scale = jnp.ones((1, m), jnp.float32)
     bt_h = jnp.asarray(ct_h.BT, jnp.float32)
     bt_w = jnp.asarray(ct_w.BT, jnp.float32)
     at_h = jnp.asarray(ct_h.AT, jnp.float32)
@@ -192,7 +201,7 @@ def winograd_streamed(
     return pl.pallas_call(
         functools.partial(_streamed_kernel, n_c=n_c, bh=bh, bw=bw,
                           block_c=block_c, activation=activation,
-                          has_bias=has_bias),
+                          has_bias=has_bias, has_scale=has_scale),
         grid=grid,
         in_specs=[
             whole(bt_h), whole(bt_w), whole(at_h), whole(at_w),
@@ -205,6 +214,7 @@ def winograd_streamed(
             pl.BlockSpec((p, block_c, block_m),
                          lambda n_, i, j, mb, cb: (0, cb, mb)),
             pl.BlockSpec((1, block_m), lambda n_, i, j, mb, cb: (0, mb)),
+            pl.BlockSpec((1, block_m), lambda n_, i, j, mb, cb: (0, mb)),
         ],
         out_specs=pl.BlockSpec((1, sh, sw, block_m),
                                lambda n_, i, j, mb, cb: (n_, i, j, mb)),
@@ -215,7 +225,7 @@ def winograd_streamed(
                         # (M, C) sweep.
                         pltpu.VMEM((n_c, p, bh * bw, block_c), jnp.float32)],
         interpret=interpret,
-    )(bt_h, bt_w, at_h, at_w, xp, u, bias)
+    )(bt_h, bt_w, at_h, at_w, xp, u, bias, scale)
 
 
 # ---------------------------------------------------------------------------
@@ -242,9 +252,10 @@ def phase_gather_tiles(strip, th: int, tw: int, mh: int, mw: int, bh: int,
 
 
 def _strided_streamed_kernel(bt_h_ref, bt_w_ref, at_h_ref, at_w_ref, x_ref,
-                             u_ref, bias_ref, o_ref, acc_ref, v_ref, *,
-                             n_c: int, bh: int, bw: int, block_c: int,
-                             activation: str, has_bias: bool):
+                             u_ref, bias_ref, scale_ref, o_ref, acc_ref,
+                             v_ref, *, n_c: int, bh: int, bw: int,
+                             block_c: int, activation: str, has_bias: bool,
+                             has_scale: bool):
     m_step = pl.program_id(3)
     c_step = pl.program_id(4)
 
@@ -291,6 +302,8 @@ def _strided_streamed_kernel(bt_h_ref, bt_w_ref, at_h_ref, at_w_ref, x_ref,
         y = acc_ref[...].reshape(th, tw, bh, bw, bm_)
         out = jnp.tensordot(at_h_ref[...], y, axes=(1, 0))
         out = jnp.tensordot(at_w_ref[...], out, axes=(1, 1))
+        if has_scale:
+            out = out * scale_ref[0][None, None, None, None, :]
         if has_bias:
             out = out + bias_ref[0][None, None, None, None, :]
         out = apply_activation(out, activation)
@@ -305,6 +318,7 @@ def winograd_strided_streamed(
     xp: jax.Array,           # (N, Hp, Wp, Cp) halo-padded full-res input
     u: jax.Array,            # (4P, Cp, Mp) phase-major Winograd-domain filter
     bias: jax.Array | None,  # (1, Mp) fp32 epilogue bias, or None
+    scale: jax.Array | None = None,  # (1, Mp) fp32 int8-dequant scale, or None
     *,
     ct_h: CookToom,
     ct_w: CookToom,
@@ -343,6 +357,9 @@ def winograd_strided_streamed(
     has_bias = bias is not None
     if bias is None:
         bias = jnp.zeros((1, m), jnp.float32)
+    has_scale = scale is not None
+    if scale is None:
+        scale = jnp.ones((1, m), jnp.float32)
     bt_h = jnp.asarray(ct_h.BT, jnp.float32)
     bt_w = jnp.asarray(ct_w.BT, jnp.float32)
     at_h = jnp.asarray(ct_h.AT, jnp.float32)
@@ -352,7 +369,7 @@ def winograd_strided_streamed(
     return pl.pallas_call(
         functools.partial(_strided_streamed_kernel, n_c=n_c, bh=bh, bw=bw,
                           block_c=block_c, activation=activation,
-                          has_bias=has_bias),
+                          has_bias=has_bias, has_scale=has_scale),
         grid=grid,
         in_specs=[
             whole(bt_h), whole(bt_w), whole(at_h), whole(at_w),
@@ -368,6 +385,7 @@ def winograd_strided_streamed(
             pl.BlockSpec((p4, block_c, block_m),
                          lambda n_, i, j, mb, cb: (0, cb, mb)),
             pl.BlockSpec((1, block_m), lambda n_, i, j, mb, cb: (0, mb)),
+            pl.BlockSpec((1, block_m), lambda n_, i, j, mb, cb: (0, mb)),
         ],
         out_specs=pl.BlockSpec((1, so_h, so_w, block_m),
                                lambda n_, i, j, mb, cb: (n_, i, j, mb)),
@@ -376,7 +394,7 @@ def winograd_strided_streamed(
         scratch_shapes=[pltpu.VMEM((th * tw, bh * bw, block_m), jnp.float32),
                         pltpu.VMEM((n_c, p4, bh * bw, block_c), jnp.float32)],
         interpret=interpret,
-    )(bt_h, bt_w, at_h, at_w, xp, u, bias)
+    )(bt_h, bt_w, at_h, at_w, xp, u, bias, scale)
 
 
 # ---------------------------------------------------------------------------

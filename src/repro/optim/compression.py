@@ -46,6 +46,26 @@ def dequantize(c: Compressed) -> jax.Array:
     return c.q.astype(_F32) * c.scale
 
 
+def quantize_channelwise(g: jax.Array, channel_axes=(-1,)
+                         ) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-channel int8 quantization: one scale per position along
+    `channel_axes` (every other axis is reduced), `q * scale == g` up to
+    rounding. This is the plan-time weight quantizer for the low-precision
+    Winograd executors (core/plan.py:_bind_weights): the transform-domain
+    filter is quantized along its output-channel axis so dequantization is a
+    single per-channel multiply that folds into the bias+activation
+    epilogue. Zero channels (all-pad) get scale 1.0 so dequantization stays
+    finite. Returns (q int8, scale f32 of the channel_axes shape)."""
+    g = g.astype(_F32)
+    axes = tuple(a % g.ndim for a in channel_axes)
+    reduce_axes = tuple(i for i in range(g.ndim) if i not in axes)
+    amax = jnp.max(jnp.abs(g), axis=reduce_axes)
+    scale = jnp.where(amax > 0, amax / _I8_MAX, 1.0).astype(_F32)
+    bshape = [g.shape[i] if i in axes else 1 for i in range(g.ndim)]
+    q = jnp.clip(jnp.round(g / scale.reshape(bshape)), -_I8_MAX, _I8_MAX)
+    return q.astype(jnp.int8), scale
+
+
 def compress_with_feedback(g: jax.Array, err: jax.Array
                            ) -> tuple[Compressed, jax.Array]:
     """Returns (compressed(g + err), new_err)."""

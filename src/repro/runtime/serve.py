@@ -32,6 +32,13 @@ resource-constrained-CPU setting implies:
     The failing batch is retried after each rung, so in-flight requests
     survive every recoverable fault; only a fully exhausted ladder answers
     tickets with the error (failed, but never silently dropped).
+  * **Mixed-precision supervision.** A server compiled with a reduced
+    `compute_dtype` (bf16/int8 transform-domain plans) runs an accuracy
+    probe at warmup (and on demand via `probe_precision()`): each quantized
+    conv layer is checked against a fresh fp32 plan on its real shape, and
+    a layer outside its per-dtype error budget is promoted back to fp32
+    across every bucket plan before traffic sees it. `stats` surfaces the
+    per-layer compute dtypes currently being served.
   * **Straggler eviction.** A `fault.StepTimer` per bucket flags outlier
     batches; per-layer times (NetworkPlan.apply's layer_hook) attribute the
     spike, and a layer that stragglers `straggler_evict_after` times is
@@ -99,6 +106,11 @@ class ServeConfig:
     straggler_layer_ratio: float = 2.0
     fallback_algorithm: str = "im2col"
     ewma_alpha: float = 0.3
+    #: run the reduced-precision accuracy probe during warmup (servers with
+    #: compute_dtype="float32" never probe); per-dtype relative max-abs
+    #: error budgets default to plan.AUTOTUNE_ACCURACY_BUDGET.
+    precision_probe: bool = True
+    precision_budget: dict | None = None
     verbose: bool = True
 
 
@@ -185,6 +197,12 @@ class ServerStats:
     corrupt_arrays: int = 0
     artifact_warm_starts: int = 0
     artifact_cold_starts: int = 0
+    #: layers the accuracy probe promoted back to fp32 (reduced-precision
+    #: outputs outside budget never keep serving).
+    precision_promotions: int = 0
+    #: per-layer transform-domain compute dtype of the CURRENTLY served
+    #: plans (refreshed after compile / re-place / recompile / promotion).
+    layer_compute_dtypes: dict = field(default_factory=dict)
 
     @property
     def in_flight(self) -> int:
@@ -211,6 +229,7 @@ class Server:
     def __init__(self, params, graph, *, res: int | None = None,
                  c_in: int = 3, input_shape: Sequence[int] | None = None,
                  algorithm: str = "auto", dtype=None,
+                 compute_dtype: str = "float32",
                  config: ServeConfig | None = None,
                  artifact_dir: str | None = None):
         self.config = cfg = config or ServeConfig()
@@ -218,6 +237,7 @@ class Server:
         self._graph_desc = graph
         self._algorithm = algorithm
         self._dtype = dtype
+        self.compute_dtype = str(jnp.dtype(compute_dtype))
         self._artifact_dir = artifact_dir
         if artifact_dir is not None:
             os.makedirs(artifact_dir, exist_ok=True)
@@ -236,6 +256,7 @@ class Server:
         self.nets: dict[int, _compile.NetworkPlan] = {
             b: self._compile_bucket(b) for b in self.buckets}
         self.np_dtype = np.dtype(self.nets[self.buckets[0]].dtype)
+        self._refresh_layer_dtypes()
         # scheduling state
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
@@ -287,6 +308,7 @@ class Server:
         net = _compile.compile(self.params, self._graph_desc,
                                input_shape=(bucket,) + self.example_shape,
                                algorithm=self._algorithm, dtype=self._dtype,
+                               compute_dtype=self.compute_dtype,
                                artifact=art)
         if art is not None:
             if _plan.plan_cache_info()["artifact_hits"] > before:
@@ -295,15 +317,102 @@ class Server:
                 self.stats.artifact_cold_starts += 1
         return net
 
+    def _refresh_layer_dtypes(self) -> None:
+        """Re-derive stats.layer_compute_dtypes from the currently served
+        plans (the smallest bucket; placement is identical across
+        buckets)."""
+        net = self.nets[self.buckets[0]]
+        self.stats.layer_compute_dtypes = {
+            nid: p.describe().get("compute_dtype", "float32")
+            for nid, p in net.plans.items()}
+
     def warmup(self) -> None:
         """Pre-warm every bucket: one zero batch per bucket plan, so every
         per-layer executable is compiled and cached before traffic. Runs
         under the same supervisor as live batches -- a faulty executor
-        discovered at warmup degrades instead of failing startup."""
+        discovered at warmup degrades instead of failing startup. Servers
+        with a reduced compute_dtype also run the accuracy probe here, so a
+        layer whose quantized output is outside budget is promoted to fp32
+        before any client traffic sees it."""
         for b in self.buckets:
             x = jnp.zeros((b,) + self.example_shape, self.np_dtype)
             y, _ = self._supervised_apply(b, jnp.asarray(x))
             jax.block_until_ready(y)
+        if self.compute_dtype != "float32" and self.config.precision_probe:
+            self.probe_precision()
+
+    def probe_precision(self, *, seed: int = 0) -> dict:
+        """The reduced-precision accuracy probe: every conv layer currently
+        serving a bf16/int8 transform-domain plan is checked against a
+        freshly planned fp32 executor on a random input of the layer's real
+        shape (relative max-abs error -- the same oracle shape as the
+        auto_tuned dtype gate). A layer whose error exceeds its per-dtype
+        budget (config.precision_budget, defaulting to
+        plan.AUTOTUNE_ACCURACY_BUDGET) is promoted back to fp32 across
+        EVERY bucket plan, counted in stats.precision_promotions. Returns
+        {layer: {compute_dtype, rel_err, budget, promoted}}."""
+        budget = dict(_plan.AUTOTUNE_ACCURACY_BUDGET,
+                      **(self.config.precision_budget or {}))
+        net = self.nets[self.buckets[0]]
+        shapes = _compile.infer_shapes(net.graph, net.input_shape)
+        rng = np.random.default_rng(seed)
+        report: dict[str, dict] = {}
+        param = lambda path: _compile._param(self.params, path)
+        for node in net.graph:
+            p = net.plans.get(node.id)
+            if p is None or node.op not in ("conv2d", "separable",
+                                            "inverted_residual"):
+                continue
+            cd = p.describe().get("compute_dtype", "float32")
+            if cd == "float32":
+                continue
+            a = node.attrs
+            in_shape = shapes[node.inputs[0]]
+            x = jnp.asarray(rng.standard_normal(in_shape), np.float32)
+            if node.op == "conv2d":
+                ref = _plan.plan_conv2d(
+                    in_shape, param(a["w_path"]), stride=tuple(a["stride"]),
+                    padding=a["padding"], groups=p.spec.groups,
+                    algorithm="auto", dtype=self._dtype)
+            elif node.op == "separable":
+                ref = _plan.plan_separable_block(
+                    in_shape, param(a["dw_w"]), param(a["pw_w"]),
+                    stride=tuple(a["stride"]), padding=a["padding"],
+                    algorithm="auto", dtype=self._dtype)
+            else:
+                ref = _plan.plan_inverted_residual(
+                    in_shape,
+                    param(a["exp_w"]) if a.get("exp_w") else None,
+                    param(a["dw_w"]), param(a["pw_w"]),
+                    stride=tuple(a["stride"]), padding=a["padding"],
+                    algorithm="auto", dtype=self._dtype)
+            y = np.asarray(p.apply(x), np.float32)
+            y0 = np.asarray(ref.apply(x), np.float32)
+            err = float(np.max(np.abs(y - y0))
+                        / (float(np.max(np.abs(y0))) or 1.0))
+            # block describes may join differing sub-plan dtypes with "+";
+            # the tightest component budget judges the whole block.
+            bud = min((budget.get(c, math.inf) for c in cd.split("+")),
+                      default=math.inf)
+            promoted = False
+            if err > bud:
+                try:
+                    for n in self.nets.values():
+                        n.replace_layer(node.id, self.params,
+                                        algorithm=self._algorithm,
+                                        compute_dtype="float32")
+                    promoted = True
+                    self.stats.precision_promotions += 1
+                    self._log(f"promoted layer {node.id!r} {cd} -> float32 "
+                              f"(probe rel err {err:.3g} > budget {bud:g})")
+                except Exception as e:
+                    self._log(f"could not promote layer {node.id!r} to "
+                              f"fp32: {e!r}")
+            report[node.id] = {"compute_dtype": cd, "rel_err": err,
+                               "budget": bud, "promoted": promoted}
+        if any(r["promoted"] for r in report.values()):
+            self._refresh_layer_dtypes()
+        return report
 
     # ---- lifecycle -------------------------------------------------------
 
@@ -500,6 +609,7 @@ class Server:
             return False
         self._replaced.add(node_id)
         self.stats.replacements += 1
+        self._refresh_layer_dtypes()
         if count_eviction:
             self.stats.evictions += 1
         self._log(f"re-placed layer {node_id!r} onto {alg!r} ({reason})")
@@ -527,6 +637,7 @@ class Server:
             self.nets[b] = self._compile_bucket(b, force_cold=True)
         self._replaced.clear()
         self._straggler_counts.clear()
+        self._refresh_layer_dtypes()
         self.stats.recompiles += 1
         self._log(f"recompiled all bucket plans in place "
                   f"({len(corrupt)} corrupt artifact arrays"

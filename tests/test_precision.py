@@ -1,0 +1,398 @@
+"""Mixed-precision transform-domain execution (bf16/int8 Winograd): plan
+parity against the fp32 path across every layer kind, per-channel scale
+folding under adversarial filter magnitudes, the small-tile accuracy clamp,
+dtype-aware planning/validation, the quantized artifact round-trip (bitwise,
+zero re-transform AND zero re-quantization on warm load), the enriched
+dtype-mismatch refusal, and the precision surfaces of describe()/serve."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import plan as planlib
+from repro.core import registry
+from repro.core.compile import ArtifactMismatchError, NetworkPlan
+from repro.core.compile import compile as compile_network
+from repro.core.im2col import direct_conv2d
+from repro.models import cnn
+
+from conftest import rel_err
+
+BF16_TOL = 2e-2
+INT8_TOL = planlib.AUTOTUNE_ACCURACY_BUDGET["int8"]
+TOL = {"bfloat16": BF16_TOL, "int8": INT8_TOL}
+
+# (name, (h, w), w_shape, kwargs) -- dense/depthwise/grouped/strided
+# layers under SAME and VALID padding, including an asymmetric (H != W,
+# non-tile-aligned) spatial shape.
+CASES = [
+    ("dense_same", (14, 14), (3, 3, 8, 16), dict()),
+    ("dense_valid", (14, 14), (3, 3, 8, 16), dict(padding="VALID")),
+    ("dense_asym", (13, 18), (3, 3, 8, 16), dict(padding="VALID")),
+    ("depthwise", (14, 14), (3, 3, 1, 8), dict(groups=8)),
+    ("grouped", (14, 14), (3, 3, 2, 8), dict(groups=4)),
+    ("strided", (14, 14), (3, 3, 8, 16), dict(stride=2)),
+]
+
+
+def _case_arrays(rng, hw, w_shape, kwargs):
+    kh, kw, cg, m = w_shape
+    c_in = cg * kwargs.get("groups", 1)
+    x = jnp.asarray(rng.standard_normal((1, *hw, c_in)), jnp.float32)
+    wt = jnp.asarray(rng.standard_normal(w_shape) / (kh * kw), jnp.float32)
+    return x, wt
+
+
+# ---------------------------------------------------------------------------
+# parity: every layer kind, both reduced dtypes, vs the fp32 plan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cd", ["bfloat16", "int8"])
+@pytest.mark.parametrize("name,hw,w_shape,kwargs",
+                         CASES, ids=[c[0] for c in CASES])
+def test_reduced_precision_parity(rng, cd, name, hw, w_shape, kwargs):
+    """A bf16/int8 plan agrees with its fp32 twin within the dtype's
+    budget on every layer kind and padding mode, with the bias+activation
+    epilogue applied AFTER the folded dequantization scale."""
+    x, wt = _case_arrays(rng, hw, w_shape, kwargs)
+    bias = jnp.asarray(rng.standard_normal((w_shape[3],)), jnp.float32)
+    p32 = planlib.plan_conv2d(x.shape, wt, **kwargs)
+    p = planlib.plan_conv2d(x.shape, wt, compute_dtype=cd, **kwargs)
+    ref = p32.apply(x, bias=bias, activation="relu")
+    got = p.apply(x, bias=bias, activation="relu")
+    assert got.shape == ref.shape and got.dtype == ref.dtype
+    assert rel_err(got, ref) < TOL[cd], (name, cd)
+    # and both agree with the direct-conv oracle, not just each other
+    oracle = jax.nn.relu(direct_conv2d(
+        x, wt, stride=kwargs.get("stride", 1),
+        padding=kwargs.get("padding", "SAME"),
+        groups=kwargs.get("groups", 1)) + bias)
+    assert rel_err(got, oracle) < TOL[cd], (name, cd)
+    assert p.describe()["compute_dtype"] == cd
+
+
+def test_separable_block_composes_reduced(rng):
+    """A reduced compute_dtype always composes the separable block (the
+    fused kernel is fp32-only) and both halves carry the dtype."""
+    x = jnp.asarray(rng.standard_normal((1, 14, 14, 16)), jnp.float32)
+    w_dw = jnp.asarray(rng.standard_normal((3, 3, 1, 16)) / 9, jnp.float32)
+    w_pw = jnp.asarray(rng.standard_normal((1, 1, 16, 32)), jnp.float32)
+    p32 = planlib.plan_separable_block(x.shape, w_dw, w_pw)
+    p = planlib.plan_separable_block(x.shape, w_dw, w_pw,
+                                     compute_dtype="int8")
+    assert p.dw is not None and p.pw is not None      # composed
+    assert p.dw.spec.compute_dtype == "int8"
+    assert p.pw.spec.compute_dtype == "int8"
+    assert p.describe()["compute_dtype"] == "int8"
+    assert rel_err(p.apply(x), p32.apply(x)) < INT8_TOL
+
+
+# ---------------------------------------------------------------------------
+# per-channel scales: adversarial filter magnitudes
+# ---------------------------------------------------------------------------
+
+def test_int8_per_channel_scale_survives_magnitude_outliers(rng):
+    """Adversarial probe: output channels spanning 4 orders of magnitude.
+    Per-output-channel symmetric quantization keeps every channel within
+    budget; a per-tensor scale would crush the small channels to zero."""
+    x = jnp.asarray(rng.standard_normal((1, 12, 12, 8)), jnp.float32)
+    wt = rng.standard_normal((3, 3, 8, 16)).astype(np.float32) / 9
+    mags = np.logspace(-2, 2, 16).astype(np.float32)
+    wt = jnp.asarray(wt * mags)                # channel m scaled by mags[m]
+    p32 = planlib.plan_conv2d(x.shape, wt)
+    p = planlib.plan_conv2d(x.shape, wt, compute_dtype="int8")
+    assert p.scale is not None
+    sc = np.asarray(p.scale).reshape(-1)
+    assert float(sc.max() / sc.min()) > 100    # genuinely per-channel
+    ref, got = np.asarray(p32.apply(x)), np.asarray(p.apply(x))
+    # per-channel relative error: every channel within budget, including
+    # the 1e-2-magnitude ones a per-tensor scale would zero out
+    for c in range(16):
+        denom = np.max(np.abs(ref[..., c])) + 1e-9
+        assert np.max(np.abs(got[..., c] - ref[..., c])) / denom < INT8_TOL
+
+
+def test_int8_plan_stores_no_fp32_filter_copy(rng):
+    """Jaxpr regression: the int8 plan's hot path closes over the int8
+    transformed filter and the O(M) fp32 scale row -- NOT an fp32 copy of
+    the transformed-filter tensor (that would double the HBM traffic the
+    quantization exists to remove)."""
+    x = jnp.asarray(rng.standard_normal((1, 14, 14, 16)), jnp.float32)
+    wt = jnp.asarray(rng.standard_normal((3, 3, 16, 32)) / 9, jnp.float32)
+    p = planlib.plan_conv2d(x.shape, wt, algorithm="winograd",
+                            compute_dtype="int8")
+    assert p.u.dtype == jnp.int8
+    jx = jax.make_jaxpr(lambda v: p.apply(v))(x)
+    sizes = {}
+    for const in jx.consts:
+        dt = getattr(const, "dtype", None)
+        if dt is not None:
+            sizes.setdefault(str(dt), []).append(int(np.prod(const.shape)))
+    assert p.u.size in sizes.get("int8", [])
+    big_fp32 = [s for s in sizes.get("float32", []) if s >= p.u.size]
+    assert not big_fp32, sizes
+
+
+# ---------------------------------------------------------------------------
+# accuracy-driven planning: small-tile clamp + dtype validation
+# ---------------------------------------------------------------------------
+
+def test_reduced_precision_clamps_to_small_tile(rng):
+    """Winograd quantization-noise amplification grows steeply with tile
+    size (F(4,3) amplifies int8 weight-quantization error ~350x vs F(2,3)),
+    so un-pinned reduced-precision plans clamp to the 2x2 output tile."""
+    x = jnp.asarray(rng.standard_normal((1, 28, 28, 32)), jnp.float32)
+    wt = jnp.asarray(rng.standard_normal((3, 3, 32, 32)) / 9, jnp.float32)
+    p32 = planlib.plan_conv2d(x.shape, wt, algorithm="winograd")
+    p8 = planlib.plan_conv2d(x.shape, wt, algorithm="winograd",
+                             compute_dtype="int8")
+    assert p32.spec.output_tile == (4, 4)
+    assert p8.spec.output_tile == (2, 2)
+    # an explicit pin still wins -- the clamp is a default, not a cage
+    p8_pin = planlib.plan_conv2d(x.shape, wt, algorithm="winograd",
+                                 compute_dtype="int8", output_tile=4)
+    assert p8_pin.spec.output_tile == (4, 4)
+
+
+def test_fp32_only_executors_reject_reduced_dtypes(rng):
+    """fft and winograd_f63 are fp32-only in the registry; pinning them
+    with a reduced dtype is a plan-time error enumerating what IS
+    supported, not a silent fp32 fallback."""
+    x = jnp.asarray(rng.standard_normal((1, 16, 16, 8)), jnp.float32)
+    wt = jnp.asarray(rng.standard_normal((3, 3, 8, 8)) / 9, jnp.float32)
+    for alg in ("fft", "winograd_f63"):
+        with pytest.raises(ValueError, match="float32"):
+            planlib.plan_conv2d(x.shape, wt, algorithm=alg,
+                                compute_dtype="int8")
+    assert registry.compute_dtypes_for("fft") == ("float32",)
+    assert registry.compute_dtypes_for("winograd_f63") == ("float32",)
+
+
+def test_compute_dtype_is_part_of_the_cache_key(rng):
+    """The same shape planned at two dtypes yields two distinct cached
+    specs -- a dtype change must never serve the other dtype's plan."""
+    planlib.clear_plan_cache()
+    x = jnp.asarray(rng.standard_normal((1, 12, 12, 8)), jnp.float32)
+    wt = jnp.asarray(rng.standard_normal((3, 3, 8, 8)) / 9, jnp.float32)
+    planlib.plan_conv2d(x.shape, wt)
+    planlib.plan_conv2d(x.shape, wt, compute_dtype="int8")
+    info = planlib.plan_cache_info()
+    assert info["misses"] == 2 and info["hits"] == 0
+    assert info["quantized"] == 1
+    p_again = planlib.plan_conv2d(x.shape, wt, compute_dtype="int8")
+    assert planlib.plan_cache_info()["hits"] == 1
+    assert p_again.spec.compute_dtype == "int8"
+
+
+def test_autotune_race_gates_reduced_dtypes_on_accuracy(rng):
+    """compute_dtype="auto" admits bf16/int8 variants only with accuracy
+    evidence: the report carries err_* probes next to the t_* timings,
+    and a crowned reduced winner is within its dtype's budget."""
+    x = jnp.asarray(rng.standard_normal((1, 28, 28, 64)), jnp.float32)
+    wt = jnp.asarray(rng.standard_normal((3, 3, 64, 64)) / 9, jnp.float32)
+    p = planlib.plan_conv2d(x.shape, wt, algorithm="auto_tuned",
+                            compute_dtype="auto")
+    report = p.spec.autotune_report
+    assert report and report.get("winner_dtype") is not None
+    errs = {k: v for k, v in report.items() if k.startswith("err_")}
+    assert errs, report                       # accuracy evidence recorded
+    wd = report["winner_dtype"]
+    if wd != "float32":
+        lbl = report["winner_label"]
+        assert errs[f"err_{lbl}"] <= planlib.AUTOTUNE_ACCURACY_BUDGET[wd]
+
+
+def test_default_auto_tuned_race_never_lowers_precision(rng):
+    """Without the compute_dtype="auto" opt-in the measured race fields no
+    reduced contenders: the plan stays fp32 (default auto_tuned numerics
+    are unchanged by this feature) and no err_* probes are recorded."""
+    x = jnp.asarray(rng.standard_normal((1, 28, 28, 64)), jnp.float32)
+    wt = jnp.asarray(rng.standard_normal((3, 3, 64, 64)) / 9, jnp.float32)
+    p = planlib.plan_conv2d(x.shape, wt, algorithm="auto_tuned")
+    assert p.spec.compute_dtype == "float32"
+    report = p.spec.autotune_report or {}
+    assert not any(k.startswith("err_") for k in report)
+    assert not any(k in ("t_winograd_bf16_s", "t_winograd_int8_s")
+                   for k in report)
+    with pytest.raises(ValueError, match="auto_tuned"):
+        planlib.plan_conv2d(x.shape, wt, algorithm="winograd",
+                            compute_dtype="auto")
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:                    # pragma: no cover - CI installs it
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        h=st.integers(8, 25), w=st.integers(8, 25),
+        c=st.integers(1, 12), m=st.integers(1, 12),
+        padding=st.sampled_from(["SAME", "VALID"]),
+        cd=st.sampled_from(["bfloat16", "int8"]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_reduced_precision_property(h, w, c, m, padding, cd, seed):
+        """Property sweep: arbitrary (H, W, C, M, padding) reduced plans
+        stay within their dtype budget vs the fp32 plan."""
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((1, h, w, c)), jnp.float32)
+        wt = jnp.asarray(rng.standard_normal((3, 3, c, m)) / 9,
+                         jnp.float32)
+        p32 = planlib.plan_conv2d(x.shape, wt, padding=padding)
+        p = planlib.plan_conv2d(x.shape, wt, padding=padding,
+                                compute_dtype=cd)
+        assert rel_err(p.apply(x), p32.apply(x)) < TOL[cd]
+
+
+# ---------------------------------------------------------------------------
+# artifacts: quantized round-trip, warm-load counters, mismatch refusal
+# ---------------------------------------------------------------------------
+
+def _mbv2(res=32, key=0):
+    specs = cnn.NETWORKS["mobilenet_v2"][0]()
+    params = cnn.init_cnn(jax.random.key(key), specs, 3, res=res)
+    return specs, params
+
+
+def test_quantized_artifact_roundtrips_bitwise(rng, tmp_path):
+    """An int8-policy MobileNet-v2 artifact persists the quantized filters
+    AND their dequantization scales, reloads bitwise, and re-saves to an
+    identical payload."""
+    specs, params = _mbv2()
+    net = compile_network(params, specs, res=32, compute_dtype="int8")
+    assert net.compute_dtype == "int8"
+    path = str(tmp_path / "net_int8.npz")
+    net.save(path)
+    loaded = NetworkPlan.load(path)
+    assert loaded.compute_dtype == "int8"
+    with np.load(path) as z:
+        names = list(z.files)
+        int8_arrays = [n for n in names if z[n].dtype == np.int8]
+        scales = [n for n in names if n.endswith("scale")]
+    assert int8_arrays and scales
+    path2 = str(tmp_path / "resaved.npz")
+    loaded.save(path2)
+    with np.load(path) as a, np.load(path2) as b:
+        assert set(a.files) == set(b.files)
+        for n in a.files:
+            assert np.array_equal(a[n], b[n]), n
+    x = jnp.asarray(rng.standard_normal((1, 32, 32, 3)), jnp.float32)
+    assert np.array_equal(np.asarray(net.apply(x)),
+                          np.asarray(loaded.apply(x)))
+
+
+def test_fresh_process_warm_load_runs_zero_transforms_and_quantizations(
+        tmp_path):
+    """Acceptance gate: a fresh python process warm-loading the int8
+    artifact performs ZERO filter transforms and ZERO re-quantizations --
+    the transform/quantize entry points are boobytrapped before load() and
+    the plan-time quantization counter stays at 0."""
+    specs, params = _mbv2()
+    net = compile_network(params, specs, res=32, compute_dtype="int8")
+    path = str(tmp_path / "net_int8.npz")
+    net.save(path)
+    script = (
+        "import json\n"
+        "from repro.core import plan as planlib\n"
+        "from repro.core.compile import NetworkPlan\n"
+        "def boom(*a, **k):\n"
+        "    raise AssertionError('weight work ran during warm load')\n"
+        "planlib._bind_weights = boom\n"
+        "planlib._wg.transform_filter_2d = boom\n"
+        "from repro.optim import compression\n"
+        "compression.quantize_channelwise = boom\n"
+        f"net = NetworkPlan.load({path!r})\n"
+        "info = planlib.plan_cache_info()\n"
+        "import jax.numpy as jnp\n"
+        "n_int8 = sum(str(getattr(p, 'u', None) is not None\n"
+        "                 and p.u.dtype) == 'int8'\n"
+        "             for p in net.plans.values() if hasattr(p, 'u'))\n"
+        "print(json.dumps({'quantized': info['quantized'],\n"
+        "                  'measured': info['measured'],\n"
+        "                  'compute_dtype': net.compute_dtype,\n"
+        "                  'n_int8': n_int8}))\n")
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env = dict(os.environ, PYTHONPATH=src)
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr
+    got = json.loads(out.stdout.strip().splitlines()[-1])
+    assert got["quantized"] == 0 and got["measured"] == 0
+    assert got["compute_dtype"] == "int8" and got["n_int8"] > 0
+
+
+def test_dtype_mismatch_enumerates_per_layer_compute_dtypes(tmp_path):
+    """The ArtifactMismatchError for a dtype mismatch names, per layer,
+    the artifact's transform-domain compute dtype AND what this build's
+    registry supports -- enough to diagnose a stale artifact without
+    unpickling it by hand."""
+    specs, params = _mbv2()
+    net = compile_network(params, specs, res=32, compute_dtype="int8")
+    path = str(tmp_path / "net.npz")
+    net.save(path)
+    with pytest.raises(ArtifactMismatchError) as ei:
+        NetworkPlan.load(path, expect_dtype=jnp.bfloat16)
+    msg = str(ei.value)
+    assert "per-layer transform-domain compute dtypes" in msg
+    assert "int8" in msg and "registry:" in msg
+    assert "float32/bfloat16/int8" in msg
+
+
+def test_compile_policy_falls_back_per_layer_and_describes(rng):
+    """compile(compute_dtype=...) lowers every eligible layer and the
+    describe() table surfaces the per-layer compute dtype column."""
+    specs, params = _mbv2()
+    net32 = compile_network(params, specs, res=32)
+    net8 = compile_network(params, specs, res=32, compute_dtype="int8")
+    table = net8.describe()
+    header = table.splitlines()[0]
+    assert "compute" in header
+    assert "int8" in table
+    dtypes = [p.describe().get("compute_dtype", "float32")
+              for p in net8.plans.values()]
+    assert all("int8" in d for d in dtypes)
+    x = jnp.asarray(rng.standard_normal((1, 32, 32, 3)), jnp.float32)
+    assert rel_err(net8.apply(x), net32.apply(x)) < 0.2   # random logits
+    assert "int8" not in net32.describe().splitlines()[2]
+
+
+# ---------------------------------------------------------------------------
+# serve: per-layer dtype stats + the accuracy-probe promotion ladder
+# ---------------------------------------------------------------------------
+
+def test_server_surfaces_dtypes_and_promotes_on_budget_violation():
+    """Server.stats carries the per-layer compute dtypes; an impossibly
+    tight precision budget forces the probe to promote every reduced layer
+    back to fp32 (and the network keeps serving)."""
+    from repro.runtime.serve import ServeConfig, Server
+    specs = [cnn.Conv("c1", 3, 3, 8), cnn.Conv("c2", 3, 3, 16)]
+    params = cnn.init_cnn(jax.random.key(0), specs, 3, res=16)
+
+    cfg = ServeConfig(buckets=(1,), verbose=False)
+    srv = Server(params, specs, res=16, compute_dtype="int8", config=cfg)
+    assert set(srv.stats.layer_compute_dtypes.values()) == {"int8"}
+    report = srv.probe_precision()
+    assert report and all(not r["promoted"] for r in report.values())
+    assert srv.stats.precision_promotions == 0
+
+    cfg2 = ServeConfig(buckets=(1,), verbose=False,
+                       precision_budget={"int8": 1e-9})
+    srv2 = Server(params, specs, res=16, compute_dtype="int8", config=cfg2)
+    report2 = srv2.probe_precision()
+    assert all(r["promoted"] for r in report2.values())
+    assert srv2.stats.precision_promotions == len(report2)
+    assert set(srv2.stats.layer_compute_dtypes.values()) == {"float32"}
+    with srv2:
+        x = np.zeros((16, 16, 3), np.float32)
+        y = srv2.submit(x).result(timeout=60)
+    assert y.shape == (16, 16, 16) and np.all(np.isfinite(y))
