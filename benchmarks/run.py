@@ -36,6 +36,15 @@
       # spike, corrupt artifact, queue overload) gated on zero dropped
       # requests and zero incorrect responses vs the im2row oracle
       # (BENCH_PR7.json is the committed run)
+  PYTHONPATH=src python -m benchmarks.run --json BENCH_PR9.json \
+      --config scaling
+      # the 1 -> 8 device scaling curve for sharded NetworkPlan execution
+      # (data-parallel batch sharding + spatial halo partitioning), each
+      # device count in a fresh forced-host-device subprocess, gated on
+      # parity vs the unsharded oracle, strictly increasing normalized
+      # throughput, >= 3x aggregate at 8 devices, and the version-5
+      # artifact restoring the recorded partition on warm start
+      # (BENCH_PR9.json is the committed run)
   PYTHONPATH=src python -m benchmarks.run --json BENCH_PR8.json \
       --config precision
       # the mixed-precision A/B: per-layer fp32/bf16/int8 plans over the
@@ -81,7 +90,8 @@ def main(argv=None) -> None:
                          "metadata, to this path")
     ap.add_argument("--config", default="vgg_style",
                     choices=["vgg_style", "mobilenet", "compile",
-                             "crossover", "serving", "precision"],
+                             "crossover", "serving", "precision",
+                             "scaling"],
                     help="which --json benchmark to run: vgg_style "
                          "(streamed vs materialized dense Winograd), "
                          "mobilenet (fused vs unfused separable blocks), "
@@ -111,6 +121,10 @@ def main(argv=None) -> None:
             from benchmarks import precision
             precision.main(["--out", args.json]
                            + ([] if args.full else ["--quick"]))
+        elif args.config == "scaling":
+            from benchmarks import scaling
+            scaling.main(["--out", args.json]
+                         + ([] if args.full else ["--quick"]))
         elif args.config == "compile":
             res = "224" if args.full else "96"
             iters = "3" if args.full else "2"

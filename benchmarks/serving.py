@@ -9,11 +9,15 @@ deterministic fault class (repro.runtime.inject):
   * clean sweep -- p50/p99 latency, throughput, and the bucket-batch
     histogram at each arrival rate (low/medium/overload), so the artifact
     records >= 3 exercised batch buckets;
+  * jit A/B -- the same clean traffic with the jitted dispatch fast path
+    on vs off (always-eager supervised), recording latency/throughput and
+    the jit_dispatches/jit_fallbacks counters for both arms;
   * executor_raise -- a permanently failing layer executor: the ladder must
     re-place it onto the im2row fallback with zero dropped requests and
     every response matching the im2row oracle;
   * latency_spike -- a straggling layer: StepTimer must flag it and the
-    supervisor evict it onto the fallback;
+    supervisor evict it onto the fallback (run with jit_dispatch=False:
+    straggler attribution needs the eager path's per-layer timing);
   * corrupt_artifact -- a bit-flipped on-disk NetworkPlan: the per-array
     sha256 digests must catch it at startup and recompile in place;
   * overload -- a burst past queue_capacity: bounded rejection with a
@@ -164,6 +168,30 @@ def fault_row(name, srv, row, results, oracle, extra=()):
     return out
 
 
+def run_jit_ab(params, specs, res, inputs, oracle, rate, n, seed):
+    """A/B the jitted dispatch fast path (whole-network jit until the
+    bucket's first fault) against the always-eager supervised path on
+    identical clean Poisson traffic."""
+    rows = []
+    for jit_on in (True, False):
+        srv = Server(params, specs, res=res, algorithm="auto",
+                     config=make_cfg(jit_dispatch=jit_on))
+        with srv:
+            row, results = poisson_run(srv, inputs, rate=rate, n=n,
+                                       seed=seed)
+        err, bad = parity(results, oracle)
+        s = srv.stats
+        row.update(jit_dispatch=jit_on, jit_dispatches=s.jit_dispatches,
+                   jit_fallbacks=s.jit_fallbacks, dropped=s.in_flight,
+                   parity_max_rel_err=round(err, 6), incorrect=bad)
+        rows.append(row)
+        print(f"  jit={str(jit_on):>5}: p50 {row.get('p50_ms', 0):7.2f} ms  "
+              f"p99 {row.get('p99_ms', 0):7.2f} ms  "
+              f"tput {row['throughput_rps']:7.1f}/s  "
+              f"jit_dispatches {s.jit_dispatches}", flush=True)
+    return rows
+
+
 def run_faults(params, specs, res, inputs, oracle, rate, n, seed):
     rows = []
 
@@ -175,8 +203,11 @@ def run_faults(params, specs, res, inputs, oracle, rate, n, seed):
     rows.append(fault_row("executor_raise", srv, row, results, oracle))
 
     # -- latency spike: straggling layer -> eviction ----------------------
+    # straggler attribution needs the eager path's per-layer timing hooks
+    # from the first batch, so the jitted fast path is off for this drill.
     srv = Server(params, specs, res=res, algorithm="auto",
-                 config=make_cfg(straggler_window=16,
+                 config=make_cfg(jit_dispatch=False,
+                                 straggler_window=16,
                                  straggler_min_baseline=5,
                                  straggler_evict_after=2))
     with srv:
@@ -251,13 +282,16 @@ def main(argv=None) -> None:
                             args.seed)
     buckets_hit = sorted({int(b) for row in clean
                           for b in row["bucket_batches"]})
+    print("jitted vs eager dispatch A/B:", flush=True)
+    jit_ab = run_jit_ab(params, specs, res, inputs, oracle,
+                        rate=rates[len(rates) // 2], n=n, seed=args.seed)
     print("fault drills:", flush=True)
     faults = run_faults(params, specs, res, inputs, oracle,
                         rate=rates[len(rates) // 2], n=n, seed=args.seed)
 
-    zero_dropped = (all(r["dropped"] == 0 for r in clean)
+    zero_dropped = (all(r["dropped"] == 0 for r in clean + jit_ab)
                     and all(r["dropped"] == 0 for r in faults))
-    zero_incorrect = (all(r["incorrect"] == 0 for r in clean)
+    zero_incorrect = (all(r["incorrect"] == 0 for r in clean + jit_ab)
                       and all(r["incorrect"] == 0 for r in faults))
     survived = {r["fault"]: bool(
         r["replacements"] if r["fault"] == "executor_raise"
@@ -274,6 +308,7 @@ def main(argv=None) -> None:
                       "seed": args.seed, "smoke": args.smoke,
                       "parity_tol": TOL},
            "clean": clean,
+           "jit_ab": jit_ab,
            "buckets_exercised": buckets_hit,
            "faults": faults,
            "fault_survived": survived,

@@ -55,6 +55,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import partition as _partition
 from repro.core import plan as _plan
 from repro.core import registry
 
@@ -72,7 +73,14 @@ ARTIFACT_FORMAT = "repro.network_plan"
 # filters plus their per-output-channel dequantization scale arrays. A v3
 # reader would drop the scales and serve un-dequantized int8 outputs, so
 # the version gates it out.
-ARTIFACT_VERSION = 4
+# v5: the header carries the partition record (mesh kind/axis/shard count
+# plus the spatial walk's per-node modes, halos and re-scatter points), and
+# partitioned plans are bound at shard-LOCAL geometry -- a v4 reader would
+# apply those plans to global-shape inputs and fail or mis-shape, so the
+# version gates it out. Warm starts restore the recorded partitioning
+# without re-deciding; the device mesh itself is never serialized (attach
+# one with with_mesh() / compile(mesh=)).
+ARTIFACT_VERSION = 5
 
 #: IR ops that bind to a LayerPlan (everything else is structural/XLA-only).
 PLAN_OPS = ("conv2d", "conv1d", "separable", "inverted_residual")
@@ -706,11 +714,59 @@ class NetworkPlan:
                                        # was compiled from; compile(artifact=)
                                        # refuses to warm-start from weights
                                        # that have since changed
+    partition: dict | None = None      # partition record (see
+                                       # core/partition.py); plans are bound
+                                       # at shard-local geometry when
+                                       # num_shards > 1. Persisted in the
+                                       # artifact header.
+    mesh: Any = dataclasses.field(default=None, repr=False, compare=False)
+                                       # live jax.sharding.Mesh; NEVER
+                                       # serialized -- load() leaves it None,
+                                       # with_mesh() re-attaches one.
 
     # ---- execution -------------------------------------------------------
 
     def __call__(self, x: jax.Array) -> jax.Array:
         return self.apply(x)
+
+    def is_sharded(self) -> bool:
+        return (self.partition is not None
+                and self.partition.get("num_shards", 1) > 1)
+
+    def with_mesh(self, mesh) -> "NetworkPlan":
+        """Attach a device mesh to a partitioned plan (artifacts do not
+        serialize meshes). Validates the mesh's partition axis against the
+        recorded shard count; returns self."""
+        if self.partition is None:
+            raise ValueError(
+                "this NetworkPlan was compiled without a partition; "
+                "recompile with compile(mesh=...) to shard it")
+        axis, n = _partition.mesh_num_shards(mesh)
+        want = self.partition["num_shards"]
+        if self.is_sharded() and (axis != self.partition["axis"]
+                                  or n != want):
+            raise ValueError(
+                f"mesh axis {axis!r} x{n} does not match the recorded "
+                f"partition ({self.partition['axis']!r} x{want}); build a "
+                f"matching mesh (launch.mesh.make_data_mesh({want})) or "
+                f"recompile with mesh=")
+        self.mesh = mesh
+        self.invalidate_executables()
+        return self
+
+    def invalidate_executables(self) -> None:
+        """Drop cached jitted/sharded callables. Anything that swaps a
+        bound plan object (replace_layer, the fault-injection harness)
+        must call this, or a jitted program keeps executing the old
+        closure."""
+        self.__dict__.pop("_sharded_fn", None)
+
+    def _sharded_callable(self):
+        fn = self.__dict__.get("_sharded_fn")
+        if fn is None:
+            fn = _partition.build_sharded_fn(self)
+            self.__dict__["_sharded_fn"] = fn
+        return fn
 
     def apply(self, x: jax.Array, *, layer_hook=None,
               annotate_errors: bool = False) -> jax.Array:
@@ -719,7 +775,35 @@ class NetworkPlan:
         is block_until_ready'd first -- eager-mode only; do not jit an apply
         with a hook installed). `annotate_errors=True` wraps any exception a
         node raises in LayerExecutionError carrying the node id, so a
-        serving supervisor can re-place exactly the failing layer."""
+        serving supervisor can re-place exactly the failing layer.
+
+        A plan compiled with a partition over >1 shards routes through the
+        jitted shard_map program instead of the eager walk (hooks and error
+        annotation need the single-logical-device plan)."""
+        if self.is_sharded():
+            if layer_hook is not None or annotate_errors:
+                raise ValueError(
+                    "layer_hook / annotate_errors need the eager "
+                    "single-device walk, but this plan is partitioned "
+                    f"({self.partition['kind']} x"
+                    f"{self.partition['num_shards']}); compile without "
+                    "mesh= for supervised execution")
+            if self.mesh is None:
+                raise ValueError(
+                    f"this NetworkPlan records a {self.partition['kind']} "
+                    f"partition over {self.partition['num_shards']} shards "
+                    f"but no mesh is attached (artifacts never serialize "
+                    f"device meshes); call "
+                    f".with_mesh(launch.mesh.make_data_mesh("
+                    f"{self.partition['num_shards']})) first")
+            return self._sharded_callable()(x)
+        return self._eval_graph(x, layer_hook=layer_hook,
+                                annotate_errors=annotate_errors)
+
+    def _eval_graph(self, x: jax.Array, *, layer_hook=None,
+                    annotate_errors: bool = False) -> jax.Array:
+        """The eager graph walk (also the shard_map body of a data-parallel
+        partition, where each shard evaluates its local batch)."""
         # Liveness: drop each activation after its last consumer runs, so
         # eager execution holds only the live frontier (as the spec-walk
         # interpreter did), not every feature map of the whole network.
@@ -812,6 +896,13 @@ class NetworkPlan:
         freshly bound plan. `params` must be the pytree the network was
         compiled from (checked against params_digest when the plan carries
         one)."""
+        if self.is_sharded():
+            raise ValueError(
+                "replace_layer operates on single-logical-device plans "
+                f"(this one is partitioned {self.partition['kind']} x"
+                f"{self.partition['num_shards']}); supervisor repairs run "
+                "on the unsharded plan, which is then recompiled with "
+                "mesh= if sharding should resume")
         by_id = {n.id: n for n in self.graph}
         node = by_id.get(node_id)
         if node is None or node.op not in PLAN_OPS:
@@ -842,6 +933,7 @@ class NetworkPlan:
                              dtype=self.dtype)
         self.plans.update(plans)
         self.consts.update(consts)
+        self.invalidate_executables()
         return self.plans[node_id]
 
     # ---- mapping compatibility (the old plan_cnn dict interface) ---------
@@ -910,6 +1002,7 @@ class NetworkPlan:
             "input_shape": list(self.input_shape),
             "algorithm": self.algorithm,
             "params_digest": self.params_digest,
+            "partition": self.partition,
             "graph": [_node_to_json(n) for n in self.graph],
             "plans": {},
         }
@@ -1019,7 +1112,8 @@ class NetworkPlan:
                    input_shape=tuple(header["input_shape"]),
                    algorithm=header["algorithm"], dtype=header["dtype"],
                    compute_dtype=header.get("compute_dtype", "float32"),
-                   params_digest=header.get("params_digest"))
+                   params_digest=header.get("params_digest"),
+                   partition=header.get("partition"))
 
 
 def verify_artifact(path: str) -> list[str]:
@@ -1084,15 +1178,19 @@ _ARTIFACT_FALLBACK_ERRORS = (ArtifactMismatchError, OSError, EOFError,
 
 def _try_load_artifact(path: str, *, input_shape, algorithm, digest: str,
                        dtype=None,
-                       compute_dtype: str = "float32"
+                       compute_dtype: str = "float32",
+                       mesh=None, partition: str | None = None
                        ) -> "NetworkPlan | None":
     """The compile(artifact=) warm-start attempt: load without counting,
     then validate the artifact against THIS call's arguments -- input
-    shape, algorithm request, params digest, compute_dtype policy, and
+    shape, algorithm request, params digest, compute_dtype policy, the
+    partition request (kind + shard count vs the recorded record), and
     (when explicitly requested) dtype -- so a stale artifact (different
-    resolution, different policy, retrained weights, other precision)
-    recompiles instead of silently serving old decisions. Returns None
-    when the artifact is unusable; the caller does the one-miss
+    resolution, different policy, retrained weights, other precision or
+    mesh shape) recompiles instead of silently serving old decisions.
+    A partition-matched artifact gets the caller's mesh attached; its
+    recorded modes/halos are used verbatim (no re-deciding). Returns
+    None when the artifact is unusable; the caller does the one-miss
     accounting."""
     try:
         loaded = NetworkPlan.load(path, _record=False)
@@ -1105,6 +1203,18 @@ def _try_load_artifact(path: str, *, input_shape, algorithm, digest: str,
             or (dtype is not None
                 and loaded.dtype != str(jnp.dtype(dtype)))):
         return None
+    part = loaded.partition
+    if mesh is None:
+        if part is not None:
+            return None
+    else:
+        axis, n = _partition.mesh_num_shards(mesh)
+        want_kind = partition or "data"
+        if (part is None or part["kind"] != want_kind
+                or part["axis"] != axis
+                or part.get("requested_shards", part["num_shards"]) != n):
+            return None
+        loaded.mesh = mesh
     return loaded
 
 
@@ -1122,11 +1232,42 @@ def _plans_dtype(plans: dict) -> str:
     return "float32"
 
 
+def _bind_partitioned(ir, shapes, placements, params, part: dict,
+                      dtype) -> tuple[dict, dict]:
+    """bind() under a partition record: data-parallel plans bind at the
+    local batch; spatial halo-mode plans bind VALID at their exchanged
+    local strip; full-mode (re-gathered) nodes bind at the global shape."""
+    if part["kind"] == "data":
+        return bind(ir, _partition.local_bind_shapes(part, shapes),
+                    placements, params, dtype=dtype)
+    plans: dict[str, Any] = {}
+    consts: dict[str, jax.Array] = {}
+    modes = part["modes"]
+    for node in ir:
+        if not node.inputs:
+            continue
+        if node.op in PLAN_OPS and modes.get(node.id) == "halo":
+            node_v = dataclasses.replace(
+                node, attrs={**node.attrs, "padding": "VALID"})
+            in_shape = _partition.spatial_halo_in_shape(part, node, shapes)
+            p, cs = bind((node_v,), {node.inputs[0]: in_shape}, placements,
+                         params, dtype=dtype)
+        elif node.op in PLAN_OPS or node.op == "dense":
+            p, cs = bind((node,), {node.inputs[0]: shapes[node.inputs[0]]},
+                         placements, params, dtype=dtype)
+        else:
+            continue
+        plans.update(p)
+        consts.update(cs)
+    return plans, consts
+
+
 def compile(params, graph, *, res: int | None = None, c_in: int = 3,
             batch: int = 1, algorithm: str = "auto",
             input_shape: Sequence[int] | None = None, dtype=None,
             compute_dtype: str = "float32",
-            artifact: str | None = None) -> NetworkPlan:
+            artifact: str | None = None,
+            mesh=None, partition: str | None = None) -> NetworkPlan:
     """Compile a network description into one NetworkPlan.
 
     `graph` is either a models/cnn.py spec list (lowered to the layer IR
@@ -1153,12 +1294,30 @@ def compile(params, graph, *, res: int | None = None, c_in: int = 3,
 
     With `artifact=path`, compile() first tries NetworkPlan.load(path) and
     validates the artifact against THIS call (input shape, algorithm,
-    params digest) -- a usable artifact is the warm start (one artifact
-    hit in plan_cache_info()); a missing, corrupt, header-mismatched, or
-    argument-stale artifact falls back to a cold compile whose result is
-    saved back to `path` (one artifact miss).
+    params digest, partition request) -- a usable artifact is the warm
+    start (one artifact hit in plan_cache_info()); a missing, corrupt,
+    header-mismatched, or argument-stale artifact falls back to a cold
+    compile whose result is saved back to `path` (one artifact miss).
+
+    With `mesh=` (a jax.sharding.Mesh), the plan executes sharded over the
+    mesh's "data" axis: `partition="data"` (the default) shards the batch
+    dim with weights replicated; `partition="spatial"` splits H across
+    devices with per-layer halo exchange / re-gather decisions recorded in
+    the plan's partition record (core/partition.py). Indivisible batches
+    or heights degrade to a replicated single-logical-device plan with the
+    reason recorded -- never an error. The record persists in version-5
+    artifacts so warm starts restore the partitioning without re-deciding;
+    the mesh itself is re-attached per process (it never serializes).
     """
     t0 = time.perf_counter()
+    if partition is not None:
+        if mesh is None:
+            raise ValueError(
+                f"partition={partition!r} needs mesh= (a jax.sharding.Mesh "
+                f"with a 'data' axis; see launch.mesh.make_data_mesh)")
+        if partition not in ("data", "spatial"):
+            raise ValueError(f"unknown partition {partition!r}; expected "
+                             f"'data' or 'spatial'")
     if input_shape is None:
         if res is None:
             raise ValueError("compile() needs res= (image networks, "
@@ -1177,7 +1336,8 @@ def compile(params, graph, *, res: int | None = None, c_in: int = 3,
     if artifact is not None and os.path.exists(artifact):
         loaded = _try_load_artifact(artifact, input_shape=input_shape,
                                     algorithm=algorithm, digest=digest,
-                                    dtype=dtype, compute_dtype=compute_dtype)
+                                    dtype=dtype, compute_dtype=compute_dtype,
+                                    mesh=mesh, partition=partition)
         if loaded is not None:
             _plan.record_artifact_load(True)
             return loaded
@@ -1186,13 +1346,23 @@ def compile(params, graph, *, res: int | None = None, c_in: int = 3,
     ir = fuse(ir)
     shapes = infer_shapes(ir, input_shape)
     placements = place(ir, shapes, algorithm, compute_dtype)
-    plans, consts = bind(ir, shapes, placements, params, dtype=dtype)
+    part = None
+    if mesh is not None:
+        axis, n = _partition.mesh_num_shards(mesh)
+        part = _partition.decide_partition(ir, shapes, n,
+                                           partition or "data", axis)
+    if part is not None and part["num_shards"] > 1:
+        plans, consts = _bind_partitioned(ir, shapes, placements, params,
+                                          part, dtype)
+    else:
+        plans, consts = bind(ir, shapes, placements, params, dtype=dtype)
     net = NetworkPlan(
         graph=ir, plans=plans, consts=consts, input_shape=input_shape,
         algorithm=algorithm,
         dtype=str(jnp.dtype(dtype)) if dtype else _plans_dtype(plans),
         compute_dtype=compute_dtype,
-        build_time_s=time.perf_counter() - t0, params_digest=digest)
+        build_time_s=time.perf_counter() - t0, params_digest=digest,
+        partition=part, mesh=mesh)
     if artifact is not None:
         _plan.record_artifact_load(False)
         net.save(artifact)

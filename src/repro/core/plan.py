@@ -82,6 +82,15 @@ AMORTIZE_MIN_OUT_PIXELS = 1156            # 34 x 34
 AMORTIZE_MIN_C_IN = 64
 
 
+def spatial_halo(k: int) -> int:
+    """Rows of neighbor overlap a stride-1 SAME kxk conv needs on each side
+    of a contiguous H strip to produce that strip's output rows exactly --
+    the cross-device analogue of the halo-strip overlap stream_geometry
+    derives per tile. Spatial partitioning (core/partition.py) exchanges
+    this many rows between mesh neighbors and binds the local plan VALID."""
+    return (k - 1) // 2
+
+
 def winograd_suitable(kh: int, kw: int, stride) -> bool:
     """Whether some winograd-family executor covers this filter/stride
     combination (a registry query; kept as the historical entry point).

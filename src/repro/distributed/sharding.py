@@ -16,6 +16,7 @@ from __future__ import annotations
 from typing import Any
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -185,3 +186,46 @@ def cache_specs(cache_shape: Any, cfg: ArchConfig, mesh: Mesh) -> Any:
 
 def sharding_tree(spec_tree: Any, mesh: Mesh) -> Any:
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree)
+
+
+# ---------------------------------------------------------------------------
+# Conv-network partition primitives (sharded NetworkPlan execution)
+# ---------------------------------------------------------------------------
+# NHWC activations partitioned over a 1-D ("data",) axis, either on the batch
+# dim (data parallel) or on H (spatial halo partitioning). These run *inside*
+# a shard_map body, so each sees the device-local shard.
+
+def data_axis_name(mesh: Mesh) -> str:
+    """The batch/spatial partition axis: "data" if present, else axis 0."""
+    return "data" if "data" in mesh.axis_names else mesh.axis_names[0]
+
+
+def halo_exchange(x: jax.Array, axis_name: str, num_shards: int,
+                  halo: int) -> jax.Array:
+    """Exchange `halo` boundary rows (axis 1, NHWC H) with mesh neighbors.
+
+    Returns the local shard grown by `halo` rows on each side. Edge shards
+    receive zeros (ppermute with no inbound edge), which is exactly SAME
+    zero padding -- so a VALID conv over the exchanged tensor reproduces the
+    unsharded SAME conv's rows owned by this shard.
+    """
+    if halo == 0:
+        return x
+    up = jax.lax.ppermute(x[:, -halo:], axis_name,
+                          [(i, i + 1) for i in range(num_shards - 1)])
+    dn = jax.lax.ppermute(x[:, :halo], axis_name,
+                          [(i + 1, i) for i in range(num_shards - 1)])
+    return jnp.concatenate([up, x, dn], axis=1)
+
+
+def gather_rows(x: jax.Array, axis_name: str) -> jax.Array:
+    """Reassemble the full H from row shards (all shards get the full copy)."""
+    return jax.lax.all_gather(x, axis_name, axis=1, tiled=True)
+
+
+def scatter_rows(full: jax.Array, axis_name: str,
+                 num_shards: int) -> jax.Array:
+    """Take back this shard's contiguous H rows from a replicated tensor."""
+    local = full.shape[1] // num_shards
+    i = jax.lax.axis_index(axis_name)
+    return jax.lax.dynamic_slice_in_dim(full, i * local, local, axis=1)

@@ -12,6 +12,8 @@ device state (the dry-run sets XLA_FLAGS before first jax init).
 from __future__ import annotations
 
 import jax
+import numpy as np
+from jax.sharding import Mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -23,6 +25,28 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh(model_parallel: int = 1):
     """Mesh over whatever devices actually exist (CPU tests / examples)."""
     n = len(jax.devices())
-    assert n % model_parallel == 0
+    if model_parallel < 1 or n % model_parallel != 0:
+        raise ValueError(
+            f"make_host_mesh: model_parallel={model_parallel} must be a "
+            f"positive divisor of the {n} available device(s) "
+            f"({[d.platform for d in jax.devices()]}); force more host "
+            f"devices with XLA_FLAGS=--xla_force_host_platform_device_count=N "
+            f"or lower model_parallel")
     return jax.make_mesh((n // model_parallel, model_parallel),
                          ("data", "model"))
+
+
+def make_data_mesh(num_devices: int | None = None) -> Mesh:
+    """1-D ("data",) mesh for sharded NetworkPlan execution.
+
+    `num_devices` takes the first N devices (a 1->N scaling curve on forced
+    host devices needs submeshes); default is all of them.
+    """
+    devs = jax.devices()
+    n = len(devs) if num_devices is None else num_devices
+    if n < 1 or n > len(devs):
+        raise ValueError(
+            f"make_data_mesh: num_devices={num_devices} out of range for the "
+            f"{len(devs)} available device(s); force more host devices with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N")
+    return Mesh(np.array(devs[:n]), ("data",))

@@ -87,13 +87,18 @@ def install(net, fault) -> FaultyPlan:
                        f"have {sorted(net.plans)}")
     proxy = FaultyPlan(net.plans[fault.node_id], fault)
     net.plans[fault.node_id] = proxy
+    if hasattr(net, "invalidate_executables"):
+        net.invalidate_executables()      # drop any cached sharded program
     return proxy
 
 
 def install_on_server(server, fault) -> list[FaultyPlan]:
-    """Install the same fault on every bucket plan of a serve.Server (a
-    faulty executor is faulty at every batch size)."""
-    return [install(net, fault) for net in server.nets.values()]
+    """Install the same fault on every bucket plan of a serve.Server --
+    including any mesh-sharded bucket plans -- (a faulty executor is
+    faulty at every batch size)."""
+    nets = list(server.nets.values())
+    nets += list(getattr(server, "sharded_nets", {}).values())
+    return [install(net, fault) for net in nets]
 
 
 def flip_bit(path: str, match: str = "plan:", *, byte: int = 0,

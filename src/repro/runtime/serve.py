@@ -106,6 +106,23 @@ class ServeConfig:
     straggler_layer_ratio: float = 2.0
     fallback_algorithm: str = "im2col"
     ewma_alpha: float = 0.3
+    #: the jitted happy path: batch dispatch runs a jitted NetworkPlan.apply
+    #: (per bucket, invalidated whenever a bound plan is swapped) until the
+    #: FIRST fault on that bucket, then falls back to the eager supervised
+    #: path -- where per-layer hooks, error annotation, and the degrade
+    #: ladder can see every layer -- for that bucket. Disable for tests or
+    #: drills that need per-layer observability from the first batch.
+    jit_dispatch: bool = True
+    #: continuous re-placement: a layer evicted onto the fallback executor
+    #: gets a probation window of this many CLEAN batches (no executor
+    #: failures), after which the supervisor re-probes the original
+    #: algorithm against the serving fallback on a real-shape input and
+    #: promotes the layer back when it passes; a failed probe doubles the
+    #: window. 0 pins evicted layers on the fallback forever (the PR 7
+    #: behavior).
+    probation_batches: int = 256
+    #: max relative error of the re-probe vs the serving fallback plan.
+    probation_tol: float = 2e-3
     #: run the reduced-precision accuracy probe during warmup (servers with
     #: compute_dtype="float32" never probe); per-dtype relative max-abs
     #: error budgets default to plan.AUTOTUNE_ACCURACY_BUDGET.
@@ -200,6 +217,18 @@ class ServerStats:
     #: layers the accuracy probe promoted back to fp32 (reduced-precision
     #: outputs outside budget never keep serving).
     precision_promotions: int = 0
+    #: jitted-happy-path accounting: batches served by the jitted apply,
+    #: and buckets that fell back to the eager supervised path on their
+    #: first fault.
+    jit_dispatches: int = 0
+    jit_fallbacks: int = 0
+    #: continuous re-placement: probation re-probes run, and evicted layers
+    #: promoted back onto their original algorithm.
+    probation_reprobes: int = 0
+    probation_promotions: int = 0
+    #: buckets served by a mesh-sharded plan on the jitted path
+    #: ({bucket: num_shards}; supervisor repairs stay single-logical-plan).
+    sharded_buckets: dict = field(default_factory=dict)
     #: per-layer transform-domain compute dtype of the CURRENTLY served
     #: plans (refreshed after compile / re-place / recompile / promotion).
     layer_compute_dtypes: dict = field(default_factory=dict)
@@ -231,13 +260,16 @@ class Server:
                  algorithm: str = "auto", dtype=None,
                  compute_dtype: str = "float32",
                  config: ServeConfig | None = None,
-                 artifact_dir: str | None = None):
+                 artifact_dir: str | None = None,
+                 mesh=None, partition: str | None = None):
         self.config = cfg = config or ServeConfig()
         self.params = params
         self._graph_desc = graph
         self._algorithm = algorithm
         self._dtype = dtype
         self.compute_dtype = str(jnp.dtype(compute_dtype))
+        self.mesh = mesh
+        self._partition = partition
         self._artifact_dir = artifact_dir
         if artifact_dir is not None:
             os.makedirs(artifact_dir, exist_ok=True)
@@ -255,6 +287,18 @@ class Server:
         self.stats = ServerStats()
         self.nets: dict[int, _compile.NetworkPlan] = {
             b: self._compile_bucket(b) for b in self.buckets}
+        # Mesh binding: buckets the partition covers additionally get a
+        # sharded plan that ONLY the jitted happy path dispatches to.
+        # Supervision (per-layer hooks, the degrade ladder, replace_layer)
+        # stays on the single-logical-device plans above.
+        self.sharded_nets: dict[int, _compile.NetworkPlan] = {}
+        if mesh is not None:
+            for b in self.buckets:
+                net = self._compile_bucket(b, sharded=True)
+                if net is not None and net.is_sharded():
+                    self.sharded_nets[b] = net
+                    self.stats.sharded_buckets[str(b)] = \
+                        net.partition["num_shards"]
         self.np_dtype = np.dtype(self.nets[self.buckets[0]].dtype)
         self._refresh_layer_dtypes()
         # scheduling state
@@ -276,6 +320,15 @@ class Server:
         self._replaced: set[str] = set()
         self._recompiled = False
         self._service_ewma: float | None = None
+        # jitted happy path: per-bucket (plan-identity token, callable);
+        # a bucket lands in _jit_broken on its first jitted-path fault and
+        # serves eagerly (supervised) from then on.
+        self._jit: dict[int, tuple[tuple, Any]] = {}
+        self._jit_broken: set[int] = set()
+        # continuous re-placement: evicted layer -> {clean, need}; the
+        # per-layer window doubles on every failed re-probe.
+        self._probation: dict[str, dict] = {}
+        self._probation_window: dict[str, int] = {}
 
     # ---- plan lifecycle --------------------------------------------------
 
@@ -283,14 +336,22 @@ class Server:
         if self.config.verbose:
             print(f"[serve] {msg}", flush=True)
 
-    def _artifact_path(self, bucket: int) -> str | None:
+    def _artifact_path(self, bucket: int,
+                       sharded: bool = False) -> str | None:
         if self._artifact_dir is None:
             return None
+        if sharded:
+            from repro.core.partition import mesh_num_shards
+            axis, n = mesh_num_shards(self.mesh)
+            kind = self._partition or "data"
+            return os.path.join(self._artifact_dir,
+                                f"plan_b{bucket}_{kind}{n}.npz")
         return os.path.join(self._artifact_dir, f"plan_b{bucket}.npz")
 
-    def _compile_bucket(self, bucket: int,
-                        force_cold: bool = False) -> _compile.NetworkPlan:
-        art = self._artifact_path(bucket)
+    def _compile_bucket(self, bucket: int, force_cold: bool = False,
+                        sharded: bool = False
+                        ) -> "_compile.NetworkPlan | None":
+        art = self._artifact_path(bucket, sharded=sharded)
         if art is not None and os.path.exists(art):
             if force_cold:
                 os.remove(art)
@@ -305,11 +366,22 @@ class Server:
                               f"check ({len(bad)} arrays, e.g. {bad[0]!r}); "
                               f"recompiling in place")
         before = _plan.plan_cache_info()["artifact_hits"]
-        net = _compile.compile(self.params, self._graph_desc,
-                               input_shape=(bucket,) + self.example_shape,
-                               algorithm=self._algorithm, dtype=self._dtype,
-                               compute_dtype=self.compute_dtype,
-                               artifact=art)
+        try:
+            net = _compile.compile(
+                self.params, self._graph_desc,
+                input_shape=(bucket,) + self.example_shape,
+                algorithm=self._algorithm, dtype=self._dtype,
+                compute_dtype=self.compute_dtype, artifact=art,
+                mesh=self.mesh if sharded else None,
+                partition=self._partition if sharded else None)
+        except Exception as e:
+            if not sharded:
+                raise
+            # a bucket the mesh cannot serve is not fatal: the jitted path
+            # simply runs that bucket's single-logical-device plan.
+            self._log(f"bucket {bucket}: sharded compile unavailable "
+                      f"({e!r}); serving the unsharded plan")
+            return None
         if art is not None:
             if _plan.plan_cache_info()["artifact_hits"] > before:
                 self.stats.artifact_warm_starts += 1
@@ -338,8 +410,44 @@ class Server:
             x = jnp.zeros((b,) + self.example_shape, self.np_dtype)
             y, _ = self._supervised_apply(b, jnp.asarray(x))
             jax.block_until_ready(y)
+            if self.config.jit_dispatch:
+                try:
+                    jax.block_until_ready(self._jitted_apply(b, x))
+                except Exception as e:
+                    self._jit_broken.add(b)
+                    self.stats.jit_fallbacks += 1
+                    self._log(f"bucket {b}: jitted path failed at warmup "
+                              f"({e!r}); serving eagerly")
         if self.compute_dtype != "float32" and self.config.precision_probe:
             self.probe_precision()
+
+    def _fresh_plan(self, node, in_shape, *, algorithm: str,
+                    compute_dtype: str = "float32", groups: int = 1):
+        """A freshly planned executor for one conv-family node at its real
+        serving shape -- the shared oracle builder behind the precision
+        probe and probation re-probes."""
+        a = node.attrs
+        param = lambda path: _compile._param(self.params, path)
+        if node.op == "conv2d":
+            return _plan.plan_conv2d(
+                in_shape, param(a["w_path"]), stride=tuple(a["stride"]),
+                padding=a["padding"], groups=groups, algorithm=algorithm,
+                dtype=self._dtype, compute_dtype=compute_dtype)
+        if node.op == "separable":
+            return _plan.plan_separable_block(
+                in_shape, param(a["dw_w"]), param(a["pw_w"]),
+                stride=tuple(a["stride"]), padding=a["padding"],
+                algorithm=algorithm, dtype=self._dtype,
+                compute_dtype=compute_dtype)
+        if node.op == "inverted_residual":
+            return _plan.plan_inverted_residual(
+                in_shape,
+                param(a["exp_w"]) if a.get("exp_w") else None,
+                param(a["dw_w"]), param(a["pw_w"]),
+                stride=tuple(a["stride"]), padding=a["padding"],
+                algorithm=algorithm, dtype=self._dtype,
+                compute_dtype=compute_dtype)
+        raise ValueError(f"no fresh-plan recipe for op {node.op!r}")
 
     def probe_precision(self, *, seed: int = 0) -> dict:
         """The reduced-precision accuracy probe: every conv layer currently
@@ -357,7 +465,6 @@ class Server:
         shapes = _compile.infer_shapes(net.graph, net.input_shape)
         rng = np.random.default_rng(seed)
         report: dict[str, dict] = {}
-        param = lambda path: _compile._param(self.params, path)
         for node in net.graph:
             p = net.plans.get(node.id)
             if p is None or node.op not in ("conv2d", "separable",
@@ -366,26 +473,11 @@ class Server:
             cd = p.describe().get("compute_dtype", "float32")
             if cd == "float32":
                 continue
-            a = node.attrs
             in_shape = shapes[node.inputs[0]]
             x = jnp.asarray(rng.standard_normal(in_shape), np.float32)
-            if node.op == "conv2d":
-                ref = _plan.plan_conv2d(
-                    in_shape, param(a["w_path"]), stride=tuple(a["stride"]),
-                    padding=a["padding"], groups=p.spec.groups,
-                    algorithm="auto", dtype=self._dtype)
-            elif node.op == "separable":
-                ref = _plan.plan_separable_block(
-                    in_shape, param(a["dw_w"]), param(a["pw_w"]),
-                    stride=tuple(a["stride"]), padding=a["padding"],
-                    algorithm="auto", dtype=self._dtype)
-            else:
-                ref = _plan.plan_inverted_residual(
-                    in_shape,
-                    param(a["exp_w"]) if a.get("exp_w") else None,
-                    param(a["dw_w"]), param(a["pw_w"]),
-                    stride=tuple(a["stride"]), padding=a["padding"],
-                    algorithm="auto", dtype=self._dtype)
+            ref = self._fresh_plan(node, in_shape, algorithm="auto",
+                                   groups=getattr(
+                                       getattr(p, "spec", None), "groups", 1))
             y = np.asarray(p.apply(x), np.float32)
             y0 = np.asarray(ref.apply(x), np.float32)
             err = float(np.max(np.abs(y - y0))
@@ -529,8 +621,9 @@ class Server:
         for i, t in enumerate(batch):
             X[i] = t.x
         t0 = time.perf_counter()
+        fails_before = self.stats.executor_failures
         try:
-            y, layer_times = self._supervised_apply(b, jnp.asarray(X))
+            y, layer_times = self._dispatch(b, jnp.asarray(X))
         except Exception as e:
             # ladder exhausted: answer every ticket with the error --
             # failed, but never silently dropped.
@@ -554,6 +647,46 @@ class Server:
                 self.stats.completed += 1
         self.stats.batches += 1
         self.stats.bucket_batches[b] = self.stats.bucket_batches.get(b, 0) + 1
+        if self.stats.executor_failures == fails_before:
+            self._note_clean_batch()
+
+    # ---- dispatch: the jitted happy path ---------------------------------
+
+    def _jitted_apply(self, bucket: int, X):
+        """One batch through the jitted apply. The callable is cached per
+        bucket keyed on a plan-identity token, so swapping ANY bound plan
+        (re-placement, recompile, fault injection) forces a re-trace --
+        a python-level fault proxy always executes at least once instead
+        of being silently baked out of a stale jit cache. Prefers the
+        mesh-sharded plan when the bucket has one."""
+        net = self.sharded_nets.get(bucket) or self.nets[bucket]
+        token = (id(net), *map(id, net.plans.values()))
+        cached = self._jit.get(bucket)
+        if cached is None or cached[0] != token:
+            fn = net.apply if net.is_sharded() else jax.jit(net.apply)
+            cached = (token, fn)
+            self._jit[bucket] = cached
+        return cached[1](X)
+
+    def _dispatch(self, bucket: int, X) -> tuple[Any, dict]:
+        """Jitted happy path until the bucket's first fault, then the eager
+        supervised path (per-layer hooks + the degrade ladder) for that
+        bucket from then on. The jitted-path failure counts as the batch's
+        first failure+retry: the batch is immediately retried eagerly."""
+        if self.config.jit_dispatch and bucket not in self._jit_broken:
+            try:
+                y = self._jitted_apply(bucket, X)
+                jax.block_until_ready(y)
+                self.stats.jit_dispatches += 1
+                return y, {}
+            except Exception as e:
+                self._jit_broken.add(bucket)
+                self.stats.jit_fallbacks += 1
+                self.stats.executor_failures += 1
+                self.stats.retries += 1
+                self._log(f"bucket {bucket}: jitted path fault ({e!r}); "
+                          f"falling back to the eager supervised path")
+        return self._supervised_apply(bucket, X)
 
     # ---- supervision: the degrade ladder ---------------------------------
 
@@ -612,7 +745,80 @@ class Server:
         self._refresh_layer_dtypes()
         if count_eviction:
             self.stats.evictions += 1
+        if self.config.probation_batches > 0:
+            win = self._probation_window.setdefault(
+                node_id, self.config.probation_batches)
+            self._probation[node_id] = {"clean": 0, "need": win}
         self._log(f"re-placed layer {node_id!r} onto {alg!r} ({reason})")
+        return True
+
+    # ---- probation: continuous re-placement ------------------------------
+
+    def _note_clean_batch(self) -> None:
+        """Count a fault-free batch towards every on-probation layer; when
+        a layer's window fills, re-probe it for promotion."""
+        if not self._probation:
+            return
+        for nid in list(self._probation):
+            st = self._probation[nid]
+            st["clean"] += 1
+            if st["clean"] >= st["need"]:
+                self._probe_and_promote(nid)
+
+    def _probe_and_promote(self, node_id: str) -> bool:
+        """Probation window expired: re-probe the evicted layer's original
+        algorithm against the serving fallback plan on a random input of
+        the layer's real shape. On parity (rel err <= probation_tol) the
+        layer is promoted back onto the primary algorithm across EVERY
+        bucket plan; on a failed probe the window doubles and probation
+        restarts, so a persistently bad executor is re-probed ever more
+        rarely instead of flapping."""
+        cfg = self.config
+        self.stats.probation_reprobes += 1
+        net = self.nets[self.buckets[0]]
+        node = next(n for n in net.graph if n.id == node_id)
+        shapes = _compile.infer_shapes(net.graph, net.input_shape)
+        in_shape = shapes[node.inputs[0]]
+        rng = np.random.default_rng(self.stats.batches)
+        x = jnp.asarray(rng.standard_normal(in_shape), np.float32)
+        err = math.inf
+        try:
+            cand = self._fresh_plan(node, in_shape,
+                                    algorithm=self._algorithm)
+            cur = net.plans[node_id]
+            if (hasattr(cand, "residual") and hasattr(cur, "residual")
+                    and cand.residual != cur.residual):
+                cand = dataclasses.replace(cand, residual=cur.residual)
+            y = np.asarray(cand.apply(x), np.float32)
+            y0 = np.asarray(cur.apply(x), np.float32)
+            err = float(np.max(np.abs(y - y0))
+                        / (float(np.max(np.abs(y0))) or 1.0))
+            ok = err <= cfg.probation_tol
+            if ok:
+                for n in self.nets.values():
+                    n.replace_layer(node_id, self.params,
+                                    algorithm=self._algorithm)
+        except Exception as e:
+            self._log(f"probation re-probe of {node_id!r} raised {e!r}")
+            ok = False
+        if not ok:
+            win = self._probation_window.get(
+                node_id, cfg.probation_batches) * 2
+            self._probation_window[node_id] = win
+            self._probation[node_id] = {"clean": 0, "need": win}
+            self._log(f"layer {node_id!r} failed its probation re-probe "
+                      f"(rel err {err:.3g} > {cfg.probation_tol:g}); "
+                      f"window doubled to {win} clean batches")
+            return False
+        self._replaced.discard(node_id)
+        self._probation.pop(node_id, None)
+        self._probation_window.pop(node_id, None)
+        self._straggler_counts.pop(node_id, None)
+        self.stats.probation_promotions += 1
+        self._refresh_layer_dtypes()
+        self._log(f"promoted layer {node_id!r} back onto "
+                  f"{self._algorithm!r} after probation "
+                  f"(re-probe rel err {err:.3g})")
         return True
 
     def _recompile_in_place(self) -> bool:
@@ -637,6 +843,9 @@ class Server:
             self.nets[b] = self._compile_bucket(b, force_cold=True)
         self._replaced.clear()
         self._straggler_counts.clear()
+        self._probation.clear()
+        self._probation_window.clear()
+        self._jit_broken.clear()
         self._refresh_layer_dtypes()
         self.stats.recompiles += 1
         self._log(f"recompiled all bucket plans in place "

@@ -221,9 +221,12 @@ def test_queue_overload_bounded_rejection(params, xs):
 def test_straggler_eviction_counter(params, xs):
     """Satellite: an injected latency spike on one layer is flagged by the
     per-bucket StepTimer, attributed via per-layer times, and the layer is
-    evicted onto the fallback executor after the configured count."""
+    evicted onto the fallback executor after the configured count.
+    Straggler attribution needs the eager supervised path's per-layer
+    timing hooks, so the jitted dispatch fast path is disabled."""
     srv = Server(params, SPECS, res=RES, algorithm="winograd",
                  config=make_cfg(buckets=(2,), queue_capacity=64,
+                                 jit_dispatch=False,
                                  straggler_window=16,
                                  straggler_min_baseline=5,
                                  straggler_evict_after=2, batch_wait_s=0.0))
@@ -280,6 +283,70 @@ def test_corrupt_bucket_artifact_repaired_at_startup(params, xs, tmp_path):
     srv3 = Server(params, SPECS, res=RES, algorithm="winograd", config=cfg,
                   artifact_dir=art)
     assert srv3.stats.artifact_warm_starts == len(srv3.buckets)
+
+
+def test_jit_dispatch_happy_path_counters(params, xs):
+    """Satellite: fault-free traffic is served entirely by the jitted
+    happy path (stats.jit_dispatches), no bucket ever falls back, and
+    outputs match the eager oracle."""
+    srv = Server(params, SPECS, res=RES, algorithm="winograd",
+                 config=make_cfg())
+    srv.start()
+    ys = [t.result(timeout=120) for t in [srv.submit(x) for x in xs]]
+    srv.stop()
+    assert srv.stats.jit_dispatches >= 1
+    assert srv.stats.jit_fallbacks == 0 and srv.stats.retries == 0
+    for y, ref in zip(ys, oracle_outputs(params, xs)):
+        assert_close(y, ref)
+
+
+def test_probation_promotes_layer_back(params, xs):
+    """Satellite: continuous re-placement. A permanent executor fault
+    breaks the bucket's jitted path (counted in jit_fallbacks), the
+    supervisor evicts the layer onto im2col, and after the probation
+    window of clean batches a re-probe promotes it back onto winograd."""
+    srv = Server(params, SPECS, res=RES, algorithm="winograd",
+                 config=make_cfg(probation_batches=2))
+    srv.start()
+    inject.install_on_server(srv, inject.ExecutorRaise("c1"))
+    [t.result(timeout=120) for t in [srv.submit(x) for x in xs]]
+    assert srv.stats.replacements >= 1 and srv.stats.jit_fallbacks >= 1
+    # serve clean singles until the probation window fills
+    ys = []
+    for _ in range(4):
+        ys.append(srv.submit(xs[0]).result(timeout=120))
+    srv.stop()
+    s = srv.stats
+    assert s.probation_reprobes >= 1 and s.probation_promotions == 1
+    for b in srv.buckets:
+        assert srv.nets[b].plans["c1"].spec.algorithm == "winograd"
+    ref = oracle_outputs(params, [xs[0]])[0]
+    for y in ys:
+        assert_close(y, ref)
+    assert s.failed == 0 and s.in_flight == 0
+
+
+def test_probation_window_doubles_on_failed_probe(params, xs, monkeypatch):
+    """A failed probation re-probe keeps the layer on the fallback and
+    doubles its window instead of flapping."""
+    srv = Server(params, SPECS, res=RES, algorithm="winograd",
+                 config=make_cfg(probation_batches=1))
+    srv.start()
+    inject.install_on_server(srv, inject.ExecutorRaise("c1"))
+    [t.result(timeout=120) for t in [srv.submit(x) for x in xs]]
+    assert srv.stats.replacements >= 1
+
+    def boom(*a, **k):
+        raise RuntimeError("probe refused")
+    monkeypatch.setattr(srv, "_fresh_plan", boom)
+    for _ in range(2):
+        srv.submit(xs[0]).result(timeout=120)
+    srv.stop()
+    s = srv.stats
+    assert s.probation_reprobes >= 1 and s.probation_promotions == 0
+    assert srv._probation["c1"]["need"] >= 2
+    for b in srv.buckets:
+        assert srv.nets[b].plans["c1"].spec.algorithm == "im2col"
 
 
 def test_batches_form_across_buckets(params, xs):

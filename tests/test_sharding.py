@@ -163,3 +163,276 @@ def test_shardings_apply_on_host_mesh():
     placed = jax.device_put(params, sh)
     assert jax.tree.all(jax.tree.map(
         lambda x: bool(jnp.all(jnp.isfinite(x))), placed))
+
+
+# ---------------------------------------------------------------------------
+# conv NetworkPlan partitioning: decide_partition is a pure IR walk
+# ---------------------------------------------------------------------------
+
+from repro.core import compile as cc          # noqa: E402
+from repro.core import partition as pt        # noqa: E402
+from repro.models import cnn                  # noqa: E402
+
+CNN_SPECS = [cnn.Conv("c1", 3, 3, 8),
+             cnn.Conv("c2", 5, 5, 8),
+             cnn.Pool("max", 2, 2),
+             cnn.Conv("c3", 3, 3, 16),
+             cnn.GlobalAvgPool(),
+             cnn.Dense("fc", 10, relu=False)]
+
+
+def _cnn_ir(batch=8, res=32):
+    ir = cc.fuse(cc.lower(CNN_SPECS, c_in=3))
+    shapes = cc.infer_shapes(ir, (batch, res, res, 3))
+    return ir, shapes
+
+
+def test_decide_partition_data_divisible():
+    ir, shapes = _cnn_ir(batch=8)
+    part = pt.decide_partition(ir, shapes, 4, "data")
+    assert part == {"kind": "data", "axis": "data", "num_shards": 4,
+                    "requested_shards": 4, "degraded": None}
+
+
+def test_decide_partition_data_indivisible_degrades():
+    ir, shapes = _cnn_ir(batch=6)
+    part = pt.decide_partition(ir, shapes, 4, "data")
+    assert part["num_shards"] == 1 and part["requested_shards"] == 4
+    assert "does not divide" in part["degraded"]
+
+
+def test_decide_partition_spatial_modes():
+    """The spatial walk: stride-1 odd-k convs halo, the stride-2 pool
+    re-gathers (and re-scatters: H/2 still divides), global pooling is a
+    local-mean + pmean, the classifier head runs replicated."""
+    ir, shapes = _cnn_ir(batch=2, res=32)
+    part = pt.decide_partition(ir, shapes, 4, "spatial")
+    m = part["modes"]
+    assert m["c1"] == "halo" and part["halo"]["c1"] == 1
+    assert m["c2"] == "halo" and part["halo"]["c2"] == 2
+    pool = next(k for k in m if k.startswith("pool"))
+    assert m[pool] == "full" and part["rescatter"][pool]
+    assert m["c3"] == "halo"
+    gap = next(k for k in m if k.startswith("gap"))
+    assert m[gap] == "reduce"
+    assert m["fc"] == "local"
+    assert part["out_sharded"] is False
+
+
+def test_decide_partition_spatial_halo_needs_enough_rows():
+    """A 5x5 halo (2 rows) cannot come out of a 1-row local strip: the
+    conv re-gathers instead of haloing when H/D < (k-1)//2 fails."""
+    ir, shapes = _cnn_ir(batch=2, res=8)
+    part = pt.decide_partition(ir, shapes, 8, "spatial")
+    assert part["modes"]["c1"] == "halo"          # halo 1 <= 1 local row
+    assert part["modes"]["c2"] == "full"          # halo 2 > 1 local row
+
+
+def test_decide_partition_spatial_indivisible_h_degrades():
+    ir, shapes = _cnn_ir(batch=2, res=30)
+    part = pt.decide_partition(ir, shapes, 4, "spatial")
+    assert part["num_shards"] == 1
+    assert "does not divide" in part["degraded"]
+
+
+def test_make_data_mesh_and_host_mesh_guards():
+    from repro.launch.mesh import make_data_mesh, make_host_mesh
+    n = len(jax.devices())
+    mesh = make_data_mesh()
+    assert mesh.axis_names == ("data",) and mesh.shape["data"] == n
+    with pytest.raises(ValueError,
+                       match="xla_force_host_platform_device_count"):
+        make_data_mesh(n + 1)
+    with pytest.raises(ValueError,
+                       match="xla_force_host_platform_device_count"):
+        make_host_mesh(model_parallel=3 * n)
+
+
+# ---------------------------------------------------------------------------
+# sharded NetworkPlan execution on 8 forced host devices (subprocesses,
+# like test_multidevice.py: the main pytest process stays single-device)
+# ---------------------------------------------------------------------------
+
+import os                                     # noqa: E402
+import subprocess                             # noqa: E402
+import sys                                    # noqa: E402
+import textwrap                               # noqa: E402
+
+_SRC = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+
+
+def _run_forced(code: str, devices: int = 8, timeout: int = 420) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = _SRC
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=timeout,
+                         env=env)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_batch_sharded_apply_parity_and_degradation_8dev():
+    """Data-parallel sharding on 8 forced host devices: batch-8 parity
+    against the unsharded oracle, and an indivisible batch degrades to a
+    replicated plan (recorded reason) that still serves with parity."""
+    stdout = _run_forced("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import compile as C
+        from repro.launch.mesh import make_data_mesh
+        from repro.models import cnn
+
+        assert jax.device_count() == 8
+        SPECS = [cnn.Conv("c1", 3, 3, 8),
+                 cnn.Conv("c2", 3, 3, 16, stride=2),
+                 cnn.GlobalAvgPool(), cnn.Dense("fc", 10, relu=False)]
+        params = cnn.init_cnn(jax.random.key(0), SPECS, 3, res=16)
+        x = np.random.default_rng(0).standard_normal(
+            (8, 16, 16, 3)).astype(np.float32)
+        ref = np.asarray(C.compile(params, SPECS, res=16, batch=8)
+                         .apply(jnp.asarray(x)))
+        mesh = make_data_mesh(8)
+        net = C.compile(params, SPECS, res=16, batch=8, mesh=mesh)
+        assert net.partition["kind"] == "data"
+        assert net.partition["num_shards"] == 8
+        y = np.asarray(net.apply(jnp.asarray(x)))
+        err = float(np.max(np.abs(y - ref)) / np.max(np.abs(ref)))
+        assert err < 1e-5, err
+
+        net6 = C.compile(params, SPECS, res=16, batch=6, mesh=mesh)
+        assert net6.partition["num_shards"] == 1
+        assert "does not divide" in net6.partition["degraded"]
+        ref6 = np.asarray(C.compile(params, SPECS, res=16, batch=6)
+                          .apply(jnp.asarray(x[:6])))
+        y6 = np.asarray(net6.apply(jnp.asarray(x[:6])))
+        assert np.max(np.abs(y6 - ref6)) / np.max(np.abs(ref6)) < 1e-5
+        print("OK", err)
+    """)
+    assert "OK" in stdout
+
+
+def test_halo_sharded_apply_parity_8dev():
+    """Spatial halo partitioning on 8 forced host devices: H splits
+    8-way, stride-1 convs exchange halo rows via ppermute, the stride-2
+    pool re-gathers/re-scatters, and the output matches the unsharded
+    oracle to 1e-5."""
+    stdout = _run_forced("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import compile as C
+        from repro.launch.mesh import make_data_mesh
+        from repro.models import cnn
+
+        SPECS = [cnn.Conv("c1", 3, 3, 8),
+                 cnn.Conv("c2", 5, 5, 8),
+                 cnn.Pool("max", 2, 2),
+                 cnn.Conv("c3", 3, 3, 16),
+                 cnn.GlobalAvgPool(), cnn.Dense("fc", 10, relu=False)]
+        params = cnn.init_cnn(jax.random.key(0), SPECS, 3, res=32)
+        x = np.random.default_rng(1).standard_normal(
+            (2, 32, 32, 3)).astype(np.float32)
+        ref = np.asarray(C.compile(params, SPECS, res=32, batch=2)
+                         .apply(jnp.asarray(x)))
+        net = C.compile(params, SPECS, res=32, batch=2,
+                        mesh=make_data_mesh(8), partition="spatial")
+        part = net.partition
+        assert part["kind"] == "spatial" and part["num_shards"] == 8
+        assert part["modes"]["c1"] == "halo"
+        assert part["modes"]["c2"] == "halo" and part["halo"]["c2"] == 2
+        y = np.asarray(net.apply(jnp.asarray(x)))
+        err = float(np.max(np.abs(y - ref)) / np.max(np.abs(ref)))
+        assert err < 1e-5, err
+        print("OK", err)
+    """)
+    assert "OK" in stdout
+
+
+def test_partition_artifact_roundtrip_8dev(tmp_path):
+    """Version-5 artifacts persist the partition record: a warm start
+    restores the recorded sharding without re-deciding (one artifact hit,
+    zero misses), a load without a mesh demands .with_mesh() before
+    sharded execution, and an unsharded compile refuses the sharded
+    artifact (cold recompile) instead of silently reusing it."""
+    stdout = _run_forced(f"""
+        import os, numpy as np, jax, jax.numpy as jnp
+        from repro.core import compile as C
+        from repro.core.plan import clear_plan_cache, plan_cache_info
+        from repro.launch.mesh import make_data_mesh
+        from repro.models import cnn
+
+        art = os.path.join({str(tmp_path)!r}, "net.npz")
+        SPECS = [cnn.Conv("c1", 3, 3, 8),
+                 cnn.GlobalAvgPool(), cnn.Dense("fc", 10, relu=False)]
+        params = cnn.init_cnn(jax.random.key(0), SPECS, 3, res=16)
+        x = np.random.default_rng(2).standard_normal(
+            (8, 16, 16, 3)).astype(np.float32)
+        mesh = make_data_mesh(8)
+        net = C.compile(params, SPECS, res=16, batch=8, mesh=mesh,
+                        artifact=art)
+        assert plan_cache_info()["artifact_misses"] == 1   # cold
+        ref = np.asarray(net.apply(jnp.asarray(x)))
+
+        clear_plan_cache()
+        warm = C.compile(params, SPECS, res=16, batch=8, mesh=mesh,
+                         artifact=art)
+        info = plan_cache_info()
+        assert info["artifact_hits"] == 1 and info["artifact_misses"] == 0
+        assert warm.partition == net.partition
+        y = np.asarray(warm.apply(jnp.asarray(x)))
+        assert np.max(np.abs(y - ref)) / np.max(np.abs(ref)) < 1e-6
+
+        loaded = C.NetworkPlan.load(art)     # no mesh attached yet
+        assert loaded.is_sharded() and loaded.mesh is None
+        try:
+            loaded.apply(jnp.asarray(x))
+            raise SystemExit("expected ValueError without a mesh")
+        except ValueError as e:
+            assert "with_mesh" in str(e), e
+        y2 = np.asarray(loaded.with_mesh(mesh).apply(jnp.asarray(x)))
+        assert np.max(np.abs(y2 - ref)) / np.max(np.abs(ref)) < 1e-6
+
+        clear_plan_cache()
+        plain = C.compile(params, SPECS, res=16, batch=8, artifact=art)
+        assert plain.partition is None       # sharded artifact rejected
+        assert plan_cache_info()["artifact_misses"] == 1
+        print("OK")
+    """)
+    assert "OK" in stdout
+
+
+def test_server_binds_buckets_to_mesh_8dev(tmp_path):
+    """A Server given a mesh serves divisible buckets through sharded
+    plans on the jitted happy path (stats.sharded_buckets), indivisible
+    buckets through the plain plans, with outputs matching the eager
+    oracle; supervisor repairs stay on the single-logical-device plans."""
+    stdout = _run_forced("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import compile as C
+        from repro.launch.mesh import make_data_mesh
+        from repro.models import cnn
+        from repro.runtime.serve import ServeConfig, Server
+
+        SPECS = [cnn.Conv("c1", 3, 3, 8),
+                 cnn.Conv("c2", 3, 3, 8, relu=False)]
+        params = cnn.init_cnn(jax.random.key(0), SPECS, 3, res=16)
+        cfg = ServeConfig(buckets=(2, 8), queue_capacity=64, verbose=False,
+                          backoff_base_s=0.002, backoff_cap_s=0.01)
+        srv = Server(params, SPECS, res=16, algorithm="winograd",
+                     config=cfg, mesh=make_data_mesh(8))
+        assert srv.stats.sharded_buckets == {"8": 8}   # 2 is indivisible
+        xs = [np.random.default_rng(i).standard_normal(
+                  (16, 16, 3)).astype(np.float32) for i in range(8)]
+        srv.start()
+        ys = [t.result(timeout=120) for t in [srv.submit(x) for x in xs]]
+        srv.stop()
+        assert srv.stats.jit_dispatches >= 1
+        assert srv.stats.failed == 0 and srv.stats.in_flight == 0
+        oracle = C.compile(params, SPECS, res=16, batch=1,
+                           algorithm="im2col")
+        for x, y in zip(xs, ys):
+            ref = np.asarray(oracle.apply(jnp.asarray(x[None])))[0]
+            err = np.max(np.abs(y - ref)) / (np.max(np.abs(ref)) + 1e-9)
+            assert err < 2e-3, err
+        print("OK")
+    """)
+    assert "OK" in stdout
