@@ -1,0 +1,146 @@
+"""Regression gate over BENCH_*.json perf artifacts.
+
+Two modes:
+
+  PYTHONPATH=src python -m benchmarks.regress BASE.json CURRENT.json
+      # compare one pair: extract the tracked metrics of both artifacts
+      # (repro.obs.regress knows every BENCH format this repo emits) and
+      # exit 1 when any gated metric regressed past the threshold.
+
+  PYTHONPATH=src python -m benchmarks.regress --trajectory CI_DIR
+      # CI mode: for every committed BENCH_PR<n>.json in the repo root,
+      # find its freshly-measured counterpart BENCH_PR<n>_ci*.json under
+      # CI_DIR and compare committed -> fresh. Pairs in the PR10 observe
+      # format gate HARD (their metrics are machine-relative -- overhead
+      # percentage points, residual percentage, boolean gates -- so a CI
+      # runner is comparable to the machine that produced the committed
+      # baseline). Pre-existing absolute-latency formats are evaluated
+      # WARN-ONLY by default: a slow CI runner is not a regression.
+      # --strict upgrades warnings to failures for same-machine use.
+
+Thresholds: ratio metrics fail past --threshold x worsening (default
+1.5x); percentage-point metrics (the PR10 overhead gauge) fail past
+--pct-margin additional points (default 5.0); count metrics (dropped /
+incorrect requests) and boolean gates fail on ANY worsening.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import os
+import re
+import sys
+
+from repro.obs import regress as R
+
+
+def _compare_pair(base_path: str, cur_path: str, *, threshold: float,
+                  pct_margin: float, hard: bool) -> tuple[int, int]:
+    """Print one pair's findings; return (n_gated, n_regressed)."""
+    base, cur = R.load(base_path), R.load(cur_path)
+    fmt = R.detect(base)
+    findings = R.compare(base, cur, threshold=threshold,
+                         pct_margin=pct_margin)
+    regressed = [f for f in findings if f.regressed]
+    mode = "gate" if hard else "warn-only"
+    print(f"\n== {os.path.basename(base_path)} -> "
+          f"{os.path.basename(cur_path)}  [format={fmt}, {mode}] ==")
+    if not findings:
+        print("  (no shared tracked metrics)")
+        return 0, 0
+    for line in R.summarize(findings):
+        print(line)
+    print(f"  {len(findings)} metric(s) compared, "
+          f"{len(regressed)} regressed")
+    return len(findings), len(regressed)
+
+
+_CI_TAG = re.compile(r"^BENCH_PR(\d+)(?:_ci.*)?\.json$")
+
+
+def _trajectory_pairs(root: str, ci_dir: str) -> list[tuple[str, str]]:
+    """(committed, fresh) pairs: BENCH_PR<n>.json in `root` matched with
+    BENCH_PR<n>_ci*.json (or BENCH_PR<n>.json) under `ci_dir`."""
+    pairs = []
+    for committed in sorted(glob.glob(os.path.join(root,
+                                                   "BENCH_PR[0-9]*.json"))):
+        m = _CI_TAG.match(os.path.basename(committed))
+        if not m:
+            continue
+        n = m.group(1)
+        fresh = (sorted(glob.glob(os.path.join(
+                    ci_dir, f"BENCH_PR{n}_ci*.json")))
+                 or sorted(glob.glob(os.path.join(
+                    ci_dir, f"BENCH_PR{n}.json"))))
+        if fresh:
+            pairs.append((committed, fresh[0]))
+    return pairs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.regress",
+        description="Regression gate over BENCH_*.json artifacts.")
+    ap.add_argument("base", nargs="?", help="baseline BENCH_*.json")
+    ap.add_argument("current", nargs="?", help="candidate BENCH_*.json")
+    ap.add_argument("--trajectory", metavar="CI_DIR", default=None,
+                    help="compare every committed BENCH_PR<n>.json in the "
+                         "repo root against BENCH_PR<n>_ci*.json under "
+                         "CI_DIR")
+    ap.add_argument("--root", default=None,
+                    help="override the repo root that holds the committed "
+                         "trajectory (default: parent of benchmarks/)")
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="ratio-metric failure factor (default 1.5x)")
+    ap.add_argument("--pct-margin", type=float, default=5.0,
+                    help="percentage-point metric failure margin "
+                         "(default 5.0)")
+    ap.add_argument("--warn-only", action="store_true",
+                    help="report but always exit 0")
+    ap.add_argument("--strict", action="store_true",
+                    help="trajectory mode: gate pre-existing absolute-"
+                         "latency formats too, not just the machine-"
+                         "relative observe format")
+    args = ap.parse_args(argv)
+
+    failures = 0
+    if args.trajectory is not None:
+        root = args.root or os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__)))
+        pairs = _trajectory_pairs(root, args.trajectory)
+        if not pairs:
+            print(f"error: no (committed, fresh) BENCH_PR<n> pairs between "
+                  f"{root} and {args.trajectory}")
+            return 2
+        for committed, fresh in pairs:
+            hard = args.strict or \
+                R.detect(R.load(committed)) == "observe"
+            _, regressed = _compare_pair(
+                committed, fresh, threshold=args.threshold,
+                pct_margin=args.pct_margin, hard=hard)
+            if regressed and hard:
+                failures += regressed
+            elif regressed:
+                print(f"  (warn-only: {regressed} regression(s) not gated "
+                      f"-- absolute metrics across machines)")
+    else:
+        if not args.base or not args.current:
+            ap.error("need BASE and CURRENT (or --trajectory CI_DIR)")
+        _, failures = _compare_pair(
+            args.base, args.current, threshold=args.threshold,
+            pct_margin=args.pct_margin, hard=True)
+
+    if failures and not args.warn_only:
+        print(f"\nREGRESSION GATE FAILED: {failures} gated metric(s) "
+              f"regressed")
+        return 1
+    if failures:
+        print(f"\nwarn-only: {failures} regression(s) reported, exit 0")
+    else:
+        print("\nregression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -53,6 +53,14 @@
       # auto_tuned race evidence, and the MobileNet-v2 whole-network
       # policy A/B gated on int8 logits top-1 agreement vs fp32
       # (BENCH_PR8.json is the committed run)
+  PYTHONPATH=src python -m benchmarks.run --json BENCH_PR10.json \
+      --config observe
+      # the observability A/B: MobileNet-v2 served with the profiler
+      # disabled vs enabled (interleaved rounds, machine-relative
+      # overhead %), the per-request span decomposition audited against
+      # measured latency, and the chrome://tracing + metrics-snapshot
+      # exports written next to the JSON (BENCH_PR10.json is the
+      # committed run; benchmarks/regress.py gates CI against it)
 
 Every emitted BENCH_*.json is stamped with jax version, backend/device
 kind, git SHA and a UTC timestamp (benchmarks.common.bench_metadata), so
@@ -91,7 +99,7 @@ def main(argv=None) -> None:
     ap.add_argument("--config", default="vgg_style",
                     choices=["vgg_style", "mobilenet", "compile",
                              "crossover", "serving", "precision",
-                             "scaling"],
+                             "scaling", "observe"],
                     help="which --json benchmark to run: vgg_style "
                          "(streamed vs materialized dense Winograd), "
                          "mobilenet (fused vs unfused separable blocks), "
@@ -105,7 +113,9 @@ def main(argv=None) -> None:
                          "Poisson arrivals + per-fault-class drills -- "
                          "BENCH_PR7.json), or precision (the per-layer "
                          "and whole-network fp32/bf16/int8 A/B with the "
-                         "int8 top-1 accuracy gate -- BENCH_PR8.json)")
+                         "int8 top-1 accuracy gate -- BENCH_PR8.json), "
+                         "or observe (the observability overhead A/B + "
+                         "span decomposition audit -- BENCH_PR10.json)")
     args = ap.parse_args(argv)
 
     from benchmarks import (amortization, fast_fraction, per_layer, roofline,
@@ -124,6 +134,10 @@ def main(argv=None) -> None:
         elif args.config == "scaling":
             from benchmarks import scaling
             scaling.main(["--out", args.json]
+                         + ([] if args.full else ["--quick"]))
+        elif args.config == "observe":
+            from benchmarks import observe
+            observe.main(["--out", args.json]
                          + ([] if args.full else ["--quick"]))
         elif args.config == "compile":
             res = "224" if args.full else "96"

@@ -58,6 +58,7 @@ import numpy as np
 from repro.core import partition as _partition
 from repro.core import plan as _plan
 from repro.core import registry
+from repro.obs import trace as _obs_trace
 
 ARTIFACT_FORMAT = "repro.network_plan"
 # v2: conv layer metas gained the fft/winograd_f63 algorithms plus N-way
@@ -1334,28 +1335,39 @@ def compile(params, graph, *, res: int | None = None, c_in: int = 3,
                          f"expected one of {registry.COMPUTE_DTYPES}")
     digest = params_digest(params) if artifact is not None else None
     if artifact is not None and os.path.exists(artifact):
-        loaded = _try_load_artifact(artifact, input_shape=input_shape,
-                                    algorithm=algorithm, digest=digest,
-                                    dtype=dtype, compute_dtype=compute_dtype,
-                                    mesh=mesh, partition=partition)
+        with _obs_trace.span("compile.artifact_load", path=artifact):
+            loaded = _try_load_artifact(
+                artifact, input_shape=input_shape, algorithm=algorithm,
+                digest=digest, dtype=dtype, compute_dtype=compute_dtype,
+                mesh=mesh, partition=partition)
         if loaded is not None:
             _plan.record_artifact_load(True)
             return loaded
-    ir = tuple(graph) if _is_ir(graph) else lower(graph,
-                                                  c_in=input_shape[-1])
-    ir = fuse(ir)
-    shapes = infer_shapes(ir, input_shape)
-    placements = place(ir, shapes, algorithm, compute_dtype)
+    with _obs_trace.span("compile.lower"):
+        ir = tuple(graph) if _is_ir(graph) else lower(graph,
+                                                      c_in=input_shape[-1])
+    with _obs_trace.span("compile.fuse") as _sp:
+        ir = fuse(ir)
+        _sp.set(nodes=len(ir))
+    with _obs_trace.span("compile.infer_shapes"):
+        shapes = infer_shapes(ir, input_shape)
+    with _obs_trace.span("compile.place", algorithm=algorithm):
+        placements = place(ir, shapes, algorithm, compute_dtype)
     part = None
     if mesh is not None:
-        axis, n = _partition.mesh_num_shards(mesh)
-        part = _partition.decide_partition(ir, shapes, n,
-                                           partition or "data", axis)
-    if part is not None and part["num_shards"] > 1:
-        plans, consts = _bind_partitioned(ir, shapes, placements, params,
-                                          part, dtype)
-    else:
-        plans, consts = bind(ir, shapes, placements, params, dtype=dtype)
+        with _obs_trace.span("compile.decide_partition"):
+            axis, n = _partition.mesh_num_shards(mesh)
+            part = _partition.decide_partition(ir, shapes, n,
+                                               partition or "data", axis)
+    with _obs_trace.span("compile.bind",
+                         partitioned=bool(part
+                                          and part["num_shards"] > 1)):
+        if part is not None and part["num_shards"] > 1:
+            plans, consts = _bind_partitioned(ir, shapes, placements,
+                                              params, part, dtype)
+        else:
+            plans, consts = bind(ir, shapes, placements, params,
+                                 dtype=dtype)
     net = NetworkPlan(
         graph=ir, plans=plans, consts=consts, input_shape=input_shape,
         algorithm=algorithm,
@@ -1365,5 +1377,6 @@ def compile(params, graph, *, res: int | None = None, c_in: int = 3,
         partition=part, mesh=mesh)
     if artifact is not None:
         _plan.record_artifact_load(False)
-        net.save(artifact)
+        with _obs_trace.span("compile.artifact_save", path=artifact):
+            net.save(artifact)
     return net

@@ -33,6 +33,7 @@ builds plans at init/weight-load time and executes them.
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
 import time
 import typing
@@ -43,6 +44,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import fft as _fft
+# observability: stdlib-only tracing/metrics (repro.obs.trace/metrics import
+# nothing from repro.core, so this dependency edge is acyclic and free --
+# every hook's disabled path is one global None check / one dict lookup).
+from repro.obs import metrics as _obs_metrics
+from repro.obs import trace as _obs_trace
 from repro.core import im2col as _im2col
 from repro.core import registry
 from repro.core import winograd as _wg
@@ -220,6 +226,11 @@ _FALLBACK = 0
 # loads take the quantized payload verbatim, so the zero-re-quantization
 # contract of NetworkPlan.load is asserted against this counter in tests.
 _QUANTIZED = 0
+# Fleet tuning-database accounting: auto_tuned layers resolved from an
+# installed tuning database (repro.obs.tuningdb) -- adopted measured
+# evidence, zero local measurements. Such a resolution counts neither
+# 'measured' nor 'fallback'.
+_TUNINGDB_HITS = 0
 
 
 def plan_cache_info() -> dict:
@@ -227,13 +238,16 @@ def plan_cache_info() -> dict:
     {'artifact_hits', 'artifact_misses'} of serialized-plan loads
     (repro.core.compile.NetworkPlan.save/load warm starts),
     {'measured', 'fallback'} auto_tuned resolution counts (measured timing
-    race vs the no-measurement fallback path), and {'quantized'} plan-time
-    int8 weight-quantization passes."""
+    race vs the no-measurement fallback path), {'tuningdb_hits'} auto_tuned
+    resolutions adopted from an installed fleet tuning database
+    (repro.obs.tuningdb -- zero local measurements), and {'quantized'}
+    plan-time int8 weight-quantization passes."""
     return {"hits": _CACHE_HITS, "misses": _CACHE_MISSES,
             "size": len(_SPEC_CACHE),
             "artifact_hits": _ARTIFACT_HITS,
             "artifact_misses": _ARTIFACT_MISSES,
             "measured": _MEASURED, "fallback": _FALLBACK,
+            "tuningdb_hits": _TUNINGDB_HITS,
             "quantized": _QUANTIZED}
 
 
@@ -241,8 +255,10 @@ def _record_autotune_resolution(measured: bool) -> None:
     global _MEASURED, _FALLBACK
     if measured:
         _MEASURED += 1
+        _obs_metrics.count("plan.autotune.measured")
     else:
         _FALLBACK += 1
+        _obs_metrics.count("plan.autotune.fallback")
 
 
 def record_artifact_load(hit: bool) -> None:
@@ -250,13 +266,15 @@ def record_artifact_load(hit: bool) -> None:
     global _ARTIFACT_HITS, _ARTIFACT_MISSES
     if hit:
         _ARTIFACT_HITS += 1
+        _obs_metrics.count("plan.artifact.hit")
     else:
         _ARTIFACT_MISSES += 1
+        _obs_metrics.count("plan.artifact.miss")
 
 
 def clear_plan_cache() -> None:
     global _CACHE_HITS, _CACHE_MISSES, _ARTIFACT_HITS, _ARTIFACT_MISSES, \
-        _MEASURED, _FALLBACK, _QUANTIZED
+        _MEASURED, _FALLBACK, _QUANTIZED, _TUNINGDB_HITS
     _SPEC_CACHE.clear()
     _CACHE_HITS = 0
     _CACHE_MISSES = 0
@@ -265,10 +283,24 @@ def clear_plan_cache() -> None:
     _MEASURED = 0
     _FALLBACK = 0
     _QUANTIZED = 0
+    _TUNINGDB_HITS = 0
 
 
 def _cache_enabled() -> bool:
     return not os.environ.get("REPRO_PLAN_NO_CACHE")
+
+
+def _count_cache(hit: bool) -> None:
+    """Spec-cache accounting, mirrored into the default metrics registry
+    (plan.cache.hit / plan.cache.miss) so the observability snapshot and
+    plan_cache_info() tell one story."""
+    global _CACHE_HITS, _CACHE_MISSES
+    if hit:
+        _CACHE_HITS += 1
+        _obs_metrics.count("plan.cache.hit")
+    else:
+        _CACHE_MISSES += 1
+        _obs_metrics.count("plan.cache.miss")
 
 
 def _measure_allowed() -> bool:
@@ -277,6 +309,106 @@ def _measure_allowed() -> bool:
     if os.environ.get("REPRO_PLAN_NO_MEASURE"):
         return False
     return jax.core.trace_state_clean()
+
+
+# ---------------------------------------------------------------------------
+# Fleet tuning database: adopt measured auto_tuned evidence without racing
+# ---------------------------------------------------------------------------
+
+#: installed database entries ({tuning_db_key: entry}) -- see
+#: repro.obs.tuningdb for the export/merge/install pipeline. None means
+#: "no database": plan_conv2d measures (or falls back) as always.
+_TUNING_DB: dict[str, dict] | None = None
+#: last REPRO_TUNING_DB path auto-loaded, so a bad/changed path is only
+#: attempted once per value.
+_TUNING_DB_ENV_PATH: str | None = None
+
+
+def tuning_db_key(x_shape, w_shape, dtype: str, stride, padding: str,
+                  groups: int, layout: str, compute_request: str,
+                  output_tile=None) -> str:
+    """The canonical database key: every plan_conv2d input that decides an
+    auto_tuned race. `compute_request` is the caller's compute_dtype
+    REQUEST ("auto" when reduced-precision contenders were fielded), not
+    the resolved winner dtype; `output_tile` the requested (not tuned)
+    tile."""
+    if output_tile is None:
+        ot = None
+    elif isinstance(output_tile, (tuple, list)):
+        ot = [int(v) for v in output_tile]
+    else:
+        ot = [int(output_tile), int(output_tile)]
+    return json.dumps(
+        [list(x_shape), list(w_shape), str(dtype),
+         list(stride) if isinstance(stride, (tuple, list))
+         else [stride, stride],
+         str(padding), int(groups), str(layout), str(compute_request), ot],
+        separators=(",", ":"))
+
+
+def set_tuning_db(entries: dict | None) -> None:
+    """Install (or with None remove) tuning-database entries. Entries stay
+    installed across clear_plan_cache() -- the database is configuration,
+    not cache state."""
+    global _TUNING_DB
+    _TUNING_DB = dict(entries) if entries is not None else None
+
+
+def tuning_db() -> dict | None:
+    _maybe_load_env_tuning_db()
+    return _TUNING_DB
+
+
+def _maybe_load_env_tuning_db() -> None:
+    global _TUNING_DB, _TUNING_DB_ENV_PATH
+    path = os.environ.get("REPRO_TUNING_DB")
+    if _TUNING_DB is not None or not path or path == _TUNING_DB_ENV_PATH:
+        return
+    _TUNING_DB_ENV_PATH = path
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+        if doc.get("format") == "repro.tuning_db":
+            _TUNING_DB = dict(doc.get("entries") or {})
+    except (OSError, ValueError):
+        pass                     # unreadable database == no database
+
+
+def _tuningdb_lookup(x_shape, w_shape, dtype: str, stride, padding: str,
+                     groups: int, layout: str, compute_request: str,
+                     output_tile) -> tuple | None:
+    """A validated database resolution shaped exactly like
+    _measure_autotune's return -- (winner, winner_tile, winner_dtype,
+    evidence) -- or None (no database / no entry / entry names an
+    executor or dtype this registry no longer covers)."""
+    global _TUNINGDB_HITS
+    _maybe_load_env_tuning_db()
+    if _TUNING_DB is None:
+        return None
+    entry = _TUNING_DB.get(tuning_db_key(
+        x_shape, w_shape, dtype, stride, padding, groups, layout,
+        compute_request, output_tile))
+    if not entry:
+        return None
+    winner = entry.get("winner")
+    winner_dtype = str(entry.get("winner_dtype", "float32"))
+    known = {cap.executor for cap in registry.CAPABILITIES}
+    if winner not in known or \
+            winner_dtype not in registry.compute_dtypes_for(winner):
+        return None               # stale fleet evidence: race locally
+    if compute_request not in ("auto", "float32") and \
+            compute_request not in registry.compute_dtypes_for(winner):
+        return None               # winner can't serve the pinned dtype
+    tile = entry.get("winner_tile")
+    evidence = tuple(
+        (k, tuple(v) if isinstance(v, list) else v)
+        for k, v in (entry.get("evidence") or []) if k != "source")
+    evidence += (("source", "tuning_db"),)
+    _TUNINGDB_HITS += 1
+    _obs_metrics.count("plan.autotune.tuningdb_hit")
+    _obs_trace.instant("plan.autotune.tuningdb_hit", winner=winner,
+                       layer=f"{tuple(x_shape)}x{tuple(w_shape)}")
+    return winner, tuple(tile) if tile else None, winner_dtype, evidence
 
 
 # ---------------------------------------------------------------------------
@@ -995,6 +1127,15 @@ def _measure_autotune(x_shape, w_shape, dtype, stride, padding,
     evidence.append(("winner_dtype", winner_dtype))
     if winner_tile is not None:
         evidence.append(("winner_tile", tuple(winner_tile)))
+    # race identity, so repro.obs.tuningdb can reconstruct the exact
+    # planning request (the dtype pin vs the "auto" race, the requested
+    # tile) when lifting this evidence out of an artifact.
+    evidence.append(("pin_dtype", pin_dtype))
+    evidence.append(("dtype_race", bool(dtype_race)))
+    if output_tile is not None:
+        evidence.append(("req_tile", tuple(output_tile)
+                         if isinstance(output_tile, (tuple, list))
+                         else (output_tile, output_tile)))
     return winner, winner_tile, winner_dtype, tuple(evidence)
 
 
@@ -1111,9 +1252,9 @@ def plan_conv2d(
            "auto" if dtype_race else compute_dtype)
     spec = _SPEC_CACHE.get(key) if _cache_enabled() else None
     if spec is not None:
-        _CACHE_HITS += 1
+        _count_cache(True)
     else:
-        _CACHE_MISSES += 1
+        _count_cache(False)
         fast = registry.best_fast(query)
         autotune = None
         build_tile = output_tile
@@ -1124,12 +1265,30 @@ def plan_conv2d(
             if fast is None:
                 resolved = "im2col"
                 _record_autotune_resolution(measured=False)
-            elif _measure_allowed():
-                resolved, tuned_tile, tuned_dtype, autotune = \
-                    _measure_autotune(
-                        x_shape, w_shape, dtype_str, stride, padding,
-                        output_tile, groups, fast=fast.executor,
-                        pin_dtype=compute_dtype, dtype_race=dtype_race)
+            elif (tuned := _tuningdb_lookup(
+                    x_shape, w_shape, dtype_str, stride, padding, groups,
+                    data_format, "auto" if dtype_race else compute_dtype,
+                    output_tile)) is not None or _measure_allowed():
+                if tuned is not None:
+                    # fleet tuning database: adopt the recorded winner,
+                    # tile, dtype, and evidence -- zero local
+                    # measurements (plan_cache_info()["tuningdb_hits"]).
+                    resolved, tuned_tile, tuned_dtype, autotune = tuned
+                else:
+                    t_race = time.perf_counter()
+                    resolved, tuned_tile, tuned_dtype, autotune = \
+                        _measure_autotune(
+                            x_shape, w_shape, dtype_str, stride, padding,
+                            output_tile, groups, fast=fast.executor,
+                            pin_dtype=compute_dtype,
+                            dtype_race=dtype_race)
+                    _obs_trace.add_span(
+                        "plan.autotune.race", t_race, time.perf_counter(),
+                        winner=resolved, contenders=len(
+                            [k for k, _ in autotune
+                             if k.startswith("t_")]),
+                        layer=f"{x_shape}x{w_shape}")
+                    _record_autotune_resolution(measured=True)
                 if tuned_tile is not None:
                     build_tile = tuned_tile
                 # Only compute_dtype="auto" fields reduced contenders, so
@@ -1143,7 +1302,6 @@ def plan_conv2d(
                     build_dtype = tuned_dtype
                 elif tuned_dtype != compute_dtype:
                     build_tile = output_tile
-                _record_autotune_resolution(measured=True)
             else:
                 resolved = fast.executor if winograd_amortizes(
                     h, wdt, kh, kw, c, padding, groups, stride) else "im2col"
@@ -1421,9 +1579,9 @@ def plan_separable_block(
                padding, algorithm, output_tile)
         spec = _SPEC_CACHE.get(key) if _cache_enabled() else None
         if spec is not None:
-            _CACHE_HITS += 1
+            _count_cache(True)
         else:
-            _CACHE_MISSES += 1
+            _count_cache(False)
             spec = _build_separable_fused_spec(
                 x_shape, dw_shape, pw_shape, dtype_str, stride, padding,
                 algorithm, output_tile)
@@ -1863,9 +2021,9 @@ def plan_depthwise_conv1d(
            backend)
     spec = _SPEC_CACHE.get(key) if _cache_enabled() else None
     if spec is not None:
-        _CACHE_HITS += 1
+        _count_cache(True)
     else:
-        _CACHE_MISSES += 1
+        _count_cache(False)
         ct = cook_toom(output_tile, r)
         nt = -(-length // ct.m)
         blocks = None

@@ -1,0 +1,30 @@
+"""Zero-dependency observability for the planned-convolution stack.
+
+Three layers, from passive to active:
+
+- `repro.obs.trace`   -- thread-safe nested span recorder (ring-buffered,
+  explicit monotonic timestamps) exportable as chrome://tracing JSON.
+- `repro.obs.metrics` -- process-level registry of counters / gauges /
+  log-bucketed histograms with an atomic deep-copied snapshot. The serving
+  runtime's ServerStats counters are views over one of these registries.
+- `repro.obs.profile` -- the Profiler that wires both through the stack:
+  compile() pass phases, plan-cache / autotune-race events, and the serve
+  hot path (per-request queue-wait / batch-formation / dispatch /
+  per-layer spans via NetworkPlan.apply(layer_hook=)).
+
+Plus two offline tools built on the same data:
+
+- `repro.obs.regress`  -- tracked-metric extraction + threshold compare
+  over BENCH_*.json artifacts (the CLI lives in benchmarks/regress.py).
+- `repro.obs.tuningdb` -- export/merge the auto_tuned measurement
+  evidence persisted in NetworkPlan artifacts into a fleet-shareable
+  tuning database that plan_conv2d consumes instead of re-measuring.
+
+Everything here is disabled by default. `trace` and `metrics` import only
+the standard library so `core/plan.py` can depend on them unconditionally;
+the disabled fast path of every hook is a single global None check.
+"""
+
+from repro.obs import metrics, trace  # noqa: F401  (stdlib-only, safe)
+
+__all__ = ["trace", "metrics", "profile", "regress", "tuningdb"]

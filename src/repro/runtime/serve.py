@@ -53,11 +53,12 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import json
 import math
 import os
 import threading
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Sequence
 
 import jax
@@ -66,6 +67,8 @@ import numpy as np
 
 from repro.core import compile as _compile
 from repro.core import plan as _plan
+from repro.obs import metrics as _obs_metrics
+from repro.obs import profile as _obs_profile
 from repro.runtime.fault import Backoff, StepTimer
 
 
@@ -189,61 +192,119 @@ class Ticket:
         return self.finished_at - self.submitted_at
 
 
-@dataclass
+#: every ServerStats counter, in snapshot order. Each is a live view over
+#: a repro.obs.metrics Counter in the server's own registry ("serve.<name>"),
+#: so attribute reads/writes, the metrics snapshot, and the CI gate all see
+#: one value.
+_STAT_COUNTERS = (
+    "admitted", "rejected", "completed", "timed_out", "cancelled",
+    "failed", "deadline_missed", "batches", "executor_failures", "retries",
+    "replacements", "evictions", "stragglers", "recompiles",
+    "corrupt_artifacts", "corrupt_arrays", "artifact_warm_starts",
+    "artifact_cold_starts",
+    # layers the accuracy probe promoted back to fp32 (reduced-precision
+    # outputs outside budget never keep serving).
+    "precision_promotions",
+    # jitted-happy-path accounting: batches served by the jitted apply,
+    # and buckets that fell back to the eager supervised path on their
+    # first fault.
+    "jit_dispatches", "jit_fallbacks",
+    # continuous re-placement: probation re-probes run, and evicted layers
+    # promoted back onto their original algorithm.
+    "probation_reprobes", "probation_promotions",
+)
+#: dict-shaped stats state, guarded by the SAME registry lock as the
+#: counters so snapshot() is one atomic cut across everything.
+_STAT_DICTS = ("bucket_batches", "sharded_buckets", "layer_compute_dtypes")
+
+
 class ServerStats:
     """Serving counters; `snapshot()` is the JSON-safe view benchmarks and
     the CI gate read. `in_flight` is admitted minus every terminal state --
-    zero after a drained stop, or requests were dropped."""
+    zero after a drained stop, or requests were dropped.
 
-    admitted: int = 0
-    rejected: int = 0
-    completed: int = 0
-    timed_out: int = 0
-    cancelled: int = 0
-    failed: int = 0
-    deadline_missed: int = 0
-    batches: int = 0
-    bucket_batches: dict = field(default_factory=dict)
-    executor_failures: int = 0
-    retries: int = 0
-    replacements: int = 0
-    evictions: int = 0
-    stragglers: int = 0
-    recompiles: int = 0
-    corrupt_artifacts: int = 0
-    corrupt_arrays: int = 0
-    artifact_warm_starts: int = 0
-    artifact_cold_starts: int = 0
-    #: layers the accuracy probe promoted back to fp32 (reduced-precision
-    #: outputs outside budget never keep serving).
-    precision_promotions: int = 0
-    #: jitted-happy-path accounting: batches served by the jitted apply,
-    #: and buckets that fell back to the eager supervised path on their
-    #: first fault.
-    jit_dispatches: int = 0
-    jit_fallbacks: int = 0
-    #: continuous re-placement: probation re-probes run, and evicted layers
-    #: promoted back onto their original algorithm.
-    probation_reprobes: int = 0
-    probation_promotions: int = 0
-    #: buckets served by a mesh-sharded plan on the jitted path
-    #: ({bucket: num_shards}; supervisor repairs stay single-logical-plan).
-    sharded_buckets: dict = field(default_factory=dict)
-    #: per-layer transform-domain compute dtype of the CURRENTLY served
-    #: plans (refreshed after compile / re-place / recompile / promotion).
-    layer_compute_dtypes: dict = field(default_factory=dict)
+    Counters are views over a repro.obs.metrics registry (one registry per
+    server, enrolled in `metrics.snapshot_all()`): attribute reads return
+    the counter value, attribute writes and `inc()` mutate it under the
+    registry lock. The dict fields -- `bucket_batches` (per-bucket batch
+    counts, int keys), `sharded_buckets` ({bucket: num_shards} served by a
+    mesh-sharded plan on the jitted path), `layer_compute_dtypes` (the
+    transform-domain dtype per layer of the CURRENTLY served plans,
+    refreshed after compile / re-place / recompile / promotion) -- share
+    that lock, so `snapshot()` returns an atomic deep copy: no torn
+    multi-counter reads, and never a RuntimeError from a dict resized
+    mid-iteration while the scheduler thread keeps serving."""
+
+    def __init__(self, registry: "_obs_metrics.MetricsRegistry | None"
+                 = None):
+        reg = registry or _obs_metrics.new_registry("serve")
+        d = self.__dict__
+        d["registry"] = reg
+        d["_lock"] = reg.lock
+        d["_counters"] = {n: reg.counter(f"serve.{n}")
+                          for n in _STAT_COUNTERS}
+        d["bucket_batches"] = {}
+        d["sharded_buckets"] = {}
+        d["layer_compute_dtypes"] = {}
+
+    # -- counter views: stats.admitted reads, stats.admitted = v writes --
+
+    def __getattr__(self, name: str):
+        try:
+            return self.__dict__["_counters"][name].value
+        except KeyError:
+            raise AttributeError(name) from None
+
+    def __setattr__(self, name: str, value) -> None:
+        c = self.__dict__["_counters"].get(name)
+        if c is not None:
+            c.set(value)
+        elif name in _STAT_DICTS:
+            with self.__dict__["_lock"]:
+                self.__dict__[name] = value
+        else:
+            self.__dict__[name] = value
+
+    def inc(self, name: str, n: int = 1) -> None:
+        self.__dict__["_counters"][name].inc(n)
+
+    def bump_bucket(self, bucket: int) -> None:
+        with self._lock:
+            self.bucket_batches[bucket] = \
+                self.bucket_batches.get(bucket, 0) + 1
+
+    def set_sharded(self, bucket: int, num_shards: int) -> None:
+        with self._lock:
+            self.sharded_buckets[str(bucket)] = int(num_shards)
 
     @property
     def in_flight(self) -> int:
-        return (self.admitted - self.completed - self.timed_out
-                - self.cancelled - self.failed)
+        with self._lock:
+            c = self.__dict__["_counters"]
+            return (c["admitted"].value - c["completed"].value
+                    - c["timed_out"].value - c["cancelled"].value
+                    - c["failed"].value)
 
     def snapshot(self) -> dict:
-        d = dataclasses.asdict(self)
-        d["bucket_batches"] = {str(k): v
-                               for k, v in self.bucket_batches.items()}
-        d["in_flight"] = self.in_flight
-        return d
+        """Atomic deep-copied JSON-safe view: taken under the registry
+        lock, so no counter increment, dict mutation, or in-flight
+        transition interleaves with the copy."""
+        with self._lock:
+            d: dict[str, Any] = {n: c.value
+                                 for n, c in
+                                 self.__dict__["_counters"].items()}
+            d["bucket_batches"] = {str(k): v
+                                   for k, v in self.bucket_batches.items()}
+            d["sharded_buckets"] = dict(self.sharded_buckets)
+            d["layer_compute_dtypes"] = dict(self.layer_compute_dtypes)
+            d["in_flight"] = (d["admitted"] - d["completed"]
+                              - d["timed_out"] - d["cancelled"]
+                              - d["failed"])
+            return d
+
+
+#: the ISSUE/docs name for the stats object; same class.
+ServeStats = ServerStats
 
 
 class Server:
@@ -297,8 +358,7 @@ class Server:
                 net = self._compile_bucket(b, sharded=True)
                 if net is not None and net.is_sharded():
                     self.sharded_nets[b] = net
-                    self.stats.sharded_buckets[str(b)] = \
-                        net.partition["num_shards"]
+                    self.stats.set_sharded(b, net.partition["num_shards"])
         self.np_dtype = np.dtype(self.nets[self.buckets[0]].dtype)
         self._refresh_layer_dtypes()
         # scheduling state
@@ -360,8 +420,8 @@ class Server:
                 if bad:
                     # detected by the per-array checksums: count it, then
                     # let compile()'s load fallback recompile in place.
-                    self.stats.corrupt_artifacts += 1
-                    self.stats.corrupt_arrays += len(bad)
+                    self.stats.inc("corrupt_artifacts")
+                    self.stats.inc("corrupt_arrays", len(bad))
                     self._log(f"bucket {bucket} artifact fails integrity "
                               f"check ({len(bad)} arrays, e.g. {bad[0]!r}); "
                               f"recompiling in place")
@@ -384,9 +444,9 @@ class Server:
             return None
         if art is not None:
             if _plan.plan_cache_info()["artifact_hits"] > before:
-                self.stats.artifact_warm_starts += 1
+                self.stats.inc("artifact_warm_starts")
             else:
-                self.stats.artifact_cold_starts += 1
+                self.stats.inc("artifact_cold_starts")
         return net
 
     def _refresh_layer_dtypes(self) -> None:
@@ -415,7 +475,7 @@ class Server:
                     jax.block_until_ready(self._jitted_apply(b, x))
                 except Exception as e:
                     self._jit_broken.add(b)
-                    self.stats.jit_fallbacks += 1
+                    self.stats.inc("jit_fallbacks")
                     self._log(f"bucket {b}: jitted path failed at warmup "
                               f"({e!r}); serving eagerly")
         if self.compute_dtype != "float32" and self.config.precision_probe:
@@ -494,7 +554,7 @@ class Server:
                                         algorithm=self._algorithm,
                                         compute_dtype="float32")
                     promoted = True
-                    self.stats.precision_promotions += 1
+                    self.stats.inc("precision_promotions")
                     self._log(f"promoted layer {node.id!r} {cd} -> float32 "
                               f"(probe rel err {err:.3g} > budget {bud:g})")
                 except Exception as e:
@@ -528,7 +588,7 @@ class Server:
             if not drain:
                 for t in self._queue:
                     if t.cancel():
-                        self.stats.cancelled += 1
+                        self.stats.inc("cancelled")
                 self._queue.clear()
             self._cv.notify_all()
         if self._thread is not None:
@@ -558,12 +618,12 @@ class Server:
             if self._stop:
                 raise RuntimeError("server is stopped")
             if len(self._queue) >= self.config.queue_capacity:
-                self.stats.rejected += 1
+                self.stats.inc("rejected")
                 raise QueueFullError(self._retry_after_locked(),
                                      self.config.queue_capacity)
             t = Ticket(next(self._rid), x, deadline, now)
             self._queue.append(t)
-            self.stats.admitted += 1
+            self.stats.inc("admitted")
             self._cv.notify()
         return t
 
@@ -597,13 +657,13 @@ class Server:
                 live = []
                 for t in self._queue:
                     if t.done():                    # client-side cancel
-                        self.stats.cancelled += 1
+                        self.stats.inc("cancelled")
                     elif t.deadline is not None and t.deadline <= now:
                         # timeout-cancel while queued: never executed
                         t._finish("timeout", error=TimeoutError(
                             f"request {t.rid} deadline expired "
                             f"{now - t.deadline:.3f}s before dispatch"))
-                        self.stats.timed_out += 1
+                        self.stats.inc("timed_out")
                     else:
                         live.append(t)
                 # EDF: earliest deadline first, FIFO among deadline-less.
@@ -612,16 +672,23 @@ class Server:
                     t.rid))
                 take = min(len(live), self.buckets[-1])
                 batch, self._queue = live[:take], live[take:]
+                # queue-wait / batch-formation boundary for the profiler:
+                # everything before this stamp is time spent queued,
+                # everything until dispatch start is batch assembly.
+                t_select = time.perf_counter()
             if batch:
-                self._run_batch(batch)
+                self._run_batch(batch, t_select)
 
-    def _run_batch(self, batch: list[Ticket]) -> None:
+    def _run_batch(self, batch: list[Ticket],
+                   t_select: float | None = None) -> None:
+        prof = _obs_profile.active()   # ONE global read; None = disabled
         b = self._bucket_for(len(batch))
         X = np.zeros((b,) + self.example_shape, self.np_dtype)
         for i, t in enumerate(batch):
             X[i] = t.x
         t0 = time.perf_counter()
         fails_before = self.stats.executor_failures
+        jit_before = self.stats.jit_dispatches
         try:
             y, layer_times = self._dispatch(b, jnp.asarray(X))
         except Exception as e:
@@ -629,10 +696,13 @@ class Server:
             # failed, but never silently dropped.
             for t in batch:
                 if t._finish("error", error=e):
-                    self.stats.failed += 1
-            self.stats.batches += 1
+                    self.stats.inc("failed")
+            self.stats.inc("batches")
+            if prof is not None:
+                prof.serve_batch_error(bucket=b, batch=batch, error=e)
             return
-        dt = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        dt = t1 - t0
         a = self.config.ewma_alpha
         self._service_ewma = (dt if self._service_ewma is None
                               else (1 - a) * self._service_ewma + a * dt)
@@ -642,11 +712,18 @@ class Server:
         for i, t in enumerate(batch):
             if t.deadline is not None and t.deadline < now:
                 t.deadline_missed = True
-                self.stats.deadline_missed += 1
+                self.stats.inc("deadline_missed")
             if t._finish("ok", value=y[i]):
-                self.stats.completed += 1
-        self.stats.batches += 1
-        self.stats.bucket_batches[b] = self.stats.bucket_batches.get(b, 0) + 1
+                self.stats.inc("completed")
+        self.stats.inc("batches")
+        self.stats.bump_bucket(b)
+        if prof is not None:
+            prof.serve_batch(
+                bucket=b, batch=batch, net=self.nets.get(b),
+                t_select=t_select if t_select is not None else t0,
+                t0=t0, t1=t1, layer_times=layer_times,
+                jitted=self.stats.jit_dispatches > jit_before,
+                sharded=b in self.sharded_nets)
         if self.stats.executor_failures == fails_before:
             self._note_clean_batch()
 
@@ -677,13 +754,13 @@ class Server:
             try:
                 y = self._jitted_apply(bucket, X)
                 jax.block_until_ready(y)
-                self.stats.jit_dispatches += 1
+                self.stats.inc("jit_dispatches")
                 return y, {}
             except Exception as e:
                 self._jit_broken.add(bucket)
-                self.stats.jit_fallbacks += 1
-                self.stats.executor_failures += 1
-                self.stats.retries += 1
+                self.stats.inc("jit_fallbacks")
+                self.stats.inc("executor_failures")
+                self.stats.inc("retries")
                 self._log(f"bucket {bucket}: jitted path fault ({e!r}); "
                           f"falling back to the eager supervised path")
         return self._supervised_apply(bucket, X)
@@ -708,9 +785,9 @@ class Server:
                 return y, layer_times
             except Exception as e:
                 failures += 1
-                self.stats.executor_failures += 1
+                self.stats.inc("executor_failures")
                 if failures <= cfg.max_retries:
-                    self.stats.retries += 1
+                    self.stats.inc("retries")
                     time.sleep(backoff.next())
                     continue
                 node = getattr(e, "node_id", None)
@@ -741,10 +818,10 @@ class Server:
                       f"{alg!r}: {e!r}")
             return False
         self._replaced.add(node_id)
-        self.stats.replacements += 1
+        self.stats.inc("replacements")
         self._refresh_layer_dtypes()
         if count_eviction:
-            self.stats.evictions += 1
+            self.stats.inc("evictions")
         if self.config.probation_batches > 0:
             win = self._probation_window.setdefault(
                 node_id, self.config.probation_batches)
@@ -774,7 +851,7 @@ class Server:
         restarts, so a persistently bad executor is re-probed ever more
         rarely instead of flapping."""
         cfg = self.config
-        self.stats.probation_reprobes += 1
+        self.stats.inc("probation_reprobes")
         net = self.nets[self.buckets[0]]
         node = next(n for n in net.graph if n.id == node_id)
         shapes = _compile.infer_shapes(net.graph, net.input_shape)
@@ -814,7 +891,7 @@ class Server:
         self._probation.pop(node_id, None)
         self._probation_window.pop(node_id, None)
         self._straggler_counts.pop(node_id, None)
-        self.stats.probation_promotions += 1
+        self.stats.inc("probation_promotions")
         self._refresh_layer_dtypes()
         self._log(f"promoted layer {node_id!r} back onto "
                   f"{self._algorithm!r} after probation "
@@ -837,8 +914,8 @@ class Server:
                 corrupt += [f"b{b}:{k}"
                             for k in _compile.verify_artifact(art)]
         if corrupt:
-            self.stats.corrupt_artifacts += 1
-            self.stats.corrupt_arrays += len(corrupt)
+            self.stats.inc("corrupt_artifacts")
+            self.stats.inc("corrupt_arrays", len(corrupt))
         for b in self.buckets:
             self.nets[b] = self._compile_bucket(b, force_cold=True)
         self._replaced.clear()
@@ -847,7 +924,7 @@ class Server:
         self._probation_window.clear()
         self._jit_broken.clear()
         self._refresh_layer_dtypes()
-        self.stats.recompiles += 1
+        self.stats.inc("recompiles")
         self._log(f"recompiled all bucket plans in place "
                   f"({len(corrupt)} corrupt artifact arrays"
                   + (f", e.g. {corrupt[0]!r}" if corrupt else "") + ")")
@@ -857,7 +934,7 @@ class Server:
                             layer_times: dict[str, float]) -> None:
         cfg = self.config
         if self._batch_timer[bucket].record(dt):
-            self.stats.stragglers += 1
+            self.stats.inc("stragglers")
             worst, ratio = None, cfg.straggler_layer_ratio
             for nid, t in layer_times.items():
                 base = self._layer_ewma.get((bucket, nid))
@@ -881,3 +958,95 @@ class Server:
             old = self._layer_ewma.get(k)
             self._layer_ewma[k] = t if old is None else \
                 (1 - a) * old + a * t
+
+
+# ---------------------------------------------------------------------------
+# CLI: artifact audit
+# ---------------------------------------------------------------------------
+
+def audit_artifact(path: str) -> list[tuple[str, str]]:
+    """Per-array digest status of one NetworkPlan artifact: a list of
+    (array_name, status) with status one of "ok", "corrupt" (digest
+    mismatch), "missing" (named in the integrity header but absent from
+    the file), or "unreadable" (the file / header itself is broken,
+    reported as the pseudo-array "__header__"). Unlike
+    `compile.verify_artifact` -- which only returns the offenders for the
+    supervisor's corrupt-vs-bug decision -- this keeps the full roster so
+    the CLI can show what was checked."""
+    try:
+        with np.load(path, allow_pickle=False) as data:
+            if "__header__" not in data:
+                return [("__header__", "unreadable")]
+            header = json.loads(str(data["__header__"][()]))
+            checksums = header.get("checksums")
+            if not isinstance(checksums, dict):
+                return [("__header__", "unreadable")]
+            payload = {k for k in data.files if k != "__header__"}
+            rows: list[tuple[str, str]] = []
+            for name in sorted(set(checksums) | payload):
+                if name not in payload:
+                    rows.append((name, "missing"))
+                elif checksums.get(name) is None:
+                    rows.append((name, "corrupt"))
+                elif _compile._array_digest(data[name]) \
+                        == checksums[name]:
+                    rows.append((name, "ok"))
+                else:
+                    rows.append((name, "corrupt"))
+            return rows
+    except (OSError, ValueError, KeyError, json.JSONDecodeError):
+        return [("__header__", "unreadable")]
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    """`python -m repro.runtime.serve verify-artifacts <dir>`: audit every
+    plan_b<B>.npz bucket artifact in a server artifact directory and print
+    per-array digest status. Exit 0 when every array in every bucket
+    verifies, 1 on any corruption, 2 on usage / empty directory."""
+    import argparse
+
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.runtime.serve",
+        description="Serving-runtime maintenance commands.")
+    sub = parser.add_subparsers(dest="cmd", required=True)
+    p_verify = sub.add_parser(
+        "verify-artifacts",
+        help="integrity-audit every plan_b<B>.npz in an artifact dir")
+    p_verify.add_argument("dir", help="artifact directory (the "
+                          "`artifact_dir` a Server was compiled against)")
+    p_verify.add_argument("-q", "--quiet", action="store_true",
+                          help="only print per-file summaries and failures")
+    args = parser.parse_args(argv)
+
+    if not os.path.isdir(args.dir):
+        print(f"error: not a directory: {args.dir}")
+        return 2
+    paths = sorted(
+        os.path.join(args.dir, f) for f in os.listdir(args.dir)
+        if f.startswith("plan_b") and f.endswith(".npz"))
+    if not paths:
+        print(f"error: no plan_b<B>.npz artifacts under {args.dir}")
+        return 2
+
+    corrupt_total = 0
+    for path in paths:
+        rows = audit_artifact(path)
+        bad = [(n, s) for n, s in rows if s != "ok"]
+        corrupt_total += len(bad)
+        verdict = "OK" if not bad else "CORRUPT"
+        print(f"{os.path.basename(path)}: {verdict} "
+              f"({len(rows) - len(bad)}/{len(rows)} arrays verified)")
+        for name, status in rows:
+            if status == "ok" and args.quiet:
+                continue
+            mark = "ok     " if status == "ok" else status.upper().ljust(7)
+            print(f"  [{mark}] {name}")
+    total = len(paths)
+    print(f"{total} artifact(s) audited, "
+          f"{corrupt_total} bad array(s)" if corrupt_total
+          else f"{total} artifact(s) audited, all digests verified")
+    return 1 if corrupt_total else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

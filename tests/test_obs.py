@@ -1,0 +1,582 @@
+"""Observability subsystem (repro.obs): span tracing + chrome export,
+atomic metrics, the serve-path profiler's per-request decomposition,
+provably-zero disabled overhead, the artifact-audit CLI, the BENCH
+regression gate, and the fleet tuning database that lets a fresh process
+adopt measured auto_tuned placements without re-measuring."""
+
+import json
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compile as C
+from repro.core import plan
+from repro.models import cnn
+from repro.obs import metrics, profile, regress, trace, tuningdb
+from repro.runtime import inject
+from repro.runtime import serve as serve_mod
+from repro.runtime.serve import ServeConfig, Server
+
+RES = 16
+SPECS = [cnn.Conv("c1", 3, 3, 8), cnn.Conv("c2", 3, 3, 8, relu=False)]
+
+
+@pytest.fixture(autouse=True)
+def _obs_clean_slate():
+    """Global observability state (tracer, profiler, default metrics,
+    tuning DB) must not leak between tests."""
+    profile.disable()
+    metrics.reset()
+    tuningdb.clear()
+    yield
+    profile.disable()
+    metrics.reset()
+    tuningdb.clear()
+
+
+@pytest.fixture
+def params():
+    return cnn.init_cnn(jax.random.key(0), SPECS, 3, res=RES)
+
+
+@pytest.fixture
+def xs(rng):
+    return [rng.standard_normal((RES, RES, 3)).astype(np.float32)
+            for _ in range(4)]
+
+
+def make_cfg(**kw):
+    base = dict(buckets=(1, 2), queue_capacity=16, verbose=False,
+                jit_dispatch=False, backoff_base_s=0.002,
+                backoff_cap_s=0.01)
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+def serve_n(srv, xs, n):
+    tickets = []
+    for i in range(n):
+        t = srv.submit(xs[i % len(xs)])
+        t.result(timeout=60)
+        tickets.append(t)
+    return tickets
+
+
+# ---------------------------------------------------------------------------
+# trace: ring buffer, nesting, chrome export
+# ---------------------------------------------------------------------------
+
+def test_tracer_ring_capacity_and_dropped():
+    tr = trace.Tracer(capacity=4)
+    for i in range(10):
+        tr.add_span(f"s{i}", float(i), float(i) + 0.5)
+    assert len(tr) == 4
+    assert tr.dropped == 6
+    # oldest dropped first: only s6..s9 survive
+    assert [s.name for s in tr.spans()] == ["s6", "s7", "s8", "s9"]
+    tr.clear()
+    assert len(tr) == 0 and tr.dropped == 0
+
+
+def test_span_nesting_depth_and_error_capture():
+    tr = trace.Tracer()
+    with tr.span("outer"):
+        with tr.span("inner") as sp:
+            sp.set(detail=7)
+    with pytest.raises(ValueError):
+        with tr.span("boom"):
+            raise ValueError("x")
+    by_name = {s.name: s for s in tr.spans()}
+    assert by_name["outer"].depth == 0
+    assert by_name["inner"].depth == 1
+    assert by_name["inner"].args["detail"] == 7
+    assert "ValueError" in by_name["boom"].args["error"]
+    # depth unwound: a fresh span is top-level again
+    with tr.span("later"):
+        pass
+    assert {s.name: s.depth for s in tr.spans()}["later"] == 0
+
+
+def test_chrome_export_is_valid_and_rebased(tmp_path):
+    tr = trace.Tracer()
+    with tr.span("a"):
+        time.sleep(0.001)
+    tr.instant("mark", k=1)
+    path = str(tmp_path / "trace.json")
+    doc = tr.export_chrome(path)
+    with open(path) as f:
+        assert json.load(f) == doc          # file round-trips
+    events = doc["traceEvents"]
+    assert events[0]["ph"] == "M"           # process-name metadata
+    xs = [e for e in events if e["ph"] == "X"]
+    ins = [e for e in events if e["ph"] == "i"]
+    assert len(xs) == 1 and len(ins) == 1
+    assert xs[0]["dur"] > 0
+    assert all(e["ts"] >= 0 for e in xs + ins)   # rebased to first span
+    assert min(e["ts"] for e in xs + ins) == 0
+    assert doc["otherData"]["dropped_spans"] == 0
+
+
+def test_disabled_module_api_is_noop():
+    trace.disable()
+    assert trace.span("x") is trace.NULL_SPAN
+    trace.add_span("x", 0.0, 1.0)            # no-ops, no error
+    trace.instant("x")
+    assert trace.get() is None and not trace.is_enabled()
+    with pytest.raises(RuntimeError, match="disabled"):
+        trace.export_chrome()
+    tr = trace.enable(capacity=8)
+    assert trace.enable() is tr              # enable() reuses the tracer
+    trace.disable()
+
+
+# ---------------------------------------------------------------------------
+# metrics: histogram semantics + atomic snapshots
+# ---------------------------------------------------------------------------
+
+def test_histogram_percentiles_within_bucket_bound():
+    reg = metrics.MetricsRegistry("t")
+    h = reg.histogram("lat")
+    samples = [0.001 * (i + 1) for i in range(100)]
+    for s in samples:
+        h.record(s)
+    true_p50 = float(np.percentile(samples, 50))
+    assert true_p50 <= h.percentile(0.5) <= 2 * true_p50
+    assert h.percentile(0.99) <= h.max
+    st = h.state()
+    assert st["count"] == 100
+    assert st["min"] == samples[0] and st["max"] == samples[-1]
+    assert sum(st["buckets"].values()) == 100
+    h.record(0.0)                            # underflow bucket
+    assert h.state()["buckets"]["underflow"] == 1
+
+
+def test_metrics_snapshot_is_atomic_under_hammer():
+    """Two counters incremented together under the registry lock must
+    never be observed torn by snapshot()."""
+    reg = metrics.MetricsRegistry("t")
+    stop = threading.Event()
+
+    def writer():
+        while not stop.is_set():
+            with reg.lock:
+                reg.count("a")
+                reg.count("b")
+
+    threads = [threading.Thread(target=writer) for _ in range(3)]
+    for t in threads:
+        t.start()
+    try:
+        for _ in range(300):
+            snap = reg.snapshot()["counters"]
+            assert snap.get("a", 0) == snap.get("b", 0), snap
+    finally:
+        stop.set()
+        for t in threads:
+            t.join()
+
+
+def test_snapshot_all_merges_live_server_registries(params):
+    srv = Server(params, SPECS, res=RES, config=make_cfg())
+    try:
+        merged = metrics.snapshot_all()
+        assert "default" in merged
+        serve_regs = [k for k in merged if k.startswith("serve")]
+        assert serve_regs, merged.keys()
+        assert "serve.admitted" in merged[serve_regs[0]]["counters"]
+    finally:
+        srv.stop()
+
+
+# ---------------------------------------------------------------------------
+# ServerStats: atomic snapshot under concurrent traffic (satellite 1)
+# ---------------------------------------------------------------------------
+
+def test_stats_snapshot_race_stress(params, xs):
+    """Hammer snapshot()/in_flight from reader threads while traffic runs:
+    no RuntimeError (dict resized during iteration), and every cut is
+    internally consistent (in_flight identity holds, never negative)."""
+    errors: list[BaseException] = []
+    snaps: list[dict] = []
+    stop = threading.Event()
+
+    with Server(params, SPECS, res=RES, config=make_cfg()) as srv:
+        def reader():
+            try:
+                while not stop.is_set():
+                    s = srv.stats.snapshot()
+                    assert s["in_flight"] == (
+                        s["admitted"] - s["completed"] - s["timed_out"]
+                        - s["cancelled"] - s["failed"])
+                    assert s["in_flight"] >= 0, s
+                    assert srv.stats.in_flight >= 0
+                    snaps.append(s)
+            except BaseException as e:      # noqa: BLE001 - reraised below
+                errors.append(e)
+
+        readers = [threading.Thread(target=reader) for _ in range(3)]
+        for t in readers:
+            t.start()
+        try:
+            serve_n(srv, xs, 24)
+        finally:
+            stop.set()
+            for t in readers:
+                t.join()
+    assert not errors, errors[0]
+    assert len(snaps) > 50
+    final = srv.stats.snapshot()
+    assert final["completed"] == 24 and final["in_flight"] == 0
+    # the attribute views and the snapshot tell one story
+    assert srv.stats.completed == 24
+    assert sum(final["bucket_batches"].values()) == final["batches"]
+
+
+# ---------------------------------------------------------------------------
+# profiler: disabled-path zero overhead (satellite 4)
+# ---------------------------------------------------------------------------
+
+def test_serve_disabled_emits_zero_spans(params, xs):
+    """Tracer installed but profiler off: the serve dispatch path records
+    NOTHING (the hot path's only obs cost is one `active()` read)."""
+    with Server(params, SPECS, res=RES, config=make_cfg()) as srv:
+        tr = trace.enable()                  # after compile, before traffic
+        tr.clear()
+        serve_n(srv, xs, 6)
+        assert trace.get().spans() == []
+    trace.disable()
+
+
+def test_profiler_leaves_jitted_computation_unchanged(params):
+    """jaxpr-level proof: enabling the profiler does not change what the
+    jitted network computes -- instrumentation lives outside the trace."""
+    import re
+
+    def jaxpr_of(fn, x):
+        # object reprs embed memory addresses that differ between any two
+        # traces; strip them so the compare is structural
+        return re.sub(r"0x[0-9a-f]+", "0x", str(jax.make_jaxpr(fn)(x)))
+
+    net = C.compile(params, SPECS, res=RES, batch=1, algorithm="winograd")
+    x = jnp.zeros((1, RES, RES, 3), jnp.float32)
+    before = jaxpr_of(net.apply, x)
+    profile.enable()
+    after = jaxpr_of(net.apply, x)
+    profile.disable()
+    assert before == after
+
+
+def test_serve_overhead_p50_under_5pct(params, xs):
+    """Enabled-profiler p50 latency inflation < 5% on a serving smoke,
+    measured interleaved so drift hits both arms."""
+    lat = {"off": [], "on": []}
+    with Server(params, SPECS, res=RES, config=make_cfg()) as srv:
+        serve_n(srv, xs, 6)                  # warm both paths
+        profile.enable()
+        serve_n(srv, xs, 2)
+        profile.disable()
+        for _ in range(8):
+            lat["off"] += [t.latency_s for t in serve_n(srv, xs, 3)]
+            profile.enable()
+            lat["on"] += [t.latency_s for t in serve_n(srv, xs, 3)]
+            profile.disable()
+    p50_off = float(np.percentile(lat["off"], 50))
+    p50_on = float(np.percentile(lat["on"], 50))
+    assert p50_on < p50_off * 1.05, (p50_off, p50_on)
+
+
+# ---------------------------------------------------------------------------
+# profiler: per-request decomposition + per-layer attribution
+# ---------------------------------------------------------------------------
+
+def _spans_by_rid(tracer):
+    out: dict[int, dict[str, trace.Span]] = {}
+    for s in tracer.spans():
+        rid = s.args.get("rid")
+        if rid is not None:
+            out.setdefault(rid, {})[s.name] = s
+    return out
+
+
+def test_decomposition_sums_to_measured_latency(params, xs):
+    """queue_wait + batch_formation + dispatch + respond tile
+    [submit, finish]: per request the spans sum to the independently
+    measured ticket latency."""
+    with Server(params, SPECS, res=RES, config=make_cfg()) as srv:
+        serve_n(srv, xs, 2)
+        profile.enable()
+        tickets = serve_n(srv, xs, 6)
+        tr = trace.get()
+        by_rid = _spans_by_rid(tr)
+        dispatches = tr.spans("serve.dispatch")
+    for t in tickets:
+        parts = by_rid[t.rid]
+        qw = parts["serve.queue_wait"]
+        bf = parts["serve.batch_formation"]
+        rp = parts["serve.respond"]
+        d = next(d for d in dispatches
+                 if abs(d.t0 - bf.t1) < 1e-9)       # its batch's dispatch
+        total = (qw.duration_s + bf.duration_s + d.duration_s
+                 + rp.duration_s)
+        assert abs(total - t.latency_s) <= 1e-6 + 1e-3 * t.latency_s, \
+            (total, t.latency_s)
+        # the boundaries are shared stamps, not re-measured
+        assert qw.t0 == t.submitted_at and rp.t1 == t.finished_at
+    profile.disable()
+
+
+def test_layer_spans_match_plan_node_ids_mbv2():
+    """Satellite 3: on MobileNet-v2, the layer:<nid> spans of one request
+    name exactly the planned nodes, in execution order, tagged with each
+    plan's executor -- and after replace_layer the NEXT request's spans
+    show the new executor."""
+    res = 32
+    specs = cnn.NETWORKS["mobilenet_v2"][0]()
+    params = cnn.init_cnn(jax.random.key(0), specs, 3, res=res)
+    x = np.zeros((res, res, 3), np.float32)
+    with Server(params, specs, res=res, algorithm="auto",
+                config=make_cfg(buckets=(1,))) as srv:
+        net = srv.nets[1]
+        want = [n.id for n in net.graph if n.id in net.plans]
+        table = net.describe()
+        profile.enable()
+        srv.submit(x).result(timeout=120)
+        got = [s.name.removeprefix("layer:")
+               for s in trace.get().spans("layer:")]
+        assert got == want
+        for s in trace.get().spans("layer:"):
+            nid = s.name.removeprefix("layer:")
+            assert nid in table
+            assert s.args["executor"] == \
+                net.plans[nid].describe()["executor"]
+
+        # evict the stem conv onto the fallback; spans must follow
+        old = net.plans["conv1"].describe()["executor"]
+        assert srv._replace_layer("conv1", reason="test")
+        new = net.plans["conv1"].describe()["executor"]
+        assert new != old
+        trace.get().clear()
+        srv.submit(x).result(timeout=120)
+        stem = [s for s in trace.get().spans("layer:conv1")]
+        assert stem and stem[0].args["executor"] == new
+    profile.disable()
+
+
+def test_compile_and_autotune_spans(params):
+    """compile() phases and the measured autotune race land in the trace."""
+    trace.enable()
+    trace.get().clear()
+    C.compile(params, SPECS, res=RES, batch=1, algorithm="auto_tuned")
+    names = {s.name for s in trace.get().spans()}
+    for phase in ("compile.lower", "compile.fuse", "compile.infer_shapes",
+                  "compile.place", "compile.bind"):
+        assert phase in names, names
+    races = trace.get().spans("plan.autotune.race")
+    assert races and "winner" in races[0].args
+    trace.disable()
+
+
+# ---------------------------------------------------------------------------
+# verify-artifacts CLI (satellite 2)
+# ---------------------------------------------------------------------------
+
+def test_verify_artifacts_cli(params, tmp_path, capsys):
+    adir = str(tmp_path / "artifacts")
+    with Server(params, SPECS, res=RES, config=make_cfg(),
+                artifact_dir=adir):
+        pass
+    names = sorted(os.listdir(adir))
+    assert names == ["plan_b1.npz", "plan_b2.npz"], names
+
+    assert serve_mod.main(["verify-artifacts", adir]) == 0
+    out = capsys.readouterr().out
+    assert "plan_b1.npz: OK" in out and "all digests verified" in out
+
+    inject.flip_bit(os.path.join(adir, "plan_b2.npz"))
+    assert serve_mod.main(["verify-artifacts", adir]) == 1
+    out = capsys.readouterr().out
+    assert "plan_b2.npz: CORRUPT" in out
+    assert "plan_b1.npz: OK" in out
+    assert "[CORRUPT" in out                 # the per-array status line
+
+    assert serve_mod.main(["verify-artifacts",
+                           str(tmp_path / "nope")]) == 2
+
+
+# ---------------------------------------------------------------------------
+# regression gate (benchmarks/regress.py over repro.obs.regress)
+# ---------------------------------------------------------------------------
+
+def _serving_doc(p50=10.0, dropped=0):
+    return {"clean": [{"rate_rps": 20, "p50_ms": p50, "p99_ms": 3 * p50,
+                       "mean_ms": p50, "throughput_rps": 19.0,
+                       "dropped": dropped, "incorrect": 0}],
+            "faults": [], "zero_dropped": dropped == 0,
+            "zero_incorrect": True, "fault_survived": True}
+
+
+def test_regress_cli_fails_on_2x_slowdown(tmp_path):
+    import benchmarks.regress as cli
+    base = tmp_path / "base.json"
+    cur = tmp_path / "cur.json"
+    base.write_text(json.dumps(_serving_doc(p50=10.0)))
+    cur.write_text(json.dumps(_serving_doc(p50=10.5)))
+    assert cli.main([str(base), str(cur)]) == 0      # within threshold
+    cur.write_text(json.dumps(_serving_doc(p50=20.0)))
+    assert cli.main([str(base), str(cur)]) == 1      # injected 2x
+    assert cli.main([str(base), str(cur), "--warn-only"]) == 0
+    assert cli.main([str(base), str(cur), "--threshold", "3.0"]) == 0
+
+
+def test_regress_count_and_bool_gates_zero_tolerance(tmp_path):
+    import benchmarks.regress as cli
+    base = tmp_path / "base.json"
+    cur = tmp_path / "cur.json"
+    base.write_text(json.dumps(_serving_doc(dropped=0)))
+    cur.write_text(json.dumps(_serving_doc(dropped=1)))
+    assert cli.main([str(base), str(cur)]) == 1      # any drop regresses
+
+
+def test_regress_observe_format_machine_relative():
+    ob = {"format": "repro.observe/v1", "overhead_pct": 1.0,
+          "p50_disabled_ms": 100.0,
+          "decomposition": {"max_residual_pct": 0.1},
+          "gates": {"valid_chrome_trace": True}}
+    worse = dict(ob, overhead_pct=9.0, p50_disabled_ms=900.0)
+    findings = {f.metric: f for f in regress.compare(ob, worse)}
+    assert findings["observe.overhead_pct"].regressed        # +8 points
+    # absolute latency is informational: 9x slower machine, no gate
+    assert not findings["observe.p50_disabled_ms"].regressed
+    ok = dict(ob, overhead_pct=3.0)
+    assert not any(f.regressed for f in regress.compare(ob, ok))
+    broken = dict(ob, gates={"valid_chrome_trace": False})
+    fs = {f.metric: f for f in regress.compare(ob, broken)}
+    assert fs["observe.gate.valid_chrome_trace"].regressed
+
+
+def test_regress_trajectory_pairs_committed_with_ci(tmp_path):
+    import benchmarks.regress as cli
+    root = tmp_path / "root"
+    ci = tmp_path / "ci"
+    root.mkdir(), ci.mkdir()
+    (root / "BENCH_PR7.json").write_text(json.dumps(_serving_doc(10.0)))
+    (ci / "BENCH_PR7_ci_x.json").write_text(
+        json.dumps(_serving_doc(40.0)))
+    # absolute serving metrics across machines: warn-only -> exit 0
+    assert cli.main(["--trajectory", str(ci), "--root", str(root)]) == 0
+    # --strict gates them
+    assert cli.main(["--trajectory", str(ci), "--root", str(root),
+                     "--strict"]) == 1
+    # an observe-format pair gates hard without --strict
+    ob = {"format": "repro.observe/v1", "overhead_pct": 1.0,
+          "gates": {"g": True}, "decomposition": {"max_residual_pct": 0.1}}
+    (root / "BENCH_PR10.json").write_text(json.dumps(ob))
+    (ci / "BENCH_PR10_ci_y.json").write_text(
+        json.dumps(dict(ob, gates={"g": False})))
+    assert cli.main(["--trajectory", str(ci), "--root", str(root)]) == 1
+
+
+# ---------------------------------------------------------------------------
+# fleet tuning DB: export -> install -> zero-measurement adoption
+# ---------------------------------------------------------------------------
+
+def test_tuningdb_roundtrip_skips_measurement(params):
+    net = C.compile(params, SPECS, res=RES, batch=1,
+                    algorithm="auto_tuned")
+    assert plan.plan_cache_info()["measured"] > 0
+    db = tuningdb.export([net])
+    assert db["format"] == "repro.tuning_db"
+    assert len(db["entries"]) == 2
+
+    plan.clear_plan_cache()
+    assert tuningdb.install(db) == 2
+    net2 = C.compile(params, SPECS, res=RES, batch=1,
+                     algorithm="auto_tuned")
+    info = plan.plan_cache_info()
+    assert info["measured"] == 0, info       # zero autotune measurements
+    assert info["tuningdb_hits"] == 2, info
+    for nid in net.plans:
+        assert net.plans[nid].describe()["executor"] == \
+            net2.plans[nid].describe()["executor"]
+    x = jnp.zeros((1, RES, RES, 3), jnp.float32)
+    np.testing.assert_allclose(np.asarray(net.apply(x)),
+                               np.asarray(net2.apply(x)), atol=1e-5)
+    # adopted decisions carry provenance + stay artifact-durable
+    meta = net2.plans[next(iter(net2.plans))].describe()
+    assert meta["decision"] != "static"
+
+
+def test_tuningdb_merge_prefers_faster_evidence(params):
+    net = C.compile(params, SPECS, res=RES, batch=1,
+                    algorithm="auto_tuned")
+    db = tuningdb.export([net])
+    k, entry = next(iter(db["entries"].items()))
+    slower = json.loads(json.dumps(db))
+    slower["entries"][k]["winner_time_s"] = entry["winner_time_s"] * 10
+    slower["entries"][k]["winner_label"] = "slow_variant"
+    merged = tuningdb.merge(db, slower)
+    assert merged["entries"][k]["winner_label"] == entry["winner_label"]
+    merged2 = tuningdb.merge(slower, db)
+    assert merged2["entries"][k]["winner_label"] == entry["winner_label"]
+
+
+def test_tuningdb_fresh_process_zero_measurements(params, tmp_path):
+    """Acceptance: a FRESH process compiling under REPRO_TUNING_DB adopts
+    the exported placements with zero autotune measurements."""
+    net = C.compile(params, SPECS, res=RES, batch=1,
+                    algorithm="auto_tuned")
+    db_path = str(tmp_path / "fleet_db.json")
+    tuningdb.save(tuningdb.export([net]), db_path)
+    placement = {nid: net.plans[nid].describe()["executor"]
+                 for nid in net.plans}
+
+    prog = (
+        "import json, jax\n"
+        "from repro.core import compile as C, plan\n"
+        "from repro.models import cnn\n"
+        "specs = [cnn.Conv('c1', 3, 3, 8),"
+        " cnn.Conv('c2', 3, 3, 8, relu=False)]\n"
+        f"params = cnn.init_cnn(jax.random.key(0), specs, 3, res={RES})\n"
+        f"net = C.compile(params, specs, res={RES}, batch=1,"
+        " algorithm='auto_tuned')\n"
+        "info = plan.plan_cache_info()\n"
+        "print(json.dumps({'measured': info['measured'],"
+        " 'tuningdb_hits': info['tuningdb_hits'],"
+        " 'placement': {n: net.plans[n].describe()['executor']"
+        " for n in net.plans}}))\n")
+    env = dict(os.environ, REPRO_TUNING_DB=db_path,
+               PYTHONPATH="src" + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+    proc = subprocess.run([sys.executable, "-c", prog], env=env,
+                          capture_output=True, text=True, timeout=300,
+                          cwd=os.path.dirname(os.path.dirname(
+                              os.path.abspath(__file__))))
+    assert proc.returncode == 0, proc.stderr
+    got = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert got["measured"] == 0, got
+    assert got["tuningdb_hits"] == 2, got
+    assert got["placement"] == placement
+
+
+def test_tuningdb_rejects_unknown_and_foreign_entries(params):
+    """DB entries that don't validate against the live registry fall back
+    to a local race instead of poisoning the plan."""
+    net = C.compile(params, SPECS, res=RES, batch=1,
+                    algorithm="auto_tuned")
+    db = tuningdb.export([net])
+    for entry in db["entries"].values():
+        entry["winner"] = "no_such_executor"
+    plan.clear_plan_cache()
+    tuningdb.install(db)
+    C.compile(params, SPECS, res=RES, batch=1, algorithm="auto_tuned")
+    info = plan.plan_cache_info()
+    assert info["tuningdb_hits"] == 0
+    assert info["measured"] > 0              # raced locally instead
